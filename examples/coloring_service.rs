@@ -1,0 +1,71 @@
+//! The L3 coordinator as a service: submit a mixed BGPC/D2GC workload,
+//! route part of it through the AOT JAX/Pallas PJRT engine, and report
+//! per-engine outcomes and metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example coloring_service
+//! ```
+
+use std::sync::Arc;
+
+use bgpc::coloring::{schedule, Config};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
+use bgpc::graph::PRESETS;
+use bgpc::runtime::Runtime;
+
+fn main() {
+    let svc = Service::start(2, Some(Runtime::default_dir()));
+    println!("service up: pjrt engine = {}", svc.has_pjrt());
+
+    let mut rxs = Vec::new();
+    for (i, p) in PRESETS.iter().enumerate() {
+        let g = Arc::new(p.bipartite(0.03, i as u64));
+        // native job
+        rxs.push(svc.submit(Job {
+            name: format!("{}/native", p.name),
+            input: JobInput::Bgpc(Arc::clone(&g)),
+            cfg: Config::sim(schedule::N1_N2, 16),
+            engine: EngineSel::Native,
+        }));
+        // pjrt job (falls back with a clear error when artifacts missing)
+        if svc.has_pjrt() {
+            rxs.push(svc.submit(Job {
+                name: format!("{}/pjrt", p.name),
+                input: JobInput::Bgpc(Arc::clone(&g)),
+                cfg: Config::sim(schedule::N1_N2, 16),
+                engine: EngineSel::Pjrt,
+            }));
+        }
+        if p.symmetric {
+            let m = Arc::new(p.net_incidence(0.02, i as u64));
+            rxs.push(svc.submit(Job {
+                name: format!("{}/d2gc", p.name),
+                input: JobInput::D2gc(m),
+                cfg: Config::sim(schedule::V_N2, 16),
+                engine: EngineSel::Auto,
+            }));
+        }
+    }
+
+    let mut failed = 0;
+    for rx in rxs {
+        let o = rx.recv().expect("worker alive");
+        println!(
+            "  {:<24} engine={:<6} colors={:>6} iters={:>2} secs={:>8.4} valid={}{}",
+            o.name,
+            o.engine,
+            o.n_colors,
+            o.iterations,
+            o.seconds,
+            o.valid,
+            o.error.as_deref().map(|e| format!("  ERR: {e}")).unwrap_or_default()
+        );
+        if !o.valid {
+            failed += 1;
+        }
+    }
+    println!("metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+    assert_eq!(failed, 0, "all jobs must produce valid colorings");
+    println!("ok");
+}

@@ -1,0 +1,73 @@
+//! Color-driven lock-free parallelism — what the coloring is *for* (§I):
+//! process the columns of a matrix in color-set waves; within a wave no
+//! two columns share a row, so row-indexed state needs no locks.
+//!
+//! This example runs a Jacobi-like sweep (each column updates the rows
+//! it touches) on REAL threads, using the coloring as the race-freedom
+//! certificate, and demonstrates the paper's §V point: the balancing
+//! heuristics shrink the tail of tiny color sets, which is what keeps
+//! every wave wide enough to feed all cores.
+//!
+//! ```bash
+//! cargo run --release --example parallel_sweep
+//! ```
+
+use std::sync::atomic::{AtomicU32, Ordering as AOrd};
+
+use bgpc::coloring::{color_bgpc, schedule, Balance, Config};
+use bgpc::graph::generators::Preset;
+use bgpc::par::{Cost, Driver, ThreadsDriver};
+
+fn main() {
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.1, 3);
+    let n_rows = g.n_nets();
+
+    for (tag, bal) in [("unbalanced", Balance::None), ("B2", Balance::B2)] {
+        let cfg = Config::sim(schedule::V_N2, 16).with_balance(bal);
+        let r = color_bgpc(&g, &cfg);
+        bgpc::coloring::verify::bgpc_valid(&g, &r.colors).unwrap();
+        let st = r.stats();
+
+        // group columns by color
+        let max_c = r.colors.iter().copied().max().unwrap() as usize;
+        let mut waves: Vec<Vec<u32>> = vec![Vec::new(); max_c + 1];
+        for (u, &c) in r.colors.iter().enumerate() {
+            waves[c as usize].push(u as u32);
+        }
+
+        // lock-free sweep: one parallel region per wave; every row cell
+        // is touched by at most one column per wave (checked below).
+        let row_state: Vec<AtomicU32> = (0..n_rows).map(|_| AtomicU32::new(0)).collect();
+        let touched: Vec<AtomicU32> = (0..n_rows).map(|_| AtomicU32::new(0)).collect();
+        let mut driver = ThreadsDriver::new(4);
+        let mut states = vec![(); 4];
+        let mut narrow_waves = 0usize;
+        for wave in waves.iter().filter(|w| !w.is_empty()) {
+            if wave.len() < 4 {
+                narrow_waves += 1; // cannot feed all cores
+            }
+            for t in touched.iter() {
+                t.store(0, AOrd::Relaxed);
+            }
+            driver.region(&mut states, wave.len(), 16, |_tid, _s, i, _now| {
+                let u = wave[i] as usize;
+                for &v in g.nets(u) {
+                    // "work": update the row accumulator, no lock needed
+                    let prev = touched[v as usize].fetch_add(1, AOrd::Relaxed);
+                    assert_eq!(prev, 0, "coloring must make waves race-free");
+                    row_state[v as usize].fetch_add(1, AOrd::Relaxed);
+                }
+                Cost::new(1)
+            });
+        }
+        // every row incidence processed exactly once overall
+        let processed: u32 = row_state.iter().map(|x| x.load(AOrd::Relaxed)).sum();
+        assert_eq!(processed as usize, g.nnz());
+
+        println!(
+            "{tag:<11}: {} waves, card avg {:>6.1} / stddev {:>7.1}, singleton sets {:>4}, waves narrower than 4 cols: {}",
+            st.n_colors, st.avg_cardinality, st.stddev_cardinality, st.tiny_sets, narrow_waves
+        );
+    }
+    println!("ok — balancing trades a few extra waves for far fewer starved ones");
+}

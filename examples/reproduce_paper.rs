@@ -1,0 +1,127 @@
+//! End-to-end driver: the full system on the full (scaled) test-bed.
+//!
+//! Exercises all layers in one run: the eight calibrated Table II
+//! instances (graph substrate), every schedule and both balancing
+//! heuristics through the simulator (parallel runtime + engine), the
+//! coordinator service, and — when `make artifacts` has run — the AOT
+//! JAX/Pallas net-step through PJRT. Prints a compact Table III-style
+//! summary and cross-checks the headline claims. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example reproduce_paper
+//! ```
+
+use std::sync::Arc;
+
+use bgpc::coloring::{color_bgpc, schedule, Balance, Config, ExecMode};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
+use bgpc::graph::{Ordering, PRESETS};
+use bgpc::runtime::Runtime;
+use bgpc::sim::CostModel;
+use bgpc::util::geomean;
+
+fn main() {
+    let scale: f64 = std::env::var("BGPC_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    println!("== end-to-end reproduction run (scale {scale}) ==\n");
+    let t0 = std::time::Instant::now();
+
+    // 1. build the test-bed
+    let instances: Vec<_> = PRESETS.iter().map(|p| (p, p.bipartite(scale, 1))).collect();
+    for (p, g) in &instances {
+        println!(
+            "  {:<16} vertices={:>8} nets={:>8} nnz={:>9}",
+            p.name,
+            g.n_vertices(),
+            g.n_nets(),
+            g.nnz()
+        );
+    }
+
+    // 2. speedup sweep (Table III condensed: V-V, V-V-64D, V-N2, N1-N2)
+    println!("\n-- speedups over sequential V-V (geomean, natural order) --");
+    let specs = [schedule::V_V, schedule::V_V_64D, schedule::V_N2, schedule::N1_N2];
+    let mut n1n2_16 = 0.0;
+    let mut vv_16 = 0.0;
+    for spec in specs {
+        let mut s16 = Vec::new();
+        let mut s4 = Vec::new();
+        let mut cn = Vec::new();
+        for (_p, g) in &instances {
+            let order = Ordering::Natural.compute(g);
+            let (colors_seq, units) = bgpc::coloring::bgpc::seq::greedy(g, &order);
+            let seq_secs = CostModel::default().units_to_ns(units, 1) * 1e-9;
+            let seq_colors = bgpc::coloring::stats::distinct_colors(&colors_seq);
+            for (t, acc) in [(4usize, &mut s4), (16usize, &mut s16)] {
+                let r = color_bgpc(g, &Config::sim(spec, t));
+                bgpc::coloring::verify::bgpc_valid(g, &r.colors).unwrap();
+                acc.push(seq_secs / r.seconds);
+                if t == 16 {
+                    cn.push(r.n_colors as f64 / seq_colors as f64);
+                }
+            }
+        }
+        let (g4, g16, gc) = (geomean(&s4), geomean(&s16), geomean(&cn));
+        println!("  {:<8} t=4 {:>5.2}x  t=16 {:>5.2}x  colors/seq {:>4.2}", spec.name, g4, g16, gc);
+        if spec.name == "N1-N2" {
+            n1n2_16 = g16;
+        }
+        if spec.name == "V-V" {
+            vv_16 = g16;
+        }
+    }
+    let headline = n1n2_16 / vv_16;
+    println!(
+        "  headline: N1-N2 is {headline:.2}x faster than parallel ColPack V-V on 16 threads (paper: 4.12x)"
+    );
+    assert!(headline > 1.5, "net-based optimism must clearly win");
+
+    // 3. balancing (Table VI condensed)
+    println!("\n-- balancing (V-N2, t=16, geomean normalized to unbalanced) --");
+    for (tag, bal) in [("B1", Balance::B1), ("B2", Balance::B2)] {
+        let mut dev = Vec::new();
+        let mut sets = Vec::new();
+        for (_p, g) in &instances {
+            let u = color_bgpc(g, &Config::sim(schedule::V_N2, 16));
+            let b = color_bgpc(g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
+            dev.push(b.stats().stddev_cardinality / u.stats().stddev_cardinality);
+            sets.push(b.n_colors as f64 / u.n_colors as f64);
+        }
+        println!("  {tag}: stddev {:.2}x, sets {:.2}x", geomean(&dev), geomean(&sets));
+    }
+
+    // 4. the service + PJRT engine on a real small workload
+    println!("\n-- coordinator service (+ PJRT when artifacts exist) --");
+    let svc = Service::start(2, Some(Runtime::default_dir()));
+    let mut rxs = Vec::new();
+    for (i, (p, _)) in instances.iter().enumerate().take(4) {
+        let g = Arc::new(p.bipartite(0.05, 7 + i as u64));
+        rxs.push(svc.submit(Job {
+            name: format!("{}", p.name),
+            input: JobInput::Bgpc(g),
+            cfg: Config {
+                spec: schedule::N1_N2,
+                balance: Balance::None,
+                threads: 8,
+                mode: ExecMode::Sim(CostModel::default()),
+                ordering: Ordering::Natural,
+            },
+            engine: if svc.has_pjrt() && i % 2 == 0 { EngineSel::Pjrt } else { EngineSel::Native },
+        }));
+    }
+    for rx in rxs {
+        let o = rx.recv().unwrap();
+        println!(
+            "  {:<16} engine={:<6} colors={:>6} valid={}",
+            o.name, o.engine, o.n_colors, o.valid
+        );
+        assert!(o.valid, "{:?}", o.error);
+    }
+    println!("  metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+
+    println!("\nend-to-end OK in {:.1}s", t0.elapsed().as_secs_f64());
+}

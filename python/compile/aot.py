@@ -1,0 +1,60 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Python runs ONCE here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: single-file target; writes the manifest path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"buckets": [], "format": "hlo-text", "return_tuple": True}
+    for B, K in model.BUCKETS:
+        lowered = model.lower_bucket(B, K)
+        text = to_hlo_text(lowered)
+        name = f"net_step_b{B}_k{K}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append({"b": B, "k": K, "file": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['buckets'])} buckets)")
+
+
+if __name__ == "__main__":
+    main()

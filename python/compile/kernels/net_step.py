@@ -1,0 +1,149 @@
+"""L1 Pallas kernels: batched net-based coloring step (paper Alg. 7 + 8).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's net-based
+phases are irregular CSR walks with per-thread marker arrays. On a
+TPU-shaped target the same insight — net-based work units have low degree
+variance — becomes *degree bucketing*: nets are padded into fixed ``[B, K]``
+tiles so every program instance does identical work, the forbidden set
+becomes a one-hot ``[K]`` accumulation (VPU-friendly), and keep-first
+duplicate detection is an ``O(K^2)`` masked pairwise compare held entirely
+in VMEM.
+
+Kernels must be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md), so interpret
+mode is both the correctness path and the AOT path here. Real-TPU resource
+estimates live in DESIGN.md §Perf.
+
+Grid/blocking: grid over the net-batch dimension; each program instance
+owns a ``[BLOCK_B, K]`` tile of gathered colors plus the matching
+``[BLOCK_B]`` degree vector. VMEM footprint per instance is
+``BLOCK_B*K*4`` bytes for the colors tile plus three same-shape masks —
+for the largest bucket (BLOCK_B=64, K=128) that is ~128 KiB of the ~16 MiB
+VMEM budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+UNCOLORED = -1
+
+# Rows per program instance, per K bucket. Chosen so a tile (plus its
+# intermediate masks) stays comfortably inside VMEM.
+DEFAULT_BLOCK_B = {8: 256, 16: 256, 32: 128, 64: 64, 128: 64}
+
+
+def _tile_conflict_keep(colors, degs):
+    """keep mask on a [BB, K] tile: first occurrence of each color."""
+    BB, K = colors.shape
+    j = jax.lax.broadcasted_iota(jnp.int32, (BB, K), 1)
+    valid = j < degs[:, None]
+    colored = valid & (colors != UNCOLORED)
+    eq = (colors[:, :, None] == colors[:, None, :]) & (
+        colored[:, :, None] & colored[:, None, :]
+    )
+    idx = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    lower = idx < jdx                                   # i < j
+    dup_before = jnp.any(eq & lower[None, :, :], axis=1)
+    return colored & ~dup_before
+
+
+def _tile_recolor(colors, degs, keep):
+    """reverse first-fit on a [BB, K] tile given the keep mask."""
+    BB, K = colors.shape
+    j = jax.lax.broadcasted_iota(jnp.int32, (BB, K), 1)
+    valid = j < degs[:, None]
+    needs = valid & ~keep
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (BB, K), 1)
+    kept_onehot = jnp.any(
+        keep[:, :, None] & (colors[:, :, None] == col[:, None, :]), axis=1
+    )
+    avail = (col < degs[:, None]) & ~kept_onehot
+
+    rank = jnp.cumsum(needs.astype(jnp.int32), axis=1)
+    rev_cum = jnp.cumsum(avail[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+    hit = avail[:, None, :] & (rev_cum[:, None, :] == rank[:, :, None])
+    assigned = jnp.sum(
+        jnp.where(hit, col[:, None, :], 0), axis=2
+    ).astype(colors.dtype)
+    return jnp.where(needs, assigned, colors)
+
+
+def _net_step_kernel(colors_ref, degs_ref, out_ref, keep_ref):
+    """Fused Alg. 7 + Alg. 8 over one [BLOCK_B, K] tile."""
+    colors = colors_ref[...]
+    degs = degs_ref[...]
+    keep = _tile_conflict_keep(colors, degs)
+    out_ref[...] = _tile_recolor(colors, degs, keep)
+    keep_ref[...] = keep.astype(jnp.int32)
+
+
+def _conflict_kernel(colors_ref, degs_ref, keep_ref):
+    """Alg. 7 alone (net-based conflict removal): emit the keep mask."""
+    keep_ref[...] = _tile_conflict_keep(
+        colors_ref[...], degs_ref[...]
+    ).astype(jnp.int32)
+
+
+def _block_b(B: int, K: int, block_b: int | None) -> int:
+    bb = block_b or DEFAULT_BLOCK_B.get(K, 64)
+    # Grid must divide B evenly; callers pad B to a multiple of bb, but
+    # degrade gracefully for odd test shapes.
+    while B % bb != 0:
+        bb //= 2
+        if bb == 1:
+            return 1
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def net_step(colors: jnp.ndarray, degs: jnp.ndarray, *, block_b: int | None = None):
+    """Batched net coloring step. colors int32 [B, K], degs int32 [B].
+
+    Returns (new_colors [B, K], keep [B, K]).
+    """
+    B, K = colors.shape
+    bb = _block_b(B, K, block_b)
+    grid = (B // bb,)
+    return pl.pallas_call(
+        _net_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, K), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, K), lambda i: (i, 0)),
+            pl.BlockSpec((bb, K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+        ],
+        interpret=True,
+    )(colors, degs)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def conflict_mask(colors: jnp.ndarray, degs: jnp.ndarray, *, block_b: int | None = None):
+    """Batched Alg. 7: keep mask only. colors int32 [B, K] -> int32 [B, K]."""
+    B, K = colors.shape
+    bb = _block_b(B, K, block_b)
+    grid = (B // bb,)
+    return pl.pallas_call(
+        _conflict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, K), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.int32),
+        interpret=True,
+    )(colors, degs)

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the net-based coloring step (L1 ground truth).
+
+The paper's Algorithm 8 (BGPC-ColorWorkQueue-Net), applied to one *batch*
+of nets whose adjacency colors have been gathered into a padded ``[B, K]``
+tile (K = degree bucket, rows padded beyond ``deg[b]``):
+
+  per net row b:
+    1. scan slots j < deg[b] in order; the FIRST occurrence of each
+       color != -1 is *kept* and added to the forbidden set F
+       (Alg. 8 lines 4-8);
+    2. every other valid slot (uncolored, or a later duplicate) is put in
+       W_local and recolored by REVERSE first-fit: the largest colors in
+       [0, deg[b]) \\ F, assigned in descending order, one per slot in
+       slot order (Alg. 8 lines 9-14).
+
+This file is the correctness oracle: it is written for clarity (explicit
+python loops in ``step_rows_py``) plus a vectorized jnp twin
+(``step_rows_ref``) used to cross-check the Pallas kernel on larger
+shapes. ``conflict_mask_ref`` exposes phase 1 alone (paper Alg. 7,
+net-based conflict removal).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+UNCOLORED = -1
+
+
+def step_rows_py(colors: np.ndarray, degs: np.ndarray) -> np.ndarray:
+    """Scalar python implementation of Alg. 8 over gathered rows.
+
+    colors: int32 [B, K]; degs: int32 [B]. Returns new colors [B, K].
+    Slots >= degs[b] are passed through unchanged (padding).
+    """
+    colors = np.asarray(colors)
+    degs = np.asarray(degs)
+    B, K = colors.shape
+    out = colors.copy()
+    for b in range(B):
+        deg = int(degs[b])
+        forbidden = set()
+        w_local = []
+        for j in range(deg):
+            c = int(colors[b, j])
+            if c != UNCOLORED and c not in forbidden:
+                forbidden.add(c)
+            else:
+                w_local.append(j)
+        col = deg - 1
+        for j in w_local:
+            while col in forbidden:
+                col -= 1
+            assert col >= 0, "reverse first-fit ran out of colors"
+            out[b, j] = col
+            col -= 1
+    return out
+
+
+def conflict_mask_py(colors: np.ndarray, degs: np.ndarray) -> np.ndarray:
+    """Scalar python Alg. 7: keep mask (1 = first occurrence of a color)."""
+    colors = np.asarray(colors)
+    degs = np.asarray(degs)
+    B, K = colors.shape
+    keep = np.zeros((B, K), dtype=np.int32)
+    for b in range(B):
+        deg = int(degs[b])
+        seen = set()
+        for j in range(deg):
+            c = int(colors[b, j])
+            if c != UNCOLORED and c not in seen:
+                seen.add(c)
+                keep[b, j] = 1
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Vectorized jnp twin (same math as the Pallas kernel, no pallas imports).
+# ---------------------------------------------------------------------------
+
+
+def conflict_mask_ref(colors: jnp.ndarray, degs: jnp.ndarray) -> jnp.ndarray:
+    """keep[b, j] = 1 iff slot j holds the first occurrence of its color.
+
+    colors: int32 [B, K], degs: int32 [B] -> int32 [B, K].
+    """
+    B, K = colors.shape
+    j = jnp.arange(K, dtype=jnp.int32)
+    valid = j[None, :] < degs[:, None]                       # [B, K]
+    colored = valid & (colors != UNCOLORED)                  # [B, K]
+    # eq[b, i, j] = slots i and j hold the same color, both colored.
+    eq = (colors[:, :, None] == colors[:, None, :]) & (
+        colored[:, :, None] & colored[:, None, :]
+    )
+    # dup_before[b, j] = exists i < j with the same color.
+    lower = j[:, None] < j[None, :]                          # i < j  [K, K]
+    dup_before = jnp.any(eq & lower[None, :, :], axis=1)     # [B, K]
+    return (colored & ~dup_before).astype(jnp.int32)
+
+
+def step_rows_ref(colors: jnp.ndarray, degs: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized Alg. 8 (conflict keep + reverse first-fit recolor)."""
+    B, K = colors.shape
+    j = jnp.arange(K, dtype=jnp.int32)
+    valid = j[None, :] < degs[:, None]                        # [B, K]
+    keep = conflict_mask_ref(colors, degs).astype(bool)       # [B, K]
+    needs = valid & ~keep                                     # W_local slots
+
+    # Forbidden one-hot over candidate colors [0, K): col forbidden iff some
+    # kept slot holds it. Kept colors >= K can never collide with candidates.
+    col = jnp.arange(K, dtype=jnp.int32)
+    kept_onehot = jnp.any(
+        keep[:, :, None] & (colors[:, :, None] == col[None, None, :]), axis=1
+    )                                                         # [B, K(colors)]
+    in_range = col[None, :] < degs[:, None]                   # col < deg
+    avail = in_range & ~kept_onehot                           # [B, K]
+
+    # rank of each needy slot, in slot order: 1-based cumulative count.
+    rank = jnp.cumsum(needs.astype(jnp.int32), axis=1)        # [B, K]
+    # rev_cum[b, c] = number of available colors >= c (1-based rank of c
+    # among available colors in DESCENDING order, when avail[c]).
+    rev_cum = jnp.cumsum(avail[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+    # slot with rank r takes the color c with avail[c] and rev_cum[c] == r.
+    hit = avail[:, None, :] & (rev_cum[:, None, :] == rank[:, :, None])
+    assigned = jnp.sum(jnp.where(hit, col[None, None, :], 0), axis=2)
+    assigned = assigned.astype(colors.dtype)                  # [B, K]
+    return jnp.where(needs, assigned, colors)

@@ -1,0 +1,45 @@
+"""L2 model: the batched net-based coloring step exported to the Rust L3.
+
+The "model" for this paper is not a neural network: the compute graph the
+Rust coordinator offloads is the paper's hot loop — one fused net-based
+conflict-removal + reverse-first-fit recoloring step (Alg. 7 + Alg. 8)
+over a degree-bucketed batch of nets. This module wraps the L1 Pallas
+kernel into the exact jax function that aot.py lowers, one artifact per
+``(B, K)`` bucket.
+
+Inputs (per bucket):
+  colors  int32 [B, K]  gathered colors of each net's adjacency (pad: any)
+  degs    int32 [B]     true degree of each net row (0 = padding row)
+Outputs (tuple):
+  new_colors int32 [B, K]  colors after the step (pad slots pass through)
+  keep       int32 [B, K]  1 where the slot's pre-step color was kept
+                           (Alg. 7 verdict), 0 where recolored/padding
+
+The Rust side scatters ``new_colors`` back through its gather index and
+counts ``keep`` to decide convergence; see rust/src/runtime/offload.rs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import net_step as kernels
+
+#: (B, K) buckets compiled by aot.py. K spans the paper's degree regimes
+#: (Table II max column degrees range from 18 to tens of thousands; rows
+#: above the largest bucket stay on the native Rust path).
+BUCKETS = ((1024, 8), (512, 32), (128, 128))
+
+
+def coloring_step(colors: jnp.ndarray, degs: jnp.ndarray):
+    """One fused BGPC net step over a padded bucket. Returns a 2-tuple."""
+    new_colors, keep = kernels.net_step(colors, degs)
+    return new_colors, keep
+
+
+def lower_bucket(B: int, K: int):
+    """jax.jit-lower coloring_step for a concrete (B, K) bucket."""
+    colors = jax.ShapeDtypeStruct((B, K), jnp.int32)
+    degs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return jax.jit(coloring_step).lower(colors, degs)

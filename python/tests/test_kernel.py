@@ -1,0 +1,140 @@
+"""L1 correctness: the Pallas net-step kernel vs the pure-python oracle.
+
+This is the CORE correctness signal for the compile path: the kernel that
+aot.py lowers into the rust-loaded artifact must agree bit-for-bit with
+the scalar reference implementation of the paper's Algorithm 7 + 8.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import net_step, ref
+
+
+def rand_case(rng, b, k):
+    colors = rng.integers(-1, k + 3, size=(b, k)).astype(np.int32)
+    degs = rng.integers(0, k + 1, size=(b,)).astype(np.int32)
+    return colors, degs
+
+
+@pytest.mark.parametrize("b,k", [(1, 4), (7, 8), (16, 8), (32, 32), (8, 128), (5, 16)])
+def test_net_step_matches_oracle(b, k):
+    rng = np.random.default_rng(b * 1000 + k)
+    for _ in range(5):
+        colors, degs = rand_case(rng, b, k)
+        exp = ref.step_rows_py(colors, degs)
+        exp_keep = ref.conflict_mask_py(colors, degs)
+        got, keep = net_step.net_step(colors, degs)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+        np.testing.assert_array_equal(np.asarray(keep), exp_keep)
+
+
+@pytest.mark.parametrize("b,k", [(4, 8), (16, 16)])
+def test_conflict_mask_matches_oracle(b, k):
+    rng = np.random.default_rng(17)
+    colors, degs = rand_case(rng, b, k)
+    exp = ref.conflict_mask_py(colors, degs)
+    got = net_step.conflict_mask(colors, degs)
+    np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+def test_vectorized_ref_matches_scalar_ref():
+    rng = np.random.default_rng(3)
+    for b, k in [(3, 4), (11, 8), (6, 32)]:
+        colors, degs = rand_case(rng, b, k)
+        np.testing.assert_array_equal(
+            np.asarray(ref.step_rows_ref(colors, degs)),
+            ref.step_rows_py(colors, degs),
+        )
+
+
+def test_all_uncolored_row_gets_reverse_first_fit():
+    colors = np.full((1, 6), -1, dtype=np.int32)
+    degs = np.array([6], dtype=np.int32)
+    got, keep = net_step.net_step(colors, degs)
+    np.testing.assert_array_equal(np.asarray(got)[0], [5, 4, 3, 2, 1, 0])
+    assert np.asarray(keep).sum() == 0
+
+
+def test_padding_slots_pass_through():
+    colors = np.array([[7, 7, 9, -5]], dtype=np.int32)  # deg 2: only first two live
+    degs = np.array([2], dtype=np.int32)
+    got, keep = net_step.net_step(colors, degs)
+    got = np.asarray(got)[0]
+    assert got[2] == 9 and got[3] == -5, "pad slots untouched"
+    assert got[0] == 7 and got[1] != 7, "dup recolored"
+    np.testing.assert_array_equal(np.asarray(keep)[0], [1, 0, 0, 0])
+
+
+def test_zero_degree_rows_are_noops():
+    rng = np.random.default_rng(5)
+    colors = rng.integers(-1, 5, size=(8, 8)).astype(np.int32)
+    degs = np.zeros(8, dtype=np.int32)
+    got, keep = net_step.net_step(colors, degs)
+    np.testing.assert_array_equal(np.asarray(got), colors)
+    assert np.asarray(keep).sum() == 0
+
+
+def test_kept_colors_above_degree_do_not_block_candidates():
+    # kept color 100 >= deg: candidates [0, deg) all free
+    colors = np.array([[100, 100, -1, -1]], dtype=np.int32)
+    degs = np.array([4], dtype=np.int32)
+    got, _ = net_step.net_step(colors, degs)
+    got = np.asarray(got)[0]
+    assert got[0] == 100
+    assert sorted(got[1:].tolist()) == [1, 2, 3]
+
+
+def _row_valid(row, deg):
+    live = row[:deg]
+    if (live < 0).any():
+        return False
+    return len(set(live.tolist())) == deg
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    k=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_vs_oracle(b, k, seed):
+    rng = np.random.default_rng(seed)
+    colors, degs = rand_case(rng, b, k)
+    exp = ref.step_rows_py(colors, degs)
+    got, keep = net_step.net_step(colors, degs)
+    got = np.asarray(got)
+    np.testing.assert_array_equal(got, exp)
+    np.testing.assert_array_equal(np.asarray(keep), ref.conflict_mask_py(colors, degs))
+    # invariant: every live row is a valid distinct coloring
+    for bi in range(b):
+        assert _row_valid(got[bi], int(degs[bi])), (got[bi], degs[bi])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_idempotence(k, seed):
+    rng = np.random.default_rng(seed)
+    colors, degs = rand_case(rng, 6, k)
+    once, _ = net_step.net_step(colors, degs)
+    twice, keep2 = net_step.net_step(np.asarray(once), degs)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    # after one step every live slot is kept
+    j = np.arange(k)[None, :]
+    live = j < degs[:, None]
+    assert (np.asarray(keep2)[live] == 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block_b=st.sampled_from([1, 2, 4, 8]))
+def test_hypothesis_block_size_invariance(seed, block_b):
+    # grid/BlockSpec decomposition must not change results
+    rng = np.random.default_rng(seed)
+    colors, degs = rand_case(rng, 8, 8)
+    a, _ = net_step.net_step(colors, degs)
+    b, _ = net_step.net_step(colors, degs, block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,72 @@
+//! Ablations over the design knobs DESIGN.md calls out: dynamic chunk
+//! size (the `-64` choice), the lazy-queue (`D`) option, the simulator's
+//! fork-skew and atomic-contention constants, and how many net
+//! iterations to run (`N1` vs `N2` vs `N3`). One graph (coPapersDBLP),
+//! t = 16, everything else fixed — each row isolates one knob.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::schedule::{AlgSpec, N1_N2, V_V_64D};
+use bgpc::coloring::{color_bgpc, Balance, Config, ExecMode};
+use bgpc::graph::{generators::Preset, Ordering};
+use bgpc::sim::CostModel;
+
+fn run_with(g: &bgpc::graph::Bipartite, spec: AlgSpec, model: CostModel) -> (f64, usize, usize) {
+    let cfg = Config {
+        spec,
+        balance: Balance::None,
+        threads: 16,
+        mode: ExecMode::Sim(model),
+        ordering: Ordering::Natural,
+    };
+    let r = color_bgpc(g, &cfg);
+    (r.seconds * 1e3, r.n_colors, r.iterations)
+}
+
+fn main() {
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(common::scale(), common::seed());
+    let base = CostModel::default();
+    println!("=== Ablations (coPapersDBLP, t=16) ===");
+
+    println!("\n-- dynamic chunk size (V-*-64D family; 0 = static) --");
+    for chunk in [0usize, 1, 16, 64, 256, 2048] {
+        let spec = AlgSpec { chunk, ..V_V_64D };
+        let (ms, colors, iters) = run_with(&g, spec, base);
+        println!("  chunk {:>5}: {:>8.2} ms  colors {}  iters {}", chunk, ms, colors, iters);
+    }
+
+    println!("\n-- lazy next-queues (the D option) --");
+    for lazy in [false, true] {
+        let spec = AlgSpec { lazy_queues: lazy, ..V_V_64D };
+        let (ms, colors, _) = run_with(&g, spec, base);
+        println!("  lazy {:>5}: {:>8.2} ms  colors {}", lazy, ms, colors);
+    }
+
+    println!("\n-- net-coloring iterations (Nk-N2-style schedules) --");
+    for k in 0..=3usize {
+        let spec = AlgSpec {
+            name: "Nk-N2",
+            net_color_iters: k,
+            net_conflict_iters: k.max(2),
+            ..N1_N2
+        };
+        let (ms, colors, iters) = run_with(&g, spec, base);
+        println!("  k = {k}: {:>8.2} ms  colors {}  iters {}", ms, colors, iters);
+    }
+
+    println!("\n-- simulator fork-skew (race-window sensitivity, N1-N2) --");
+    for skew in [0u64, 16, 64, 256, 1024] {
+        let model = CostModel { fork_skew: skew, ..base };
+        let (ms, colors, iters) = run_with(&g, N1_N2, model);
+        println!("  skew {:>5}: {:>8.2} ms  colors {}  iters {}", skew, ms, colors, iters);
+    }
+
+    println!("\n-- atomic contention scale (chunk-1 V-V-64D sensitivity) --");
+    for scale_x10 in [0u32, 30, 90, 270] {
+        let model = CostModel { atomic_scale: scale_x10 as f64 / 10.0, ..base };
+        let spec = AlgSpec { chunk: 1, ..V_V_64D };
+        let (ms, _, _) = run_with(&g, spec, model);
+        println!("  a1 {:>4.1}: {:>8.2} ms", scale_x10 as f64 / 10.0, ms);
+    }
+}

@@ -1,0 +1,150 @@
+//! Shared bench-harness helpers: instance construction, sequential
+//! baselines, speedup sweeps and table formatting.
+//!
+//! Every bench is deterministic (seeded generators + the discrete-event
+//! simulator), so a single repetition regenerates identical numbers.
+//! Scale defaults to 0.5× the calibrated preset sizes; override with
+//! `BGPC_SCALE=1.0 cargo bench` for the full-size run recorded in
+//! EXPERIMENTS.md.
+
+#![allow(dead_code)]
+
+use bgpc::coloring::{color_bgpc, schedule::AlgSpec, Balance, ColoringResult, Config, ExecMode};
+use bgpc::graph::{generators::Preset, Bipartite, Ordering, PRESETS};
+use bgpc::sim::CostModel;
+use bgpc::util::geomean;
+
+pub const THREADS: [usize; 4] = [2, 4, 8, 16];
+
+pub fn scale() -> f64 {
+    std::env::var("BGPC_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.5)
+}
+
+pub fn seed() -> u64 {
+    std::env::var("BGPC_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+pub fn model() -> CostModel {
+    CostModel::default()
+}
+
+/// Instantiate every preset at the bench scale.
+pub fn all_instances() -> Vec<(&'static Preset, Bipartite)> {
+    PRESETS.iter().map(|p| (p, p.bipartite(scale(), seed()))).collect()
+}
+
+/// Sequential V-V baseline: (colors, #colors, simulated seconds).
+pub fn seq_baseline(g: &Bipartite, order: &[u32]) -> (Vec<i32>, usize, f64) {
+    let (colors, units) = bgpc::coloring::bgpc::seq::greedy(g, order);
+    let n = bgpc::coloring::stats::distinct_colors(&colors);
+    (colors, n, model().units_to_ns(units, 1) * 1e-9)
+}
+
+/// One simulated run.
+pub fn run(g: &Bipartite, spec: AlgSpec, t: usize, ord: Ordering, bal: Balance) -> ColoringResult {
+    let cfg = Config {
+        spec,
+        balance: bal,
+        threads: t,
+        mode: ExecMode::Sim(model()),
+        ordering: ord,
+    };
+    let r = color_bgpc(g, &cfg);
+    assert!(
+        bgpc::coloring::verify::bgpc_valid(g, &r.colors).is_ok(),
+        "{} produced an invalid coloring",
+        spec.name
+    );
+    r
+}
+
+/// The Table III / Table IV sweep: per-graph speedups over the
+/// sequential V-V baseline with ordering `ord`, geomean'd across graphs.
+pub struct SweepRow {
+    pub name: &'static str,
+    pub colors_norm: f64,
+    pub speedup: [f64; 4],
+    pub over_parallel_vv16: f64,
+}
+
+pub fn speedup_sweep(ord: Ordering, specs: &[AlgSpec]) -> Vec<SweepRow> {
+    let instances = all_instances();
+    // per graph: (seq_secs, seq_colors, order)
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let mut per_graph: Vec<(f64, usize)> = Vec::new();
+    let mut orders = Vec::new();
+    for (_p, g) in &instances {
+        let order = ord.compute(g);
+        let (_, n_colors, secs) = seq_baseline(g, &order);
+        per_graph.push((secs, n_colors));
+        orders.push(order);
+    }
+    // the "over parallel V-V @16" normalizer
+    let mut vv16: Vec<f64> = Vec::new();
+    for (i, (_p, g)) in instances.iter().enumerate() {
+        let _ = i;
+        let r = run(g, bgpc::coloring::schedule::V_V, 16, ord, Balance::None);
+        vv16.push(r.seconds);
+    }
+    for &spec in specs {
+        let mut colors_norm = Vec::new();
+        let mut speed = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        let mut over_vv = Vec::new();
+        for (i, (_p, g)) in instances.iter().enumerate() {
+            let (seq_secs, seq_colors) = per_graph[i];
+            for (ti, &t) in THREADS.iter().enumerate() {
+                let r = run(g, spec, t, ord, Balance::None);
+                speed[ti].push(seq_secs / r.seconds);
+                if t == 16 {
+                    colors_norm.push(r.n_colors as f64 / seq_colors as f64);
+                    over_vv.push(vv16[i] / r.seconds);
+                }
+            }
+        }
+        rows.push(SweepRow {
+            name: spec.name,
+            colors_norm: geomean(&colors_norm),
+            speedup: [
+                geomean(&speed[0]),
+                geomean(&speed[1]),
+                geomean(&speed[2]),
+                geomean(&speed[3]),
+            ],
+            over_parallel_vv16: geomean(&over_vv),
+        });
+    }
+    rows
+}
+
+pub fn print_sweep_table(title: &str, rows: &[SweepRow]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<10} {:>8} | {:>6} {:>6} {:>6} {:>6} | {:>8}",
+        "Algorithm", "#col/VV", "t=2", "t=4", "t=8", "t=16", "vs V-V16"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>8.2} | {:>6.2} {:>6.2} {:>6.2} {:>6.2} | {:>8.2}",
+            r.name, r.colors_norm, r.speedup[0], r.speedup[1], r.speedup[2], r.speedup[3], r.over_parallel_vv16
+        );
+    }
+}
+
+/// Write CSV rows under bench_results/ for EXPERIMENTS.md.
+pub fn write_csv(name: &str, header: &str, lines: &[String]) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let mut out = String::from(header);
+    out.push('\n');
+    for l in lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    let _ = std::fs::write(dir.join(name), out);
+    println!("[csv] bench_results/{name}");
+}
+
+/// Skip heavy benches under `cargo test --benches`-style quick runs.
+pub fn quick_mode() -> bool {
+    std::env::var("BGPC_QUICK").is_ok()
+}

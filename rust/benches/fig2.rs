@@ -1,0 +1,50 @@
+//! Figure 2 — per-matrix execution times on 2/4/8/16 threads (left axis)
+//! and the number of colors (right axis) for all matrices and all eight
+//! algorithms, natural order.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::{schedule, Balance};
+use bgpc::graph::Ordering;
+
+fn main() {
+    println!("=== Figure 2: per-matrix times (ms) and #colors, all algorithms ===");
+    let mut csv = Vec::new();
+    for (p, g) in common::all_instances() {
+        let order = Ordering::Natural.compute(&g);
+        let (_, seq_colors, seq_secs) = common::seq_baseline(&g, &order);
+        println!(
+            "\n-- {} (|V_A|={}, nnz={}; seq V-V {:.1} ms, {} colors)",
+            p.name,
+            g.n_vertices(),
+            g.nnz(),
+            seq_secs * 1e3,
+            seq_colors
+        );
+        println!(
+            "{:<10} {:>9} {:>9} {:>9} {:>9} {:>8}",
+            "alg", "t=2(ms)", "t=4(ms)", "t=8(ms)", "t=16(ms)", "#colors"
+        );
+        for spec in schedule::ALL {
+            let mut times = Vec::new();
+            let mut colors = 0usize;
+            for &t in &common::THREADS {
+                let r = common::run(&g, spec, t, Ordering::Natural, Balance::None);
+                times.push(r.seconds * 1e3);
+                if t == 16 {
+                    colors = r.n_colors;
+                }
+            }
+            println!(
+                "{:<10} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>8}",
+                spec.name, times[0], times[1], times[2], times[3], colors
+            );
+            csv.push(format!(
+                "{},{},{:.4},{:.4},{:.4},{:.4},{}",
+                p.name, spec.name, times[0], times[1], times[2], times[3], colors
+            ));
+        }
+    }
+    common::write_csv("fig2.csv", "matrix,alg,t2_ms,t4_ms,t8_ms,t16_ms,colors16", &csv);
+}

@@ -1,0 +1,41 @@
+//! Figure 3 — distribution of color-set cardinalities for V-N2 and
+//! N1-N2, unbalanced vs B1 vs B2, on coPapersDBLP at 16 threads.
+//! Printed as a log2-bucketed histogram (the paper plots per-set
+//! cardinality curves); B2 must visibly compress the tail.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::{schedule, Balance};
+use bgpc::graph::{generators::Preset, Ordering};
+use bgpc::util::stats::log2_histogram;
+
+fn main() {
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(common::scale(), common::seed());
+    println!("=== Figure 3: color-set cardinality distributions, coPapersDBLP, t=16 ===");
+    let mut csv = Vec::new();
+    for spec in [schedule::V_N2, schedule::N1_N2] {
+        for (tag, bal) in [("U", Balance::None), ("B1", Balance::B1), ("B2", Balance::B2)] {
+            let r = common::run(&g, spec, 16, Ordering::Natural, bal);
+            let st = r.stats();
+            let hist = log2_histogram(&st.cards);
+            print!(
+                "{:<9} sets={:>6} avg={:>7.2} std={:>8.2} max={:>6} tiny={:>5} | hist:",
+                format!("{}-{}", spec.name, tag),
+                st.n_colors,
+                st.avg_cardinality,
+                st.stddev_cardinality,
+                st.max_cardinality,
+                st.tiny_sets
+            );
+            for (ub, count) in &hist {
+                print!(" ≤{ub}:{count}");
+            }
+            println!();
+            for (ub, count) in &hist {
+                csv.push(format!("{},{},{},{}", spec.name, tag, ub, count));
+            }
+        }
+    }
+    common::write_csv("fig3.csv", "alg,balance,card_bucket_ub,n_sets", &csv);
+}

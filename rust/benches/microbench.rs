@@ -1,0 +1,84 @@
+//! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf): real
+//! wall-clock of the native hot paths on this host, plus the PJRT kernel
+//! latency per bucket. These are *measured* (not simulated) numbers.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::{color_bgpc, schedule, Config};
+use bgpc::graph::generators::Preset;
+use bgpc::runtime::{offload, Runtime};
+use bgpc::util::prng::Rng;
+use bgpc::util::timer::time_min;
+
+fn main() {
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.25, common::seed());
+    println!("=== microbench (real wall-clock, host) ===");
+    println!("graph: coPapersDBLP@0.25 |V_A|={} nnz={}", g.n_vertices(), g.nnz());
+
+    // sequential greedy throughput (the calibration anchor)
+    let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+    let secs = time_min(3, || bgpc::coloring::bgpc::seq::greedy(&g, &order));
+    let (_, units) = bgpc::coloring::bgpc::seq::greedy(&g, &order);
+    println!(
+        "seq greedy: {:.1} ms, {:.2} ns/unit ({} units)",
+        secs * 1e3,
+        secs * 1e9 / units as f64,
+        units
+    );
+
+    // engine end-to-end (1 real thread) — native-path overhead vs seq
+    let secs = time_min(3, || color_bgpc(&g, &Config::threads(schedule::N1_N2, 1)));
+    println!("engine N1-N2 threads=1: {:.1} ms", secs * 1e3);
+
+    // simulator overhead factor: sim-run wall-clock vs its simulated time
+    let t0 = std::time::Instant::now();
+    let r = color_bgpc(&g, &Config::sim(schedule::N1_N2, 16));
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sim N1-N2 t=16: simulated {:.2} ms, driver wall {:.1} ms ({:.1}x overhead)",
+        r.seconds * 1e3,
+        wall * 1e3,
+        wall / r.seconds.max(1e-12)
+    );
+
+    // native row-step throughput
+    let mut rng = Rng::new(9);
+    let (b, k) = (1024usize, 32usize);
+    let mut colors: Vec<i32> = (0..b * k).map(|_| rng.range(0, k + 3) as i32 - 1).collect();
+    let degs: Vec<i32> = (0..b).map(|_| rng.range(1, k + 1) as i32).collect();
+    let secs = time_min(10, || {
+        let mut c = colors.clone();
+        offload::step_rows_native(&mut c, &degs, k);
+        c
+    });
+    println!(
+        "native net-step [{}x{}]: {:.1} µs ({:.1} ns/slot)",
+        b,
+        k,
+        secs * 1e6,
+        secs * 1e9 / (b * k) as f64
+    );
+    let _ = &mut colors;
+
+    // PJRT kernel latency per bucket (needs artifacts)
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => {
+            for bucket in rt.buckets() {
+                let (b, k) = (bucket.b, bucket.k);
+                let colors: Vec<i32> =
+                    (0..b * k).map(|i| (i % (k + 2)) as i32 - 1).collect();
+                let degs: Vec<i32> = (0..b).map(|i| (i % (k + 1)) as i32).collect();
+                let secs = time_min(5, || bucket.step(&colors, &degs).unwrap());
+                println!(
+                    "pjrt net_step b={} k={}: {:.2} ms ({:.1} ns/slot)",
+                    b,
+                    k,
+                    secs * 1e3,
+                    secs * 1e9 / (b * k) as f64
+                );
+            }
+        }
+        Err(e) => println!("pjrt: skipped ({e})"),
+    }
+}

@@ -1,0 +1,62 @@
+//! Table I — the number of uncolored (remaining) vertices after the
+//! first iteration for bone010 and coPapersDBLP with 16 threads, when
+//! Algorithm 6 (`Net-v1`), Algorithm 6 + reverse, and Algorithm 8 are
+//! used for the net-based first coloring iteration.
+//!
+//! Paper values (986k / 540k vertex originals):
+//!   bone010       986,703: 863,785 / 806,264 / 610,924 remaining
+//!   coPapersDBLP  540,486: 409,621 / 303,152 / 133,874 remaining
+//! Shape to reproduce: V1 > V1+reverse > TwoPass, with TwoPass well
+//! under half of V1 on coPapersDBLP.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::schedule::{NetColorAlg, N1_N2};
+use bgpc::coloring::Balance;
+use bgpc::graph::{generators::Preset, Ordering};
+
+fn main() {
+    let algs = [
+        ("Alg. 6 (v1)", NetColorAlg::V1),
+        ("Alg. 6 + reverse", NetColorAlg::V1Reverse),
+        ("Alg. 8 (two-pass)", NetColorAlg::TwoPass),
+    ];
+    println!("=== Table I: remaining |W_next| after the first iteration (t=16) ===");
+    println!(
+        "{:<16} {:>10} | {:>12} {:>16} {:>16}",
+        "graph", "|V_A|", "Alg6", "Alg6+rev", "Alg8"
+    );
+    let mut csv = Vec::new();
+    for name in ["bone010", "coPapersDBLP"] {
+        let g = Preset::by_name(name).unwrap().bipartite(common::scale(), common::seed());
+        let mut remaining = Vec::new();
+        for (_, alg) in algs {
+            let spec = N1_N2.with_net_alg(alg);
+            let r = common::run(&g, spec, 16, Ordering::Natural, Balance::None);
+            // queue entering iteration 2 == remaining after iteration 1
+            let rem = r.trace.iters.get(1).map(|it| it.queue_len).unwrap_or(0);
+            remaining.push(rem);
+        }
+        println!(
+            "{:<16} {:>10} | {:>12} {:>16} {:>16}",
+            name,
+            g.n_vertices(),
+            remaining[0],
+            remaining[1],
+            remaining[2]
+        );
+        csv.push(format!(
+            "{name},{},{},{},{}",
+            g.n_vertices(),
+            remaining[0],
+            remaining[1],
+            remaining[2]
+        ));
+        assert!(
+            remaining[2] <= remaining[0],
+            "Alg8 must leave fewer conflicts than Alg6"
+        );
+    }
+    common::write_csv("table1.csv", "graph,n_vertices,alg6,alg6_rev,alg8", &csv);
+}

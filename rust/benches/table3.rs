@@ -1,0 +1,33 @@
+//! Table III — BGPC speedups over sequential V-V with the **natural**
+//! column order: all eight algorithms, t ∈ {2, 4, 8, 16}, geometric
+//! means over the eight matrices, plus #colors normalized to V-V and the
+//! 16-thread speedup over *parallel* V-V.
+//!
+//! Paper row targets (t=16 / vs-V-V16): V-V 2.76/1.00, V-V-64 4.00/1.45,
+//! V-V-64D 4.05/1.47, V-N∞ 5.84/2.11, V-N1 5.85/2.11, V-N2 6.01/2.17,
+//! N1-N2 11.38/4.12, N2-N2 7.50/2.71. Shape: net-based wins, N1-N2 on
+//! top with a small color increase (~8%).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::schedule;
+use bgpc::graph::Ordering;
+
+fn main() {
+    let rows = common::speedup_sweep(Ordering::Natural, &schedule::ALL);
+    common::print_sweep_table(
+        "Table III: speedups over sequential V-V (natural order, geomean of 8 matrices)",
+        &rows,
+    );
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}",
+                r.name, r.colors_norm, r.speedup[0], r.speedup[1], r.speedup[2], r.speedup[3], r.over_parallel_vv16
+            )
+        })
+        .collect();
+    common::write_csv("table3.csv", "alg,colors_norm,t2,t4,t8,t16,over_vv16", &csv);
+}

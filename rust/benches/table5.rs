@@ -1,0 +1,92 @@
+//! Table V — D2GC speedups on the five structurally-symmetric matrices:
+//! V-V-64D, V-N1, V-N2, N1-N2 over the sequential D2GC baseline, plus
+//! the 16-thread speedup over parallel V-V-64D.
+//!
+//! Paper targets (t=16 / vs-64D-16): V-V-64D 6.11/1.00, V-N1 8.97/1.39,
+//! V-N2 8.87/1.37, N1-N2 13.20/2.00, with ≤ ~9% more colors.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::{color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::graph::{generators::Preset, Ordering};
+use bgpc::util::geomean;
+
+const D2GC_GRAPHS: [&str; 5] = ["af_shell", "bone010", "channel", "coPapersDBLP", "nlpkkt120"];
+
+fn main() {
+    let model = common::model();
+    let mut per_graph: Vec<(String, bgpc::graph::Csr, f64, usize)> = Vec::new();
+    for name in D2GC_GRAPHS {
+        let m = Preset::by_name(name).unwrap().net_incidence(common::scale(), common::seed());
+        assert!(m.is_structurally_symmetric());
+        let order: Vec<u32> = (0..m.n_rows as u32).collect();
+        let (colors, units) = bgpc::coloring::d2gc::seq_greedy(&m, &order);
+        let n_colors = bgpc::coloring::stats::distinct_colors(&colors);
+        let secs = model.units_to_ns(units, 1) * 1e-9;
+        per_graph.push((name.to_string(), m, secs, n_colors));
+    }
+
+    let run = |m: &bgpc::graph::Csr, spec, t| {
+        let cfg = Config {
+            spec,
+            balance: Balance::None,
+            threads: t,
+            mode: ExecMode::Sim(model),
+            ordering: Ordering::Natural,
+        };
+        let r = color_d2gc(m, &cfg);
+        assert!(bgpc::coloring::verify::d2gc_valid(m, &r.colors).is_ok());
+        r
+    };
+
+    // normalizer: parallel V-V-64D at 16 threads
+    let vv64d16: Vec<f64> = per_graph
+        .iter()
+        .map(|(_, m, _, _)| run(m, schedule::V_V_64D, 16).seconds)
+        .collect();
+
+    println!("=== Table V: D2GC speedups over sequential V-V (5 symmetric matrices) ===");
+    println!(
+        "{:<10} {:>8} | {:>6} {:>6} {:>6} {:>6} | {:>9}",
+        "Algorithm", "#col/VV", "t=2", "t=4", "t=8", "t=16", "vs 64D@16"
+    );
+    let mut csv = Vec::new();
+    for spec in schedule::D2GC_SET {
+        let mut colors_norm = Vec::new();
+        let mut speed = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        let mut over = Vec::new();
+        for (i, (_name, m, seq_secs, seq_colors)) in per_graph.iter().enumerate() {
+            for (ti, &t) in common::THREADS.iter().enumerate() {
+                let r = run(m, spec, t);
+                speed[ti].push(seq_secs / r.seconds);
+                if t == 16 {
+                    colors_norm.push(r.n_colors as f64 / *seq_colors as f64);
+                    over.push(vv64d16[i] / r.seconds);
+                }
+            }
+        }
+        let s: Vec<f64> = speed.iter().map(|v| geomean(v)).collect();
+        println!(
+            "{:<10} {:>8.2} | {:>6.2} {:>6.2} {:>6.2} {:>6.2} | {:>9.2}",
+            spec.name,
+            geomean(&colors_norm),
+            s[0],
+            s[1],
+            s[2],
+            s[3],
+            geomean(&over)
+        );
+        csv.push(format!(
+            "{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}",
+            spec.name,
+            geomean(&colors_norm),
+            s[0],
+            s[1],
+            s[2],
+            s[3],
+            geomean(&over)
+        ));
+    }
+    common::write_csv("table5.csv", "alg,colors_norm,t2,t4,t8,t16,over_64d16", &csv);
+}

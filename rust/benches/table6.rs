@@ -1,0 +1,68 @@
+//! Table VI — impact of the balancing heuristics B1 and B2 on V-N2 and
+//! N1-N2 at 16 threads, normalized to the unbalanced (-U) runs:
+//! coloring time, number of color sets, average cardinality, stddev of
+//! cardinalities (geomeans over the eight matrices).
+//!
+//! Paper targets: time ≈ 1.0 (costless); B1: sets ~1.04, stddev
+//! 0.69/0.84; B2: sets ~1.13/1.09, stddev 0.25/0.62.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::coloring::{schedule, Balance};
+use bgpc::graph::Ordering;
+use bgpc::util::geomean;
+
+fn main() {
+    println!("=== Table VI: balancing heuristics at t=16 (normalized to -U) ===");
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10}",
+        "Algorithm", "time", "#sets", "avg-card", "std-dev"
+    );
+    let instances = common::all_instances();
+    let mut csv = Vec::new();
+    for spec in [schedule::V_N2, schedule::N1_N2] {
+        // unbalanced baselines per graph
+        let base: Vec<_> = instances
+            .iter()
+            .map(|(_p, g)| common::run(g, spec, 16, Ordering::Natural, Balance::None))
+            .collect();
+        for (tag, bal) in [("U", Balance::None), ("B1", Balance::B1), ("B2", Balance::B2)] {
+            let mut time = Vec::new();
+            let mut sets = Vec::new();
+            let mut card = Vec::new();
+            let mut dev = Vec::new();
+            for (i, (_p, g)) in instances.iter().enumerate() {
+                let r = if bal == Balance::None {
+                    base[i].clone()
+                } else {
+                    common::run(g, spec, 16, Ordering::Natural, bal)
+                };
+                let bs = base[i].stats();
+                let rs = r.stats();
+                time.push(r.seconds / base[i].seconds);
+                sets.push(rs.n_colors as f64 / bs.n_colors as f64);
+                card.push(rs.avg_cardinality / bs.avg_cardinality);
+                dev.push(rs.stddev_cardinality / bs.stddev_cardinality);
+            }
+            println!(
+                "{:<10} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+                format!("{}-{}", spec.name, tag),
+                geomean(&time),
+                geomean(&sets),
+                geomean(&card),
+                geomean(&dev)
+            );
+            csv.push(format!(
+                "{}-{},{:.3},{:.3},{:.3},{:.3}",
+                spec.name,
+                tag,
+                geomean(&time),
+                geomean(&sets),
+                geomean(&card),
+                geomean(&dev)
+            ));
+        }
+    }
+    common::write_csv("table6.csv", "alg,time_norm,sets_norm,card_norm,stddev_norm", &csv);
+}

@@ -1,0 +1,164 @@
+//! Balancing heuristics B1 and B2 (Algorithms 11–12).
+//!
+//! Both are *online and costless*: they only change which color the
+//! first-fit search starts from, using two thread-private trackers
+//! (`col_max`, `col_next`) — no shared cardinality counters.
+//!
+//! * **B1** alternates per vertex/net id parity: odd ids use plain
+//!   first-fit; even ids search *downward* from the thread's `col_max`
+//!   (falling back to first-fit from `col_max + 1` when the interval is
+//!   exhausted), spreading mass across `[0, col_max]` without adding
+//!   colors unless forced.
+//! * **B2** keeps a rolling start color `col_next`, searches upward from
+//!   it, wraps to 0 past `col_max`, then advances
+//!   `col_next = min(col + 1, col_max/3 + 1)` — Alg. 12 as printed (the
+//!   prose says "minimum color to start" while the pseudocode applies
+//!   `min`; we follow the pseudocode, see DESIGN.md §7).
+
+use super::forbidden::ThreadState;
+
+/// Balancing mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Balance {
+    /// Unbalanced (plain first-fit / reverse first-fit) — the `-U` rows.
+    None,
+    /// Algorithm 11.
+    B1,
+    /// Algorithm 12.
+    B2,
+}
+
+impl Balance {
+    pub fn parse(s: &str) -> Option<Balance> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "u" => Some(Balance::None),
+            "b1" => Some(Balance::B1),
+            "b2" => Some(Balance::B2),
+            _ => None,
+        }
+    }
+}
+
+/// Pick a color for item with id `id` given the thread's forbidden set
+/// (already populated). Updates `col_max`/`col_next`. Returns the color
+/// and accumulates probe cost into `units`.
+#[inline]
+pub fn select_color(bal: Balance, ts: &mut ThreadState, id: usize, units: &mut u64) -> i32 {
+    let col = match bal {
+        Balance::None => {
+            let (c, probes) = ts.forbidden.first_fit();
+            *units += probes;
+            c
+        }
+        Balance::B1 => {
+            if id % 2 == 0 {
+                // reverse first-fit from col_max, safety first-fit past it
+                let (found, probes) = ts.forbidden.reverse_fit(ts.col_max);
+                *units += probes;
+                match found {
+                    Some(c) => c,
+                    None => {
+                        let (c, probes) = ts.forbidden.first_fit_from(ts.col_max + 1);
+                        *units += probes;
+                        c
+                    }
+                }
+            } else {
+                let (c, probes) = ts.forbidden.first_fit();
+                *units += probes;
+                c
+            }
+        }
+        Balance::B2 => {
+            let (mut c, probes) = ts.forbidden.first_fit_from(ts.col_next);
+            *units += probes;
+            if c > ts.col_max {
+                let (c0, probes0) = ts.forbidden.first_fit();
+                *units += probes0;
+                c = c0;
+            }
+            c
+        }
+    };
+    ts.col_max = ts.col_max.max(col);
+    if bal == Balance::B2 {
+        ts.col_next = (col + 1).min(ts.col_max / 3 + 1);
+    }
+    col
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ts_with(forbidden: &[i32]) -> ThreadState {
+        let mut ts = ThreadState::new(32);
+        ts.forbidden.next_gen();
+        for &c in forbidden {
+            ts.forbidden.insert(c);
+        }
+        ts
+    }
+
+    #[test]
+    fn unbalanced_is_first_fit() {
+        let mut ts = ts_with(&[0, 1, 3]);
+        let mut u = 0;
+        assert_eq!(select_color(Balance::None, &mut ts, 0, &mut u), 2);
+        assert!(u > 0);
+    }
+
+    #[test]
+    fn b1_even_goes_high_odd_goes_low() {
+        let mut ts = ts_with(&[0]);
+        ts.col_max = 5;
+        let mut u = 0;
+        // even id: reverse from col_max=5 -> 5 free
+        assert_eq!(select_color(Balance::B1, &mut ts, 4, &mut u), 5);
+        // odd id: first-fit -> 1
+        let mut ts = ts_with(&[0]);
+        ts.col_max = 5;
+        assert_eq!(select_color(Balance::B1, &mut ts, 3, &mut u), 1);
+    }
+
+    #[test]
+    fn b1_safety_extends_interval() {
+        // all of [0, col_max] forbidden -> fall to col_max+1 upward
+        let mut ts = ts_with(&[0, 1, 2]);
+        ts.col_max = 2;
+        let mut u = 0;
+        assert_eq!(select_color(Balance::B1, &mut ts, 0, &mut u), 3);
+        assert_eq!(ts.col_max, 3, "col_max tracks the new color");
+    }
+
+    #[test]
+    fn b2_rolls_start_and_wraps() {
+        let mut ts = ts_with(&[]);
+        ts.col_max = 6;
+        ts.col_next = 4;
+        let mut u = 0;
+        let c = select_color(Balance::B2, &mut ts, 0, &mut u);
+        assert_eq!(c, 4);
+        // col_next = min(5, 6/3+1=3) = 3
+        assert_eq!(ts.col_next, 3);
+        // now forbid 3.. past col_max to force the wrap path
+        let mut ts = ts_with(&[6]);
+        ts.col_max = 6;
+        ts.col_next = 6;
+        let c = select_color(Balance::B2, &mut ts, 1, &mut u);
+        assert_eq!(c, 0, "wrapped to first-fit from 0");
+    }
+
+    #[test]
+    fn col_max_monotone() {
+        let mut ts = ts_with(&[0, 1, 2, 3, 4]);
+        let mut u = 0;
+        let c = select_color(Balance::None, &mut ts, 0, &mut u);
+        assert_eq!(c, 5);
+        assert_eq!(ts.col_max, 5);
+        let mut ts2 = ts_with(&[]);
+        ts2.col_max = 9;
+        select_color(Balance::None, &mut ts2, 0, &mut u);
+        assert_eq!(ts2.col_max, 9, "never decreases");
+    }
+}

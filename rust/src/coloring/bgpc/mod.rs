@@ -1,0 +1,266 @@
+//! The BGPC engine: the speculate → detect → repeat loop (Algorithm 1)
+//! assembled from the phase variants according to an [`AlgSpec`].
+
+pub mod net;
+pub mod seq;
+pub mod vertex;
+
+use crate::coloring::balance::Balance;
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::schedule::AlgSpec;
+use crate::coloring::ColoringResult;
+use crate::graph::Bipartite;
+use crate::par::{ColorStore, Driver, SharedQueue};
+use crate::sim::trace::{IterTrace, RunTrace};
+
+/// Iteration-count safety net: beyond this the remaining vertices are
+/// finished sequentially (never observed in practice; present so
+/// adversarial inputs cannot livelock the optimistic loop).
+pub const MAX_ITERS: usize = 200;
+
+/// Gather the next work queue from the lazy per-thread queues or the
+/// shared queue, whichever the spec uses.
+fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec<u32> {
+    if lazy {
+        let cap: usize = ts.iter().map(|s| s.next_local.len()).sum();
+        let mut w = Vec::with_capacity(cap);
+        for s in ts.iter_mut() {
+            w.append(&mut s.next_local);
+        }
+        w
+    } else {
+        shared.drain()
+    }
+}
+
+/// Upper bound on any color the engine can produce, for sizing the
+/// forbidden arrays: vertex-based first-fit stays ≤ the max two-hop
+/// degree; net-based stays < the max net degree; B1 can add one.
+fn color_cap(g: &Bipartite) -> usize {
+    let max2hop = (0..g.n_vertices()).map(|u| g.two_hop_bound(u)).max().unwrap_or(0);
+    max2hop.max(g.net_vtxs.max_deg()) + 4
+}
+
+/// Run a full BGPC coloring with driver `d`.
+pub fn run<D: Driver>(
+    g: &Bipartite,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+) -> ColoringResult {
+    let n = g.n_vertices();
+    let t0 = std::time::Instant::now();
+    let colors = d.new_colors(n);
+    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    let shared = SharedQueue::with_capacity(n);
+    let mut w: Vec<u32> = order.to_vec();
+    let mut trace = RunTrace::default();
+    let mut sim_secs = 0.0f64;
+    let mut work_units = 0u64;
+    let mut iterations = 0usize;
+
+    while !w.is_empty() && iterations < MAX_ITERS {
+        iterations += 1;
+        let net_color = iterations <= spec.net_color_iters;
+        let net_conflict = iterations <= spec.net_conflict_iters;
+        let mut it = IterTrace {
+            queue_len: w.len(),
+            color_kind: if net_color { 'N' } else { 'V' },
+            conflict_kind: if net_conflict { 'N' } else { 'V' },
+            ..Default::default()
+        };
+
+        // --- coloring phase (Alg. 4 / 6 / 8) ---
+        let cr = if net_color {
+            net::color_phase(g, &colors, d, &mut ts, spec.chunk, spec.net_alg, bal)
+        } else {
+            vertex::color_phase(g, &w, &colors, d, &mut ts, spec.chunk, bal)
+        };
+        it.color_secs = cr.seconds();
+        it.color_busy = cr.busy_units.clone();
+        work_units += cr.busy_units.iter().sum::<u64>();
+
+        // --- conflict removal phase (Alg. 5 / 7) ---
+        let (rr, w_next) = if net_conflict {
+            let r1 = net::conflict_phase(g, &colors, d, &mut ts, spec.chunk);
+            let r2 = net::rebuild_queue(
+                n,
+                &colors,
+                d,
+                &mut ts,
+                spec.chunk,
+                spec.lazy_queues,
+                &shared,
+            );
+            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            let combined = crate::par::RegionOut {
+                real_secs: r1.real_secs + r2.real_secs,
+                sim_ns: match (r1.sim_ns, r2.sim_ns) {
+                    (Some(a), Some(b)) => Some(a + b),
+                    _ => None,
+                },
+                busy_units: Vec::new(),
+            };
+            work_units += r1.busy_units.iter().sum::<u64>()
+                + r2.busy_units.iter().sum::<u64>();
+            (combined, wn)
+        } else {
+            let r = vertex::conflict_phase(
+                g,
+                &w,
+                &colors,
+                d,
+                &mut ts,
+                spec.chunk,
+                spec.lazy_queues,
+                &shared,
+            );
+            work_units += r.busy_units.iter().sum::<u64>();
+            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            (r, wn)
+        };
+        it.conflict_secs = rr.seconds();
+        sim_secs += it.color_secs + it.conflict_secs;
+        trace.iters.push(it);
+        w = w_next;
+    }
+
+    if !w.is_empty() {
+        // safety net: finish sequentially (exact greedy over what's left)
+        let ts0 = &mut ts[0];
+        let now = d.now();
+        for &wv in &w {
+            let wv = wv as usize;
+            ts0.forbidden.next_gen();
+            for &v in g.nets(wv) {
+                for &u in g.vtxs(v as usize) {
+                    let u = u as usize;
+                    if u != wv {
+                        let c = colors.read(u, now);
+                        if c >= 0 {
+                            ts0.forbidden.insert(c);
+                        }
+                    }
+                }
+            }
+            let (c, _) = ts0.forbidden.first_fit();
+            colors.write(wv, c, now);
+        }
+    }
+
+    let colors_vec = colors.to_vec();
+    let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
+    let is_sim = trace.iters.first().map(|i| i.color_busy.len() > 0).unwrap_or(false);
+    ColoringResult {
+        colors: colors_vec,
+        n_colors,
+        iterations,
+        seconds: if is_sim { sim_secs } else { t0.elapsed().as_secs_f64() },
+        trace,
+        work_units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::schedule;
+    use crate::coloring::verify::bgpc_valid;
+    use crate::graph::generators::{random_bipartite, Preset};
+    use crate::par::ThreadsDriver;
+    use crate::sim::{CostModel, SimDriver};
+
+    fn check_all_specs(g: &Bipartite, t: usize) {
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        for spec in schedule::ALL {
+            // real threads
+            let mut d = ThreadsDriver::new(t);
+            let r = run(g, &order, &spec, Balance::None, &mut d);
+            assert!(
+                bgpc_valid(g, &r.colors).is_ok(),
+                "{} threads={} invalid",
+                spec.name,
+                t
+            );
+            // simulator
+            let mut d = SimDriver::new(t, CostModel::default());
+            let r = run(g, &order, &spec, Balance::None, &mut d);
+            assert!(
+                bgpc_valid(g, &r.colors).is_ok(),
+                "{} sim t={} invalid",
+                spec.name,
+                t
+            );
+            assert!(r.seconds > 0.0);
+            assert!(r.n_colors > 0);
+        }
+    }
+
+    #[test]
+    fn all_schedules_produce_valid_colorings() {
+        let g = random_bipartite(300, 400, 3000, 11);
+        check_all_specs(&g, 1);
+        check_all_specs(&g, 4);
+    }
+
+    #[test]
+    fn all_schedules_valid_on_skewed_preset() {
+        let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.02, 3);
+        check_all_specs(&g, 8);
+    }
+
+    #[test]
+    fn balancing_preserves_validity() {
+        let g = random_bipartite(200, 300, 2500, 13);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        for bal in [Balance::B1, Balance::B2] {
+            for spec in [schedule::V_N2, schedule::N1_N2] {
+                let mut d = SimDriver::new(8, CostModel::default());
+                let r = run(&g, &order, &spec, bal, &mut d);
+                assert!(
+                    bgpc_valid(&g, &r.colors).is_ok(),
+                    "{:?} {} invalid",
+                    bal,
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulator_runs_are_deterministic() {
+        let g = random_bipartite(150, 200, 1500, 17);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let run_once = || {
+            let mut d = SimDriver::new(4, CostModel::default());
+            run(&g, &order, &schedule::N1_N2, Balance::None, &mut d)
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.seconds, b.seconds);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn net_first_iteration_leaves_work_for_iter_two() {
+        // Under the simulator with several threads, Alg. 8's optimism must
+        // leave *some* conflicts on a shared-heavy graph (Table I behaviour).
+        let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.02, 5);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let mut d = SimDriver::new(16, CostModel::default());
+        let r = run(&g, &order, &schedule::N1_N2, Balance::None, &mut d);
+        assert!(r.iterations >= 2, "expected speculative conflicts");
+    }
+
+    #[test]
+    fn empty_and_degenerate_graphs() {
+        let g = random_bipartite(10, 20, 0, 1); // no edges at all
+        let order: Vec<u32> = (0..20u32).collect();
+        let mut d = ThreadsDriver::new(2);
+        let r = run(&g, &order, &schedule::V_V, Balance::None, &mut d);
+        assert!(bgpc_valid(&g, &r.colors).is_ok());
+        assert_eq!(r.n_colors, 1, "independent vertices all take color 0");
+    }
+}

@@ -1,0 +1,375 @@
+//! Net-based BGPC phases — Algorithms 6, 7, 8 (the paper's contribution).
+//!
+//! Net-based phases iterate the *nets*; each iteration is linear in the
+//! graph size instead of `Θ(Σ|vtxs|²)`. Coloring comes in three levels of
+//! optimism (Table I):
+//!
+//! * [`NetColorAlg::V1`] — Algorithm 6: inline first-fit recoloring, the
+//!   "most optimistic" variant ("maleficent" in the paper's words);
+//! * [`NetColorAlg::V1Reverse`] — the same with the reverse policy;
+//! * [`NetColorAlg::TwoPass`] — Algorithm 8: a marking pass over the
+//!   adjacency, then reverse first-fit over the local queue `W_local` —
+//!   colors stay below `|vtxs(v)|`, which is itself a lower bound on the
+//!   optimal, so the color count barely grows.
+//!
+//! Conflict removal (Algorithm 7) keeps each color's first occurrence per
+//! net and uncolors later duplicates.
+
+use crate::coloring::balance::Balance;
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::schedule::NetColorAlg;
+use crate::graph::Bipartite;
+use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+
+/// Net-based coloring phase over all nets.
+pub fn color_phase<D: Driver>(
+    g: &Bipartite,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    alg: NetColorAlg,
+    bal: Balance,
+) -> RegionOut {
+    match alg {
+        NetColorAlg::TwoPass => two_pass_phase(g, colors, d, ts, chunk, bal),
+        NetColorAlg::V1 => v1_phase(g, colors, d, ts, chunk, false),
+        NetColorAlg::V1Reverse => v1_phase(g, colors, d, ts, chunk, true),
+    }
+}
+
+/// Algorithm 8 (plus the paper's "net-based variants are similar" B1/B2
+/// adaptations — see [`assign_local`]).
+fn two_pass_phase<D: Driver>(
+    g: &Bipartite,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    bal: Balance,
+) -> RegionOut {
+    d.region(ts, g.n_nets(), chunk, |_tid, s, v, now| {
+        let vt = g.vtxs(v);
+        let mut units = 0u64;
+        s.forbidden.next_gen();
+        s.wlocal.clear();
+        // pass 1: mark forbidden colors, queue the rest (Alg. 8 lines 4-8)
+        for &u in vt {
+            units += 1;
+            let c = colors.read(u as usize, now + units);
+            if c >= 0 && !s.forbidden.contains(c) {
+                s.forbidden.insert(c);
+            } else {
+                s.wlocal.push(u);
+            }
+        }
+        // pass 2: color W_local (Alg. 8 lines 9-14 / B1 / B2)
+        units += assign_local(s, v, vt.len(), bal, colors, now, units);
+        Cost { units, atomics: 0 }
+    })
+}
+
+/// Color the thread-local queue of net `v` (degree `deg`). Returns probe
+/// cost. Assigned colors are inserted into `F` so every policy —
+/// including the non-monotonic B1/B2 scans — yields distinct colors
+/// within the net.
+fn assign_local<C: ColorStore>(
+    s: &mut ThreadState,
+    v: usize,
+    deg: usize,
+    bal: Balance,
+    colors: &C,
+    now: u64,
+    base_units: u64,
+) -> u64 {
+    let mut probes = 0u64;
+    // Move the queue out to appease the borrow checker; swapped back below.
+    let wlocal = std::mem::take(&mut s.wlocal);
+    match bal {
+        Balance::None => {
+            // reverse first-fit from |vtxs(v)| - 1 (Alg. 8)
+            let mut col = deg as i32 - 1;
+            for &u in &wlocal {
+                let (found, p) = s.forbidden.reverse_fit(col);
+                probes += p;
+                let c = match found {
+                    Some(c) => c,
+                    None => {
+                        // unreachable per the paper's counting argument;
+                        // kept as a safety net for adversarial stores.
+                        debug_assert!(false, "reverse first-fit exhausted");
+                        let (c, p2) = s.forbidden.first_fit_from(deg as i32);
+                        probes += p2;
+                        c
+                    }
+                };
+                s.forbidden.insert(c);
+                colors.write(u as usize, c, now + base_units + probes);
+                s.col_max = s.col_max.max(c);
+                col = c - 1;
+            }
+        }
+        Balance::B1 => {
+            if v % 2 == 0 {
+                // even net: spread down from the thread's col_max
+                let mut col = s.col_max.max(deg as i32 - 1);
+                for &u in &wlocal {
+                    let (found, p) = s.forbidden.reverse_fit(col);
+                    probes += p;
+                    let c = match found {
+                        Some(c) => c,
+                        None => {
+                            let (c, p2) = s.forbidden.first_fit_from(s.col_max + 1);
+                            probes += p2;
+                            c
+                        }
+                    };
+                    s.forbidden.insert(c);
+                    colors.write(u as usize, c, now + base_units + probes);
+                    s.col_max = s.col_max.max(c);
+                    col = c - 1;
+                }
+            } else {
+                // odd net: plain ascending first-fit
+                for &u in &wlocal {
+                    let (c, p) = s.forbidden.first_fit();
+                    probes += p;
+                    s.forbidden.insert(c);
+                    colors.write(u as usize, c, now + base_units + probes);
+                    s.col_max = s.col_max.max(c);
+                }
+            }
+        }
+        Balance::B2 => {
+            for &u in &wlocal {
+                let (mut c, p) = s.forbidden.first_fit_from(s.col_next);
+                probes += p;
+                if c > s.col_max {
+                    let (c0, p0) = s.forbidden.first_fit();
+                    probes += p0;
+                    c = c0;
+                }
+                s.forbidden.insert(c);
+                colors.write(u as usize, c, now + base_units + probes);
+                s.col_max = s.col_max.max(c);
+                s.col_next = (c + 1).min(s.col_max / 3 + 1);
+            }
+        }
+    }
+    s.wlocal = wlocal;
+    probes
+}
+
+/// Algorithm 6 (`V1`) and its reverse variant: inline recoloring during a
+/// single pass over the adjacency.
+fn v1_phase<D: Driver>(
+    g: &Bipartite,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    reverse: bool,
+) -> RegionOut {
+    d.region(ts, g.n_nets(), chunk, |_tid, s, v, now| {
+        let vt = g.vtxs(v);
+        let mut units = 0u64;
+        s.forbidden.next_gen();
+        let mut col: i32 = if reverse { vt.len() as i32 - 1 } else { 0 };
+        for &u in vt {
+            units += 1;
+            let u = u as usize;
+            let c = colors.read(u, now + units);
+            if c < 0 || s.forbidden.contains(c) {
+                // recolor u now (lines 6-8 of Alg. 6)
+                if reverse {
+                    let (found, p) = s.forbidden.reverse_fit(col);
+                    units += p;
+                    let cc = match found {
+                        Some(cc) => cc,
+                        None => {
+                            let (cc, p2) = s.forbidden.first_fit_from(vt.len() as i32);
+                            units += p2;
+                            cc
+                        }
+                    };
+                    colors.write(u, cc, now + units);
+                    s.forbidden.insert(cc);
+                    col = cc - 1;
+                } else {
+                    let (cc, p) = s.forbidden.first_fit_from(col);
+                    units += p;
+                    colors.write(u, cc, now + units);
+                    s.forbidden.insert(cc);
+                    col = cc; // next search resumes here
+                }
+            } else {
+                s.forbidden.insert(c);
+            }
+        }
+        Cost { units, atomics: 0 }
+    })
+}
+
+/// Algorithm 7: net-based conflict removal — keep the first occurrence of
+/// each color per net, uncolor later duplicates.
+pub fn conflict_phase<D: Driver>(
+    g: &Bipartite,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, g.n_nets(), chunk, |_tid, s, v, now| {
+        let mut units = 0u64;
+        s.forbidden.next_gen();
+        for &u in g.vtxs(v) {
+            units += 1;
+            let u = u as usize;
+            let c = colors.read(u, now + units);
+            if c >= 0 {
+                if s.forbidden.contains(c) {
+                    colors.write(u, -1, now + units);
+                } else {
+                    s.forbidden.insert(c);
+                }
+            }
+        }
+        Cost::new(units)
+    })
+}
+
+/// Rebuild the work queue after net-based conflict removal: gather every
+/// still-uncolored vertex (net removal leaves no other trace of who lost).
+pub fn rebuild_queue<D: Driver>(
+    n_vertices: usize,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    lazy: bool,
+    shared: &SharedQueue,
+) -> RegionOut {
+    d.region(ts, n_vertices, chunk, |_tid, s, u, now| {
+        let mut atomics = 0u32;
+        if colors.read(u, now) == -1 {
+            if lazy {
+                s.next_local.push(u as u32);
+            } else {
+                shared.push(u as u32);
+                atomics = 1;
+            }
+        }
+        Cost { units: 1, atomics }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+    use crate::par::ThreadsDriver;
+
+    fn star_net(deg: usize) -> Bipartite {
+        let edges: Vec<(u32, u32)> = (0..deg as u32).map(|u| (0, u)).collect();
+        Bipartite::from_net_incidence(Csr::from_edges(1, deg, &edges))
+    }
+
+    #[test]
+    fn two_pass_colors_one_net_within_degree() {
+        let g = star_net(6);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(6);
+        let mut ts = ThreadState::bank(1, 16);
+        color_phase(&g, &colors, &mut d, &mut ts, 64, NetColorAlg::TwoPass, Balance::None);
+        let c = colors.to_vec();
+        assert!(c.iter().all(|&x| (0..6).contains(&x)), "{c:?}");
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6, "all distinct within the net: {c:?}");
+        // reverse first-fit on an all-uncolored net: 5,4,3,2,1,0
+        assert_eq!(c, vec![5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn two_pass_respects_kept_colors() {
+        let g = star_net(4);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(4);
+        colors.write(1, 3, 0); // pre-colored, kept
+        colors.write(2, 3, 0); // duplicate: must be requeued + recolored
+        let mut ts = ThreadState::bank(1, 16);
+        color_phase(&g, &colors, &mut d, &mut ts, 64, NetColorAlg::TwoPass, Balance::None);
+        let c = colors.to_vec();
+        assert_eq!(c[1], 3, "first occurrence kept");
+        assert_ne!(c[2], 3, "duplicate recolored");
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+    }
+
+    #[test]
+    fn v1_first_fit_uses_small_colors() {
+        let g = star_net(5);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(5);
+        let mut ts = ThreadState::bank(1, 16);
+        color_phase(&g, &colors, &mut d, &mut ts, 64, NetColorAlg::V1, Balance::None);
+        assert_eq!(colors.to_vec(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn v1_reverse_uses_large_colors() {
+        let g = star_net(5);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(5);
+        let mut ts = ThreadState::bank(1, 16);
+        color_phase(&g, &colors, &mut d, &mut ts, 64, NetColorAlg::V1Reverse, Balance::None);
+        assert_eq!(colors.to_vec(), vec![4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn conflict_removal_keeps_first_uncolors_rest() {
+        let g = star_net(4);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(4);
+        colors.write(0, 2, 0);
+        colors.write(1, 2, 0);
+        colors.write(2, 1, 0);
+        colors.write(3, 2, 0);
+        let mut ts = ThreadState::bank(1, 16);
+        conflict_phase(&g, &colors, &mut d, &mut ts, 64);
+        assert_eq!(colors.to_vec(), vec![2, -1, 1, -1]);
+    }
+
+    #[test]
+    fn rebuild_queue_finds_uncolored() {
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(5);
+        colors.write(0, 1, 0);
+        colors.write(2, 0, 0);
+        colors.write(4, 2, 0);
+        let mut ts = ThreadState::bank(1, 4);
+        let shared = SharedQueue::with_capacity(5);
+        rebuild_queue(5, &colors, &mut d, &mut ts, 64, false, &shared);
+        let mut q = shared.drain();
+        q.sort_unstable();
+        assert_eq!(q, vec![1, 3]);
+    }
+
+    #[test]
+    fn b2_balance_still_valid_per_net() {
+        let g = star_net(8);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(8);
+        let mut ts = ThreadState::bank(1, 32);
+        ts[0].col_max = 7;
+        color_phase(&g, &colors, &mut d, &mut ts, 64, NetColorAlg::TwoPass, Balance::B2);
+        let mut c = colors.to_vec();
+        assert!(c.iter().all(|&x| x >= 0));
+        c.sort_unstable();
+        c.dedup();
+        assert_eq!(c.len(), 8, "distinct within the net");
+    }
+}

@@ -1,0 +1,368 @@
+//! Distance-2 graph coloring (D2GC) — Algorithms 9 and 10, plus the
+//! vertex-based variants and the same hybrid schedules as BGPC.
+//!
+//! The input is a square (typically structurally symmetric) graph; the
+//! paper runs D2GC on five of its eight matrices (Table V). The phases
+//! mirror the BGPC ones with one addition: distance-1 neighbors count,
+//! so every item first processes the *visited vertex itself* (Alg. 9
+//! lines 4–7, Alg. 10 lines 3–4). Self-loops (diagonal entries) are
+//! skipped explicitly.
+
+pub mod vertex;
+
+use crate::coloring::balance::Balance;
+use crate::coloring::bgpc::MAX_ITERS;
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::schedule::AlgSpec;
+use crate::coloring::ColoringResult;
+use crate::graph::Csr;
+use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+use crate::sim::trace::{IterTrace, RunTrace};
+
+/// Algorithm 9: net-style D2GC coloring (two-pass, reverse first-fit
+/// starting at `|nbor(v)|`).
+pub fn net_color_phase<D: Driver>(
+    g: &Csr,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, g.n_rows, chunk, |_tid, s, v, now| {
+        let mut units = 1u64;
+        s.forbidden.next_gen();
+        s.wlocal.clear();
+        // the visited vertex itself (distance-1 requirement)
+        let cv = colors.read(v, now);
+        if cv >= 0 {
+            s.forbidden.insert(cv);
+        } else {
+            s.wlocal.push(v as u32);
+        }
+        for &u in g.row(v) {
+            let u = u as usize;
+            if u == v {
+                continue;
+            }
+            units += 1;
+            let c = colors.read(u, now + units);
+            if c >= 0 && !s.forbidden.contains(c) {
+                s.forbidden.insert(c);
+            } else {
+                s.wlocal.push(u as u32);
+            }
+        }
+        // reverse first-fit from |nbor(v)| (one more than BGPC: the
+        // visited vertex itself also needs a color)
+        let mut col = g.deg(v) as i32;
+        let wlocal = std::mem::take(&mut s.wlocal);
+        for &u in &wlocal {
+            let (found, p) = s.forbidden.reverse_fit(col);
+            units += p;
+            let c = match found {
+                Some(c) => c,
+                None => {
+                    let (c, p2) = s.forbidden.first_fit_from(g.deg(v) as i32 + 1);
+                    units += p2;
+                    c
+                }
+            };
+            s.forbidden.insert(c);
+            colors.write(u as usize, c, now + units);
+            col = c - 1;
+        }
+        s.wlocal = wlocal;
+        Cost::new(units)
+    })
+}
+
+/// Algorithm 10: net-style D2GC conflict removal (the visited vertex's
+/// color is processed first and always kept).
+pub fn net_conflict_phase<D: Driver>(
+    g: &Csr,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, g.n_rows, chunk, |_tid, s, v, now| {
+        let mut units = 1u64;
+        s.forbidden.next_gen();
+        let cv = colors.read(v, now);
+        if cv >= 0 {
+            s.forbidden.insert(cv);
+        }
+        for &u in g.row(v) {
+            let u = u as usize;
+            if u == v {
+                continue;
+            }
+            units += 1;
+            let c = colors.read(u, now + units);
+            if c >= 0 {
+                if s.forbidden.contains(c) {
+                    colors.write(u, -1, now + units);
+                } else {
+                    s.forbidden.insert(c);
+                }
+            }
+        }
+        Cost::new(units)
+    })
+}
+
+/// Gather uncolored vertices after a net-style removal.
+pub fn rebuild_queue<D: Driver>(
+    g: &Csr,
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    lazy: bool,
+    shared: &SharedQueue,
+) -> RegionOut {
+    d.region(ts, g.n_rows, chunk, |_tid, s, u, now| {
+        let mut atomics = 0u32;
+        if colors.read(u, now) == -1 {
+            if lazy {
+                s.next_local.push(u as u32);
+            } else {
+                shared.push(u as u32);
+                atomics = 1;
+            }
+        }
+        Cost { units: 1, atomics }
+    })
+}
+
+fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec<u32> {
+    if lazy {
+        let mut w = Vec::new();
+        for s in ts.iter_mut() {
+            w.append(&mut s.next_local);
+        }
+        w
+    } else {
+        shared.drain()
+    }
+}
+
+fn color_cap(g: &Csr) -> usize {
+    let max2: usize = (0..g.n_rows)
+        .map(|v| g.row(v).iter().map(|&u| g.deg(u as usize)).sum())
+        .max()
+        .unwrap_or(0);
+    max2 + 4
+}
+
+/// Run a full D2GC coloring with driver `d` (same loop as BGPC).
+pub fn run<D: Driver>(
+    g: &Csr,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+) -> ColoringResult {
+    let n = g.n_rows;
+    let t0 = std::time::Instant::now();
+    let colors = d.new_colors(n);
+    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    let shared = SharedQueue::with_capacity(n);
+    let mut w: Vec<u32> = order.to_vec();
+    let mut trace = RunTrace::default();
+    let mut sim_secs = 0.0f64;
+    let mut work_units = 0u64;
+    let mut iterations = 0usize;
+
+    while !w.is_empty() && iterations < MAX_ITERS {
+        iterations += 1;
+        let net_color = iterations <= spec.net_color_iters;
+        let net_conflict = iterations <= spec.net_conflict_iters;
+        let mut it = IterTrace {
+            queue_len: w.len(),
+            color_kind: if net_color { 'N' } else { 'V' },
+            conflict_kind: if net_conflict { 'N' } else { 'V' },
+            ..Default::default()
+        };
+
+        let cr = if net_color {
+            net_color_phase(g, &colors, d, &mut ts, spec.chunk)
+        } else {
+            vertex::color_phase(g, &w, &colors, d, &mut ts, spec.chunk, bal)
+        };
+        it.color_secs = cr.seconds();
+        it.color_busy = cr.busy_units.clone();
+        work_units += cr.busy_units.iter().sum::<u64>();
+
+        let (rr, w_next) = if net_conflict {
+            let r1 = net_conflict_phase(g, &colors, d, &mut ts, spec.chunk);
+            let r2 = rebuild_queue(g, &colors, d, &mut ts, spec.chunk, spec.lazy_queues, &shared);
+            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            work_units +=
+                r1.busy_units.iter().sum::<u64>() + r2.busy_units.iter().sum::<u64>();
+            let combined = RegionOut {
+                real_secs: r1.real_secs + r2.real_secs,
+                sim_ns: match (r1.sim_ns, r2.sim_ns) {
+                    (Some(a), Some(b)) => Some(a + b),
+                    _ => None,
+                },
+                busy_units: Vec::new(),
+            };
+            (combined, wn)
+        } else {
+            let r = vertex::conflict_phase(
+                g,
+                &w,
+                &colors,
+                d,
+                &mut ts,
+                spec.chunk,
+                spec.lazy_queues,
+                &shared,
+            );
+            work_units += r.busy_units.iter().sum::<u64>();
+            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            (r, wn)
+        };
+        it.conflict_secs = rr.seconds();
+        sim_secs += it.color_secs + it.conflict_secs;
+        trace.iters.push(it);
+        w = w_next;
+    }
+
+    if !w.is_empty() {
+        // sequential exact finish (safety net)
+        let ts0 = &mut ts[0];
+        let now = d.now();
+        for &wv in &w {
+            let wv = wv as usize;
+            ts0.forbidden.next_gen();
+            for &u in g.row(wv) {
+                let u = u as usize;
+                if u == wv {
+                    continue;
+                }
+                let c = colors.read(u, now);
+                if c >= 0 {
+                    ts0.forbidden.insert(c);
+                }
+                for &x in g.row(u) {
+                    let x = x as usize;
+                    if x != wv {
+                        let c = colors.read(x, now);
+                        if c >= 0 {
+                            ts0.forbidden.insert(c);
+                        }
+                    }
+                }
+            }
+            let (c, _) = ts0.forbidden.first_fit();
+            colors.write(wv, c, now);
+        }
+    }
+
+    let colors_vec = colors.to_vec();
+    let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
+    let is_sim = trace.iters.first().map(|i| !i.color_busy.is_empty()).unwrap_or(false);
+    ColoringResult {
+        colors: colors_vec,
+        n_colors,
+        iterations,
+        seconds: if is_sim { sim_secs } else { t0.elapsed().as_secs_f64() },
+        trace,
+        work_units,
+    }
+}
+
+/// Sequential D2GC greedy (the Table V baseline; ColPack ships only a
+/// sequential D2GC). Returns `(colors, work_units)`.
+pub fn seq_greedy(g: &Csr, order: &[u32]) -> (Vec<i32>, u64) {
+    let mut colors = vec![-1i32; g.n_rows];
+    let mut f = crate::coloring::forbidden::StampSet::new(1024);
+    let mut units = 0u64;
+    for &w in order {
+        let w = w as usize;
+        f.next_gen();
+        for &u in g.row(w) {
+            let u = u as usize;
+            if u == w {
+                continue;
+            }
+            units += 1;
+            if colors[u] >= 0 {
+                f.insert(colors[u]);
+            }
+            for &x in g.row(u) {
+                let x = x as usize;
+                units += 1;
+                if x != w && colors[x] >= 0 {
+                    f.insert(colors[x]);
+                }
+            }
+        }
+        let (c, probes) = f.first_fit();
+        units += probes;
+        colors[w] = c;
+    }
+    (colors, units)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::schedule;
+    use crate::coloring::verify::d2gc_valid;
+    use crate::graph::generators::random_symmetric;
+    use crate::par::ThreadsDriver;
+    use crate::sim::{CostModel, SimDriver};
+
+    #[test]
+    fn seq_greedy_valid() {
+        let g = random_symmetric(200, 800, 3);
+        let order: Vec<u32> = (0..200u32).collect();
+        let (c, _) = seq_greedy(&g, &order);
+        assert!(d2gc_valid(&g, &c).is_ok());
+    }
+
+    #[test]
+    fn all_d2gc_schedules_valid() {
+        let g = random_symmetric(150, 600, 7);
+        let order: Vec<u32> = (0..150u32).collect();
+        for spec in schedule::D2GC_SET {
+            let mut d = ThreadsDriver::new(4);
+            let r = run(&g, &order, &spec, Balance::None, &mut d);
+            assert!(d2gc_valid(&g, &r.colors).is_ok(), "{} threads", spec.name);
+
+            let mut d = SimDriver::new(8, CostModel::default());
+            let r = run(&g, &order, &spec, Balance::None, &mut d);
+            assert!(d2gc_valid(&g, &r.colors).is_ok(), "{} sim", spec.name);
+        }
+    }
+
+    #[test]
+    fn d2gc_uses_more_colors_than_d1gc_needs() {
+        // on a star, D2GC must give every leaf its own color
+        let mut edges = vec![];
+        for i in 1..6u32 {
+            edges.push((0u32, i));
+            edges.push((i, 0u32));
+        }
+        let g = crate::graph::Csr::from_edges(6, 6, &edges);
+        let order: Vec<u32> = (0..6u32).collect();
+        let (c, _) = seq_greedy(&g, &order);
+        assert!(d2gc_valid(&g, &c).is_ok());
+        let distinct = crate::coloring::stats::distinct_colors(&c);
+        assert_eq!(distinct, 6, "star K1,5 needs 6 colors at distance 2");
+    }
+
+    #[test]
+    fn deterministic_sim() {
+        let g = random_symmetric(100, 400, 11);
+        let order: Vec<u32> = (0..100u32).collect();
+        let once = || {
+            let mut d = SimDriver::new(4, CostModel::default());
+            run(&g, &order, &schedule::N1_N2, Balance::None, &mut d)
+        };
+        assert_eq!(once().colors, once().colors);
+    }
+}

@@ -1,0 +1,130 @@
+//! Vertex-based D2GC phases — the BGPC Algorithms 4–5 "with the
+//! corresponding statements for distance-1 neighbors added" (§VI V-V).
+//! The paper implemented these for the parallel ColPack baseline; they
+//! are the `V` halves of every Table V schedule.
+
+use crate::coloring::balance::{select_color, Balance};
+use crate::coloring::forbidden::ThreadState;
+use crate::graph::Csr;
+use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+
+/// Vertex-based D2GC coloring: forbid the colors of all distance-1 and
+/// distance-2 neighbors, then pick by the configured policy.
+pub fn color_phase<D: Driver>(
+    g: &Csr,
+    w: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    bal: Balance,
+) -> RegionOut {
+    d.region(ts, w.len(), chunk, |_tid, s, i, now| {
+        let wv = w[i] as usize;
+        let mut units = 0u64;
+        s.forbidden.next_gen();
+        for &u in g.row(wv) {
+            let u = u as usize;
+            if u == wv {
+                continue;
+            }
+            units += 1;
+            s.forbidden.mark(colors.read(u, now + units));
+            for &x in g.row(u) {
+                let x = x as usize;
+                units += 1;
+                if x != wv {
+                    // branch-free: -1 lands in the trash slot (§Perf)
+                    s.forbidden.mark(colors.read(x, now + units));
+                }
+            }
+        }
+        let col = select_color(bal, s, wv, &mut units);
+        colors.write(wv, col, now + units);
+        Cost { units, atomics: 0 }
+    })
+}
+
+/// Vertex-based D2GC conflict detection with the `w > u` tie-break, over
+/// both distance-1 and distance-2 neighbors.
+pub fn conflict_phase<D: Driver>(
+    g: &Csr,
+    w: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    lazy: bool,
+    shared: &SharedQueue,
+) -> RegionOut {
+    d.region(ts, w.len(), chunk, |_tid, s, i, now| {
+        let wv = w[i] as usize;
+        let cw = colors.read(wv, now);
+        let mut units = 1u64;
+        let mut atomics = 0u32;
+        let mut conflicted = false;
+        'outer: for &u in g.row(wv) {
+            let u = u as usize;
+            if u == wv {
+                continue;
+            }
+            units += 1;
+            if wv > u && colors.read(u, now + units) == cw {
+                conflicted = true;
+                break 'outer;
+            }
+            for &x in g.row(u) {
+                let x = x as usize;
+                units += 1;
+                if x != wv && wv > x && colors.read(x, now + units) == cw {
+                    conflicted = true;
+                    break 'outer;
+                }
+            }
+        }
+        if conflicted {
+            if lazy {
+                s.next_local.push(wv as u32);
+            } else {
+                shared.push(wv as u32);
+                atomics += 1;
+            }
+        }
+        Cost { units, atomics }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::verify::d2gc_valid;
+    use crate::graph::generators::random_symmetric;
+    use crate::par::ThreadsDriver;
+
+    #[test]
+    fn single_thread_pass_is_valid() {
+        let g = random_symmetric(100, 300, 5);
+        let order: Vec<u32> = (0..100u32).collect();
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(100);
+        let mut ts = ThreadState::bank(1, 4096);
+        color_phase(&g, &order, &colors, &mut d, &mut ts, 64, Balance::None);
+        assert!(d2gc_valid(&g, &colors.to_vec()).is_ok());
+    }
+
+    #[test]
+    fn conflict_phase_catches_planted_distance2_clash() {
+        // path 0-1-2, plant c(0)=c(2)=0
+        let g = crate::graph::Csr::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(3);
+        colors.write(0, 0, 0);
+        colors.write(1, 1, 0);
+        colors.write(2, 0, 0);
+        let mut ts = ThreadState::bank(1, 8);
+        let shared = SharedQueue::with_capacity(3);
+        let w: Vec<u32> = vec![0, 1, 2];
+        conflict_phase(&g, &w, &colors, &mut d, &mut ts, 64, false, &shared);
+        assert_eq!(shared.drain(), vec![2], "larger endpoint requeued");
+    }
+}

@@ -1,0 +1,223 @@
+//! Thread-private scratch state: the stamped forbidden-color set and the
+//! local queues.
+//!
+//! Paper §III "Implementation details": *"the memories for the forbidden
+//! color set F and the local vertex queues W_local are allocated only
+//! once and simple arrays are used to realize them. Furthermore, these
+//! structures are never actually emptied or reset. For each thread, F is
+//! repetitively used for different nets/vertices via different markers
+//! without any reset operation."* — [`StampSet`] is exactly that marker
+//! array; [`ThreadState`] bundles it with `W_local`, the lazy `-D`
+//! next-iteration queue and the B1/B2 per-thread color trackers.
+
+/// Marker-stamped integer set over a dense color domain (no clears).
+///
+/// Layout note (§Perf): slots are offset by one — color `c` lives at
+/// `stamp[c + 1]` — so the hot gather loops can mark *any* value
+/// `c >= -1` without first branching on "is it colored" ([`Self::mark`]);
+/// the uncolored sentinel `-1` lands in the trash slot 0.
+#[derive(Clone, Debug)]
+pub struct StampSet {
+    stamp: Vec<u32>,
+    cur: u32,
+}
+
+impl StampSet {
+    /// `cap` is the initial color-domain size; the set grows on demand.
+    pub fn new(cap: usize) -> StampSet {
+        StampSet { stamp: vec![0u32; cap.max(8) + 1], cur: 0 }
+    }
+
+    /// Start a new logical set (O(1); the paper's "different markers").
+    #[inline]
+    pub fn next_gen(&mut self) {
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            // u32 wrapped (once every 4B generations): hard reset.
+            self.stamp.fill(0);
+            self.cur = 1;
+        }
+    }
+
+    /// Insert color `c` (non-negative), growing on demand.
+    #[inline]
+    pub fn insert(&mut self, c: i32) {
+        debug_assert!(c >= 0);
+        let i = c as usize + 1;
+        if i >= self.stamp.len() {
+            self.stamp.resize((i + 1).next_power_of_two(), 0);
+        }
+        self.stamp[i] = self.cur;
+    }
+
+    /// Branch-free insert for the hot gather loops: accepts any `c >= -1`
+    /// (`-1` is parked in the trash slot). Requires the domain to have
+    /// been pre-sized via [`StampSet::ensure`].
+    #[inline(always)]
+    pub fn mark(&mut self, c: i32) {
+        let i = (c + 1) as usize;
+        debug_assert!(c >= -1 && i < self.stamp.len());
+        unsafe { *self.stamp.get_unchecked_mut(i) = self.cur };
+    }
+
+    /// Membership test.
+    #[inline(always)]
+    pub fn contains(&self, c: i32) -> bool {
+        if c < 0 {
+            return false;
+        }
+        let i = c as usize + 1;
+        i < self.stamp.len() && self.stamp[i] == self.cur
+    }
+
+    /// Pre-size the domain for colors up to `max_color` inclusive.
+    pub fn ensure(&mut self, max_color: usize) {
+        if self.stamp.len() < max_color + 2 {
+            self.stamp.resize(max_color + 2, 0);
+        }
+    }
+
+    /// First-fit: smallest non-negative color not in the set.
+    /// Returns (color, scan cost in probes).
+    #[inline]
+    pub fn first_fit(&self) -> (i32, u64) {
+        let mut col = 0i32;
+        let mut probes = 1u64;
+        while self.contains(col) {
+            col += 1;
+            probes += 1;
+        }
+        (col, probes)
+    }
+
+    /// Reverse first-fit from `start` downward: largest color `<= start`
+    /// not in the set, or `None` if the whole range is forbidden.
+    #[inline]
+    pub fn reverse_fit(&self, start: i32) -> (Option<i32>, u64) {
+        let mut col = start;
+        let mut probes = 1u64;
+        while col >= 0 && self.contains(col) {
+            col -= 1;
+            probes += 1;
+        }
+        (if col >= 0 { Some(col) } else { None }, probes)
+    }
+
+    /// First-fit starting at `start` upward.
+    #[inline]
+    pub fn first_fit_from(&self, start: i32) -> (i32, u64) {
+        let mut col = start.max(0);
+        let mut probes = 1u64;
+        while self.contains(col) {
+            col += 1;
+            probes += 1;
+        }
+        (col, probes)
+    }
+}
+
+/// Per-thread scratch, allocated once per run (never reset between items).
+#[derive(Clone, Debug)]
+pub struct ThreadState {
+    /// Forbidden color set `F`.
+    pub forbidden: StampSet,
+    /// Net-local recolor queue `W_local` (Alg. 8/9).
+    pub wlocal: Vec<u32>,
+    /// Lazy private next-iteration queue (the `D` in `V-V-64D`).
+    pub next_local: Vec<u32>,
+    /// B1/B2: maximum color this thread has used (`col_max`).
+    pub col_max: i32,
+    /// B2: next color to start the search from (`col_next`).
+    pub col_next: i32,
+}
+
+impl ThreadState {
+    pub fn new(color_cap: usize) -> ThreadState {
+        ThreadState {
+            forbidden: StampSet::new(color_cap),
+            wlocal: Vec::with_capacity(256),
+            next_local: Vec::new(),
+            col_max: 0,
+            col_next: 0,
+        }
+    }
+
+    /// A fresh bank of `t` states sized for `color_cap` colors.
+    pub fn bank(t: usize, color_cap: usize) -> Vec<ThreadState> {
+        (0..t).map(|_| ThreadState::new(color_cap)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_isolate_without_reset() {
+        let mut f = StampSet::new(4);
+        f.next_gen();
+        f.insert(2);
+        assert!(f.contains(2));
+        f.next_gen();
+        assert!(!f.contains(2), "previous generation must be invisible");
+        f.insert(0);
+        assert!(f.contains(0));
+        assert!(!f.contains(-1));
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut f = StampSet::new(2);
+        f.next_gen();
+        f.insert(1000);
+        assert!(f.contains(1000));
+        assert!(!f.contains(999));
+    }
+
+    #[test]
+    fn first_fit_skips_forbidden() {
+        let mut f = StampSet::new(8);
+        f.next_gen();
+        f.insert(0);
+        f.insert(1);
+        f.insert(3);
+        let (c, probes) = f.first_fit();
+        assert_eq!(c, 2);
+        assert_eq!(probes, 3);
+    }
+
+    #[test]
+    fn reverse_fit_descends_and_detects_exhaustion() {
+        let mut f = StampSet::new(8);
+        f.next_gen();
+        f.insert(3);
+        f.insert(2);
+        assert_eq!(f.reverse_fit(3).0, Some(1));
+        f.insert(1);
+        f.insert(0);
+        assert_eq!(f.reverse_fit(3).0, None);
+        assert_eq!(f.reverse_fit(5).0, Some(5));
+    }
+
+    #[test]
+    fn first_fit_from_start() {
+        let mut f = StampSet::new(8);
+        f.next_gen();
+        f.insert(4);
+        assert_eq!(f.first_fit_from(4).0, 5);
+        assert_eq!(f.first_fit_from(2).0, 2);
+    }
+
+    #[test]
+    fn wrapping_generation_resets_cleanly() {
+        let mut f = StampSet::new(4);
+        f.cur = u32::MAX - 1;
+        f.next_gen();
+        f.insert(1);
+        assert!(f.contains(1));
+        f.next_gen(); // wraps to 0 -> hard reset to 1
+        assert!(!f.contains(1));
+        f.insert(2);
+        assert!(f.contains(2));
+    }
+}

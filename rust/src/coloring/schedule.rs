@@ -1,0 +1,139 @@
+//! The paper's eight algorithm schedules (§VI).
+//!
+//! An algorithm `X-Y` uses `X`-based coloring and `Y`-based conflict
+//! removal; a number `n` after `N` means the net-based phase runs for the
+//! first `n` iterations before switching to the vertex-based (`64D`)
+//! variant. The chunk size and the lazy-queue (`D`) option are part of
+//! the schedule, exactly as in the paper's list:
+//!
+//! | name     | coloring      | conflict removal | chunk | lazy queues |
+//! |----------|---------------|------------------|-------|-------------|
+//! | V-V      | vertex        | vertex           | static| no          |
+//! | V-V-64   | vertex        | vertex           | 64    | no          |
+//! | V-V-64D  | vertex        | vertex           | 64    | yes         |
+//! | V-N∞     | vertex        | net (always)     | 64    | yes         |
+//! | V-N1     | vertex        | net (iter 1)     | 64    | yes         |
+//! | V-N2     | vertex        | net (iters 1–2)  | 64    | yes         |
+//! | N1-N2    | net (iter 1)  | net (iters 1–2)  | 64    | yes         |
+//! | N2-N2    | net (iters 1–2)| net (iters 1–2) | 64    | yes         |
+
+/// Which net-based *coloring* algorithm a net iteration runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetColorAlg {
+    /// Algorithm 6 — most optimistic, first-fit inline recolor.
+    V1,
+    /// Algorithm 6 with the reverse policy (Table I's middle column).
+    V1Reverse,
+    /// Algorithm 8 — two-pass with reverse first-fit (the contribution).
+    TwoPass,
+}
+
+/// A hybrid schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AlgSpec {
+    pub name: &'static str,
+    /// Net-based coloring for the first `net_color_iters` iterations.
+    pub net_color_iters: usize,
+    /// Net-based conflict removal for the first `net_conflict_iters`
+    /// iterations (`usize::MAX` = always, the `∞` variants).
+    pub net_conflict_iters: usize,
+    /// Dynamic-scheduling chunk size.
+    pub chunk: usize,
+    /// Lazy per-thread next-queues (the `D` option).
+    pub lazy_queues: bool,
+    /// Which net coloring algorithm net iterations use.
+    pub net_alg: NetColorAlg,
+}
+
+impl AlgSpec {
+    const fn new(
+        name: &'static str,
+        net_color_iters: usize,
+        net_conflict_iters: usize,
+        chunk: usize,
+        lazy_queues: bool,
+    ) -> AlgSpec {
+        AlgSpec {
+            name,
+            net_color_iters,
+            net_conflict_iters,
+            chunk,
+            lazy_queues,
+            net_alg: NetColorAlg::TwoPass,
+        }
+    }
+
+    pub fn with_net_alg(mut self, a: NetColorAlg) -> AlgSpec {
+        self.net_alg = a;
+        self
+    }
+
+    /// Look up by the paper's name (`"N1-N2"`, `"V-V-64D"`, ...).
+    pub fn by_name(name: &str) -> Option<AlgSpec> {
+        let needle = name.to_ascii_uppercase().replace("INF", "∞");
+        ALL.iter().find(|s| s.name.eq_ignore_ascii_case(&needle)).copied()
+    }
+}
+
+/// `V-V`: ColPack's parallel BGPC baseline — a plain `omp parallel for`
+/// (static scheduling, `chunk == 0` here) with the shared next-queue.
+pub const V_V: AlgSpec = AlgSpec::new("V-V", 0, 0, 0, false);
+/// `V-V-64`: chunk 64.
+pub const V_V_64: AlgSpec = AlgSpec::new("V-V-64", 0, 0, 64, false);
+/// `V-V-64D`: chunk 64 + lazy private next-queues.
+pub const V_V_64D: AlgSpec = AlgSpec::new("V-V-64D", 0, 0, 64, true);
+/// `V-N∞`: net-based conflict removal every iteration.
+pub const V_NINF: AlgSpec = AlgSpec::new("V-N∞", 0, usize::MAX, 64, true);
+/// `V-N1`: net-based conflict removal in the first iteration only.
+pub const V_N1: AlgSpec = AlgSpec::new("V-N1", 0, 1, 64, true);
+/// `V-N2`: net-based conflict removal in the first two iterations.
+pub const V_N2: AlgSpec = AlgSpec::new("V-N2", 0, 2, 64, true);
+/// `N1-N2`: net coloring iter 1, net conflict removal iters 1–2
+/// (the paper's headline algorithm).
+pub const N1_N2: AlgSpec = AlgSpec::new("N1-N2", 1, 2, 64, true);
+/// `N2-N2`: net coloring and conflict removal in the first two iterations.
+pub const N2_N2: AlgSpec = AlgSpec::new("N2-N2", 2, 2, 64, true);
+
+/// All eight schedules, in the paper's table order.
+pub const ALL: [AlgSpec; 8] =
+    [V_V, V_V_64, V_V_64D, V_NINF, V_N1, V_N2, N1_N2, N2_N2];
+
+/// The four schedules of the D2GC experiment (Table V).
+pub const D2GC_SET: [AlgSpec; 4] = [V_V_64D, V_N1, V_N2, N1_N2];
+
+/// Back-compat alias used by the public API surface.
+pub type Schedule = AlgSpec;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(AlgSpec::by_name("n1-n2"), Some(N1_N2));
+        assert_eq!(AlgSpec::by_name("V-NINF"), Some(V_NINF));
+        assert_eq!(AlgSpec::by_name("V-N∞"), Some(V_NINF));
+        assert!(AlgSpec::by_name("X-Y").is_none());
+    }
+
+    #[test]
+    fn paper_invariant_net_color_implies_net_conflict() {
+        for s in ALL {
+            assert!(
+                s.net_conflict_iters >= s.net_color_iters,
+                "{}: net coloring must be paired with net conflict removal",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_and_lazy_flags() {
+        assert_eq!(V_V.chunk, 0, "V-V is schedule(static)");
+        assert!(!V_V.lazy_queues);
+        assert_eq!(V_V_64.chunk, 64);
+        assert!(!V_V_64.lazy_queues);
+        assert!(V_V_64D.lazy_queues);
+        assert!(ALL.iter().skip(3).all(|s| s.lazy_queues));
+    }
+}

@@ -1,0 +1,93 @@
+//! Color-set statistics — the balancing experiments' metrics (Table VI,
+//! Figure 3): number of color sets, average cardinality, standard
+//! deviation of cardinalities, and the cardinality histogram.
+
+use crate::util::stats::{mean, stddev};
+
+/// Number of distinct colors used (ignores `-1`).
+pub fn distinct_colors(colors: &[i32]) -> usize {
+    cardinalities(colors).iter().filter(|&&c| c > 0).count()
+}
+
+/// Cardinality of each color class `0..=max`.
+pub fn cardinalities(colors: &[i32]) -> Vec<usize> {
+    let max = colors.iter().copied().max().unwrap_or(-1);
+    if max < 0 {
+        return Vec::new();
+    }
+    let mut card = vec![0usize; max as usize + 1];
+    for &c in colors {
+        if c >= 0 {
+            card[c as usize] += 1;
+        }
+    }
+    card
+}
+
+/// Summary statistics over the color classes.
+#[derive(Clone, Debug)]
+pub struct ColorStats {
+    /// Number of non-empty color sets.
+    pub n_colors: usize,
+    /// Average cardinality over non-empty sets.
+    pub avg_cardinality: f64,
+    /// Population stddev of non-empty set cardinalities (Table VI).
+    pub stddev_cardinality: f64,
+    /// Largest set.
+    pub max_cardinality: usize,
+    /// Sets with fewer than 2 vertices (the paper's skewness symptom:
+    /// "thousands of color sets with less than 2 elements").
+    pub tiny_sets: usize,
+    /// Full cardinality vector (Figure 3 raw data).
+    pub cards: Vec<usize>,
+}
+
+impl ColorStats {
+    pub fn from_colors(colors: &[i32]) -> ColorStats {
+        let cards: Vec<usize> =
+            cardinalities(colors).into_iter().filter(|&c| c > 0).collect();
+        let f: Vec<f64> = cards.iter().map(|&c| c as f64).collect();
+        ColorStats {
+            n_colors: cards.len(),
+            avg_cardinality: if f.is_empty() { 0.0 } else { mean(&f) },
+            stddev_cardinality: if f.is_empty() { 0.0 } else { stddev(&f) },
+            max_cardinality: cards.iter().copied().max().unwrap_or(0),
+            tiny_sets: cards.iter().filter(|&&c| c < 2).count(),
+            cards,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_stats() {
+        let colors = [0, 0, 0, 1, 1, 3]; // color 2 unused
+        assert_eq!(distinct_colors(&colors), 3);
+        let s = ColorStats::from_colors(&colors);
+        assert_eq!(s.n_colors, 3);
+        assert_eq!(s.max_cardinality, 3);
+        assert_eq!(s.tiny_sets, 1); // color 3 has one vertex
+        assert!((s.avg_cardinality - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_uncolored() {
+        assert_eq!(distinct_colors(&[]), 0);
+        assert_eq!(distinct_colors(&[-1, -1]), 0);
+        let s = ColorStats::from_colors(&[-1]);
+        assert_eq!(s.n_colors, 0);
+        assert_eq!(s.avg_cardinality, 0.0);
+    }
+
+    #[test]
+    fn balanced_has_smaller_stddev() {
+        let skewed = [0, 0, 0, 0, 0, 0, 1, 2];
+        let flat = [0, 0, 0, 1, 1, 1, 2, 2];
+        let a = ColorStats::from_colors(&skewed).stddev_cardinality;
+        let b = ColorStats::from_colors(&flat).stddev_cardinality;
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,163 @@
+//! Coloring validity checkers — the ground truth every test and bench
+//! asserts against.
+
+use crate::coloring::forbidden::StampSet;
+use crate::graph::{Bipartite, Csr};
+
+/// A detected violation, for diagnostics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub kind: &'static str,
+    pub a: usize,
+    pub b: usize,
+    pub color: i32,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: vertices {} and {} share color {}", self.kind, self.a, self.b, self.color)
+    }
+}
+
+/// BGPC validity: within every net, colored vertices are pairwise
+/// distinct, and every vertex is colored. Net-based check — `O(|E|)`.
+pub fn bgpc_valid(g: &Bipartite, colors: &[i32]) -> Result<(), Violation> {
+    assert_eq!(colors.len(), g.n_vertices());
+    for (u, &c) in colors.iter().enumerate() {
+        if c < 0 {
+            return Err(Violation { kind: "uncolored", a: u, b: u, color: c });
+        }
+    }
+    let mut seen = StampSet::new(1024);
+    let mut owner: Vec<u32> = vec![0; 1024];
+    for v in 0..g.n_nets() {
+        seen.next_gen();
+        for &u in g.vtxs(v) {
+            let u = u as usize;
+            let c = colors[u];
+            if seen.contains(c) {
+                return Err(Violation {
+                    kind: "bgpc-conflict",
+                    a: owner[c as usize] as usize,
+                    b: u,
+                    color: c,
+                });
+            }
+            seen.insert(c);
+            if c as usize >= owner.len() {
+                owner.resize((c as usize + 1).next_power_of_two(), 0);
+            }
+            owner[c as usize] = u as u32;
+        }
+    }
+    Ok(())
+}
+
+/// D2GC validity: for every vertex `m`, the colors of `{m} ∪ nbor(m)` are
+/// pairwise distinct (covers both distance-1 and distance-2 clashes).
+pub fn d2gc_valid(g: &Csr, colors: &[i32]) -> Result<(), Violation> {
+    assert_eq!(colors.len(), g.n_rows);
+    for (u, &c) in colors.iter().enumerate() {
+        if c < 0 {
+            return Err(Violation { kind: "uncolored", a: u, b: u, color: c });
+        }
+    }
+    let mut seen = StampSet::new(1024);
+    let mut owner: Vec<u32> = vec![0; 1024];
+    for m in 0..g.n_rows {
+        seen.next_gen();
+        let note = |u: usize, seen: &mut StampSet, owner: &mut Vec<u32>| -> Option<Violation> {
+            let c = colors[u];
+            if seen.contains(c) {
+                return Some(Violation {
+                    kind: "d2gc-conflict",
+                    a: owner[c as usize] as usize,
+                    b: u,
+                    color: c,
+                });
+            }
+            seen.insert(c);
+            if c as usize >= owner.len() {
+                owner.resize((c as usize + 1).next_power_of_two(), 0);
+            }
+            owner[c as usize] = u as u32;
+            None
+        };
+        if let Some(v) = note(m, &mut seen, &mut owner) {
+            return Err(v);
+        }
+        for &u in g.row(m) {
+            let u = u as usize;
+            if u == m {
+                continue; // self-loop (diagonal entry)
+            }
+            if let Some(v) = note(u, &mut seen, &mut owner) {
+                return Err(v);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// D1GC validity: adjacent vertices differ.
+pub fn d1gc_valid(g: &Csr, colors: &[i32]) -> Result<(), Violation> {
+    assert_eq!(colors.len(), g.n_rows);
+    for (u, &c) in colors.iter().enumerate() {
+        if c < 0 {
+            return Err(Violation { kind: "uncolored", a: u, b: u, color: c });
+        }
+        for &v in g.row(u) {
+            let v = v as usize;
+            if v != u && colors[v] == c {
+                return Err(Violation { kind: "d1gc-conflict", a: u, b: v, color: c });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    fn tiny_bgpc() -> Bipartite {
+        // net 0: {0,1}, net 1: {1,2}
+        Bipartite::from_net_incidence(Csr::from_edges(2, 3, &[(0, 0), (0, 1), (1, 1), (1, 2)]))
+    }
+
+    #[test]
+    fn bgpc_accepts_valid_rejects_conflict_and_uncolored() {
+        let g = tiny_bgpc();
+        assert!(bgpc_valid(&g, &[0, 1, 0]).is_ok());
+        let e = bgpc_valid(&g, &[0, 0, 1]).unwrap_err();
+        assert_eq!(e.kind, "bgpc-conflict");
+        assert_eq!((e.a, e.b), (0, 1));
+        assert_eq!(bgpc_valid(&g, &[0, -1, 1]).unwrap_err().kind, "uncolored");
+    }
+
+    #[test]
+    fn d2gc_catches_distance_two() {
+        // path 0-1-2: c(0) == c(2) is a distance-2 violation
+        let g = Csr::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        assert!(d2gc_valid(&g, &[0, 1, 2]).is_ok());
+        let e = d2gc_valid(&g, &[0, 1, 0]).unwrap_err();
+        assert_eq!(e.kind, "d2gc-conflict");
+        // distance-1 violation also caught
+        assert!(d2gc_valid(&g, &[0, 0, 1]).is_err());
+    }
+
+    #[test]
+    fn d1gc_allows_distance_two_reuse() {
+        let g = Csr::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        assert!(d1gc_valid(&g, &[0, 1, 0]).is_ok());
+        assert!(d1gc_valid(&g, &[0, 0, 1]).is_err());
+    }
+
+    #[test]
+    fn self_loops_do_not_false_positive() {
+        let g = Csr::from_edges(2, 2, &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+        assert!(d2gc_valid(&g, &[0, 1]).is_ok());
+        assert!(d1gc_valid(&g, &[0, 1]).is_ok());
+    }
+}

@@ -1,0 +1,82 @@
+//! Service metrics: lock-free counters recorded per completed job.
+
+use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+
+/// Aggregated job counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs: AtomicU64,
+    failures: AtomicU64,
+    pjrt_jobs: AtomicU64,
+    total_colors: AtomicU64,
+    /// Total engine seconds, in microseconds (atomic f64 substitute).
+    total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record(&self, o: &super::JobOutcome) {
+        self.jobs.fetch_add(1, AOrd::Relaxed);
+        if !o.valid {
+            self.failures.fetch_add(1, AOrd::Relaxed);
+        }
+        if o.engine == "pjrt" {
+            self.pjrt_jobs.fetch_add(1, AOrd::Relaxed);
+        }
+        self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
+        self.total_us.fetch_add((o.seconds * 1e6) as u64, AOrd::Relaxed);
+    }
+
+    pub fn jobs_done(&self) -> u64 {
+        self.jobs.load(AOrd::Relaxed)
+    }
+
+    pub fn failures(&self) -> u64 {
+        self.failures.load(AOrd::Relaxed)
+    }
+
+    pub fn pjrt_jobs(&self) -> u64 {
+        self.pjrt_jobs.load(AOrd::Relaxed)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.total_us.load(AOrd::Relaxed) as f64 * 1e-6
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} failures={} pjrt={} engine_secs={:.3}",
+            self.jobs_done(),
+            self.failures(),
+            self.pjrt_jobs(),
+            self.total_seconds()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        let ok = crate::coordinator::JobOutcome {
+            name: "a".into(),
+            engine: "native",
+            n_colors: 5,
+            iterations: 1,
+            seconds: 0.25,
+            valid: true,
+            error: None,
+        };
+        let bad = crate::coordinator::JobOutcome { valid: false, engine: "pjrt", ..ok.clone() };
+        m.record(&ok);
+        m.record(&bad);
+        assert_eq!(m.jobs_done(), 2);
+        assert_eq!(m.failures(), 1);
+        assert_eq!(m.pjrt_jobs(), 1);
+        assert!((m.total_seconds() - 0.5).abs() < 1e-3);
+        assert!(m.summary().contains("jobs=2"));
+    }
+}

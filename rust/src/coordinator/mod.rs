@@ -1,0 +1,350 @@
+//! Coloring job coordinator — the L3 service layer.
+//!
+//! A [`Service`] owns a pool of native workers plus (optionally) one
+//! PJRT worker that holds the compiled net-step artifacts. Clients
+//! [`Service::submit`] jobs (a graph + a [`crate::coloring::Config`] +
+//! an engine selector); the router dispatches each job to the right
+//! worker queue and the caller gets a receiver for the outcome. The
+//! PJRT executable is compiled once and reused across jobs (one
+//! executable per bucket, per DESIGN.md §3); Python is never involved.
+
+pub mod metrics;
+
+use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coloring::{color_bgpc, color_d2gc, Config, Problem};
+use crate::graph::{Bipartite, Csr};
+use crate::runtime::{NetStepOffload, Runtime};
+
+pub use metrics::Metrics;
+
+/// Which engine a job should run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSel {
+    /// Router decides: PJRT for BGPC jobs whose nets fit a bucket (when
+    /// artifacts are loaded), native otherwise.
+    Auto,
+    /// Native engine (simulator or real threads per the job's Config).
+    Native,
+    /// The AOT JAX/Pallas net-step path.
+    Pjrt,
+}
+
+/// A coloring job.
+#[derive(Clone)]
+pub struct Job {
+    pub name: String,
+    pub input: JobInput,
+    pub cfg: Config,
+    pub engine: EngineSel,
+}
+
+/// Job payload (graphs are shared; the service never copies them).
+#[derive(Clone)]
+pub enum JobInput {
+    Bgpc(Arc<Bipartite>),
+    D2gc(Arc<Csr>),
+}
+
+impl JobInput {
+    pub fn problem(&self) -> Problem {
+        match self {
+            JobInput::Bgpc(_) => Problem::Bgpc,
+            JobInput::D2gc(_) => Problem::D2gc,
+        }
+    }
+}
+
+/// Outcome delivered to the submitter.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    pub engine: &'static str,
+    pub n_colors: usize,
+    pub iterations: usize,
+    pub seconds: f64,
+    pub valid: bool,
+    pub error: Option<String>,
+}
+
+enum Message {
+    Run(Job, Sender<JobOutcome>),
+    Stop,
+}
+
+/// The coordinator service.
+pub struct Service {
+    native_tx: Sender<Message>,
+    pjrt_tx: Option<Sender<Message>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    seq: AtomicU64,
+}
+
+fn run_native(job: &Job) -> JobOutcome {
+    match &job.input {
+        JobInput::Bgpc(g) => {
+            let r = color_bgpc(g, &job.cfg);
+            let valid = crate::coloring::verify::bgpc_valid(g, &r.colors).is_ok();
+            JobOutcome {
+                name: job.name.clone(),
+                engine: "native",
+                n_colors: r.n_colors,
+                iterations: r.iterations,
+                seconds: r.seconds,
+                valid,
+                error: None,
+            }
+        }
+        JobInput::D2gc(g) => {
+            let r = color_d2gc(g, &job.cfg);
+            let valid = crate::coloring::verify::d2gc_valid(g, &r.colors).is_ok();
+            JobOutcome {
+                name: job.name.clone(),
+                engine: "native",
+                n_colors: r.n_colors,
+                iterations: r.iterations,
+                seconds: r.seconds,
+                valid,
+                error: None,
+            }
+        }
+    }
+}
+
+fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
+    match &job.input {
+        JobInput::Bgpc(g) => {
+            let t0 = std::time::Instant::now();
+            match NetStepOffload::new(rt).color(g, 50) {
+                Ok((colors, stats)) => {
+                    let valid = crate::coloring::verify::bgpc_valid(g, &colors).is_ok();
+                    JobOutcome {
+                        name: job.name.clone(),
+                        engine: "pjrt",
+                        n_colors: crate::coloring::stats::distinct_colors(&colors),
+                        iterations: stats.iterations,
+                        seconds: t0.elapsed().as_secs_f64(),
+                        valid,
+                        error: None,
+                    }
+                }
+                Err(e) => JobOutcome {
+                    name: job.name.clone(),
+                    engine: "pjrt",
+                    n_colors: 0,
+                    iterations: 0,
+                    seconds: t0.elapsed().as_secs_f64(),
+                    valid: false,
+                    error: Some(format!("{e:#}")),
+                },
+            }
+        }
+        JobInput::D2gc(_) => JobOutcome {
+            name: job.name.clone(),
+            engine: "pjrt",
+            n_colors: 0,
+            iterations: 0,
+            seconds: 0.0,
+            valid: false,
+            error: Some("PJRT engine only supports BGPC jobs".into()),
+        },
+    }
+}
+
+impl Service {
+    /// Start `n_native` native workers; if `artifacts` is given and loads,
+    /// also start one PJRT worker owning the compiled executables.
+    pub fn start(n_native: usize, artifacts: Option<std::path::PathBuf>) -> Service {
+        let metrics = Arc::new(Metrics::default());
+        let (native_tx, native_rx) = channel::<Message>();
+        let native_rx = Arc::new(std::sync::Mutex::new(native_rx));
+        let mut workers = Vec::new();
+        for _ in 0..n_native.max(1) {
+            let rx = Arc::clone(&native_rx);
+            let m = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                match msg {
+                    Ok(Message::Run(job, out)) => {
+                        let o = run_native(&job);
+                        m.record(&o);
+                        let _ = out.send(o);
+                    }
+                    Ok(Message::Stop) | Err(_) => break,
+                }
+            }));
+        }
+
+        // PJRT handles are not Send: the runtime must be created *inside*
+        // its worker thread; a oneshot reports whether loading succeeded.
+        let pjrt_tx = artifacts.and_then(|dir| {
+            let (tx, rx) = channel::<Message>();
+            let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+            let m = Arc::clone(&metrics);
+            let handle = std::thread::spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                loop {
+                    match rx.recv() {
+                        Ok(Message::Run(job, out)) => {
+                            let o = run_pjrt(&rt, &job);
+                            m.record(&o);
+                            let _ = out.send(o);
+                        }
+                        Ok(Message::Stop) | Err(_) => break,
+                    }
+                }
+            });
+            match ready_rx.recv() {
+                Ok(Ok(())) => {
+                    workers.push(handle);
+                    Some(tx)
+                }
+                Ok(Err(e)) => {
+                    eprintln!("coordinator: PJRT engine unavailable: {e}");
+                    let _ = handle.join();
+                    None
+                }
+                Err(_) => None,
+            }
+        });
+
+        Service { native_tx, pjrt_tx, workers, metrics, seq: AtomicU64::new(0) }
+    }
+
+    /// Route a job; returns the outcome receiver.
+    pub fn submit(&self, mut job: Job) -> Receiver<JobOutcome> {
+        if job.name.is_empty() {
+            job.name = format!("job-{}", self.seq.fetch_add(1, AOrd::Relaxed));
+        }
+        let (tx, rx) = channel();
+        let use_pjrt = match job.engine {
+            EngineSel::Pjrt => true,
+            EngineSel::Native => false,
+            EngineSel::Auto => {
+                self.pjrt_tx.is_some() && matches!(job.input, JobInput::Bgpc(_))
+            }
+        };
+        if use_pjrt {
+            match &self.pjrt_tx {
+                Some(ptx) => {
+                    let _ = ptx.send(Message::Run(job, tx));
+                }
+                None => {
+                    let _ = tx.send(JobOutcome {
+                        name: job.name,
+                        engine: "pjrt",
+                        n_colors: 0,
+                        iterations: 0,
+                        seconds: 0.0,
+                        valid: false,
+                        error: Some("PJRT engine not loaded (run `make artifacts`)".into()),
+                    });
+                }
+            }
+        } else {
+            let _ = self.native_tx.send(Message::Run(job, tx));
+        }
+        rx
+    }
+
+    /// Whether the PJRT engine is up.
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt_tx.is_some()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop all workers and join them.
+    pub fn shutdown(self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.native_tx.send(Message::Stop);
+        }
+        if let Some(ptx) = &self.pjrt_tx {
+            let _ = ptx.send(Message::Stop);
+        }
+        drop(self.native_tx);
+        drop(self.pjrt_tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::schedule;
+    use crate::graph::generators::random_bipartite;
+
+    #[test]
+    fn native_jobs_round_trip() {
+        let svc = Service::start(2, None);
+        let g = Arc::new(random_bipartite(100, 150, 1200, 21));
+        let mut rxs = Vec::new();
+        for (i, spec) in schedule::ALL.iter().enumerate() {
+            rxs.push(svc.submit(Job {
+                name: format!("j{i}"),
+                input: JobInput::Bgpc(Arc::clone(&g)),
+                cfg: Config::sim(*spec, 4),
+                engine: EngineSel::Native,
+            }));
+        }
+        for rx in rxs {
+            let o = rx.recv().unwrap();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+            assert!(o.n_colors > 0);
+        }
+        assert_eq!(svc.metrics().jobs_done(), 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pjrt_request_without_artifacts_errors_cleanly() {
+        let svc = Service::start(1, None);
+        let g = Arc::new(random_bipartite(10, 20, 60, 1));
+        let rx = svc.submit(Job {
+            name: "x".into(),
+            input: JobInput::Bgpc(g),
+            cfg: Config::sim(schedule::N1_N2, 2),
+            engine: EngineSel::Pjrt,
+        });
+        let o = rx.recv().unwrap();
+        assert!(!o.valid);
+        assert!(o.error.unwrap().contains("artifacts"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_routes_to_native_without_pjrt() {
+        let svc = Service::start(1, None);
+        assert!(!svc.has_pjrt());
+        let g = Arc::new(random_bipartite(50, 60, 300, 3));
+        let o = svc
+            .submit(Job {
+                name: String::new(),
+                input: JobInput::Bgpc(g),
+                cfg: Config::sim(schedule::V_N2, 2),
+                engine: EngineSel::Auto,
+            })
+            .recv()
+            .unwrap();
+        assert_eq!(o.engine, "native");
+        assert!(o.valid);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,152 @@
+//! Bipartite graph `G = (V_A ∪ V_B, E)` in the paper's vertex/net view.
+//!
+//! Following the paper's hypergraph analogy (§II): the `V_A` side holds
+//! the *vertices* to be colored, the `V_B` side holds the *nets* that
+//! define the neighborhood. For a sparse matrix whose **columns** are
+//! colored (the paper's BGPC setup), vertices = columns, nets = rows.
+
+use super::csr::Csr;
+
+/// Bipartite graph stored as both directions of the incidence.
+#[derive(Clone, Debug)]
+pub struct Bipartite {
+    /// `nets(u)` for each vertex `u ∈ V_A` (vertex → incident nets).
+    pub vtx_nets: Csr,
+    /// `vtxs(v)` for each net `v ∈ V_B` (net → incident vertices).
+    pub net_vtxs: Csr,
+}
+
+impl Bipartite {
+    /// Build from the net-side incidence (rows = nets, cols = vertices),
+    /// i.e. directly from a sparse matrix when coloring its columns.
+    pub fn from_net_incidence(net_vtxs: Csr) -> Bipartite {
+        let vtx_nets = net_vtxs.transpose();
+        Bipartite { vtx_nets, net_vtxs }
+    }
+
+    /// Number of vertices to color (`|V_A|`).
+    #[inline]
+    pub fn n_vertices(&self) -> usize {
+        self.vtx_nets.n_rows
+    }
+
+    /// Number of nets (`|V_B|`).
+    #[inline]
+    pub fn n_nets(&self) -> usize {
+        self.net_vtxs.n_rows
+    }
+
+    /// Number of incidences (`|E|`).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.net_vtxs.nnz()
+    }
+
+    /// `nets(u)`.
+    #[inline]
+    pub fn nets(&self, u: usize) -> &[u32] {
+        self.vtx_nets.row(u)
+    }
+
+    /// `vtxs(v)`.
+    #[inline]
+    pub fn vtxs(&self, v: usize) -> &[u32] {
+        self.net_vtxs.row(v)
+    }
+
+    /// Upper bound on the distance-2 degree of vertex `u`:
+    /// `Σ_{v ∈ nets(u)} (|vtxs(v)| − 1)`. Also the paper's lower-bound
+    /// argument for reverse first-fit never running negative.
+    pub fn two_hop_bound(&self, u: usize) -> usize {
+        self.nets(u)
+            .iter()
+            .map(|&v| self.net_vtxs.deg(v as usize).saturating_sub(1))
+            .sum()
+    }
+
+    /// The cost the paper analyses for vertex-based coloring's first
+    /// iteration: `Σ_{v ∈ V_B} |vtxs(v)|²`.
+    pub fn net_sq_sum(&self) -> u64 {
+        (0..self.n_nets())
+            .map(|v| {
+                let d = self.net_vtxs.deg(v) as u64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Renumber the vertex side: new id of old vertex `u` is `perm[u]`.
+    /// Both incidence directions stay consistent.
+    pub fn relabel_vertices(&self, perm: &[u32]) -> Bipartite {
+        let mut net_vtxs = self.net_vtxs.clone();
+        net_vtxs.relabel_cols(perm);
+        Bipartite::from_net_incidence(net_vtxs)
+    }
+
+    /// Cross-direction consistency check (property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        self.vtx_nets.validate()?;
+        self.net_vtxs.validate()?;
+        if self.vtx_nets.n_rows != self.net_vtxs.n_cols
+            || self.vtx_nets.n_cols != self.net_vtxs.n_rows
+        {
+            return Err("incidence shapes inconsistent".into());
+        }
+        if self.vtx_nets.nnz() != self.net_vtxs.nnz() {
+            return Err("incidence nnz mismatch".into());
+        }
+        // spot-check round trip on a few rows
+        let t = self.net_vtxs.transpose();
+        if t.ptr != self.vtx_nets.ptr || t.adj != self.vtx_nets.adj {
+            return Err("vtx_nets is not transpose of net_vtxs".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// nets: n0 -> {v0, v1}, n1 -> {v1, v2}, n2 -> {v0, v2, v3}
+    pub fn tiny() -> Bipartite {
+        let m = Csr::from_edges(3, 4, &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 0), (2, 2), (2, 3)]);
+        Bipartite::from_net_incidence(m)
+    }
+
+    #[test]
+    fn directions_consistent() {
+        let g = tiny();
+        g.validate().unwrap();
+        assert_eq!(g.n_vertices(), 4);
+        assert_eq!(g.n_nets(), 3);
+        assert_eq!(g.nets(1), &[0, 1]);
+        assert_eq!(g.vtxs(2), &[0, 2, 3]);
+    }
+
+    #[test]
+    fn two_hop_bound_matches_hand_count() {
+        let g = tiny();
+        // v0 ∈ nets {n0, n2}: (2-1) + (3-1) = 3
+        assert_eq!(g.two_hop_bound(0), 3);
+        // v3 ∈ {n2}: 2
+        assert_eq!(g.two_hop_bound(3), 2);
+    }
+
+    #[test]
+    fn net_sq_sum_matches() {
+        let g = tiny();
+        assert_eq!(g.net_sq_sum(), 4 + 4 + 9);
+    }
+
+    #[test]
+    fn relabel_roundtrip() {
+        let g = tiny();
+        // reverse ids
+        let perm: Vec<u32> = (0..4u32).rev().collect();
+        let r = g.relabel_vertices(&perm);
+        r.validate().unwrap();
+        // old v0 (now 3) was in nets n0 and n2
+        assert_eq!(r.nets(3), g.nets(0));
+    }
+}

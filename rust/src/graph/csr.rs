@@ -1,0 +1,232 @@
+//! Compressed sparse row adjacency — the only graph storage in the repo.
+//!
+//! Matches the paper's data layout ("all the algorithms are implemented
+//! ... using the same data structures"): a `ptr` offset array plus a flat
+//! `adj` id array, ids are `u32` (every test graph is far below 4B ids).
+
+/// CSR adjacency from `n_rows` entities into an id space of `n_cols`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub ptr: Vec<usize>,
+    pub adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an (unsorted) edge list; duplicates are removed.
+    pub fn from_edges(n_rows: usize, n_cols: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0usize; n_rows];
+        for &(r, _) in edges {
+            deg[r as usize] += 1;
+        }
+        let mut ptr = vec![0usize; n_rows + 1];
+        for i in 0..n_rows {
+            ptr[i + 1] = ptr[i] + deg[i];
+        }
+        let mut adj = vec![0u32; edges.len()];
+        let mut cursor = ptr.clone();
+        for &(r, c) in edges {
+            adj[cursor[r as usize]] = c;
+            cursor[r as usize] += 1;
+        }
+        let mut csr = Csr { n_rows, n_cols, ptr, adj };
+        csr.sort_dedup_rows();
+        csr
+    }
+
+    /// Sort each row and drop duplicate ids (in place, compacting).
+    pub fn sort_dedup_rows(&mut self) {
+        let mut out_ptr = Vec::with_capacity(self.n_rows + 1);
+        out_ptr.push(0usize);
+        let mut w = 0usize;
+        for r in 0..self.n_rows {
+            let (s, e) = (self.ptr[r], self.ptr[r + 1]);
+            self.adj[s..e].sort_unstable();
+            let mut prev: Option<u32> = None;
+            for i in s..e {
+                let v = self.adj[i];
+                if prev != Some(v) {
+                    self.adj[w] = v;
+                    w += 1;
+                    prev = Some(v);
+                }
+            }
+            out_ptr.push(w);
+        }
+        self.adj.truncate(w);
+        self.ptr = out_ptr;
+    }
+
+    /// Number of stored edges.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Adjacency slice of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.adj[self.ptr[r]..self.ptr[r + 1]]
+    }
+
+    /// Degree of row `r`.
+    #[inline]
+    pub fn deg(&self, r: usize) -> usize {
+        self.ptr[r + 1] - self.ptr[r]
+    }
+
+    /// Maximum row degree.
+    pub fn max_deg(&self) -> usize {
+        (0..self.n_rows).map(|r| self.deg(r)).max().unwrap_or(0)
+    }
+
+    /// Transpose (counting sort; output rows are sorted by construction).
+    pub fn transpose(&self) -> Csr {
+        let mut deg = vec![0usize; self.n_cols];
+        for &c in &self.adj {
+            deg[c as usize] += 1;
+        }
+        let mut ptr = vec![0usize; self.n_cols + 1];
+        for i in 0..self.n_cols {
+            ptr[i + 1] = ptr[i] + deg[i];
+        }
+        let mut adj = vec![0u32; self.adj.len()];
+        let mut cursor = ptr.clone();
+        for r in 0..self.n_rows {
+            for &c in self.row(r) {
+                adj[cursor[c as usize]] = r as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, ptr, adj }
+    }
+
+    /// Apply a permutation to the *column id space*: new id of old column
+    /// `c` is `perm[c]`. Rows keep their order; rows are re-sorted.
+    pub fn relabel_cols(&mut self, perm: &[u32]) {
+        assert_eq!(perm.len(), self.n_cols);
+        for c in self.adj.iter_mut() {
+            *c = perm[*c as usize];
+        }
+        for r in 0..self.n_rows {
+            let (s, e) = (self.ptr[r], self.ptr[r + 1]);
+            self.adj[s..e].sort_unstable();
+        }
+    }
+
+    /// Reorder rows: new row `i` is old row `order[i]`.
+    pub fn permute_rows(&self, order: &[u32]) -> Csr {
+        assert_eq!(order.len(), self.n_rows);
+        let mut ptr = Vec::with_capacity(self.n_rows + 1);
+        ptr.push(0usize);
+        let mut adj = Vec::with_capacity(self.adj.len());
+        for &old in order {
+            adj.extend_from_slice(self.row(old as usize));
+            ptr.push(adj.len());
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, adj }
+    }
+
+    /// True if the matrix is square and its pattern is symmetric.
+    pub fn is_structurally_symmetric(&self) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        let t = self.transpose();
+        t.ptr == self.ptr && t.adj == self.adj
+    }
+
+    /// Check internal invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ptr.len() != self.n_rows + 1 {
+            return Err(format!("ptr len {} != n_rows+1", self.ptr.len()));
+        }
+        if self.ptr[0] != 0 || *self.ptr.last().unwrap() != self.adj.len() {
+            return Err("ptr endpoints broken".into());
+        }
+        for r in 0..self.n_rows {
+            if self.ptr[r] > self.ptr[r + 1] {
+                return Err(format!("ptr not monotone at {r}"));
+            }
+            let row = self.row(r);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} not sorted/deduped"));
+                }
+            }
+            if let Some(&m) = row.last() {
+                if (m as usize) >= self.n_cols {
+                    return Err(format!("row {r} id {m} out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // 3 rows, 4 cols: r0 -> {0, 2}, r1 -> {1, 2, 3}, r2 -> {}
+        Csr::from_edges(3, 4, &[(0, 2), (0, 0), (1, 3), (1, 1), (1, 2), (0, 2)])
+    }
+
+    #[test]
+    fn from_edges_sorts_and_dedups() {
+        let g = sample();
+        assert_eq!(g.row(0), &[0, 2]);
+        assert_eq!(g.row(1), &[1, 2, 3]);
+        assert_eq!(g.row(2), &[] as &[u32]);
+        assert_eq!(g.nnz(), 5);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let g = sample();
+        let t = g.transpose();
+        assert_eq!(t.n_rows, 4);
+        assert_eq!(t.row(2), &[0, 1]);
+        let back = t.transpose();
+        assert_eq!(back, g);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        let sym = Csr::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        assert!(sym.is_structurally_symmetric());
+        let asym = Csr::from_edges(3, 3, &[(0, 1), (1, 2)]);
+        assert!(!asym.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn permute_rows_moves_adjacency() {
+        let g = sample();
+        let p = g.permute_rows(&[2, 0, 1]);
+        assert_eq!(p.row(0), &[] as &[u32]);
+        assert_eq!(p.row(1), &[0, 2]);
+        assert_eq!(p.row(2), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn relabel_cols_keeps_sorted() {
+        let mut g = sample();
+        // swap col ids 0 <-> 3
+        g.relabel_cols(&[3, 1, 2, 0]);
+        g.validate().unwrap();
+        assert_eq!(g.row(0), &[2, 3]);
+        assert_eq!(g.row(1), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = Csr::from_edges(0, 0, &[]);
+        g.validate().unwrap();
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.max_deg(), 0);
+    }
+}

@@ -1,0 +1,492 @@
+//! Synthetic matrix generators calibrated to the paper's test-bed.
+//!
+//! The paper evaluates on eight UFL/SuiteSparse matrices plus
+//! MovieLens-20M (Table II). Those exact matrices are hundreds of MB and
+//! unavailable offline, so each gets a *calibrated synthetic preset*
+//! matching the shape statistics that drive the algorithms' behaviour:
+//! rows/cols ratio, average degree, maximum column degree, and degree
+//! skew (DESIGN.md §4). A real Matrix-Market reader ([`super::mtx`])
+//! lets the genuine matrices drop in unchanged.
+//!
+//! Four pattern families cover the test-bed:
+//! * [`fem_elements`] — element-clique FE matrices (`af_shell`,
+//!   `bone010`, `channel`, `nlpkkt120`): near-constant degree,
+//!   structurally symmetric, strongly overlapping nets.
+//! * [`banded`] — plain stencil bands (kept for tests/examples).
+//! * [`chung_lu_symmetric`] — power-law graphs (`coPapersDBLP`): heavy
+//!   degree skew, hub-clustered natural order, symmetric.
+//! * [`chung_lu_bipartite`] / [`regularish`] — rectangular / directed
+//!   skewed patterns (`20M_movielens`, `uk-2002`, CFD `HV15R`).
+
+use super::bipartite::Bipartite;
+use super::csr::Csr;
+use crate::util::prng::Rng;
+
+/// Mix two ids and a seed into a decision hash (symmetric edge jitter).
+#[inline]
+fn pair_hash(a: u32, b: u32, seed: u64) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let mut x = ((hi as u64) << 32 | lo as u64) ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CEB9FE1A85EC53);
+    x ^ (x >> 33)
+}
+
+/// Structurally symmetric banded pattern: row `i` is connected to the
+/// window `i ± h` with per-pair keep probability `fill`, plus `extra`
+/// random long-range symmetric links per row (lifts max degree / stddev,
+/// as in `bone010`). Diagonal always present.
+pub fn banded(n: usize, half_band: usize, fill: f64, extra: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0xB4DED);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * (half_band + 1) * 2);
+    let thresh = (fill * u64::MAX as f64) as u64;
+    for i in 0..n {
+        edges.push((i as u32, i as u32));
+        let hi = (i + half_band).min(n - 1);
+        for j in (i + 1)..=hi {
+            if pair_hash(i as u32, j as u32, seed) <= thresh {
+                edges.push((i as u32, j as u32));
+                edges.push((j as u32, i as u32));
+            }
+        }
+        // long-range symmetric extras
+        let n_extra = (extra + rng.f64()) as usize;
+        for _ in 0..n_extra {
+            let j = rng.range(0, n);
+            if j != i {
+                edges.push((i as u32, j as u32));
+                edges.push((j as u32, i as u32));
+            }
+        }
+    }
+    Csr::from_edges(n, n, &edges)
+}
+
+/// Element-based FEM pattern (`bone010`): nodes belong to ~`epn`
+/// elements of `npe` nodes drawn from a locality window; the matrix is
+/// the element-connectivity closure (nodes sharing an element are
+/// adjacent — every element is a clique). This reproduces the *overlap
+/// structure* of real FE matrices: the nets of nearby nodes share whole
+/// element cliques, so their forbidden sets largely agree and coherent
+/// optimistic colorings survive — the property behind bone010's Table I
+/// separation (random-pair local graphs lose nearly every speculative
+/// color instead).
+pub fn fem_elements(n: usize, npe: usize, epn: usize, window: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0xFE31);
+    let n_elems = (n * epn / npe).max(1);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * npe * epn);
+    for i in 0..n {
+        edges.push((i as u32, i as u32));
+    }
+    let mut members = Vec::with_capacity(npe);
+    for e in 0..n_elems {
+        // element centers sweep the id space (mesh locality)
+        let center = (e * n) / n_elems;
+        let lo = center.saturating_sub(window);
+        let hi = (center + window).min(n - 1);
+        members.clear();
+        for _ in 0..npe {
+            members.push(rng.range(lo, hi + 1) as u32);
+        }
+        for (ai, &a) in members.iter().enumerate() {
+            for &b in members.iter().skip(ai + 1) {
+                if a != b {
+                    edges.push((a, b));
+                    edges.push((b, a));
+                }
+            }
+        }
+    }
+    Csr::from_edges(n, n, &edges)
+}
+
+/// Cumulative-weight sampler (binary search over prefix sums).
+struct WeightedSampler {
+    cum: Vec<f64>,
+}
+
+impl WeightedSampler {
+    fn new(weights: &[f64]) -> WeightedSampler {
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w;
+            cum.push(acc);
+        }
+        WeightedSampler { cum }
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.cum.last().unwrap();
+        let x = rng.f64() * total;
+        match self.cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+/// Power-law weights `w_i ∝ rank^(−1/(alpha−1))` clamped to `max_w`,
+/// laid out in *shuffled blocks*: heavy ids cluster in a few contiguous
+/// id ranges, the way real matrices cluster hubs (citation communities,
+/// web hosts). This is what makes the natural order imbalanced under
+/// static scheduling — the effect behind the paper's `V-V` vs `V-V-64`
+/// gap (Table III).
+fn powerlaw_weights(n: usize, alpha: f64, max_w: f64, rng: &mut Rng) -> Vec<f64> {
+    let exp = 1.0 / (alpha - 1.0);
+    let sorted: Vec<f64> = (0..n)
+        .map(|i| ((n as f64 / (i + 1) as f64).powf(exp)).min(max_w))
+        .collect();
+    let n_blocks = 64.min(n.max(1));
+    let mut order: Vec<usize> = (0..n_blocks).collect();
+    rng.shuffle(&mut order);
+    let mut w = Vec::with_capacity(n);
+    for &b in &order {
+        let lo = n * b / n_blocks;
+        let hi = n * (b + 1) / n_blocks;
+        w.extend_from_slice(&sorted[lo..hi]);
+    }
+    w
+}
+
+/// Symmetric Chung–Lu power-law graph: `m` undirected edges sampled with
+/// endpoint probability ∝ power-law weights; pattern symmetrized.
+pub fn chung_lu_symmetric(n: usize, m: usize, alpha: f64, max_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0xC1);
+    let w = powerlaw_weights(n, alpha, max_deg as f64, &mut rng);
+    let sampler = WeightedSampler::new(&w);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(2 * m + n);
+    for i in 0..n {
+        edges.push((i as u32, i as u32)); // keep every vertex present
+    }
+    for _ in 0..m {
+        let a = sampler.sample(&mut rng) as u32;
+        let b = sampler.sample(&mut rng) as u32;
+        if a != b {
+            edges.push((a, b));
+            edges.push((b, a));
+        }
+    }
+    Csr::from_edges(n, n, &edges)
+}
+
+/// Bipartite Chung–Lu: `nnz` incidences; net (row) side weighted by
+/// `row_alpha` power law (1.0 ⇒ uniform), vertex (column) side by
+/// `col_alpha` with max weight `max_col_deg`.
+pub fn chung_lu_bipartite(
+    n_nets: usize,
+    n_vtxs: usize,
+    nnz: usize,
+    row_alpha: f64,
+    col_alpha: f64,
+    max_col_deg: usize,
+    max_row_deg: usize,
+    seed: u64,
+) -> Csr {
+    let mut rng = Rng::new(seed ^ 0xB1);
+    let row_w = if row_alpha <= 1.0 {
+        vec![1.0; n_nets]
+    } else {
+        powerlaw_weights(n_nets, row_alpha, max_row_deg as f64, &mut rng)
+    };
+    let col_w = powerlaw_weights(n_vtxs, col_alpha, max_col_deg as f64, &mut rng);
+    let rows = WeightedSampler::new(&row_w);
+    let cols = WeightedSampler::new(&col_w);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let r = rows.sample(&mut rng) as u32;
+        let c = cols.sample(&mut rng) as u32;
+        edges.push((r, c));
+    }
+    Csr::from_edges(n_nets, n_vtxs, &edges)
+}
+
+/// Near-constant row degree with random fill and mild locality — the CFD
+/// profile (`HV15R`): deg ~ N(avg, sd) clipped to `[1, max]`, neighbors
+/// drawn half from a local band, half uniformly.
+pub fn regularish(n: usize, avg_deg: f64, sd: f64, max_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0x4EAE);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let band = (avg_deg as usize).max(8) * 4;
+    for i in 0..n {
+        // Box–Muller
+        let (u1, u2) = (rng.f64().max(1e-12), rng.f64());
+        let z = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        let d = ((avg_deg + sd * z).round() as isize).clamp(1, max_deg as isize) as usize;
+        edges.push((i as u32, i as u32));
+        for k in 0..d {
+            let j = if k % 2 == 0 {
+                let lo = i.saturating_sub(band / 2);
+                let hi = (i + band / 2).min(n - 1);
+                rng.range(lo, hi + 1)
+            } else {
+                rng.range(0, n)
+            };
+            edges.push((i as u32, j as u32));
+        }
+    }
+    Csr::from_edges(n, n, &edges)
+}
+
+/// One of the paper's eight test matrices, as a calibrated preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Banded { half_band: usize, fill_pct: u8, extra_x100: u16 },
+    FemElems { npe: usize, epn: usize, window: usize },
+    ChungLuSym { avg_deg: usize, alpha_x10: u8, max_deg: usize },
+    ChungLuBip { n_vtxs_per_mille: u32, avg_col_deg: usize, row_alpha_x10: u8, col_alpha_x10: u8, max_col_deg: usize, max_row_deg_per_mille: u16 },
+    Regularish { avg_deg: usize, sd: usize, max_deg: usize },
+}
+
+/// A named preset mirroring one row of the paper's Table II.
+#[derive(Clone, Copy, Debug)]
+pub struct Preset {
+    pub name: &'static str,
+    /// Base number of nets (rows) at `scale = 1.0` (already ~1/10–1/80 of
+    /// the original matrix; see DESIGN.md §4).
+    pub base_nets: usize,
+    pub family: Family,
+    /// Structurally symmetric (⇒ eligible for the D2GC experiments,
+    /// mirroring Table II's last column).
+    pub symmetric: bool,
+}
+
+/// The paper's eight matrices (Table II), calibrated and scaled.
+pub const PRESETS: [Preset; 8] = [
+    // MovieLens-20M: nets = movies (heavy hubs — a popular movie is rated
+    // by ~half the users), vertices = users. The paper's Table II lists a
+    // max "column" degree of 67,310 ≈ 49% of one side — preserved here as
+    // a net-degree hub ratio.
+    Preset {
+        name: "20M_movielens",
+        base_nets: 2_674,
+        family: Family::ChungLuBip {
+            n_vtxs_per_mille: 5_179, // 13.8k users per 2.7k movies
+            avg_col_deg: 14,
+            row_alpha_x10: 16, // heavy movie-popularity skew
+            col_alpha_x10: 25, // mild user-activity skew
+            max_col_deg: 400,
+            max_row_deg_per_mille: 485, // hit movie ≈ half the users (Table II)
+        },
+        symmetric: false,
+    },
+    Preset {
+        name: "af_shell",
+        base_nets: 75_000,
+        family: Family::FemElems { npe: 10, epn: 2, window: 150 },
+        symmetric: true,
+    },
+    Preset {
+        name: "bone010",
+        base_nets: 49_000,
+        family: Family::FemElems { npe: 14, epn: 3, window: 260 },
+        symmetric: true,
+    },
+    Preset {
+        name: "channel",
+        base_nets: 120_000,
+        family: Family::FemElems { npe: 6, epn: 2, window: 200 },
+        symmetric: true,
+    },
+    Preset {
+        name: "coPapersDBLP",
+        base_nets: 54_000,
+        // max degree scales with n to preserve the paper's relative hub
+        // size (3,299 / 540,486 ≈ 0.6% → 330 at 54k).
+        family: Family::ChungLuSym { avg_deg: 28, alpha_x10: 26, max_deg: 330 },
+        symmetric: true,
+    },
+    Preset {
+        name: "HV15R",
+        base_nets: 25_000,
+        family: Family::Regularish { avg_deg: 140, sd: 54, max_deg: 484 },
+        symmetric: false,
+    },
+    Preset {
+        name: "nlpkkt120",
+        base_nets: 88_000,
+        family: Family::FemElems { npe: 8, epn: 2, window: 300 },
+        symmetric: true,
+    },
+    Preset {
+        name: "uk-2002",
+        base_nets: 230_000,
+        family: Family::ChungLuBip {
+            n_vtxs_per_mille: 1_000, // square
+            avg_col_deg: 16,
+            row_alpha_x10: 21,
+            col_alpha_x10: 21,
+            // 2,450 / 18.5M is a *small* relative hub; preserved ratio
+            // would be ~31 at this scale — keep a little extra tail.
+            max_col_deg: 64,
+            max_row_deg_per_mille: 2, // nets stay small relative to |V_A|
+        },
+        symmetric: false,
+    },
+];
+
+impl Preset {
+    /// Look up a preset by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<&'static Preset> {
+        PRESETS.iter().find(|p| p.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Instantiate the net-side incidence matrix at a given scale.
+    pub fn net_incidence(&self, scale: f64, seed: u64) -> Csr {
+        let n = ((self.base_nets as f64 * scale) as usize).max(64);
+        match self.family {
+            Family::Banded { half_band, fill_pct, extra_x100 } => banded(
+                n,
+                half_band,
+                fill_pct as f64 / 100.0,
+                extra_x100 as f64 / 100.0,
+                seed,
+            ),
+            Family::FemElems { npe, epn, window } => fem_elements(n, npe, epn, window, seed),
+            Family::ChungLuSym { avg_deg, alpha_x10, max_deg } => chung_lu_symmetric(
+                n,
+                n * avg_deg / 2,
+                alpha_x10 as f64 / 10.0,
+                max_deg,
+                seed,
+            ),
+            Family::ChungLuBip {
+                n_vtxs_per_mille,
+                avg_col_deg,
+                row_alpha_x10,
+                col_alpha_x10,
+                max_col_deg,
+                max_row_deg_per_mille,
+            } => {
+                let n_vtxs = ((n as u64 * n_vtxs_per_mille as u64 / 1000) as usize).max(64);
+                let max_row =
+                    ((n_vtxs as u64 * max_row_deg_per_mille as u64 / 1000) as usize).max(16);
+                chung_lu_bipartite(
+                    n,
+                    n_vtxs,
+                    n_vtxs * avg_col_deg,
+                    row_alpha_x10 as f64 / 10.0,
+                    col_alpha_x10 as f64 / 10.0,
+                    max_col_deg,
+                    max_row,
+                    seed,
+                )
+            }
+            Family::Regularish { avg_deg, sd, max_deg } => {
+                regularish(n, avg_deg as f64, sd as f64, max_deg, seed)
+            }
+        }
+    }
+
+    /// Instantiate as a bipartite BGPC instance (columns are colored).
+    pub fn bipartite(&self, scale: f64, seed: u64) -> Bipartite {
+        Bipartite::from_net_incidence(self.net_incidence(scale, seed))
+    }
+}
+
+/// Small uniform random bipartite instance (tests / property tests).
+pub fn random_bipartite(n_nets: usize, n_vtxs: usize, nnz: usize, seed: u64) -> Bipartite {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        edges.push((rng.range(0, n_nets) as u32, rng.range(0, n_vtxs) as u32));
+    }
+    Bipartite::from_net_incidence(Csr::from_edges(n_nets, n_vtxs, &edges))
+}
+
+/// Small random symmetric square graph (tests).
+pub fn random_symmetric(n: usize, m: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(2 * m + n);
+    for i in 0..n {
+        edges.push((i as u32, i as u32));
+    }
+    for _ in 0..m {
+        let a = rng.range(0, n) as u32;
+        let b = rng.range(0, n) as u32;
+        edges.push((a, b));
+        edges.push((b, a));
+    }
+    Csr::from_edges(n, n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_is_symmetric_and_near_constant_degree() {
+        let g = banded(500, 9, 0.85, 0.0, 1);
+        g.validate().unwrap();
+        assert!(g.is_structurally_symmetric());
+        let avg = g.nnz() as f64 / 500.0;
+        assert!(avg > 10.0 && avg < 20.0, "avg {avg}");
+        assert!(g.max_deg() <= 19);
+    }
+
+    #[test]
+    fn chung_lu_sym_is_symmetric_and_skewed() {
+        let g = chung_lu_symmetric(2000, 2000 * 14, 2.0, 400, 2);
+        g.validate().unwrap();
+        assert!(g.is_structurally_symmetric());
+        let max = g.max_deg();
+        let avg = g.nnz() as f64 / 2000.0;
+        assert!(max as f64 > 5.0 * avg, "max {max} avg {avg}: no skew");
+    }
+
+    #[test]
+    fn bipartite_generator_hits_target_sizes() {
+        let m = chung_lu_bipartite(1000, 5000, 40_000, 1.0, 1.8, 500, 400, 3);
+        m.validate().unwrap();
+        assert_eq!(m.n_rows, 1000);
+        assert_eq!(m.n_cols, 5000);
+        // dedup loses some, but the bulk should remain
+        assert!(m.nnz() > 30_000, "nnz {}", m.nnz());
+        let t = m.transpose();
+        assert!(t.max_deg() <= 5000);
+    }
+
+    #[test]
+    fn regularish_degrees_clipped() {
+        let g = regularish(1000, 40.0, 15.0, 80, 4);
+        g.validate().unwrap();
+        assert!(g.max_deg() <= 81); // +1 for the diagonal
+        let avg = g.nnz() as f64 / 1000.0;
+        assert!(avg > 25.0 && avg < 55.0, "avg {avg}");
+    }
+
+    #[test]
+    fn presets_instantiate_small() {
+        for p in PRESETS.iter() {
+            let g = p.bipartite(0.01, 7);
+            g.validate().unwrap();
+            assert!(g.n_vertices() >= 64, "{}", p.name);
+            assert!(g.nnz() > 0, "{}", p.name);
+            if p.symmetric {
+                assert!(
+                    p.net_incidence(0.01, 7).is_structurally_symmetric(),
+                    "{} should be symmetric",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(Preset::by_name("bone010").is_some());
+        assert!(Preset::by_name("BONE010").is_some());
+        assert!(Preset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = chung_lu_symmetric(500, 4000, 2.0, 100, 42);
+        let b = chung_lu_symmetric(500, 4000, 2.0, 100, 42);
+        assert_eq!(a, b);
+        let c = chung_lu_symmetric(500, 4000, 2.0, 100, 43);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, bipartite views, Matrix-Market I/O,
+//! calibrated synthetic generators, orderings and shape statistics.
+
+pub mod bipartite;
+pub mod csr;
+pub mod generators;
+pub mod mtx;
+pub mod ordering;
+pub mod stats;
+
+pub use bipartite::Bipartite;
+pub use csr::Csr;
+pub use generators::{Preset, PRESETS};
+pub use ordering::Ordering;
+pub use stats::InstanceStats;

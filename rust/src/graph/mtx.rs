@@ -1,0 +1,161 @@
+//! Matrix Market (`.mtx`) I/O.
+//!
+//! The paper's matrices come from the UFL/SuiteSparse collection in this
+//! format; the reader accepts `coordinate` `pattern|real|integer` with
+//! `general|symmetric` storage (values are ignored — coloring only needs
+//! the pattern). The writer emits `pattern general`, good enough to
+//! round-trip instances between tools.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::Csr;
+
+/// Read a Matrix-Market coordinate file into a CSR pattern
+/// (rows = nets when used for BGPC column coloring).
+pub fn read_mtx(path: impl AsRef<Path>) -> Result<Csr> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    read_mtx_from(BufReader::new(f))
+}
+
+/// Reader-based variant (unit tests use in-memory buffers).
+pub fn read_mtx_from(r: impl BufRead) -> Result<Csr> {
+    let mut lines = r.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty mtx file"),
+        }
+    };
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        bail!("not a MatrixMarket header: {header}");
+    }
+    if h[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", h[2]);
+    }
+    let field = h[3].as_str();
+    if !matches!(field, "pattern" | "real" | "integer" | "complex") {
+        bail!("unsupported field {field}");
+    }
+    let sym = match h.get(4).map(|s| s.as_str()) {
+        None | Some("general") => false,
+        Some("symmetric") | Some("skew-symmetric") | Some("hermitian") => true,
+        Some(other) => bail!("unsupported symmetry {other}"),
+    };
+
+    // size line (skipping comments)
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if t.is_empty() || t.starts_with('%') {
+                    continue;
+                }
+                break l;
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .take(3)
+        .map(|t| t.parse().context("size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("bad size line: {size_line}");
+    }
+    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(if sym { 2 * nnz } else { nnz });
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(rs), Some(cs)) = (it.next(), it.next()) else {
+            bail!("bad entry line: {t}");
+        };
+        let r: usize = rs.parse().context("row index")?;
+        let c: usize = cs.parse().context("col index")?;
+        if r == 0 || c == 0 || r > n_rows || c > n_cols {
+            bail!("index out of range: {r} {c} (1-based, {n_rows}x{n_cols})");
+        }
+        let (r, c) = (r as u32 - 1, c as u32 - 1);
+        edges.push((r, c));
+        if sym && r != c {
+            edges.push((c, r));
+        }
+    }
+    Ok(Csr::from_edges(n_rows, n_cols, &edges))
+}
+
+/// Write a CSR pattern as `coordinate pattern general`.
+pub fn write_mtx(csr: &Csr, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate pattern general")?;
+    writeln!(w, "% written by bgpc")?;
+    writeln!(w, "{} {} {}", csr.n_rows, csr.n_cols, csr.nnz())?;
+    for r in 0..csr.n_rows {
+        for &c in csr.row(r) {
+            writeln!(w, "{} {}", r + 1, c + 1)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_pattern() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n% comment\n3 4 4\n1 1\n1 3\n2 2\n3 4\n";
+        let m = read_mtx_from(Cursor::new(txt)).unwrap();
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.n_cols, 4);
+        assert_eq!(m.row(0), &[0, 2]);
+        assert_eq!(m.row(2), &[3]);
+    }
+
+    #[test]
+    fn parse_symmetric_real_mirrors() {
+        let txt = "%%MatrixMarket matrix coordinate real symmetric\n3 3 3\n1 1 1.5\n2 1 2.0\n3 2 -1\n";
+        let m = read_mtx_from(Cursor::new(txt)).unwrap();
+        assert!(m.is_structurally_symmetric());
+        assert_eq!(m.row(0), &[0, 1]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_mtx_from(Cursor::new("hello\n1 1 1\n")).is_err());
+        assert!(read_mtx_from(Cursor::new("%%MatrixMarket matrix array real general\n2 2\n")).is_err());
+        let oob = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n3 1\n";
+        assert!(read_mtx_from(Cursor::new(oob)).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = Csr::from_edges(3, 3, &[(0, 1), (1, 2), (2, 0), (0, 0)]);
+        let dir = std::env::temp_dir().join("bgpc_mtx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.mtx");
+        write_mtx(&m, &p).unwrap();
+        let back = read_mtx(&p).unwrap();
+        assert_eq!(back, m);
+    }
+}

@@ -1,0 +1,194 @@
+//! Vertex orderings for the coloring loop.
+//!
+//! The paper evaluates the *natural* column order (Table III) and
+//! ColPack's *smallest-last* order (Table IV). We add *random* and
+//! *largest-first* for completeness. An ordering here is a visit
+//! sequence `order[i] = vertex visited i-th`; the engines consume it as
+//! the initial work-queue order.
+//!
+//! Smallest-last for BGPC/D2GC operates on the distance-2 structure: we
+//! maintain the dynamic two-hop degree bound `Σ_{v∈nets(u)}
+//! (|vtxs_remaining(v)|−1)` in a bucket queue — initializing or
+//! maintaining the *exact* two-hop degree costs `Θ(Σ|vtxs|²)` which is
+//! precisely the blow-up the paper's §III analyses, hence the bound
+//! (DESIGN.md §7).
+
+use super::bipartite::Bipartite;
+use crate::util::prng::Rng;
+
+/// Supported orderings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    /// The matrix's own column order.
+    Natural,
+    /// Uniform random permutation (seeded).
+    Random(u64),
+    /// Decreasing two-hop degree bound (Welsh–Powell flavoured).
+    LargestFirst,
+    /// ColPack's smallest-last, on the two-hop degree bound.
+    SmallestLast,
+}
+
+impl Ordering {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Ordering> {
+        match s.to_ascii_lowercase().as_str() {
+            "natural" => Some(Ordering::Natural),
+            "random" => Some(Ordering::Random(0x5EED)),
+            "largest-first" | "lf" => Some(Ordering::LargestFirst),
+            "smallest-last" | "sl" => Some(Ordering::SmallestLast),
+            _ => None,
+        }
+    }
+
+    /// Compute the visit order for the vertices of `g`.
+    pub fn compute(&self, g: &Bipartite) -> Vec<u32> {
+        match *self {
+            Ordering::Natural => (0..g.n_vertices() as u32).collect(),
+            Ordering::Random(seed) => {
+                let mut order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+                Rng::new(seed).shuffle(&mut order);
+                order
+            }
+            Ordering::LargestFirst => {
+                let mut order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+                let key: Vec<usize> =
+                    (0..g.n_vertices()).map(|u| g.two_hop_bound(u)).collect();
+                order.sort_by(|&a, &b| key[b as usize].cmp(&key[a as usize]).then(a.cmp(&b)));
+                order
+            }
+            Ordering::SmallestLast => smallest_last(g),
+        }
+    }
+}
+
+/// Bucket-queue smallest-last on the dynamic two-hop degree bound.
+///
+/// Repeatedly removes the minimum-degree vertex and prepends it to the
+/// order; on removal every distance-2 neighbor (via still-live nets)
+/// loses one from its bound. Total cost `O(Σ_v |vtxs(v)|²)` — the same
+/// order as sequential vertex-based coloring, matching the paper's
+/// observation that ordering is slower than natural (Table II).
+pub fn smallest_last(g: &Bipartite) -> Vec<u32> {
+    let n = g.n_vertices();
+    let mut deg: Vec<usize> = (0..n).map(|u| g.two_hop_bound(u)).collect();
+    // live vertex count per net; a net with <= 1 live vertex no longer
+    // contributes to anyone's bound.
+    let mut net_live: Vec<usize> = (0..g.n_nets()).map(|v| g.vtxs(v).len()).collect();
+    let max_deg = deg.iter().copied().max().unwrap_or(0);
+
+    // bucket queue with lazy deletion
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_deg + 1];
+    for u in 0..n {
+        buckets[deg[u]].push(u as u32);
+    }
+    let mut removed = vec![false; n];
+    let mut order_rev: Vec<u32> = Vec::with_capacity(n);
+    let mut cur = 0usize;
+
+    for _ in 0..n {
+        // find the non-stale minimum
+        let u = loop {
+            while cur < buckets.len() && buckets[cur].is_empty() {
+                cur += 1;
+            }
+            debug_assert!(cur < buckets.len(), "bucket queue exhausted early");
+            let cand = buckets[cur].pop().unwrap();
+            let cu = cand as usize;
+            if !removed[cu] && deg[cu] == cur {
+                break cu;
+            }
+            // stale entry: either already removed or degree changed
+        };
+        removed[u] = true;
+        order_rev.push(u as u32);
+
+        for &v in g.nets(u) {
+            let v = v as usize;
+            net_live[v] -= 1;
+            if net_live[v] >= 1 {
+                for &w in g.vtxs(v) {
+                    let w = w as usize;
+                    if !removed[w] && deg[w] > 0 {
+                        deg[w] -= 1;
+                        buckets[deg[w]].push(w as u32);
+                        if deg[w] < cur {
+                            cur = deg[w];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    order_rev.reverse();
+    order_rev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::graph::generators::random_bipartite;
+
+    fn path_graph() -> Bipartite {
+        // nets connect consecutive vertices: a path 0-1-2-3-4 at distance 2
+        let m = Csr::from_edges(4, 5, &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 2), (2, 3), (3, 3), (3, 4)]);
+        Bipartite::from_net_incidence(m)
+    }
+
+    #[test]
+    fn natural_is_identity() {
+        let g = path_graph();
+        assert_eq!(Ordering::Natural.compute(&g), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn random_is_permutation_and_seeded() {
+        let g = random_bipartite(50, 80, 400, 1);
+        let a = Ordering::Random(9).compute(&g);
+        let b = Ordering::Random(9).compute(&g);
+        assert_eq!(a, b);
+        let mut s = a.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..80u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn largest_first_sorted_by_bound() {
+        let g = path_graph();
+        let o = Ordering::LargestFirst.compute(&g);
+        let bounds: Vec<usize> = o.iter().map(|&u| g.two_hop_bound(u as usize)).collect();
+        for w in bounds.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn smallest_last_is_permutation() {
+        let g = random_bipartite(100, 150, 900, 2);
+        let o = smallest_last(&g);
+        let mut s = o.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..150u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn smallest_last_on_path_ends_with_low_degree() {
+        let g = path_graph();
+        let o = smallest_last(&g);
+        // On a path, endpoints have the smallest two-hop degree; smallest-
+        // last removes a minimum first, so an endpoint appears *last*.
+        let last = *o.last().unwrap() as usize;
+        assert!(
+            g.two_hop_bound(last) <= g.two_hop_bound(o[0] as usize),
+            "order {o:?}"
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Ordering::parse("natural"), Some(Ordering::Natural));
+        assert_eq!(Ordering::parse("sl"), Some(Ordering::SmallestLast));
+        assert_eq!(Ordering::parse("junk"), None);
+    }
+}

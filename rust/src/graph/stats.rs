@@ -1,0 +1,66 @@
+//! Degree statistics — regenerates the "Properties" block of Table II.
+
+use super::bipartite::Bipartite;
+use crate::util::stats::{mean, stddev};
+
+/// Shape statistics of a BGPC instance (Table II columns 2–6).
+#[derive(Clone, Debug)]
+pub struct InstanceStats {
+    pub n_nets: usize,
+    pub n_vertices: usize,
+    pub nnz: usize,
+    pub max_vertex_deg: usize,
+    pub vertex_deg_stddev: f64,
+    pub max_net_deg: usize,
+    pub avg_net_deg: f64,
+    /// `Σ_v |vtxs(v)|²` — drives vertex-based first-iteration cost.
+    pub net_sq_sum: u64,
+}
+
+impl InstanceStats {
+    pub fn compute(g: &Bipartite) -> InstanceStats {
+        let vdegs: Vec<f64> = (0..g.n_vertices())
+            .map(|u| g.nets(u).len() as f64)
+            .collect();
+        let ndegs: Vec<f64> = (0..g.n_nets()).map(|v| g.vtxs(v).len() as f64).collect();
+        InstanceStats {
+            n_nets: g.n_nets(),
+            n_vertices: g.n_vertices(),
+            nnz: g.nnz(),
+            max_vertex_deg: g.vtx_nets.max_deg(),
+            vertex_deg_stddev: stddev(&vdegs),
+            max_net_deg: g.net_vtxs.max_deg(),
+            avg_net_deg: mean(&ndegs),
+            net_sq_sum: g.net_sq_sum(),
+        }
+    }
+
+    /// One Table-II-style row: rows, cols, nnz, max col deg, col deg stddev.
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "{name:<16} {:>9} {:>9} {:>10} {:>7} {:>10.2}",
+            self.n_nets, self.n_vertices, self.nnz, self.max_vertex_deg, self.vertex_deg_stddev
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+
+    #[test]
+    fn stats_match_hand_counts() {
+        // nets: {0,1}, {1,2,3}
+        let m = Csr::from_edges(2, 4, &[(0, 0), (0, 1), (1, 1), (1, 2), (1, 3)]);
+        let g = Bipartite::from_net_incidence(m);
+        let s = InstanceStats::compute(&g);
+        assert_eq!(s.n_nets, 2);
+        assert_eq!(s.n_vertices, 4);
+        assert_eq!(s.nnz, 5);
+        assert_eq!(s.max_vertex_deg, 2); // vertex 1 in both nets
+        assert_eq!(s.max_net_deg, 3);
+        assert_eq!(s.net_sq_sum, 4 + 9);
+        assert!((s.avg_net_deg - 2.5).abs() < 1e-12);
+    }
+}

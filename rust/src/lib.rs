@@ -1,0 +1,42 @@
+//! # bgpc — optimistic parallel bipartite-graph partial coloring
+//!
+//! A reproduction of Taş, Kaya & Saule, *"Greed is Good: Optimistic
+//! Algorithms for Bipartite-Graph Partial Coloring on Multicore
+//! Architectures"* (2017), built as a three-layer Rust + JAX + Pallas
+//! system (see `DESIGN.md`).
+//!
+//! The crate provides:
+//!
+//! * [`graph`] — CSR bipartite/unipartite graphs, Matrix-Market I/O,
+//!   calibrated synthetic generators for the paper's eight test matrices,
+//!   and vertex orderings (natural / random / largest-first /
+//!   smallest-last).
+//! * [`par`] — an OpenMP-equivalent chunked dynamic-scheduling
+//!   parallel-for over `std::thread` (the paper's `schedule(dynamic, 64)`
+//!   is a first-class knob).
+//! * [`sim`] — a deterministic discrete-event multicore simulator used to
+//!   reproduce the paper's 16-thread experiments on arbitrary hosts.
+//! * [`coloring`] — the paper's contribution: vertex- and net-based BGPC
+//!   (Algorithms 4–8), D2GC (Algorithms 9–10), the hybrid schedules
+//!   (`V-V` … `N1-N2`), the balancing heuristics B1/B2 (Algorithms
+//!   11–12), plus D1GC, verification and color statistics.
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled
+//!   JAX/Pallas net-step artifacts (`artifacts/*.hlo.txt`) and runs the
+//!   batched coloring step from Rust; Python is never on this path.
+//! * [`coordinator`] — a coloring job service: submit graphs + configs,
+//!   route them to engines (sequential / threads / simulator / PJRT),
+//!   collect metrics.
+//! * [`testing`] — in-tree property-testing helpers (no external crates
+//!   are available offline).
+
+pub mod coloring;
+pub mod coordinator;
+pub mod graph;
+pub mod par;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+pub use coloring::{ColoringResult, Problem, Schedule};
+pub use graph::{Bipartite, Csr};

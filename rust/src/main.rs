@@ -1,0 +1,277 @@
+//! `bgpc` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; no arg crates resolve offline):
+//!
+//! ```text
+//! bgpc info                                   # presets + artifact status
+//! bgpc gen --preset coPapersDBLP --scale 0.1 --out g.mtx
+//! bgpc color --preset bone010 [--mtx file] [--alg N1-N2] [--threads 16]
+//!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
+//! bgpc d2color --preset af_shell [--alg V-N2] [--threads 16]
+//! bgpc serve --jobs 32 --workers 2            # coordinator demo loop
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use bgpc::coloring::{self, schedule, Balance, Config, ExecMode};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
+use bgpc::graph::{generators::Preset, mtx, Bipartite, InstanceStats, Ordering, PRESETS};
+use bgpc::runtime::Runtime;
+use bgpc::sim::CostModel;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn load_instance(flags: &HashMap<String, String>) -> Result<(String, Bipartite), String> {
+    if let Some(path) = flags.get("mtx") {
+        let m = mtx::read_mtx(path).map_err(|e| format!("{e:#}"))?;
+        return Ok((path.clone(), Bipartite::from_net_incidence(m)));
+    }
+    let name = flags.get("preset").cloned().unwrap_or_else(|| "coPapersDBLP".into());
+    let preset = Preset::by_name(&name).ok_or_else(|| {
+        format!("unknown preset {name}; known: {}", PRESETS.map(|p| p.name).join(", "))
+    })?;
+    let scale: f64 = flags.get("scale").map(|s| s.parse().unwrap_or(0.1)).unwrap_or(0.1);
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    Ok((name, preset.bipartite(scale, seed)))
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
+    let alg = flags.get("alg").cloned().unwrap_or_else(|| "N1-N2".into());
+    let spec = schedule::AlgSpec::by_name(&alg).ok_or(format!("unknown algorithm {alg}"))?;
+    let threads: usize =
+        flags.get("threads").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
+    let mode = match flags.get("engine").map(|s| s.as_str()).unwrap_or("sim") {
+        "sim" => ExecMode::Sim(CostModel::default()),
+        "threads" => ExecMode::Threads,
+        other => return Err(format!("unknown engine {other} (sim|threads|pjrt)")),
+    };
+    let balance = flags
+        .get("balance")
+        .map(|s| Balance::parse(s).ok_or(format!("unknown balance {s}")))
+        .transpose()?
+        .unwrap_or(Balance::None);
+    let ordering = flags
+        .get("order")
+        .map(|s| Ordering::parse(s).ok_or(format!("unknown ordering {s}")))
+        .transpose()?
+        .unwrap_or(Ordering::Natural);
+    Ok(Config { spec, balance, threads, mode, ordering })
+}
+
+fn cmd_info() -> ExitCode {
+    println!("bgpc — optimistic bipartite-graph partial coloring (Taş/Kaya/Saule 2017)\n");
+    println!("presets (scaled Table II test-bed):");
+    println!("{:<16} {:>9} {:>9} {:>10} {:>7} {:>10}", "name", "nets", "vertices", "nnz", "maxvdeg", "vdeg-std");
+    for p in PRESETS.iter() {
+        let g = p.bipartite(0.05, 1);
+        let s = InstanceStats::compute(&g);
+        println!("{}", s.table_row(p.name));
+    }
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("\nPJRT artifacts: {} buckets on {}", rt.buckets().len(), rt.platform);
+            for b in rt.buckets() {
+                println!("  net_step B={} K={}", b.b, b.k);
+            }
+        }
+        Err(e) => println!("\nPJRT artifacts: unavailable ({e})"),
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_color(flags: &HashMap<String, String>, d2: bool) -> ExitCode {
+    let cfg = match build_config(flags) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (name, g) = match load_instance(flags) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    if flags.get("engine").map(|s| s.as_str()) == Some("pjrt") {
+        return cmd_color_pjrt(&name, &g);
+    }
+
+    let r = if d2 {
+        let m = &g.net_vtxs;
+        if !m.is_structurally_symmetric() {
+            eprintln!("error: {name} is not structurally symmetric; D2GC needs a symmetric square graph");
+            return ExitCode::FAILURE;
+        }
+        coloring::color_d2gc(m, &cfg)
+    } else {
+        coloring::color_bgpc(&g, &cfg)
+    };
+    let valid = if d2 {
+        coloring::verify::d2gc_valid(&g.net_vtxs, &r.colors).is_ok()
+    } else {
+        coloring::verify::bgpc_valid(&g, &r.colors).is_ok()
+    };
+    let st = r.stats();
+    println!(
+        "{} {} alg={} t={} iters={} colors={} secs={:.4} valid={} card-avg={:.2} card-std={:.2}",
+        if d2 { "d2gc" } else { "bgpc" },
+        name,
+        cfg.spec.name,
+        cfg.threads,
+        r.iterations,
+        r.n_colors,
+        r.seconds,
+        valid,
+        st.avg_cardinality,
+        st.stddev_cardinality,
+    );
+    for (i, it) in r.trace.iters.iter().enumerate() {
+        println!(
+            "  iter {:>2} [{}{}] queue={:>8} color={:.4}s conflict={:.4}s",
+            i + 1,
+            it.color_kind,
+            it.conflict_kind,
+            it.queue_len,
+            it.color_secs,
+            it.conflict_secs
+        );
+    }
+    if valid {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_color_pjrt(name: &str, g: &Bipartite) -> ExitCode {
+    let rt = match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match bgpc::runtime::NetStepOffload::new(&rt).color(g, 50) {
+        Ok((colors, stats)) => {
+            let valid = coloring::verify::bgpc_valid(g, &colors).is_ok();
+            println!(
+                "bgpc {} engine=pjrt iters={} kernel_calls={} offloaded={} native={} colors={} secs={:.4} kernel_secs={:.4} valid={}",
+                name,
+                stats.iterations,
+                stats.kernel_calls,
+                stats.offloaded_nets,
+                stats.native_nets,
+                coloring::stats::distinct_colors(&colors),
+                t0.elapsed().as_secs_f64(),
+                stats.kernel_secs,
+                valid
+            );
+            if valid {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_gen(flags: &HashMap<String, String>) -> ExitCode {
+    let (name, g) = match load_instance(flags) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let out = flags.get("out").cloned().unwrap_or_else(|| format!("{name}.mtx"));
+    if let Err(e) = mtx::write_mtx(&g.net_vtxs, &out) {
+        eprintln!("error: {e:#}");
+        return ExitCode::FAILURE;
+    }
+    let s = InstanceStats::compute(&g);
+    println!("wrote {out}: {} nets x {} vertices, {} nnz", s.n_nets, s.n_vertices, s.nnz);
+    ExitCode::SUCCESS
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
+    let n_jobs: usize = flags.get("jobs").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
+    let workers: usize = flags.get("workers").map(|s| s.parse().unwrap_or(2)).unwrap_or(2);
+    let svc = Service::start(workers, Some(Runtime::default_dir()));
+    println!("coordinator up: {workers} native workers, pjrt={}", svc.has_pjrt());
+    let mut rxs = Vec::new();
+    for i in 0..n_jobs {
+        let p = PRESETS[i % PRESETS.len()];
+        let g = Arc::new(p.bipartite(0.02, i as u64));
+        let spec = schedule::ALL[i % schedule::ALL.len()];
+        rxs.push(svc.submit(Job {
+            name: format!("{}-{}", p.name, spec.name),
+            input: JobInput::Bgpc(g),
+            cfg: Config::sim(spec, 16),
+            engine: if i % 4 == 0 { EngineSel::Auto } else { EngineSel::Native },
+        }));
+    }
+    let mut failures = 0;
+    for rx in rxs {
+        let o = rx.recv().unwrap();
+        println!(
+            "  {:<28} engine={:<6} colors={:>6} iters={} secs={:.4} valid={}",
+            o.name, o.engine, o.n_colors, o.iterations, o.seconds, o.valid
+        );
+        if !o.valid {
+            failures += 1;
+        }
+    }
+    println!("metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+    if failures == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: bgpc <info|gen|color|d2color|serve> [flags]  (see --help in README)");
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "gen" => cmd_gen(&flags),
+        "color" => cmd_color(&flags, false),
+        "d2color" => cmd_color(&flags, true),
+        "serve" => cmd_serve(&flags),
+        other => {
+            eprintln!("unknown command {other}");
+            ExitCode::FAILURE
+        }
+    }
+}

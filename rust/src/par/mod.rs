@@ -1,0 +1,295 @@
+//! OpenMP-equivalent parallel runtime.
+//!
+//! The paper's kernels are `#pragma omp parallel for schedule(dynamic,
+//! chunk)` loops over a work array, with the chunk size itself a studied
+//! knob (`V-V` ⇒ chunk 1, `V-V-64*` ⇒ chunk 64). This module provides the
+//! same construct three ways behind one [`Driver`] trait:
+//!
+//! * [`ThreadsDriver`] — real `std::thread` workers with a shared atomic
+//!   cursor (lock-free dynamic scheduling). Used for concurrency
+//!   correctness on any host.
+//! * [`crate::sim::SimDriver`] — deterministic discrete-event virtual
+//!   threads with a calibrated cost model; reproduces the paper's
+//!   16-thread behaviour on this 1-core testbed (DESIGN.md §4).
+//! * `ThreadsDriver` with `t = 1` — the sequential baseline.
+//!
+//! A region body is `Fn(tid, &mut TS, item, now) -> Cost`: `TS` is the
+//! thread-private scratch (forbidden arrays, local queues — the paper's
+//! "allocated only once, never reset" state), `now` is the virtual clock
+//! (0 under real threads), and the returned [`Cost`] is the work the item
+//! actually performed (edges traversed, atomics issued) which only the
+//! simulator consumes.
+
+pub mod queue;
+
+use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+
+pub use queue::SharedQueue;
+
+/// Work performed by one item, reported by region bodies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cost {
+    /// Abstract work units (≈ adjacency entries touched).
+    pub units: u64,
+    /// Atomic RMW operations issued (shared-queue pushes etc.); the
+    /// simulator charges these with a contention factor.
+    pub atomics: u32,
+}
+
+impl Cost {
+    #[inline]
+    pub fn new(units: u64) -> Cost {
+        Cost { units, atomics: 0 }
+    }
+}
+
+/// Result of one parallel region.
+#[derive(Clone, Debug, Default)]
+pub struct RegionOut {
+    /// Measured wall-clock seconds (real executions).
+    pub real_secs: f64,
+    /// Simulated nanoseconds (None for real executions).
+    pub sim_ns: Option<f64>,
+    /// Per-thread busy work units (simulator only; used for imbalance
+    /// diagnostics and the balancing experiments).
+    pub busy_units: Vec<u64>,
+}
+
+impl RegionOut {
+    /// The time this region contributes to the engine's notion of
+    /// wall-clock: simulated if available, else measured.
+    pub fn seconds(&self) -> f64 {
+        match self.sim_ns {
+            Some(ns) => ns * 1e-9,
+            None => self.real_secs,
+        }
+    }
+}
+
+/// Color storage abstraction: real executions use atomics; the simulator
+/// uses a two-version (MVCC) store so optimistic races manifest
+/// deterministically (reads at an item's start time do not observe writes
+/// committed later — exactly the stale-read behaviour the paper's
+/// speculative coloring tolerates).
+pub trait ColorStore: Sync {
+    fn n(&self) -> usize;
+    /// Read as seen by an item that started at virtual time `now`.
+    fn read(&self, u: usize, now: u64) -> i32;
+    /// Write `val`, committing at virtual time `commit`.
+    fn write(&self, u: usize, val: i32, commit: u64);
+    /// Read the fully-committed value (between regions / at the end).
+    fn committed(&self, u: usize) -> i32;
+    /// Snapshot all committed values.
+    fn to_vec(&self) -> Vec<i32> {
+        (0..self.n()).map(|u| self.committed(u)).collect()
+    }
+    /// Reset every cell to `val` (between runs).
+    fn fill(&self, val: i32);
+}
+
+/// Atomic color array for real (threaded/sequential) executions.
+pub struct AtomicColors {
+    cells: Vec<std::sync::atomic::AtomicI32>,
+}
+
+impl AtomicColors {
+    pub fn new(n: usize) -> AtomicColors {
+        AtomicColors {
+            cells: (0..n).map(|_| std::sync::atomic::AtomicI32::new(-1)).collect(),
+        }
+    }
+}
+
+impl ColorStore for AtomicColors {
+    #[inline]
+    fn n(&self) -> usize {
+        self.cells.len()
+    }
+    #[inline]
+    fn read(&self, u: usize, _now: u64) -> i32 {
+        self.cells[u].load(AOrd::Relaxed)
+    }
+    #[inline]
+    fn write(&self, u: usize, val: i32, _commit: u64) {
+        self.cells[u].store(val, AOrd::Relaxed);
+    }
+    #[inline]
+    fn committed(&self, u: usize) -> i32 {
+        self.cells[u].load(AOrd::Relaxed)
+    }
+    fn fill(&self, val: i32) {
+        for c in &self.cells {
+            c.store(val, AOrd::Relaxed);
+        }
+    }
+}
+
+/// One parallel-for execution backend.
+pub trait Driver {
+    type Colors: ColorStore;
+
+    /// Number of (virtual) threads.
+    fn threads(&self) -> usize;
+
+    /// Current virtual time (0 for real executions); writes issued
+    /// outside a region should commit at this time.
+    fn now(&self) -> u64 {
+        0
+    }
+
+    /// Allocate the color store this driver pairs with.
+    fn new_colors(&self, n: usize) -> Self::Colors;
+
+    /// Run `body` over items `0..n_items`, one scratch `TS` per thread.
+    /// `chunk == 0` means OpenMP `schedule(static)` (contiguous blocks,
+    /// ColPack's plain `parallel for` — the paper's `V-V` baseline);
+    /// `chunk >= 1` means `schedule(dynamic, chunk)` via a shared cursor.
+    fn region<TS, F>(&mut self, states: &mut [TS], n_items: usize, chunk: usize, body: F) -> RegionOut
+    where
+        TS: Send,
+        F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync;
+}
+
+/// Real-thread driver: `std::thread::scope` workers + shared atomic
+/// cursor (the OpenMP `schedule(dynamic, chunk)` equivalent). With
+/// `t == 1` no thread is spawned — this doubles as the sequential driver.
+pub struct ThreadsDriver {
+    pub t: usize,
+}
+
+impl ThreadsDriver {
+    pub fn new(t: usize) -> ThreadsDriver {
+        assert!(t >= 1);
+        ThreadsDriver { t }
+    }
+}
+
+impl Driver for ThreadsDriver {
+    type Colors = AtomicColors;
+
+    fn threads(&self) -> usize {
+        self.t
+    }
+
+    fn new_colors(&self, n: usize) -> AtomicColors {
+        AtomicColors::new(n)
+    }
+
+    fn region<TS, F>(&mut self, states: &mut [TS], n_items: usize, chunk: usize, body: F) -> RegionOut
+    where
+        TS: Send,
+        F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
+    {
+        assert!(states.len() >= self.t, "one scratch state per thread required");
+        let t0 = std::time::Instant::now();
+        if self.t == 1 {
+            let ts = &mut states[0];
+            for item in 0..n_items {
+                body(0, ts, item, 0);
+            }
+        } else if chunk == 0 {
+            // schedule(static): contiguous blocks
+            let t = self.t;
+            let body = &body;
+            std::thread::scope(|s| {
+                for (tid, ts) in states.iter_mut().enumerate().take(t) {
+                    s.spawn(move || {
+                        let lo = n_items * tid / t;
+                        let hi = n_items * (tid + 1) / t;
+                        for item in lo..hi {
+                            body(tid, ts, item, 0);
+                        }
+                    });
+                }
+            });
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let body = &body;
+            let cursor = &cursor;
+            std::thread::scope(|s| {
+                for (tid, ts) in states.iter_mut().enumerate().take(self.t) {
+                    s.spawn(move || loop {
+                        let start = cursor.fetch_add(chunk, AOrd::Relaxed);
+                        if start >= n_items {
+                            break;
+                        }
+                        let end = (start + chunk).min(n_items);
+                        for item in start..end {
+                            body(tid, ts, item, 0);
+                        }
+                    });
+                }
+            });
+        }
+        RegionOut { real_secs: t0.elapsed().as_secs_f64(), sim_ns: None, busy_units: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn threads_driver_visits_every_item_once() {
+        for t in [1usize, 2, 4, 8] {
+            let mut d = ThreadsDriver::new(t);
+            let n = 10_000usize;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let mut states = vec![(); t];
+            d.region(&mut states, n, 64, |_tid, _ts, item, _now| {
+                hits[item].fetch_add(1, AOrd::Relaxed);
+                Cost::new(1)
+            });
+            assert!(hits.iter().all(|h| h.load(AOrd::Relaxed) == 1), "t={t}");
+        }
+    }
+
+    #[test]
+    fn thread_states_are_private() {
+        let t = 4;
+        let mut d = ThreadsDriver::new(t);
+        let mut states = vec![0u64; t];
+        d.region(&mut states, 1000, 8, |_tid, ts, _item, _now| {
+            *ts += 1;
+            Cost::new(1)
+        });
+        let sum: u64 = states.iter().sum();
+        assert_eq!(sum, 1000);
+    }
+
+    #[test]
+    fn chunk_one_and_huge_chunk_both_cover() {
+        let mut d = ThreadsDriver::new(3);
+        let n = 100usize;
+        let count = AtomicUsize::new(0);
+        let mut states = vec![(); 3];
+        d.region(&mut states, n, 1, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        d.region(&mut states, n, 10_000, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        assert_eq!(count.load(AOrd::Relaxed), 200);
+    }
+
+    #[test]
+    fn atomic_colors_roundtrip() {
+        let c = AtomicColors::new(4);
+        assert_eq!(c.read(2, 0), -1);
+        c.write(2, 7, 0);
+        assert_eq!(c.committed(2), 7);
+        c.fill(-1);
+        assert_eq!(c.to_vec(), vec![-1; 4]);
+    }
+
+    #[test]
+    fn zero_items_region_is_fine() {
+        let mut d = ThreadsDriver::new(2);
+        let mut states = vec![(); 2];
+        let out = d.region(&mut states, 0, 64, |_, _, _, _| Cost::new(1));
+        assert!(out.real_secs >= 0.0);
+    }
+}

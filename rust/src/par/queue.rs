@@ -1,0 +1,95 @@
+//! Lock-free shared work queue (ColPack's `V-V` next-iteration queue).
+//!
+//! The paper's baseline pushes each conflicting vertex to a *shared*
+//! queue with an atomic increment ("a conflicting vertex is immediately
+//! added to the shared work queue"); the `-D` variants replace this with
+//! lazy per-thread queues merged at the barrier. This is the shared one:
+//! a pre-allocated buffer plus an atomic tail — push is a single
+//! `fetch_add` and a plain store, which is safe because every slot is
+//! claimed by exactly one pusher and reads only happen after the region
+//! barrier.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+
+/// Bounded multi-producer queue; drained single-threaded after a barrier.
+pub struct SharedQueue {
+    buf: UnsafeCell<Vec<u32>>,
+    tail: AtomicUsize,
+}
+
+// Safety: slots are claimed uniquely via fetch_add; consumers only read
+// after all producers have passed the region barrier.
+unsafe impl Sync for SharedQueue {}
+
+impl SharedQueue {
+    /// Create with fixed capacity (the work-queue never exceeds |V_A|).
+    pub fn with_capacity(cap: usize) -> SharedQueue {
+        SharedQueue { buf: UnsafeCell::new(vec![0u32; cap]), tail: AtomicUsize::new(0) }
+    }
+
+    /// Push from any thread. Panics (debug) on overflow — capacity is an
+    /// invariant, not a soft limit.
+    #[inline]
+    pub fn push(&self, v: u32) {
+        let i = self.tail.fetch_add(1, AOrd::Relaxed);
+        let buf = unsafe { &mut *self.buf.get() };
+        debug_assert!(i < buf.len(), "SharedQueue overflow");
+        unsafe {
+            *buf.get_unchecked_mut(i) = v;
+        }
+    }
+
+    /// Number of pushed elements.
+    pub fn len(&self) -> usize {
+        self.tail.load(AOrd::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain into a Vec and reset (single-threaded, post-barrier).
+    pub fn drain(&self) -> Vec<u32> {
+        let n = self.tail.swap(0, AOrd::Relaxed);
+        let buf = unsafe { &*self.buf.get() };
+        buf[..n].to_vec()
+    }
+
+    /// Reset without reading.
+    pub fn clear(&self) {
+        self.tail.store(0, AOrd::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::{Cost, Driver, ThreadsDriver};
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        let q = SharedQueue::with_capacity(10_000);
+        let mut d = ThreadsDriver::new(4);
+        let mut states = vec![(); 4];
+        d.region(&mut states, 10_000, 16, |_, _, item, _| {
+            q.push(item as u32);
+            Cost::new(1)
+        });
+        let mut got = q.drain();
+        got.sort_unstable();
+        assert_eq!(got, (0..10_000u32).collect::<Vec<_>>());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_resets() {
+        let q = SharedQueue::with_capacity(4);
+        q.push(7);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.drain(), vec![7]);
+        assert_eq!(q.len(), 0);
+        q.push(9);
+        assert_eq!(q.drain(), vec![9]);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas net-step
+//! artifacts from Rust. Python runs only at `make artifacts` time; this
+//! module is the entire accelerator story on the request path.
+
+pub mod offload;
+pub mod pjrt;
+
+pub use offload::{step_rows_native, NetStepOffload};
+pub use pjrt::{Bucket, Runtime};

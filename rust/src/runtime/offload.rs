@@ -1,0 +1,340 @@
+//! Batched net-step offload: the paper's §VIII future-work manycore port,
+//! run through the AOT-compiled JAX/Pallas kernel (DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! The offload path degree-buckets the nets, gathers each net's adjacency
+//! colors into a padded `[B, K]` tile, executes the fused Alg. 7 + Alg. 8
+//! step on the PJRT executable, and scatters the recolored slots back.
+//! Nets larger than the biggest bucket stay on the native Rust path.
+//! [`step_rows_native`] is the bit-exact Rust mirror of the kernel; the
+//! integration tests pin `PJRT == native` on every bucket shape.
+
+use anyhow::Result;
+
+use super::pjrt::Runtime;
+use crate::coloring::forbidden::StampSet;
+use crate::graph::Bipartite;
+
+/// Bit-exact Rust mirror of the L1 kernel (Alg. 8 over gathered rows):
+/// keep the first occurrence of each color; recolor every other valid
+/// slot by reverse first-fit over `[0, deg) \ kept`.
+pub fn step_rows_native(colors: &mut [i32], degs: &[i32], k: usize) {
+    assert_eq!(colors.len(), degs.len() * k);
+    let mut forbidden = StampSet::new(k + 1);
+    let mut wlocal: Vec<usize> = Vec::with_capacity(k);
+    for (b, &deg) in degs.iter().enumerate() {
+        let row = &mut colors[b * k..(b + 1) * k];
+        let deg = deg as usize;
+        forbidden.next_gen();
+        wlocal.clear();
+        for (j, &c) in row.iter().enumerate().take(deg) {
+            if c >= 0 && !forbidden.contains(c) {
+                forbidden.insert(c);
+            } else {
+                wlocal.push(j);
+            }
+        }
+        let mut col = deg as i32 - 1;
+        for &j in &wlocal {
+            while col >= 0 && forbidden.contains(col) {
+                col -= 1;
+            }
+            debug_assert!(col >= 0, "reverse first-fit exhausted");
+            row[j] = col;
+            col -= 1;
+        }
+    }
+}
+
+/// Native keep-mask (Alg. 7 over gathered rows) — mirror of the kernel's
+/// second output.
+pub fn keep_rows_native(colors: &[i32], degs: &[i32], k: usize) -> Vec<i32> {
+    let mut keep = vec![0i32; colors.len()];
+    let mut seen = StampSet::new(k + 1);
+    for (b, &deg) in degs.iter().enumerate() {
+        seen.next_gen();
+        for j in 0..deg as usize {
+            let c = colors[b * k + j];
+            if c >= 0 && !seen.contains(c) {
+                seen.insert(c);
+                keep[b * k + j] = 1;
+            }
+        }
+    }
+    keep
+}
+
+/// Statistics from one offloaded coloring run.
+#[derive(Clone, Debug, Default)]
+pub struct OffloadStats {
+    pub iterations: usize,
+    pub kernel_calls: usize,
+    pub offloaded_nets: usize,
+    pub native_nets: usize,
+    /// Wall-clock seconds inside PJRT execute calls.
+    pub kernel_secs: f64,
+}
+
+/// Driver for the offloaded BGPC coloring.
+pub struct NetStepOffload<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl<'a> NetStepOffload<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        NetStepOffload { rt }
+    }
+
+    /// One pass over `nets`: buckets are gathered, stepped on the
+    /// accelerator, and scattered back (last-writer-wins across buckets —
+    /// the optimism; later passes repair). Oversized nets run natively.
+    /// Returns the number of slots recolored this pass.
+    pub fn pass(
+        &self,
+        g: &Bipartite,
+        nets: &[usize],
+        colors: &mut [i32],
+        stats: &mut OffloadStats,
+    ) -> Result<usize> {
+        let max_k = self.rt.max_k();
+        let mut recolored = 0usize;
+
+        // group nets by bucket
+        for bucket in self.rt.buckets() {
+            let (bcap, k) = (bucket.b, bucket.k);
+            let min_k = self.rt.buckets().iter().map(|b| b.k).filter(|&kk| kk < k).max();
+            let mut batch_nets: Vec<usize> = Vec::with_capacity(bcap);
+            let mut tile = vec![-1i32; bcap * k];
+            let mut degs = vec![0i32; bcap];
+
+            let flush = |batch_nets: &mut Vec<usize>,
+                             tile: &mut Vec<i32>,
+                             degs: &mut Vec<i32>,
+                             colors: &mut [i32],
+                             stats: &mut OffloadStats|
+             -> Result<usize> {
+                if batch_nets.is_empty() {
+                    return Ok(0);
+                }
+                let t0 = std::time::Instant::now();
+                let (new_colors, keep) = bucket.step(tile, degs)?;
+                stats.kernel_secs += t0.elapsed().as_secs_f64();
+                stats.kernel_calls += 1;
+                let mut changed = 0usize;
+                for (bi, &v) in batch_nets.iter().enumerate() {
+                    for (j, &u) in g.vtxs(v).iter().enumerate() {
+                        let idx = bi * k + j;
+                        if keep[idx] == 0 {
+                            changed += 1;
+                        }
+                        colors[u as usize] = new_colors[idx];
+                    }
+                }
+                stats.offloaded_nets += batch_nets.len();
+                batch_nets.clear();
+                tile.fill(-1);
+                degs.fill(0);
+                Ok(changed)
+            };
+
+            for &v in nets {
+                let deg = g.vtxs(v).len();
+                // this bucket handles degrees in (previous K, K]
+                if deg > k || deg == 0 || min_k.map_or(false, |m| deg <= m) {
+                    continue;
+                }
+                let bi = batch_nets.len();
+                degs[bi] = deg as i32;
+                for (j, &u) in g.vtxs(v).iter().enumerate() {
+                    tile[bi * k + j] = colors[u as usize];
+                }
+                batch_nets.push(v);
+                if batch_nets.len() == bcap {
+                    recolored +=
+                        flush(&mut batch_nets, &mut tile, &mut degs, colors, stats)?;
+                }
+            }
+            recolored += flush(&mut batch_nets, &mut tile, &mut degs, colors, stats)?;
+        }
+
+        // oversized nets: native mirror, row at a time
+        for &v in nets {
+            let deg = g.vtxs(v).len();
+            if deg <= max_k {
+                continue;
+            }
+            stats.native_nets += 1;
+            let mut row: Vec<i32> =
+                g.vtxs(v).iter().map(|&u| colors[u as usize]).collect();
+            let degs = [deg as i32];
+            let before = row.clone();
+            step_rows_native(&mut row, &degs, deg);
+            for (j, &u) in g.vtxs(v).iter().enumerate() {
+                if row[j] != before[j] {
+                    recolored += 1;
+                }
+                colors[u as usize] = row[j];
+            }
+        }
+        Ok(recolored)
+    }
+
+    /// Iterate passes until the coloring is conflict-free. After the
+    /// first full pass, only *dirty* nets — those still containing an
+    /// uncolored vertex or a duplicate — are re-gathered (the offload
+    /// analogue of the engine's shrinking work queue; re-stepping clean
+    /// nets would undo settled colors forever). Returns the coloring and
+    /// stats.
+    pub fn color(&self, g: &Bipartite, max_iters: usize) -> Result<(Vec<i32>, OffloadStats)> {
+        let mut colors = vec![-1i32; g.n_vertices()];
+        let mut stats = OffloadStats::default();
+        let mut nets: Vec<usize> = (0..g.n_nets()).collect();
+        let mut prev_dirty = usize::MAX;
+        for _ in 0..max_iters {
+            stats.iterations += 1;
+            self.pass(g, &nets, &mut colors, &mut stats)?;
+            nets = dirty_nets(g, &colors);
+            if nets.is_empty() && colors_complete(g, &colors) {
+                debug_assert!(crate::coloring::verify::bgpc_valid(g, &colors).is_ok());
+                return Ok((colors, stats));
+            }
+            if nets.is_empty() || nets.len() >= prev_dirty {
+                // plateau: nets sharing vertices keep re-breaking each
+                // other deterministically — switch to the exact repair,
+                // exactly like the engine's N1 -> vertex-based handoff.
+                break;
+            }
+            prev_dirty = nets.len();
+        }
+        // final exact repair: sequential greedy over conflicting vertices
+        repair_sequential(g, &mut colors);
+        Ok((colors, stats))
+    }
+}
+
+/// Nets that still contain an uncolored vertex or an intra-net duplicate.
+pub fn dirty_nets(g: &Bipartite, colors: &[i32]) -> Vec<usize> {
+    let mut seen = StampSet::new(1024);
+    let mut dirty = Vec::new();
+    'nets: for v in 0..g.n_nets() {
+        seen.next_gen();
+        for &u in g.vtxs(v) {
+            let c = colors[u as usize];
+            if c < 0 || seen.contains(c) {
+                dirty.push(v);
+                continue 'nets;
+            }
+            seen.insert(c);
+        }
+    }
+    dirty
+}
+
+/// True when every vertex is colored (isolated vertices included).
+fn colors_complete(g: &Bipartite, colors: &[i32]) -> bool {
+    let _ = g;
+    colors.iter().all(|&c| c >= 0)
+}
+
+/// Uncolor every later-duplicate per net, then greedily finish — an exact
+/// sequential repair used when the optimistic passes plateau.
+pub fn repair_sequential(g: &Bipartite, colors: &mut [i32]) {
+    let mut seen = StampSet::new(1024);
+    for v in 0..g.n_nets() {
+        seen.next_gen();
+        for &u in g.vtxs(v) {
+            let u = u as usize;
+            let c = colors[u];
+            if c >= 0 {
+                if seen.contains(c) {
+                    colors[u] = -1;
+                } else {
+                    seen.insert(c);
+                }
+            }
+        }
+    }
+    let mut f = StampSet::new(1024);
+    for u in 0..g.n_vertices() {
+        if colors[u] >= 0 {
+            continue;
+        }
+        f.next_gen();
+        for &v in g.nets(u) {
+            for &x in g.vtxs(v as usize) {
+                let x = x as usize;
+                if x != u && colors[x] >= 0 {
+                    f.insert(colors[x]);
+                }
+            }
+        }
+        let (c, _) = f.first_fit();
+        colors[u] = c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn native_step_matches_python_oracle_semantics() {
+        // mirrors python/tests: keep-first + reverse first-fit
+        let k = 6;
+        let mut colors = vec![
+            2, 2, -1, 0, 1, -1, // deg 6: slots 1,2,5 recolored
+            -1, -1, -1, 0, 0, 0, // deg 3: all recolored (pad ignored)
+        ];
+        let degs = vec![6, 3];
+        step_rows_native(&mut colors, &degs, k);
+        // row 0: kept {2@0, 0@3, 1@4}; avail {5,4,3}; recolor slots 1,2,5
+        assert_eq!(&colors[..6], &[2, 5, 4, 0, 1, 3]);
+        // row 1: all uncolored -> 2,1,0; pads untouched
+        assert_eq!(&colors[6..], &[2, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn native_step_rows_produce_valid_rows() {
+        let mut rng = Rng::new(42);
+        for _case in 0..200 {
+            let k = [4usize, 8, 16][rng.range(0, 3)];
+            let b = rng.range(1, 6);
+            let mut colors: Vec<i32> = (0..b * k)
+                .map(|_| rng.range(0, k + 3) as i32 - 1)
+                .collect();
+            let degs: Vec<i32> = (0..b).map(|_| rng.range(0, k + 1) as i32).collect();
+            let before = colors.clone();
+            step_rows_native(&mut colors, &degs, k);
+            for bi in 0..b {
+                let deg = degs[bi] as usize;
+                let row = &colors[bi * k..bi * k + k];
+                // valid slots distinct & colored
+                let mut seen = std::collections::HashSet::new();
+                for j in 0..deg {
+                    assert!(row[j] >= 0, "uncolored slot");
+                    assert!(seen.insert(row[j]), "dup in row {row:?} deg {deg}");
+                }
+                // pads untouched
+                for j in deg..k {
+                    assert_eq!(row[j], before[bi * k + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keep_mask_marks_first_occurrences() {
+        let colors = vec![3, 3, -1, 1];
+        let keep = keep_rows_native(&colors, &[4], 4);
+        assert_eq!(keep, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn repair_sequential_fixes_anything() {
+        let g = crate::graph::generators::random_bipartite(50, 80, 600, 9);
+        let mut colors = vec![0i32; 80]; // everything clashes
+        repair_sequential(&g, &mut colors);
+        assert!(crate::coloring::verify::bgpc_valid(&g, &colors).is_ok());
+    }
+}

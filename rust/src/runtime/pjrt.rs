@@ -1,0 +1,123 @@
+//! PJRT client + artifact registry.
+//!
+//! Artifacts are HLO *text* (`artifacts/net_step_b{B}_k{K}.hlo.txt`),
+//! produced once by `python/compile/aot.py`. Text is the interchange
+//! format because jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
+//! ids that the crate's xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled `(B, K)` bucket of the net-step executable.
+pub struct Bucket {
+    pub b: usize,
+    pub k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Bucket {
+    /// Execute the fused conflict-removal + recolor step on a padded
+    /// batch. `colors` is row-major `[B, K]`, `degs` is `[B]` (0 pads).
+    /// Returns `(new_colors, keep)` both `[B, K]` row-major.
+    pub fn step(&self, colors: &[i32], degs: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        if colors.len() != self.b * self.k || degs.len() != self.b {
+            bail!(
+                "bucket b={} k={}: got colors {} degs {}",
+                self.b,
+                self.k,
+                colors.len(),
+                degs.len()
+            );
+        }
+        let colors_lit =
+            xla::Literal::vec1(colors).reshape(&[self.b as i64, self.k as i64])?;
+        let degs_lit = xla::Literal::vec1(degs);
+        let result = self.exe.execute::<xla::Literal>(&[colors_lit, degs_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (new_colors, keep)
+        let (new_colors, keep) = result.to_tuple2()?;
+        Ok((new_colors.to_vec::<i32>()?, keep.to_vec::<i32>()?))
+    }
+}
+
+/// A PJRT CPU client plus every bucket found in the artifacts directory.
+pub struct Runtime {
+    pub platform: String,
+    buckets: Vec<Bucket>,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$BGPC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BGPC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load every `net_step_b{B}_k{K}.hlo.txt` under `dir` and compile it
+    /// on a fresh PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut buckets = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("read artifacts dir {dir:?} (run `make artifacts`)"))?;
+        for e in entries {
+            let path = e?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some((b, k)) = parse_bucket_name(name) else {
+                continue;
+            };
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            buckets.push(Bucket { b, k, exe });
+        }
+        if buckets.is_empty() {
+            bail!("no net_step_b*_k*.hlo.txt artifacts in {dir:?} (run `make artifacts`)");
+        }
+        buckets.sort_by_key(|b| b.k);
+        Ok(Runtime { platform: client.platform_name(), buckets })
+    }
+
+    /// All buckets, sorted by K ascending.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket whose K fits degree `deg`, if any.
+    pub fn bucket_for(&self, deg: usize) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.k >= deg)
+    }
+
+    /// Largest available K (nets above this stay on the native path).
+    pub fn max_k(&self) -> usize {
+        self.buckets.last().map(|b| b.k).unwrap_or(0)
+    }
+}
+
+/// Parse `net_step_b{B}_k{K}.hlo.txt` → `(B, K)`.
+pub fn parse_bucket_name(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("net_step_b")?;
+    let rest = rest.strip_suffix(".hlo.txt")?;
+    let (b, k) = rest.split_once("_k")?;
+    Some((b.parse().ok()?, k.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_name_parsing() {
+        assert_eq!(parse_bucket_name("net_step_b512_k32.hlo.txt"), Some((512, 32)));
+        assert_eq!(parse_bucket_name("net_step_b1_k1.hlo.txt"), Some((1, 1)));
+        assert_eq!(parse_bucket_name("manifest.json"), None);
+        assert_eq!(parse_bucket_name("net_step_bx_k1.hlo.txt"), None);
+    }
+}

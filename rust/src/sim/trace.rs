@@ -1,0 +1,88 @@
+//! Per-iteration phase traces — the raw material for Figure 1 and the
+//! "78% of runtime in the first iteration" analysis in §III.
+
+/// One engine iteration: coloring phase + conflict-removal phase.
+#[derive(Clone, Debug, Default)]
+pub struct IterTrace {
+    /// Work-queue size entering the iteration.
+    pub queue_len: usize,
+    /// Coloring-phase time (seconds, simulated or real).
+    pub color_secs: f64,
+    /// Conflict-removal-phase time (seconds).
+    pub conflict_secs: f64,
+    /// Which phase implementations ran ("V"/"N" per the paper's naming).
+    pub color_kind: char,
+    pub conflict_kind: char,
+    /// Per-thread busy units in the coloring phase (simulator only).
+    pub color_busy: Vec<u64>,
+}
+
+impl IterTrace {
+    pub fn total_secs(&self) -> f64 {
+        self.color_secs + self.conflict_secs
+    }
+}
+
+/// Full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub iters: Vec<IterTrace>,
+}
+
+impl RunTrace {
+    pub fn total_secs(&self) -> f64 {
+        self.iters.iter().map(|i| i.total_secs()).sum()
+    }
+
+    /// Fraction of total time spent in the first `k` iterations
+    /// (the paper reports 78% for k=1, 89% for k=2).
+    pub fn first_k_fraction(&self, k: usize) -> f64 {
+        let total = self.total_secs();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.iters.iter().take(k).map(|i| i.total_secs()).sum::<f64>() / total
+    }
+
+    /// Load imbalance of the first coloring phase: max/mean busy units.
+    pub fn first_color_imbalance(&self) -> f64 {
+        let Some(it) = self.iters.first() else { return 1.0 };
+        if it.color_busy.is_empty() {
+            return 1.0;
+        }
+        let max = *it.color_busy.iter().max().unwrap() as f64;
+        let mean =
+            it.color_busy.iter().sum::<u64>() as f64 / it.color_busy.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(c: f64, r: f64) -> IterTrace {
+        IterTrace { color_secs: c, conflict_secs: r, ..Default::default() }
+    }
+
+    #[test]
+    fn fractions() {
+        let t = RunTrace { iters: vec![tr(7.0, 1.0), tr(1.0, 0.5), tr(0.4, 0.1)] };
+        assert!((t.total_secs() - 10.0).abs() < 1e-12);
+        assert!((t.first_k_fraction(1) - 0.8).abs() < 1e-12);
+        assert!((t.first_k_fraction(2) - 0.95).abs() < 1e-12);
+        assert_eq!(t.first_k_fraction(99), 1.0);
+    }
+
+    #[test]
+    fn imbalance() {
+        let mut it = tr(1.0, 0.0);
+        it.color_busy = vec![100, 100, 100, 500];
+        let t = RunTrace { iters: vec![it] };
+        assert!((t.first_color_imbalance() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! In-tree property-testing helpers.
+//!
+//! No external crates resolve offline (no `proptest`), so this module
+//! provides the pieces the invariant tests need: seeded random instance
+//! generators with size sweeps and a `forall`-style runner that reports
+//! the failing case's parameters (seed + shape) so any failure is
+//! reproducible with a one-liner.
+
+use crate::graph::generators::{random_bipartite, random_symmetric};
+use crate::graph::{Bipartite, Csr};
+use crate::util::prng::Rng;
+
+/// Shape of one random BGPC case.
+#[derive(Clone, Copy, Debug)]
+pub struct BgpcCase {
+    pub n_nets: usize,
+    pub n_vtxs: usize,
+    pub nnz: usize,
+    pub seed: u64,
+}
+
+/// Run `f` over `cases` random bipartite instances with varying shapes
+/// (including degenerate ones: empty nets, dense nets, singleton sides).
+/// Panics with the case description on failure.
+pub fn forall_bipartite(cases: usize, master_seed: u64, f: impl Fn(&Bipartite, BgpcCase)) {
+    let mut rng = Rng::new(master_seed);
+    for i in 0..cases {
+        let case = match i % 5 {
+            // tiny / degenerate shapes first — they find the edge bugs
+            0 => BgpcCase { n_nets: 1, n_vtxs: rng.range(1, 8), nnz: rng.range(0, 8), seed: rng.next_u64() },
+            1 => BgpcCase { n_nets: rng.range(1, 8), n_vtxs: 1, nnz: rng.range(0, 8), seed: rng.next_u64() },
+            2 => BgpcCase {
+                n_nets: rng.range(2, 30),
+                n_vtxs: rng.range(2, 30),
+                nnz: rng.range(0, 60),
+                seed: rng.next_u64(),
+            },
+            3 => BgpcCase {
+                n_nets: rng.range(10, 120),
+                n_vtxs: rng.range(10, 120),
+                nnz: rng.range(50, 2000),
+                seed: rng.next_u64(),
+            },
+            _ => BgpcCase {
+                n_nets: rng.range(50, 400),
+                n_vtxs: rng.range(50, 400),
+                nnz: rng.range(200, 6000),
+                seed: rng.next_u64(),
+            },
+        };
+        let g = random_bipartite(case.n_nets, case.n_vtxs, case.nnz, case.seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&g, case);
+        }));
+        if let Err(e) = result {
+            panic!("property failed on case #{i}: {case:?}\n{e:?}");
+        }
+    }
+}
+
+/// Same for square symmetric graphs (D2GC / D1GC invariants).
+pub fn forall_symmetric(cases: usize, master_seed: u64, f: impl Fn(&Csr, u64)) {
+    let mut rng = Rng::new(master_seed ^ 0xD2);
+    for i in 0..cases {
+        let n = match i % 3 {
+            0 => rng.range(1, 10),
+            1 => rng.range(10, 80),
+            _ => rng.range(80, 400),
+        };
+        let m = rng.range(0, (n * 8).max(1));
+        let seed = rng.next_u64();
+        let g = random_symmetric(n, m, seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&g, seed);
+        }));
+        if let Err(e) = result {
+            panic!("property failed on case #{i}: n={n} m={m} seed={seed}\n{e:?}");
+        }
+    }
+}
+
+/// A random partial coloring (mix of -1 and small colors) for fuzzing
+/// repair/verify paths.
+pub fn random_partial_colors(n: usize, max_color: i32, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.3) {
+                -1
+            } else {
+                rng.range(0, max_color.max(1) as usize) as i32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall_bipartite(3, 1, |_g, case| {
+                assert!(case.n_nets == usize::MAX, "always fails");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("property failed on case #0"), "{msg}");
+    }
+
+    #[test]
+    fn generators_cover_degenerate_shapes() {
+        use std::cell::Cell;
+        let saw_single_net = Cell::new(false);
+        let saw_single_vtx = Cell::new(false);
+        forall_bipartite(10, 2, |g, _case| {
+            if g.n_nets() == 1 {
+                saw_single_net.set(true);
+            }
+            if g.n_vertices() == 1 {
+                saw_single_vtx.set(true);
+            }
+            g.validate().unwrap();
+        });
+        assert!(saw_single_net.get() && saw_single_vtx.get());
+    }
+
+    #[test]
+    fn partial_colors_mix() {
+        let c = random_partial_colors(1000, 5, 3);
+        assert!(c.iter().any(|&x| x == -1));
+        assert!(c.iter().any(|&x| x >= 0));
+        assert!(c.iter().all(|&x| x >= -1 && x < 5));
+    }
+}

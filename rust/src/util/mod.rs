@@ -1,0 +1,54 @@
+//! Small in-tree utilities: PRNG, timing, formatting.
+//!
+//! The offline registry provides no `rand`; the paper's experiments only
+//! need reproducible streams, so we ship splitmix64 + xoshiro256**.
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Rng;
+pub use timer::Stopwatch;
+
+/// Format a float with engineering-style precision for table output.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{v:.dec$}")
+}
+
+/// Geometric mean of a slice (the paper reports geo-means across matrices).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+        let one = geomean(&[1.0; 8]);
+        assert!((one - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_sig_rounds() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.6, 3), "1235"); // mag >= digits: no decimals
+        assert_eq!(fmt_sig(1.2345, 3), "1.23");
+    }
+}

@@ -1,0 +1,68 @@
+//! Descriptive statistics used across experiments (cardinality stddev,
+//! degree distributions, speedup tables).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (the paper's color-cardinality metric).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Max of a slice of usize.
+pub fn max_usize(xs: &[usize]) -> usize {
+    xs.iter().copied().max().unwrap_or(0)
+}
+
+/// Histogram with log2-spaced buckets: returns (bucket_upper_bound, count).
+/// Used for Figure 3's cardinality distribution plots.
+pub fn log2_histogram(values: &[usize]) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for &v in values {
+        let b = if v == 0 { 0 } else { (usize::BITS - (v.leading_zeros())) as usize };
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(b, &c)| ((1usize << b).saturating_sub(1).max(if b == 0 { 0 } else { 1 << (b - 1) }), c))
+        .map(|(ub, c)| (ub, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_empty_nan() {
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn histogram_counts_sum() {
+        let vals = [0usize, 1, 1, 2, 3, 4, 9, 1000];
+        let h = log2_histogram(&vals);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, vals.len());
+    }
+}

@@ -1,0 +1,83 @@
+//! Wall-clock timing helpers for benches and the engine's phase traces.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named laps (used by the per-iteration
+/// phase traces that regenerate the paper's Figure 1).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record a lap since the previous lap (or start).
+    pub fn lap(&mut self, name: impl Into<String>) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.into(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `reps` times and return the minimum wall-clock seconds
+/// (min is the standard robust estimator for microbenchmarks).
+pub fn time_min<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let out = f();
+        std::hint::black_box(&out);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests across the full engine: every schedule × balance ×
+//! execution mode on realistic preset instances, the coordinator
+//! service, orderings, and the D2GC path.
+
+use std::sync::Arc;
+
+use bgpc::coloring::verify::{bgpc_valid, d2gc_valid};
+use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
+use bgpc::graph::generators::Preset;
+use bgpc::graph::Ordering;
+use bgpc::sim::CostModel;
+
+#[test]
+fn every_schedule_valid_on_every_small_preset() {
+    for p in bgpc::graph::PRESETS.iter() {
+        let g = p.bipartite(0.01, 42);
+        for spec in schedule::ALL {
+            let r = color_bgpc(&g, &Config::sim(spec, 16));
+            assert!(
+                bgpc_valid(&g, &r.colors).is_ok(),
+                "{} on {} invalid",
+                spec.name,
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_mode_matches_sim_mode_color_quality() {
+    let g = Preset::by_name("bone010").unwrap().bipartite(0.02, 7);
+    for spec in [schedule::V_V_64D, schedule::N1_N2] {
+        let sim = color_bgpc(&g, &Config::sim(spec, 8));
+        let thr = color_bgpc(&g, &Config::threads(spec, 4));
+        assert!(bgpc_valid(&g, &sim.colors).is_ok());
+        assert!(bgpc_valid(&g, &thr.colors).is_ok());
+        // different nondeterminism, same ballpark of colors
+        let (a, b) = (sim.n_colors as f64, thr.n_colors as f64);
+        assert!(a <= 1.5 * b + 8.0 && b <= 1.5 * a + 8.0, "{}: {a} vs {b}", spec.name);
+    }
+}
+
+#[test]
+fn orderings_compose_with_engine() {
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.01, 5);
+    for ord in [
+        Ordering::Natural,
+        Ordering::Random(7),
+        Ordering::LargestFirst,
+        Ordering::SmallestLast,
+    ] {
+        let cfg = Config::sim(schedule::V_N2, 8).with_ordering(ord);
+        let r = color_bgpc(&g, &cfg);
+        assert!(bgpc_valid(&g, &r.colors).is_ok(), "{ord:?}");
+    }
+}
+
+#[test]
+fn balance_reduces_cardinality_stddev_on_skewed_graph() {
+    // Table VI's headline: B2 < B1 < U in stddev; colors grow slightly.
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.03, 11);
+    let base = color_bgpc(&g, &Config::sim(schedule::V_N2, 16));
+    let b1 = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B1));
+    let b2 = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B2));
+    for (name, r) in [("U", &base), ("B1", &b1), ("B2", &b2)] {
+        assert!(bgpc_valid(&g, &r.colors).is_ok(), "{name}");
+    }
+    let (su, s1, s2) = (
+        base.stats().stddev_cardinality,
+        b1.stats().stddev_cardinality,
+        b2.stats().stddev_cardinality,
+    );
+    assert!(s1 < su, "B1 should narrow stddev: {s1} vs {su}");
+    assert!(s2 < su, "B2 should narrow stddev: {s2} vs {su}");
+    assert!(
+        b2.n_colors as f64 <= 1.6 * base.n_colors as f64,
+        "B2 color growth bounded: {} vs {}",
+        b2.n_colors,
+        base.n_colors
+    );
+}
+
+#[test]
+fn d2gc_all_schedules_on_symmetric_presets() {
+    for name in ["af_shell", "bone010", "channel", "coPapersDBLP", "nlpkkt120"] {
+        let m = Preset::by_name(name).unwrap().net_incidence(0.005, 3);
+        assert!(m.is_structurally_symmetric(), "{name}");
+        for spec in schedule::D2GC_SET {
+            let r = color_d2gc(&m, &Config::sim(spec, 16));
+            assert!(d2gc_valid(&m, &r.colors).is_ok(), "{} on {name}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn exec_mode_threads_stress_race_correctness() {
+    // Oversubscribed real threads on a shared-heavy graph: the optimistic
+    // loop must still converge to a valid coloring.
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.02, 13);
+    let cfg = Config {
+        spec: schedule::N1_N2,
+        balance: Balance::None,
+        threads: 8,
+        mode: ExecMode::Threads,
+        ordering: Ordering::Natural,
+    };
+    for _ in 0..3 {
+        let r = color_bgpc(&g, &cfg);
+        assert!(bgpc_valid(&g, &r.colors).is_ok());
+    }
+}
+
+#[test]
+fn service_mixed_workload() {
+    let svc = Service::start(2, None);
+    let mut rxs = Vec::new();
+    for (i, p) in bgpc::graph::PRESETS.iter().enumerate() {
+        let g = Arc::new(p.bipartite(0.005, i as u64));
+        rxs.push(svc.submit(Job {
+            name: p.name.to_string(),
+            input: JobInput::Bgpc(g.clone()),
+            cfg: Config::sim(schedule::ALL[i % 8], 8),
+            engine: EngineSel::Native,
+        }));
+        if p.symmetric {
+            let m = Arc::new(p.net_incidence(0.005, i as u64));
+            rxs.push(svc.submit(Job {
+                name: format!("{}-d2", p.name),
+                input: JobInput::D2gc(m),
+                cfg: Config::sim(schedule::V_N2, 8),
+                engine: EngineSel::Native,
+            }));
+        }
+    }
+    for rx in rxs {
+        let o = rx.recv().unwrap();
+        assert!(o.valid, "{} failed: {:?}", o.name, o.error);
+    }
+    assert_eq!(svc.metrics().failures(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn cost_model_sim_time_scales_down_with_threads() {
+    // headline sanity: N1-N2 at t=16 must be much faster (simulated) than
+    // t=1, and faster than V-V at t=16 on a skewed graph.
+    let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.3, 17);
+    let model = CostModel::default();
+    let time = |spec, t| {
+        let cfg = Config {
+            spec,
+            balance: Balance::None,
+            threads: t,
+            mode: ExecMode::Sim(model),
+            ordering: Ordering::Natural,
+        };
+        color_bgpc(&g, &cfg).seconds
+    };
+    let n1n2_1 = time(schedule::N1_N2, 1);
+    let n1n2_16 = time(schedule::N1_N2, 16);
+    let vv_16 = time(schedule::V_V, 16);
+    assert!(n1n2_16 < n1n2_1 / 3.0, "scaling broken: {n1n2_1} -> {n1n2_16}");
+    assert!(n1n2_16 < vv_16, "net-based must beat V-V at 16 threads");
+}

@@ -1,0 +1,191 @@
+//! Property-based invariants (in-tree mini-proptest; see
+//! `bgpc::testing`). Each property sweeps dozens of random instances,
+//! including degenerate shapes, and reports the failing case parameters.
+
+use bgpc::coloring::verify::{bgpc_valid, d1gc_valid, d2gc_valid};
+use bgpc::coloring::{color_bgpc, schedule, Balance, Config};
+use bgpc::graph::{Bipartite, Ordering};
+use bgpc::par::ThreadsDriver;
+use bgpc::runtime::offload;
+use bgpc::sim::{CostModel, SimDriver};
+use bgpc::testing::{forall_bipartite, forall_symmetric, random_partial_colors};
+use bgpc::util::prng::Rng;
+
+#[test]
+fn prop_every_schedule_yields_valid_coloring() {
+    forall_bipartite(40, 0xC0FFEE, |g, case| {
+        for spec in schedule::ALL {
+            let r = color_bgpc(g, &Config::sim(spec, 4));
+            assert!(
+                bgpc_valid(g, &r.colors).is_ok(),
+                "{} invalid on {case:?}",
+                spec.name
+            );
+            // colors are bounded by the two-hop degree + 1 for first-fit
+            // schedules; net-based adds at most the max net degree.
+            assert!(r.n_colors <= g.n_vertices().max(1));
+        }
+    });
+}
+
+#[test]
+fn prop_net_twopass_never_exceeds_degree_bound_per_net() {
+    // Alg. 8's reverse first-fit keeps fresh colors below |vtxs(v)|.
+    forall_bipartite(30, 0xBEEF, |g, case| {
+        use bgpc::coloring::bgpc::net;
+        use bgpc::coloring::{NetColorAlg, ThreadState};
+        use bgpc::par::Driver;
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(g.n_vertices());
+        let mut ts = ThreadState::bank(1, g.n_vertices() + 4);
+        net::color_phase(
+            g,
+            &colors,
+            &mut d,
+            &mut ts,
+            64,
+            NetColorAlg::TwoPass,
+            Balance::None,
+        );
+        let max_deg = g.net_vtxs.max_deg() as i32;
+        for u in 0..g.n_vertices() {
+            let c = bgpc::par::ColorStore::committed(&colors, u);
+            if !g.nets(u).is_empty() {
+                assert!(c < max_deg, "color {c} >= max net degree {max_deg} ({case:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_seq_greedy_color_bound() {
+    // greedy first-fit uses at most (max two-hop degree + 1) colors
+    forall_bipartite(30, 0xABCD, |g, _case| {
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (c, _) = bgpc::coloring::bgpc::seq::greedy(g, &order);
+        assert!(bgpc_valid(g, &c).is_ok());
+        let bound = (0..g.n_vertices()).map(|u| g.two_hop_bound(u)).max().unwrap_or(0) + 1;
+        let used = bgpc::coloring::stats::distinct_colors(&c);
+        assert!(used <= bound, "used {used} > bound {bound}");
+    });
+}
+
+#[test]
+fn prop_orderings_are_permutations() {
+    forall_bipartite(25, 0x0DDE, |g, case| {
+        for ord in [Ordering::Natural, Ordering::Random(1), Ordering::LargestFirst, Ordering::SmallestLast] {
+            let o = ord.compute(g);
+            let mut s = o.clone();
+            s.sort_unstable();
+            assert_eq!(
+                s,
+                (0..g.n_vertices() as u32).collect::<Vec<_>>(),
+                "{ord:?} not a permutation on {case:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_net_step_native_idempotent_and_valid() {
+    // applying the row step twice changes nothing the second time
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..120 {
+        let k = [3usize, 5, 8, 17][rng.range(0, 4)];
+        let b = rng.range(1, 8);
+        let mut colors = random_partial_colors(b * k, k as i32 + 2, rng.next_u64());
+        let degs: Vec<i32> = (0..b).map(|_| rng.range(0, k + 1) as i32).collect();
+        offload::step_rows_native(&mut colors, &degs, k);
+        let once = colors.clone();
+        offload::step_rows_native(&mut colors, &degs, k);
+        assert_eq!(once, colors, "step must be idempotent per row");
+    }
+}
+
+#[test]
+fn prop_d2gc_valid_and_tighter_than_d1gc() {
+    forall_symmetric(25, 0x2222, |g, seed| {
+        let order: Vec<u32> = (0..g.n_rows as u32).collect();
+        let (c2, _) = bgpc::coloring::d2gc::seq_greedy(g, &order);
+        assert!(d2gc_valid(g, &c2).is_ok(), "seed {seed}");
+        let (c1, _) = bgpc::coloring::d1gc::seq_greedy(g, &order);
+        assert!(d1gc_valid(g, &c1).is_ok());
+        // a valid D2GC coloring is also a valid D1GC coloring
+        assert!(d1gc_valid(g, &c2).is_ok());
+        let n2 = bgpc::coloring::stats::distinct_colors(&c2);
+        let n1 = bgpc::coloring::stats::distinct_colors(&c1);
+        assert!(n2 >= n1, "distance-2 needs at least as many colors");
+    });
+}
+
+#[test]
+fn prop_sim_determinism_across_thread_counts() {
+    forall_bipartite(15, 0x5EED5, |g, case| {
+        for t in [2usize, 7, 16] {
+            let run = || {
+                let mut d = SimDriver::new(t, CostModel::default());
+                let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+                bgpc::coloring::bgpc::run(g, &order, &schedule::N1_N2, Balance::None, &mut d)
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.colors, b.colors, "t={t} {case:?}");
+            assert!(
+                (a.seconds - b.seconds).abs() < 1e-15,
+                "sim time must be bit-stable"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_mvcc_vs_atomic_store_agree_when_sequential() {
+    // With a single thread the MVCC store must behave exactly like the
+    // atomic store: same colors from the same schedule.
+    forall_bipartite(20, 0x31337, |g, case| {
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let mut dt = ThreadsDriver::new(1);
+        let rt = bgpc::coloring::bgpc::run(g, &order, &schedule::N1_N2, Balance::None, &mut dt);
+        let mut ds = SimDriver::new(1, CostModel::default());
+        let rs = bgpc::coloring::bgpc::run(g, &order, &schedule::N1_N2, Balance::None, &mut ds);
+        assert_eq!(rt.colors, rs.colors, "single-thread stores diverged on {case:?}");
+    });
+}
+
+#[test]
+fn prop_verify_rejects_fuzzed_corruptions() {
+    // corrupt one vertex of a valid coloring; the checker must notice a
+    // planted within-net duplicate.
+    forall_bipartite(25, 0x7777, |g, _case| {
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (mut c, _) = bgpc::coloring::bgpc::seq::greedy(g, &order);
+        // find a net with >= 2 vertices and copy one color over another
+        let Some(v) = (0..g.n_nets()).find(|&v| g.vtxs(v).len() >= 2) else {
+            return;
+        };
+        let a = g.vtxs(v)[0] as usize;
+        let b = g.vtxs(v)[1] as usize;
+        c[b] = c[a];
+        assert!(bgpc_valid(g, &c).is_err(), "corruption must be detected");
+    });
+}
+
+#[test]
+fn prop_relabeled_graph_same_color_count_seq() {
+    // sequential greedy is order-dependent but relabeling + identical
+    // visit order must give the same number of colors.
+    forall_bipartite(15, 0x9999, |g, case| {
+        let n = g.n_vertices();
+        let order: Vec<u32> = (0..n as u32).collect();
+        let (c, _) = bgpc::coloring::bgpc::seq::greedy(g, &order);
+        // reverse relabel
+        let perm: Vec<u32> = (0..n as u32).rev().collect();
+        let rg: Bipartite = g.relabel_vertices(&perm);
+        // visit in the order that matches the original natural order
+        let rorder: Vec<u32> = (0..n as u32).rev().collect();
+        let (rc, _) = bgpc::coloring::bgpc::seq::greedy(&rg, &rorder);
+        let n1 = bgpc::coloring::stats::distinct_colors(&c);
+        let n2 = bgpc::coloring::stats::distinct_colors(&rc);
+        assert_eq!(n1, n2, "relabel changed color count on {case:?}");
+    });
+}

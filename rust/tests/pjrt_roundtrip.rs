@@ -1,0 +1,110 @@
+//! Integration: the AOT JAX/Pallas artifacts loaded through PJRT must be
+//! bit-identical to the native Rust mirror of the net step, and the full
+//! offloaded coloring path must produce valid colorings.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use bgpc::coloring::verify::bgpc_valid;
+use bgpc::graph::generators::{random_bipartite, Preset};
+use bgpc::runtime::{offload, NetStepOffload, Runtime};
+use bgpc::util::prng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::load(Runtime::default_dir())
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn kernel_matches_native_mirror_on_random_tiles() {
+    let rt = runtime();
+    let mut rng = Rng::new(0xA0B1);
+    for bucket in rt.buckets() {
+        let (b, k) = (bucket.b, bucket.k);
+        // random colors including -1 and duplicates; random degrees
+        let mut colors: Vec<i32> =
+            (0..b * k).map(|_| rng.range(0, k + 4) as i32 - 1).collect();
+        let degs: Vec<i32> = (0..b).map(|_| rng.range(0, k + 1) as i32).collect();
+
+        let (kernel_colors, kernel_keep) =
+            bucket.step(&colors, &degs).expect("pjrt execute");
+
+        let native_keep = offload::keep_rows_native(&colors, &degs, k);
+        offload::step_rows_native(&mut colors, &degs, k);
+
+        assert_eq!(kernel_keep, native_keep, "keep mask b={b} k={k}");
+        assert_eq!(kernel_colors, colors, "colors b={b} k={k}");
+    }
+}
+
+#[test]
+fn kernel_matches_native_on_adversarial_rows() {
+    let rt = runtime();
+    let bucket = rt.buckets().first().unwrap();
+    let (b, k) = (bucket.b, bucket.k);
+    // all-uncolored, all-same-color, already-valid, degree 0 and full
+    let mut colors = vec![-1i32; b * k];
+    let mut degs = vec![0i32; b];
+    for (i, d) in degs.iter_mut().enumerate().take(b) {
+        *d = (i % (k + 1)) as i32;
+    }
+    for row in 0..b {
+        for j in 0..k {
+            colors[row * k + j] = match row % 4 {
+                0 => -1,
+                1 => 3,
+                2 => j as i32,
+                _ => (k - 1 - j) as i32,
+            };
+        }
+    }
+    let (kernel_colors, kernel_keep) = bucket.step(&colors, &degs).unwrap();
+    let native_keep = offload::keep_rows_native(&colors, &degs, k);
+    offload::step_rows_native(&mut colors, &degs, k);
+    assert_eq!(kernel_keep, native_keep);
+    assert_eq!(kernel_colors, colors);
+}
+
+#[test]
+fn offloaded_coloring_is_valid_on_random_graph() {
+    let rt = runtime();
+    let g = random_bipartite(400, 600, 4000, 7);
+    let (colors, stats) = NetStepOffload::new(&rt).color(&g, 50).unwrap();
+    assert!(bgpc_valid(&g, &colors).is_ok());
+    assert!(stats.kernel_calls > 0, "offload actually used the kernel");
+    assert!(stats.offloaded_nets > 0);
+}
+
+#[test]
+fn offloaded_coloring_handles_oversized_nets() {
+    let rt = runtime();
+    // one star net bigger than the largest bucket K forces the native path
+    let big = rt.max_k() + 50;
+    let mut edges: Vec<(u32, u32)> = (0..big as u32).map(|u| (0, u)).collect();
+    // plus some bucket-sized nets
+    for v in 1..40u32 {
+        for j in 0..6u32 {
+            edges.push((v, (v * 7 + j) % big as u32));
+        }
+    }
+    let m = bgpc::graph::Csr::from_edges(40, big, &edges);
+    let g = bgpc::graph::Bipartite::from_net_incidence(m);
+    let (colors, stats) = NetStepOffload::new(&rt).color(&g, 50).unwrap();
+    assert!(bgpc_valid(&g, &colors).is_ok());
+    assert!(stats.native_nets > 0, "oversized net went native");
+}
+
+#[test]
+fn offloaded_matches_engine_color_quality_on_preset() {
+    // not equality — different optimism — but the color count should be
+    // in the same ballpark as the native N1-N2 engine (within 2x).
+    let rt = runtime();
+    let g = Preset::by_name("bone010").unwrap().bipartite(0.01, 3);
+    let (colors, _) = NetStepOffload::new(&rt).color(&g, 50).unwrap();
+    assert!(bgpc_valid(&g, &colors).is_ok());
+    let n_pjrt = bgpc::coloring::stats::distinct_colors(&colors);
+
+    let cfg = bgpc::coloring::Config::sim(bgpc::coloring::schedule::N1_N2, 16);
+    let r = bgpc::coloring::color_bgpc(&g, &cfg);
+    assert!(n_pjrt <= 2 * r.n_colors + 8, "pjrt {n_pjrt} vs native {}", r.n_colors);
+    assert!(r.n_colors <= 2 * n_pjrt + 8, "native {} vs pjrt {n_pjrt}", r.n_colors);
+}
