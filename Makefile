@@ -1,0 +1,38 @@
+# bgpc — top-level build orchestration.
+#
+#   make verify          tier-1 gate: release build + full test suite
+#   make artifacts       AOT-compile the JAX/Pallas net-step to HLO text
+#                        (needs Python + JAX; the Rust side never does)
+#   make test            cargo test (artifacts built first when possible)
+#   make test-artifacts  like test, but PJRT roundtrip skips become errors
+#   make bench           all hand-rolled bench harnesses (release)
+#   make clean
+
+CARGO_DIR := rust
+ARTIFACTS := artifacts
+PYTHON    ?= python3
+
+.PHONY: verify artifacts test test-artifacts bench clean
+
+verify:
+	cd $(CARGO_DIR) && cargo build --release && BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
+
+# Python runs only here; the bgpc binary loads the emitted HLO text.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS)
+
+# Best effort: build artifacts when the Python toolchain exists, then
+# test. Without artifacts the PJRT roundtrip tests skip cleanly.
+test:
+	-$(MAKE) artifacts
+	cd $(CARGO_DIR) && BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
+
+test-artifacts: artifacts
+	cd $(CARGO_DIR) && BGPC_REQUIRE_ARTIFACTS=1 BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
+
+bench:
+	cd $(CARGO_DIR) && cargo bench
+
+clean:
+	cd $(CARGO_DIR) && cargo clean
+	rm -rf $(ARTIFACTS) $(CARGO_DIR)/bench_results

@@ -9,7 +9,7 @@
 //! [`step_rows_native`] is the bit-exact Rust mirror of the kernel; the
 //! integration tests pin `PJRT == native` on every bucket shape.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::pjrt::Runtime;
 use crate::coloring::forbidden::StampSet;

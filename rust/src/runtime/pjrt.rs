@@ -1,26 +1,41 @@
-//! PJRT client + artifact registry.
+//! PJRT-artifact runtime: load the AOT-compiled JAX/Pallas net-step
+//! artifacts and execute them from Rust.
 //!
 //! Artifacts are HLO *text* (`artifacts/net_step_b{B}_k{K}.hlo.txt`),
-//! produced once by `python/compile/aot.py`. Text is the interchange
-//! format because jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
-//! ids that the crate's xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+//! produced once by `python/compile/aot.py` (`make artifacts`). Text is
+//! the interchange format because jax ≥ 0.5 emits HloModuleProtos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (DESIGN.md §3).
+//!
+//! Execution backend: the offline build resolves no `xla` crate, so
+//! [`Bucket::step`] runs the artifact's semantics through the bit-exact
+//! native mirror of the kernel ([`super::offload::step_rows_native`] /
+//! [`super::offload::keep_rows_native`] — the same functions the
+//! integration tests pin the kernel against). `Runtime::load` still
+//! validates the real artifact files (presence, HLO-text header, bucket
+//! shape), so the artifact pipeline is exercised end to end; swapping in
+//! the FFI-backed PJRT client is a drop-in change confined to
+//! [`Bucket::step`] (DESIGN.md §3 documents the seam).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// One compiled `(B, K)` bucket of the net-step executable.
 pub struct Bucket {
     pub b: usize,
     pub k: usize,
-    exe: xla::PjRtLoadedExecutable,
+    /// The HLO text artifact this bucket was loaded from.
+    path: PathBuf,
 }
 
 impl Bucket {
     /// Execute the fused conflict-removal + recolor step on a padded
     /// batch. `colors` is row-major `[B, K]`, `degs` is `[B]` (0 pads).
-    /// Returns `(new_colors, keep)` both `[B, K]` row-major.
+    /// Returns `(new_colors, keep)`: `new_colors` is `[B, K]` row-major,
+    /// `keep` marks the first occurrence of each color per row (the
+    /// kernel's Alg. 7 output; `aot.py` lowers with `return_tuple=True`).
     pub fn step(&self, colors: &[i32], degs: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
         if colors.len() != self.b * self.k || degs.len() != self.b {
             bail!(
@@ -31,18 +46,19 @@ impl Bucket {
                 degs.len()
             );
         }
-        let colors_lit =
-            xla::Literal::vec1(colors).reshape(&[self.b as i64, self.k as i64])?;
-        let degs_lit = xla::Literal::vec1(degs);
-        let result = self.exe.execute::<xla::Literal>(&[colors_lit, degs_lit])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: (new_colors, keep)
-        let (new_colors, keep) = result.to_tuple2()?;
-        Ok((new_colors.to_vec::<i32>()?, keep.to_vec::<i32>()?))
+        let keep = super::offload::keep_rows_native(colors, degs, self.k);
+        let mut new_colors = colors.to_vec();
+        super::offload::step_rows_native(&mut new_colors, degs, self.k);
+        Ok((new_colors, keep))
+    }
+
+    /// Path of the backing artifact (diagnostics).
+    pub fn artifact_path(&self) -> &Path {
+        &self.path
     }
 }
 
-/// A PJRT CPU client plus every bucket found in the artifacts directory.
+/// The runtime: every bucket found in the artifacts directory.
 pub struct Runtime {
     pub platform: String,
     buckets: Vec<Bucket>,
@@ -56,11 +72,9 @@ impl Runtime {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
-    /// Load every `net_step_b{B}_k{K}.hlo.txt` under `dir` and compile it
-    /// on a fresh PJRT CPU client.
+    /// Load and validate every `net_step_b{B}_k{K}.hlo.txt` under `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let mut buckets = Vec::new();
         let entries = std::fs::read_dir(dir)
             .with_context(|| format!("read artifacts dir {dir:?} (run `make artifacts`)"))?;
@@ -72,17 +86,22 @@ impl Runtime {
             let Some((b, k)) = parse_bucket_name(name) else {
                 continue;
             };
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-            buckets.push(Bucket { b, k, exe });
+            if b == 0 || k == 0 {
+                bail!("degenerate bucket shape in artifact name {name}");
+            }
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read HLO text {path:?}"))?;
+            // map_err keeps the Error chain intact (the blanket Context
+            // impl would flatten it through Display)
+            validate_hlo_text(&text, b, k)
+                .map_err(|e| e.context(format!("parse HLO text {path:?}")))?;
+            buckets.push(Bucket { b, k, path });
         }
         if buckets.is_empty() {
             bail!("no net_step_b*_k*.hlo.txt artifacts in {dir:?} (run `make artifacts`)");
         }
         buckets.sort_by_key(|b| b.k);
-        Ok(Runtime { platform: client.platform_name(), buckets })
+        Ok(Runtime { platform: "cpu (native mirror)".to_string(), buckets })
     }
 
     /// All buckets, sorted by K ascending.
@@ -109,6 +128,29 @@ pub fn parse_bucket_name(name: &str) -> Option<(usize, usize)> {
     Some((b.parse().ok()?, k.parse().ok()?))
 }
 
+/// Structural sanity check on an HLO text artifact: non-empty, has an
+/// `HloModule` header, an entry computation, and — when the header
+/// declares an entry layout — an `s32[B, K]` operand matching the
+/// filename-derived bucket shape (catches renamed/stale artifacts).
+fn validate_hlo_text(text: &str, b: usize, k: usize) -> Result<()> {
+    let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+    match lines.next() {
+        Some(first) if first.starts_with("HloModule") => {}
+        Some(first) => bail!("expected HloModule header, got {first:?}"),
+        None => bail!("empty artifact"),
+    }
+    if !text.contains("ENTRY") {
+        bail!("no ENTRY computation in artifact");
+    }
+    if text.contains("entry_computation_layout") {
+        let want = format!("s32[{b},{k}]");
+        if !text.contains(&want) {
+            bail!("artifact does not declare a {want} operand (bucket/filename mismatch)");
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +161,56 @@ mod tests {
         assert_eq!(parse_bucket_name("net_step_b1_k1.hlo.txt"), Some((1, 1)));
         assert_eq!(parse_bucket_name("manifest.json"), None);
         assert_eq!(parse_bucket_name("net_step_bx_k1.hlo.txt"), None);
+    }
+
+    #[test]
+    fn hlo_text_validation() {
+        assert!(validate_hlo_text("HloModule m\n\nENTRY main {\n}\n", 2, 4).is_ok());
+        assert!(validate_hlo_text("", 2, 4).is_err());
+        assert!(validate_hlo_text("garbage\nENTRY x", 2, 4).is_err());
+        assert!(validate_hlo_text("HloModule m\nno entry here\n", 2, 4).is_err());
+        // declared entry layout must match the filename-derived shape
+        let good = "HloModule m, entry_computation_layout={(s32[2,4]{1,0}, s32[2]{0})->(s32[2,4]{1,0}, s32[2,4]{1,0})}\n\nENTRY main {\n}\n";
+        assert!(validate_hlo_text(good, 2, 4).is_ok());
+        assert!(validate_hlo_text(good, 8, 16).is_err(), "shape mismatch must be rejected");
+    }
+
+    #[test]
+    fn load_from_synthetic_artifact_dir() {
+        let dir = std::env::temp_dir().join("bgpc_pjrt_test_artifacts");
+        let _ = std::fs::remove_dir_all(&dir); // stale state from aborted runs
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("net_step_b2_k4.hlo.txt"),
+            "HloModule net_step, entry_computation_layout={(s32[2,4]{1,0}, s32[2]{0})->(s32[2,4]{1,0}, s32[2,4]{1,0})}\n\nENTRY main.1 {\n}\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.buckets().len(), 1);
+        assert_eq!(rt.max_k(), 4);
+        assert!(rt.bucket_for(3).is_some());
+        assert!(rt.bucket_for(5).is_none());
+
+        // step executes the kernel semantics on the padded tile
+        let bucket = &rt.buckets()[0];
+        let colors = vec![0, 0, -1, 9, /* row 2 */ 1, 1, 1, 1];
+        let degs = vec![3, 4];
+        let (new_colors, keep) = bucket.step(&colors, &degs).unwrap();
+        assert_eq!(keep, vec![1, 0, 0, 0, 1, 0, 0, 0]);
+        // row 0 deg 3: kept {0}; recolor slots 1,2 by reverse fit from 2
+        assert_eq!(&new_colors[..4], &[0, 2, 1, 9]);
+        // row 1 deg 4: kept {1@0}; recolor 1..3 -> 3,2,0
+        assert_eq!(&new_colors[4..], &[1, 3, 2, 0]);
+
+        // shape mismatch errors
+        assert!(bucket.step(&colors[..4], &degs).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_dir_mentions_make_artifacts() {
+        let e = Runtime::load("/definitely/not/here/bgpc_artifacts").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
     }
 }

@@ -1,0 +1,139 @@
+//! Minimal in-tree error type.
+//!
+//! The offline registry resolves no `anyhow`, so this module provides the
+//! small slice of its surface the crate uses: a message-chain [`Error`],
+//! a defaulted [`Result`], the [`bail!`](crate::bail) macro and the
+//! [`Context`] extension trait for `Result`/`Option`. Both `{e}` and the
+//! anyhow-style `{e:#}` print the full context chain.
+
+use std::fmt;
+
+/// A context chain: outermost frame first, root cause last.
+#[derive(Clone, Debug)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Crate-wide result with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create from a single message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { chain: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, m: impl Into<String>) -> Error {
+        self.chain.insert(0, m.into());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Attach context to a fallible value (mirror of anyhow's trait).
+///
+/// Caveat: the blanket impl stringifies the source error, so applying it
+/// to a `Result<_, Error>` flattens an existing chain (Display output is
+/// unchanged, but `root_cause()` coarsens). When the error already is an
+/// [`Error`], prefer `.map_err(|e| e.context(..))`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn bail_and_chain_format() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer: root 42");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+
+        let none: Option<u32> = None;
+        assert_eq!(none.with_context(|| "missing".into()).unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn open_missing() -> Result<std::fs::File> {
+            Ok(std::fs::File::open("/definitely/not/here/bgpc")?)
+        }
+        assert!(open_missing().is_err());
+    }
+}

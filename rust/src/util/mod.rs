@@ -3,10 +3,12 @@
 //! The offline registry provides no `rand`; the paper's experiments only
 //! need reproducible streams, so we ship splitmix64 + xoshiro256**.
 
+pub mod error;
 pub mod prng;
 pub mod stats;
 pub mod timer;
 
+pub use error::{Context, Error, Result};
 pub use prng::Rng;
 pub use timer::Stopwatch;
 

@@ -1,0 +1,100 @@
+//! Graph substrate integration tests: Matrix-Market I/O round-trips and
+//! generator determinism. Every other test in the suite leans on these
+//! two properties — a silent corruption here would invalidate all of
+//! them, so they get their own gate.
+
+use std::io::Cursor;
+
+use bgpc::graph::generators::{random_bipartite, Preset};
+use bgpc::graph::{mtx, Csr, PRESETS};
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("bgpc_graph_io_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn mtx_roundtrip_preserves_every_preset_csr() {
+    for p in PRESETS.iter() {
+        let m = p.net_incidence(0.01, 11);
+        m.validate().unwrap();
+        let path = tmp_path(&format!("{}.mtx", p.name));
+        mtx::write_mtx(&m, &path).unwrap();
+        let back = mtx::read_mtx(&path).unwrap();
+        assert_eq!(back, m, "{} did not survive the mtx round-trip", p.name);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn mtx_roundtrip_preserves_random_bipartite_and_empty_rows() {
+    // includes empty nets, empty trailing columns, and a 0-edge graph
+    for (n_nets, n_vtxs, nnz, seed) in
+        [(1usize, 1usize, 1usize, 1u64), (7, 13, 0, 2), (40, 25, 300, 3), (128, 500, 2000, 4)]
+    {
+        let g = random_bipartite(n_nets, n_vtxs, nnz, seed);
+        let path = tmp_path(&format!("rb_{n_nets}_{n_vtxs}_{nnz}.mtx"));
+        mtx::write_mtx(&g.net_vtxs, &path).unwrap();
+        let back = mtx::read_mtx(&path).unwrap();
+        assert_eq!(back, g.net_vtxs);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn mtx_written_header_is_parseable_pattern_general() {
+    let m = Csr::from_edges(2, 3, &[(0, 0), (1, 2)]);
+    let path = tmp_path("header.mtx");
+    mtx::write_mtx(&m, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("%%MatrixMarket matrix coordinate pattern general"));
+    // 1-based indices on entry lines
+    assert!(text.contains("\n1 1\n"));
+    assert!(text.contains("\n2 3\n"));
+    let back = mtx::read_mtx_from(Cursor::new(text)).unwrap();
+    assert_eq!(back, m);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn symmetric_mtx_input_matches_explicit_general_form() {
+    // the same matrix given as `symmetric` (lower triangle) and as
+    // `general` (all entries) must parse to the same CSR
+    let sym = "%%MatrixMarket matrix coordinate real symmetric\n3 3 4\n1 1 2.0\n2 1 1.0\n3 1 1.0\n3 2 1.0\n";
+    let gen = "%%MatrixMarket matrix coordinate pattern general\n3 3 7\n1 1\n1 2\n1 3\n2 1\n2 3\n3 1\n3 2\n";
+    let a = mtx::read_mtx_from(Cursor::new(sym)).unwrap();
+    let b = mtx::read_mtx_from(Cursor::new(gen)).unwrap();
+    assert_eq!(a, b);
+    assert!(a.is_structurally_symmetric());
+}
+
+#[test]
+fn generators_same_seed_same_graph_all_presets() {
+    for p in PRESETS.iter() {
+        let a = p.net_incidence(0.01, 7);
+        let b = p.net_incidence(0.01, 7);
+        assert_eq!(a, b, "{} is not deterministic", p.name);
+        let c = p.net_incidence(0.01, 8);
+        assert_ne!(a, c, "{} ignores its seed", p.name);
+    }
+}
+
+#[test]
+fn bipartite_view_is_consistent_with_incidence() {
+    for p in PRESETS.iter() {
+        let g = p.bipartite(0.01, 5);
+        g.validate().unwrap();
+        assert_eq!(g.net_vtxs, p.net_incidence(0.01, 5), "{}", p.name);
+    }
+}
+
+#[test]
+fn random_bipartite_deterministic_and_in_range() {
+    let a = random_bipartite(50, 70, 400, 99);
+    let b = random_bipartite(50, 70, 400, 99);
+    assert_eq!(a.net_vtxs, b.net_vtxs);
+    a.validate().unwrap();
+    assert!(a.n_nets() == 50 && a.n_vertices() == 70);
+    assert!(a.nnz() <= 400, "dedup can only shrink");
+}

@@ -1,22 +1,48 @@
-//! Integration: the AOT JAX/Pallas artifacts loaded through PJRT must be
-//! bit-identical to the native Rust mirror of the net step, and the full
-//! offloaded coloring path must produce valid colorings.
+//! Integration: the loaded artifact buckets must agree with the native
+//! Rust mirror of the net step on every tile shape, and the full
+//! offloaded coloring path (gather → step → scatter → repair) must
+//! produce valid colorings.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! NOTE: while `Bucket::step` is backed by the native mirror (no `xla`
+//! crate resolves offline — DESIGN.md §3), the kernel-vs-mirror
+//! comparisons are tautological; they still exercise artifact loading,
+//! bucket selection and tile plumbing. They become a real cross-check
+//! the moment an FFI-backed PJRT client is swapped into `Bucket::step`.
+//!
+//! Requires `make artifacts` (the Makefile test target runs it when the
+//! Python toolchain is available). Without artifacts every test here
+//! *skips cleanly* with a message — `cargo test -q` must pass on a clean
+//! checkout with no Python/JAX installed.
 
 use bgpc::coloring::verify::bgpc_valid;
 use bgpc::graph::generators::{random_bipartite, Preset};
 use bgpc::runtime::{offload, NetStepOffload, Runtime};
 use bgpc::util::prng::Rng;
 
-fn runtime() -> Runtime {
-    Runtime::load(Runtime::default_dir())
-        .expect("artifacts missing — run `make artifacts` first")
+/// Load the artifacts, or `None` (with a visible skip message) when they
+/// are absent. Set `BGPC_REQUIRE_ARTIFACTS=1` to turn skips into failures
+/// (used by `make test-artifacts` after `make artifacts`).
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            let require = matches!(
+                std::env::var("BGPC_REQUIRE_ARTIFACTS").as_deref(),
+                Ok("1") | Ok("true")
+            );
+            if require {
+                panic!("artifacts required but unavailable: {e}");
+            }
+            eprintln!("skipping PJRT roundtrip test: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn kernel_matches_native_mirror_on_random_tiles() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(0xA0B1);
     for bucket in rt.buckets() {
         let (b, k) = (bucket.b, bucket.k);
@@ -38,7 +64,7 @@ fn kernel_matches_native_mirror_on_random_tiles() {
 
 #[test]
 fn kernel_matches_native_on_adversarial_rows() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let bucket = rt.buckets().first().unwrap();
     let (b, k) = (bucket.b, bucket.k);
     // all-uncolored, all-same-color, already-valid, degree 0 and full
@@ -66,7 +92,7 @@ fn kernel_matches_native_on_adversarial_rows() {
 
 #[test]
 fn offloaded_coloring_is_valid_on_random_graph() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let g = random_bipartite(400, 600, 4000, 7);
     let (colors, stats) = NetStepOffload::new(&rt).color(&g, 50).unwrap();
     assert!(bgpc_valid(&g, &colors).is_ok());
@@ -76,7 +102,7 @@ fn offloaded_coloring_is_valid_on_random_graph() {
 
 #[test]
 fn offloaded_coloring_handles_oversized_nets() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     // one star net bigger than the largest bucket K forces the native path
     let big = rt.max_k() + 50;
     let mut edges: Vec<(u32, u32)> = (0..big as u32).map(|u| (0, u)).collect();
@@ -97,7 +123,7 @@ fn offloaded_coloring_handles_oversized_nets() {
 fn offloaded_matches_engine_color_quality_on_preset() {
     // not equality — different optimism — but the color count should be
     // in the same ballpark as the native N1-N2 engine (within 2x).
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let g = Preset::by_name("bone010").unwrap().bipartite(0.01, 3);
     let (colors, _) = NetStepOffload::new(&rt).color(&g, 50).unwrap();
     assert!(bgpc_valid(&g, &colors).is_ok());

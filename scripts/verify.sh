@@ -1,0 +1,29 @@
+#!/usr/bin/env sh
+# Local mirror of CI: tier-1 gate plus target-coverage builds.
+#
+#   scripts/verify.sh            # build + test + benches/examples + fmt
+#   SKIP_FMT=1 scripts/verify.sh # when rustfmt is not installed
+set -eu
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+# pick up repo-root artifacts when `make artifacts` has run (tests skip otherwise)
+BGPC_ARTIFACTS="${BGPC_ARTIFACTS:-../artifacts}" cargo test -q
+
+echo "== cargo build --benches --examples =="
+cargo build --benches --examples
+
+if [ "${SKIP_FMT:-0}" = "1" ]; then
+    echo "== fmt skipped (SKIP_FMT=1) =="
+elif command -v rustfmt >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== fmt skipped (rustfmt not installed) =="
+fi
+
+echo "verify: OK"
