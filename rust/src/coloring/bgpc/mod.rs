@@ -19,8 +19,9 @@ use crate::sim::trace::{IterTrace, RunTrace};
 pub const MAX_ITERS: usize = 200;
 
 /// Gather the next work queue from the lazy per-thread queues or the
-/// shared queue, whichever the spec uses.
-fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec<u32> {
+/// shared queue, whichever the spec uses. Shared with the incremental
+/// repair loop in [`crate::dynamic`].
+pub(crate) fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec<u32> {
     if lazy {
         let cap: usize = ts.iter().map(|s| s.next_local.len()).sum();
         let mut w = Vec::with_capacity(cap);
@@ -36,9 +37,40 @@ fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec
 /// Upper bound on any color the engine can produce, for sizing the
 /// forbidden arrays: vertex-based first-fit stays ≤ the max two-hop
 /// degree; net-based stays < the max net degree; B1 can add one.
-fn color_cap(g: &Bipartite) -> usize {
+/// Public because the dynamic subsystem and the property tests size
+/// persistent [`ThreadState`] banks with it.
+pub fn color_cap(g: &Bipartite) -> usize {
     let max2hop = (0..g.n_vertices()).map(|u| g.two_hop_bound(u)).max().unwrap_or(0);
     max2hop.max(g.net_vtxs.max_deg()) + 4
+}
+
+/// The `MAX_ITERS` safety net: exact sequential greedy over the
+/// remaining queue, reading and writing through the color store at time
+/// `now`. Also the last line of defense of the incremental repair loop.
+pub fn sequential_finish<C: ColorStore>(
+    g: &Bipartite,
+    w: &[u32],
+    colors: &C,
+    ts0: &mut ThreadState,
+    now: u64,
+) {
+    for &wv in w {
+        let wv = wv as usize;
+        ts0.forbidden.next_gen();
+        for &v in g.nets(wv) {
+            for &u in g.vtxs(v as usize) {
+                let u = u as usize;
+                if u != wv {
+                    let c = colors.read(u, now);
+                    if c >= 0 {
+                        ts0.forbidden.insert(c);
+                    }
+                }
+            }
+        }
+        let (c, _) = ts0.forbidden.first_fit();
+        colors.write(wv, c, now);
+    }
 }
 
 /// Run a full BGPC coloring with driver `d`.
@@ -49,10 +81,32 @@ pub fn run<D: Driver>(
     bal: Balance,
     d: &mut D,
 ) -> ColoringResult {
+    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    run_capped(g, order, spec, bal, d, &mut ts, MAX_ITERS)
+}
+
+/// [`run`] with an explicit iteration cap and a caller-owned
+/// [`ThreadState`] bank. The bank is how per-thread state (B1/B2
+/// `col_max`/`col_next` trackers, forbidden arrays) persists across
+/// calls — the dynamic subsystem threads one bank through a whole
+/// update stream. The forbidden domains are re-`ensure`d here, so a
+/// bank sized for a previous (smaller) graph stays safe.
+pub fn run_capped<D: Driver>(
+    g: &Bipartite,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    max_iters: usize,
+) -> ColoringResult {
     let n = g.n_vertices();
     let t0 = std::time::Instant::now();
     let colors = d.new_colors(n);
-    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    let cap = color_cap(g);
+    for s in ts.iter_mut() {
+        s.forbidden.ensure(cap);
+    }
     let shared = SharedQueue::with_capacity(n);
     let mut w: Vec<u32> = order.to_vec();
     let mut trace = RunTrace::default();
@@ -60,7 +114,7 @@ pub fn run<D: Driver>(
     let mut work_units = 0u64;
     let mut iterations = 0usize;
 
-    while !w.is_empty() && iterations < MAX_ITERS {
+    while !w.is_empty() && iterations < max_iters {
         iterations += 1;
         let net_color = iterations <= spec.net_color_iters;
         let net_conflict = iterations <= spec.net_conflict_iters;
@@ -73,9 +127,9 @@ pub fn run<D: Driver>(
 
         // --- coloring phase (Alg. 4 / 6 / 8) ---
         let cr = if net_color {
-            net::color_phase(g, &colors, d, &mut ts, spec.chunk, spec.net_alg, bal)
+            net::color_phase(g, &colors, d, ts, spec.chunk, spec.net_alg, bal)
         } else {
-            vertex::color_phase(g, &w, &colors, d, &mut ts, spec.chunk, bal)
+            vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
         };
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
@@ -83,17 +137,17 @@ pub fn run<D: Driver>(
 
         // --- conflict removal phase (Alg. 5 / 7) ---
         let (rr, w_next) = if net_conflict {
-            let r1 = net::conflict_phase(g, &colors, d, &mut ts, spec.chunk);
+            let r1 = net::conflict_phase(g, &colors, d, ts, spec.chunk);
             let r2 = net::rebuild_queue(
                 n,
                 &colors,
                 d,
-                &mut ts,
+                ts,
                 spec.chunk,
                 spec.lazy_queues,
                 &shared,
             );
-            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            let wn = collect_next(spec.lazy_queues, ts, &shared);
             let combined = crate::par::RegionOut {
                 real_secs: r1.real_secs + r2.real_secs,
                 sim_ns: match (r1.sim_ns, r2.sim_ns) {
@@ -111,13 +165,13 @@ pub fn run<D: Driver>(
                 &w,
                 &colors,
                 d,
-                &mut ts,
+                ts,
                 spec.chunk,
                 spec.lazy_queues,
                 &shared,
             );
             work_units += r.busy_units.iter().sum::<u64>();
-            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            let wn = collect_next(spec.lazy_queues, ts, &shared);
             (r, wn)
         };
         it.conflict_secs = rr.seconds();
@@ -128,30 +182,12 @@ pub fn run<D: Driver>(
 
     if !w.is_empty() {
         // safety net: finish sequentially (exact greedy over what's left)
-        let ts0 = &mut ts[0];
-        let now = d.now();
-        for &wv in &w {
-            let wv = wv as usize;
-            ts0.forbidden.next_gen();
-            for &v in g.nets(wv) {
-                for &u in g.vtxs(v as usize) {
-                    let u = u as usize;
-                    if u != wv {
-                        let c = colors.read(u, now);
-                        if c >= 0 {
-                            ts0.forbidden.insert(c);
-                        }
-                    }
-                }
-            }
-            let (c, _) = ts0.forbidden.first_fit();
-            colors.write(wv, c, now);
-        }
+        sequential_finish(g, &w, &colors, &mut ts[0], d.now());
     }
 
     let colors_vec = colors.to_vec();
     let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
-    let is_sim = trace.iters.first().map(|i| i.color_busy.len() > 0).unwrap_or(false);
+    let is_sim = trace.iters.first().map(|i| !i.color_busy.is_empty()).unwrap_or(false);
     ColoringResult {
         colors: colors_vec,
         n_colors,
@@ -252,6 +288,56 @@ mod tests {
         let mut d = SimDriver::new(16, CostModel::default());
         let r = run(&g, &order, &schedule::N1_N2, Balance::None, &mut d);
         assert!(r.iterations >= 2, "expected speculative conflicts");
+    }
+
+    #[test]
+    fn max_iters_fallback_yields_valid_coloring() {
+        // Adversarially tiny iteration caps: the optimistic loop is cut
+        // short and the sequential safety net must finish the job.
+        let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.02, 5);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        for cap in [0usize, 1, 2] {
+            let mut ts = ThreadState::bank(16, color_cap(&g));
+            let mut d = SimDriver::new(16, CostModel::default());
+            let r = run_capped(&g, &order, &schedule::N1_N2, Balance::None, &mut d, &mut ts, cap);
+            assert!(bgpc_valid(&g, &r.colors).is_ok(), "cap={cap} invalid");
+            assert!(r.iterations <= cap, "cap={cap} ran {} iterations", r.iterations);
+            assert!(r.colors.iter().all(|&c| c >= 0), "cap={cap} left uncolored vertices");
+        }
+        // This graph provably leaves conflicts after one 16-thread
+        // speculative iteration (see net_first_iteration_leaves_work_for
+        // _iter_two), so cap=1 above genuinely exercised the fallback.
+    }
+
+    #[test]
+    fn max_iters_zero_fallback_is_exact_sequential_greedy() {
+        // With cap=0 the whole queue goes straight to the safety net,
+        // which must reproduce the sequential greedy baseline bit-for-bit.
+        let g = random_bipartite(120, 180, 1400, 23);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let mut ts = ThreadState::bank(1, color_cap(&g));
+        let mut d = ThreadsDriver::new(1);
+        let r = run_capped(&g, &order, &schedule::V_V, Balance::None, &mut d, &mut ts, 0);
+        let (seq_colors, _) = super::seq::greedy(&g, &order);
+        assert_eq!(r.colors, seq_colors, "cap=0 fallback must equal greedy");
+        assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn sequential_finish_repairs_adversarial_store() {
+        // Feed the safety net a store where *every* vertex of a shared
+        // net clashes; it must still emit a valid coloring.
+        let g = random_bipartite(40, 60, 400, 31);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(g.n_vertices());
+        for u in 0..g.n_vertices() {
+            colors.write(u, 0, 0); // all vertices share color 0
+        }
+        let w: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let mut ts0 = ThreadState::new(color_cap(&g));
+        sequential_finish(&g, &w, &colors, &mut ts0, d.now());
+        let c = colors.to_vec();
+        assert!(bgpc_valid(&g, &c).is_ok(), "fallback left conflicts");
     }
 
     #[test]

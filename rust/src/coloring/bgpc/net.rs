@@ -220,22 +220,53 @@ pub fn conflict_phase<D: Driver>(
     chunk: usize,
 ) -> RegionOut {
     d.region(ts, g.n_nets(), chunk, |_tid, s, v, now| {
-        let mut units = 0u64;
-        s.forbidden.next_gen();
-        for &u in g.vtxs(v) {
-            units += 1;
-            let u = u as usize;
-            let c = colors.read(u, now + units);
-            if c >= 0 {
-                if s.forbidden.contains(c) {
-                    colors.write(u, -1, now + units);
-                } else {
-                    s.forbidden.insert(c);
-                }
+        conflict_one_net(g, v, colors, s, now)
+    })
+}
+
+/// Algorithm 7 restricted to an explicit net subset — the dynamic
+/// subsystem's dirty-net detection: after a batch of edge insertions,
+/// only nets whose member lists changed can hold a stale duplicate, so
+/// scanning just those repairs the coloring at the cost of the batch
+/// footprint instead of `O(|E|)`.
+pub fn conflict_phase_on<D: Driver>(
+    g: &Bipartite,
+    nets: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, nets.len(), chunk, |_tid, s, i, now| {
+        conflict_one_net(g, nets[i] as usize, colors, s, now)
+    })
+}
+
+/// Shared body of the two conflict-removal drivers: scan net `v`, keep
+/// each color's first occurrence, uncolor later duplicates.
+#[inline]
+fn conflict_one_net<C: ColorStore>(
+    g: &Bipartite,
+    v: usize,
+    colors: &C,
+    s: &mut ThreadState,
+    now: u64,
+) -> Cost {
+    let mut units = 0u64;
+    s.forbidden.next_gen();
+    for &u in g.vtxs(v) {
+        units += 1;
+        let u = u as usize;
+        let c = colors.read(u, now + units);
+        if c >= 0 {
+            if s.forbidden.contains(c) {
+                colors.write(u, -1, now + units);
+            } else {
+                s.forbidden.insert(c);
             }
         }
-        Cost::new(units)
-    })
+    }
+    Cost::new(units)
 }
 
 /// Rebuild the work queue after net-based conflict removal: gather every

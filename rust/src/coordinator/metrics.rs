@@ -11,6 +11,10 @@ pub struct Metrics {
     total_colors: AtomicU64,
     /// Total engine seconds, in microseconds (atomic f64 substitute).
     total_us: AtomicU64,
+    /// Dynamic-session update batches applied.
+    updates: AtomicU64,
+    /// Vertices recolored across all update batches.
+    recolored: AtomicU64,
 }
 
 impl Metrics {
@@ -21,6 +25,10 @@ impl Metrics {
         }
         if o.engine == "pjrt" {
             self.pjrt_jobs.fetch_add(1, AOrd::Relaxed);
+        }
+        if let Some(b) = &o.batch {
+            self.updates.fetch_add(1, AOrd::Relaxed);
+            self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
         }
         self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
         self.total_us.fetch_add((o.seconds * 1e6) as u64, AOrd::Relaxed);
@@ -38,6 +46,16 @@ impl Metrics {
         self.pjrt_jobs.load(AOrd::Relaxed)
     }
 
+    /// Dynamic-session update batches applied.
+    pub fn updates(&self) -> u64 {
+        self.updates.load(AOrd::Relaxed)
+    }
+
+    /// Vertices recolored across all update batches.
+    pub fn recolored(&self) -> u64 {
+        self.recolored.load(AOrd::Relaxed)
+    }
+
     pub fn total_seconds(&self) -> f64 {
         self.total_us.load(AOrd::Relaxed) as f64 * 1e-6
     }
@@ -45,10 +63,12 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} failures={} pjrt={} engine_secs={:.3}",
+            "jobs={} failures={} pjrt={} updates={} recolored={} engine_secs={:.3}",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
+            self.updates(),
+            self.recolored(),
             self.total_seconds()
         )
     }
@@ -69,6 +89,7 @@ mod tests {
             seconds: 0.25,
             valid: true,
             error: None,
+            batch: None,
         };
         let bad = crate::coordinator::JobOutcome { valid: false, engine: "pjrt", ..ok.clone() };
         m.record(&ok);
@@ -78,5 +99,26 @@ mod tests {
         assert_eq!(m.pjrt_jobs(), 1);
         assert!((m.total_seconds() - 0.5).abs() < 1e-3);
         assert!(m.summary().contains("jobs=2"));
+    }
+
+    #[test]
+    fn update_batches_counted() {
+        let m = Metrics::default();
+        let stats = crate::dynamic::BatchStats { recolored: 7, ..Default::default() };
+        let upd = crate::coordinator::JobOutcome {
+            name: "u".into(),
+            engine: "native",
+            n_colors: 5,
+            iterations: 1,
+            seconds: 0.01,
+            valid: true,
+            error: None,
+            batch: Some(stats),
+        };
+        m.record(&upd);
+        m.record(&upd);
+        assert_eq!(m.updates(), 2);
+        assert_eq!(m.recolored(), 14);
+        assert!(m.summary().contains("updates=2"));
     }
 }

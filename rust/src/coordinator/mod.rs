@@ -7,19 +7,56 @@
 //! worker queue and the caller gets a receiver for the outcome. The
 //! PJRT executable is compiled once and reused across jobs (one
 //! executable per bucket, per DESIGN.md §3); Python is never involved.
+//!
+//! **Dynamic sessions** (the [`crate::dynamic`] subsystem, DESIGN.md
+//! §8): [`Service::open_session`] colors a graph once and keeps the
+//! [`crate::dynamic::DynamicSession`] alive inside the service; clients
+//! then stream [`JobInput::Update`] jobs carrying
+//! [`crate::dynamic::UpdateBatch`] edits. Updates always run on the
+//! native pool, are applied strictly in submit order per session (a
+//! seq/condvar handshake — concurrent workers may *pick up* batches out
+//! of order but never apply them out of order), and each outcome
+//! carries the per-batch [`crate::dynamic::BatchStats`] in
+//! [`JobOutcome::batch`].
 
 pub mod metrics;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::coloring::{color_bgpc, color_d2gc, Config, Problem};
+use crate::dynamic::{BatchStats, DynamicSession, UpdateBatch};
 use crate::graph::{Bipartite, Csr};
 use crate::runtime::{NetStepOffload, Runtime};
 
 pub use metrics::Metrics;
+
+/// Identifier of an open dynamic session (see [`Service::open_session`]).
+pub type SessionId = u64;
+
+/// A session as the service holds it: the mutable state under a lock,
+/// an admission counter assigning each update its sequence number at
+/// submit time, and a condvar that parks workers holding a batch whose
+/// predecessors are still being applied.
+struct SessionSlot {
+    submitted: AtomicU64,
+    state: Mutex<SessionInner>,
+    cv: Condvar,
+}
+
+struct SessionInner {
+    session: DynamicSession,
+    /// Batches applied so far == the next admissible seq.
+    applied: u64,
+    /// Set by [`Service::close_session`]; wakes and fails parked workers
+    /// whose predecessor batches can no longer arrive.
+    closed: bool,
+}
+
+type SessionMap = Mutex<HashMap<SessionId, Arc<SessionSlot>>>;
 
 /// Which engine a job should run on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +84,11 @@ pub struct Job {
 pub enum JobInput {
     Bgpc(Arc<Bipartite>),
     D2gc(Arc<Csr>),
+    /// Incremental update batch against an open dynamic session. Always
+    /// runs on the native pool (the job's `cfg`/`engine` are ignored —
+    /// the session carries its own [`Config`]); applied strictly in
+    /// submit order per session.
+    Update { session: SessionId, batch: Arc<UpdateBatch> },
 }
 
 impl JobInput {
@@ -54,6 +96,7 @@ impl JobInput {
         match self {
             JobInput::Bgpc(_) => Problem::Bgpc,
             JobInput::D2gc(_) => Problem::D2gc,
+            JobInput::Update { .. } => Problem::Bgpc,
         }
     }
 }
@@ -68,10 +111,13 @@ pub struct JobOutcome {
     pub seconds: f64,
     pub valid: bool,
     pub error: Option<String>,
+    /// Per-batch repair metrics (update jobs only).
+    pub batch: Option<BatchStats>,
 }
 
 enum Message {
-    Run(Job, Sender<JobOutcome>),
+    /// A job plus its session seq (0 and unused for non-update jobs).
+    Run(Job, u64, Sender<JobOutcome>),
     Stop,
 }
 
@@ -82,9 +128,11 @@ pub struct Service {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     seq: AtomicU64,
+    sessions: Arc<SessionMap>,
+    session_seq: AtomicU64,
 }
 
-fn run_native(job: &Job) -> JobOutcome {
+fn run_native(job: &Job, sessions: &SessionMap, seq: u64) -> JobOutcome {
     match &job.input {
         JobInput::Bgpc(g) => {
             let r = color_bgpc(g, &job.cfg);
@@ -97,6 +145,7 @@ fn run_native(job: &Job) -> JobOutcome {
                 seconds: r.seconds,
                 valid,
                 error: None,
+                batch: None,
             }
         }
         JobInput::D2gc(g) => {
@@ -110,8 +159,84 @@ fn run_native(job: &Job) -> JobOutcome {
                 seconds: r.seconds,
                 valid,
                 error: None,
+                batch: None,
             }
         }
+        JobInput::Update { session, batch } => run_update(sessions, *session, seq, batch, &job.name),
+    }
+}
+
+/// Apply one update batch in session order: wait (on the slot's condvar)
+/// until every earlier-seq batch has been applied, then repair.
+fn run_update(
+    sessions: &SessionMap,
+    id: SessionId,
+    seq: u64,
+    batch: &UpdateBatch,
+    name: &str,
+) -> JobOutcome {
+    let slot = sessions.lock().unwrap().get(&id).cloned();
+    let Some(slot) = slot else {
+        return JobOutcome {
+            name: name.to_string(),
+            engine: "native",
+            n_colors: 0,
+            iterations: 0,
+            seconds: 0.0,
+            valid: false,
+            error: Some(format!("unknown session {id}")),
+            batch: None,
+        };
+    };
+    let mut inner = slot.state.lock().unwrap();
+    while inner.applied != seq {
+        if inner.closed {
+            // a predecessor batch was dropped by close_session: fail
+            // cleanly instead of parking forever
+            return JobOutcome {
+                name: name.to_string(),
+                engine: "native",
+                n_colors: 0,
+                iterations: 0,
+                seconds: 0.0,
+                valid: false,
+                error: Some(format!("session {id} closed before batch applied")),
+                batch: None,
+            };
+        }
+        inner = slot.cv.wait(inner).unwrap();
+    }
+    if inner.closed {
+        // in-order but the session was closed while this batch was
+        // queued: refuse to mutate state the client can no longer see
+        return JobOutcome {
+            name: name.to_string(),
+            engine: "native",
+            n_colors: 0,
+            iterations: 0,
+            seconds: 0.0,
+            valid: false,
+            error: Some(format!("session {id} closed before batch applied")),
+            batch: None,
+        };
+    }
+    let stats = inner.session.apply(batch);
+    inner.applied += 1;
+    // Service contract: every outcome the coordinator hands back is
+    // verified, exactly like run_native's full-graph check. This is
+    // O(|E|) under the session lock; latency-sensitive clients that
+    // trust the repair invariants can use DynamicSession directly.
+    let valid = inner.session.verify().is_ok();
+    slot.cv.notify_all();
+    JobOutcome {
+        name: name.to_string(),
+        engine: "native",
+        n_colors: stats.n_colors,
+        iterations: stats.iterations,
+        seconds: stats.seconds,
+        valid,
+        error: None,
+        batch: Some(stats),
     }
 }
 
@@ -130,6 +255,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                         seconds: t0.elapsed().as_secs_f64(),
                         valid,
                         error: None,
+                        batch: None,
                     }
                 }
                 Err(e) => JobOutcome {
@@ -140,10 +266,11 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                     seconds: t0.elapsed().as_secs_f64(),
                     valid: false,
                     error: Some(format!("{e:#}")),
+                    batch: None,
                 },
             }
         }
-        JobInput::D2gc(_) => JobOutcome {
+        JobInput::D2gc(_) | JobInput::Update { .. } => JobOutcome {
             name: job.name.clone(),
             engine: "pjrt",
             n_colors: 0,
@@ -151,6 +278,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
             seconds: 0.0,
             valid: false,
             error: Some("PJRT engine only supports BGPC jobs".into()),
+            batch: None,
         },
     }
 }
@@ -160,17 +288,19 @@ impl Service {
     /// also start one PJRT worker owning the compiled executables.
     pub fn start(n_native: usize, artifacts: Option<std::path::PathBuf>) -> Service {
         let metrics = Arc::new(Metrics::default());
+        let sessions: Arc<SessionMap> = Arc::new(Mutex::new(HashMap::new()));
         let (native_tx, native_rx) = channel::<Message>();
         let native_rx = Arc::new(std::sync::Mutex::new(native_rx));
         let mut workers = Vec::new();
         for _ in 0..n_native.max(1) {
             let rx = Arc::clone(&native_rx);
             let m = Arc::clone(&metrics);
+            let sess = Arc::clone(&sessions);
             workers.push(std::thread::spawn(move || loop {
                 let msg = { rx.lock().unwrap().recv() };
                 match msg {
-                    Ok(Message::Run(job, out)) => {
-                        let o = run_native(&job);
+                    Ok(Message::Run(job, seq, out)) => {
+                        let o = run_native(&job, &sess, seq);
                         m.record(&o);
                         let _ = out.send(o);
                     }
@@ -198,7 +328,7 @@ impl Service {
                 };
                 loop {
                     match rx.recv() {
-                        Ok(Message::Run(job, out)) => {
+                        Ok(Message::Run(job, _seq, out)) => {
                             let o = run_pjrt(&rt, &job);
                             m.record(&o);
                             let _ = out.send(o);
@@ -221,7 +351,15 @@ impl Service {
             }
         });
 
-        Service { native_tx, pjrt_tx, workers, metrics, seq: AtomicU64::new(0) }
+        Service {
+            native_tx,
+            pjrt_tx,
+            workers,
+            metrics,
+            seq: AtomicU64::new(0),
+            sessions,
+            session_seq: AtomicU64::new(0),
+        }
     }
 
     /// Route a job; returns the outcome receiver.
@@ -230,6 +368,34 @@ impl Service {
             job.name = format!("job-{}", self.seq.fetch_add(1, AOrd::Relaxed));
         }
         let (tx, rx) = channel();
+        // Updates bypass engine selection: they are session-ordered and
+        // always native. The seq assignment and the channel send happen
+        // under one lock so seq order == queue order — otherwise two
+        // racing submitters could enqueue seq 1 ahead of seq 0 and park
+        // a worker (or the whole pool) on a predecessor stuck behind it.
+        if let JobInput::Update { session, .. } = &job.input {
+            let id = *session;
+            let sessions = self.sessions.lock().unwrap();
+            match sessions.get(&id) {
+                Some(slot) => {
+                    let seq = slot.submitted.fetch_add(1, AOrd::SeqCst);
+                    let _ = self.native_tx.send(Message::Run(job, seq, tx));
+                }
+                None => {
+                    let _ = tx.send(JobOutcome {
+                        name: job.name,
+                        engine: "native",
+                        n_colors: 0,
+                        iterations: 0,
+                        seconds: 0.0,
+                        valid: false,
+                        error: Some(format!("unknown session {id}")),
+                        batch: None,
+                    });
+                }
+            }
+            return rx;
+        }
         let use_pjrt = match job.engine {
             EngineSel::Pjrt => true,
             EngineSel::Native => false,
@@ -240,7 +406,7 @@ impl Service {
         if use_pjrt {
             match &self.pjrt_tx {
                 Some(ptx) => {
-                    let _ = ptx.send(Message::Run(job, tx));
+                    let _ = ptx.send(Message::Run(job, 0, tx));
                 }
                 None => {
                     let _ = tx.send(JobOutcome {
@@ -251,13 +417,69 @@ impl Service {
                         seconds: 0.0,
                         valid: false,
                         error: Some("PJRT engine not loaded (run `make artifacts`)".into()),
+                        batch: None,
                     });
                 }
             }
         } else {
-            let _ = self.native_tx.send(Message::Run(job, tx));
+            let _ = self.native_tx.send(Message::Run(job, 0, tx));
         }
         rx
+    }
+
+    /// Open a dynamic session: color `g` from scratch under `cfg`
+    /// (synchronously, on the caller's thread) and keep the session
+    /// alive inside the service. Stream [`JobInput::Update`] jobs
+    /// against the returned id, then [`Service::close_session`].
+    pub fn open_session(&self, name: &str, g: &Bipartite, cfg: Config) -> (SessionId, JobOutcome) {
+        let (mut session, init) = DynamicSession::start(g.clone(), cfg);
+        let valid = session.verify().is_ok();
+        let outcome = JobOutcome {
+            name: name.to_string(),
+            engine: "native",
+            n_colors: init.n_colors,
+            iterations: init.iterations,
+            seconds: init.seconds,
+            valid,
+            error: None,
+            batch: None,
+        };
+        self.metrics.record(&outcome);
+        let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
+        self.sessions.lock().unwrap().insert(
+            id,
+            Arc::new(SessionSlot {
+                submitted: AtomicU64::new(0),
+                state: Mutex::new(SessionInner { session, applied: 0, closed: false }),
+                cv: Condvar::new(),
+            }),
+        );
+        (id, outcome)
+    }
+
+    /// Snapshot a session's current committed coloring (batches applied
+    /// so far; does not wait for still-queued updates).
+    pub fn session_colors(&self, id: SessionId) -> Option<Vec<i32>> {
+        let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
+        let inner = slot.state.lock().unwrap();
+        Some(inner.session.colors().to_vec())
+    }
+
+    /// Close a session. The update a worker is currently applying still
+    /// completes; updates parked behind a predecessor that can no longer
+    /// arrive are woken and fail cleanly ("session closed"); later
+    /// submits error with "unknown session". Returns whether the id was
+    /// open.
+    pub fn close_session(&self, id: SessionId) -> bool {
+        let slot = self.sessions.lock().unwrap().remove(&id);
+        match slot {
+            Some(slot) => {
+                slot.state.lock().unwrap().closed = true;
+                slot.cv.notify_all();
+                true
+            }
+            None => false,
+        }
     }
 
     /// Whether the PJRT engine is up.
@@ -326,6 +548,61 @@ mod tests {
         let o = rx.recv().unwrap();
         assert!(!o.valid);
         assert!(o.error.unwrap().contains("artifacts"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dynamic_session_streams_ordered_batches() {
+        use crate::dynamic::UpdateBatch;
+        let svc = Service::start(2, None);
+        let g = random_bipartite(80, 120, 900, 77);
+        let (sid, init) = svc.open_session("sess", &g, Config::sim(schedule::N1_N2, 4));
+        assert!(init.valid, "initial coloring must verify");
+        assert!(init.n_colors > 0);
+        // three dependent batches streamed through two workers: the
+        // seq/condvar handshake must apply them in submit order.
+        let mut rxs = Vec::new();
+        for k in 0..3u32 {
+            let mut batch = UpdateBatch::default();
+            for i in 0..10u32 {
+                batch.add_edges.push(((k * 7 + i) % 80, (k * 11 + i * 3) % 120));
+            }
+            rxs.push(svc.submit(Job {
+                name: format!("u{k}"),
+                input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+                cfg: Config::sim(schedule::N1_N2, 4),
+                engine: EngineSel::Auto,
+            }));
+        }
+        for rx in rxs {
+            let o = rx.recv().unwrap();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+            let b = o.batch.expect("update outcomes carry batch stats");
+            assert!(b.dirty_nets > 0 || b.batch_edits == 0);
+        }
+        let colors = svc.session_colors(sid).expect("session open");
+        assert_eq!(colors.len(), 120);
+        assert!(colors.iter().all(|&c| c >= 0));
+        assert!(svc.close_session(sid));
+        assert!(!svc.close_session(sid), "second close is a no-op");
+        assert!(svc.session_colors(sid).is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn update_to_unknown_session_errors_cleanly() {
+        use crate::dynamic::UpdateBatch;
+        let svc = Service::start(1, None);
+        let rx = svc.submit(Job {
+            name: "nope".into(),
+            input: JobInput::Update { session: 999, batch: Arc::new(UpdateBatch::default()) },
+            cfg: Config::sim(schedule::N1_N2, 2),
+            engine: EngineSel::Native,
+        });
+        let o = rx.recv().unwrap();
+        assert!(!o.valid);
+        assert!(o.error.unwrap().contains("unknown session"));
+        assert!(o.batch.is_none());
         svc.shutdown();
     }
 

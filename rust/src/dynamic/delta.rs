@@ -1,0 +1,426 @@
+//! [`DeltaBipartite`] — a mutable overlay over the frozen CSR
+//! [`Bipartite`].
+//!
+//! The coloring engines consume an immutable CSR; a streaming client
+//! mutates the graph. This type bridges the two: batched
+//! [`DeltaBipartite::add_edge`] / [`DeltaBipartite::remove_edge`] /
+//! [`DeltaBipartite::add_net`] edits accumulate in small per-row patch
+//! lists (both incidence directions kept in sync), point queries merge
+//! base + patch on the fly, and [`DeltaBipartite::compact`] splices the
+//! patched rows back into a fresh CSR — clean rows are copied verbatim
+//! via [`Csr::with_replaced_rows`], so compaction cost is a memcpy plus
+//! the dirty-row footprint, not a re-sort of the whole graph.
+//!
+//! The overlay also tracks the *dirty frontier* the incremental engine
+//! seeds from: nets whose member lists changed since the last
+//! [`DeltaBipartite::take_dirty`], and the endpoints of changed edges.
+//! Only those nets can hold a stale duplicate color (edge deletions
+//! never invalidate a coloring), which is what makes repair cost scale
+//! with the batch instead of the graph.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Bipartite, Csr};
+
+/// Per-row patch: ids added to / removed from the frozen base row.
+/// Invariant: `add` is disjoint from the base row, `remove` is a subset
+/// of it, and both are duplicate-free (enforced by the edit methods).
+#[derive(Clone, Debug, Default)]
+struct Patch {
+    add: Vec<u32>,
+    remove: Vec<u32>,
+}
+
+impl Patch {
+    fn is_empty(&self) -> bool {
+        self.add.is_empty() && self.remove.is_empty()
+    }
+}
+
+/// Mutable overlay over a frozen [`Bipartite`] (see module docs).
+#[derive(Clone, Debug)]
+pub struct DeltaBipartite {
+    /// Frozen CSR snapshot (both incidence directions).
+    base: Bipartite,
+    /// Net-side patches (net id → member edits).
+    net_patch: BTreeMap<u32, Patch>,
+    /// Vertex-side mirror of the same edits (vertex id → net edits).
+    vtx_patch: BTreeMap<u32, Patch>,
+    /// Logical shape — may exceed the base shape until compaction.
+    n_nets: usize,
+    n_vertices: usize,
+    /// Logical incidence count under the overlay.
+    nnz: usize,
+    /// Effective edits since the last compaction.
+    pending: usize,
+    /// Shape grew past the base (forces the next compaction).
+    dims_dirty: bool,
+    /// Auto-compact once this many edits accumulate.
+    compact_threshold: usize,
+    /// Nets with insertions (or newly created) since the last
+    /// [`Self::take_dirty`] — new conflicts can only appear there.
+    dirty_nets: Vec<u32>,
+    /// Endpoints of changed edges since the last [`Self::take_dirty`].
+    dirty_vertices: Vec<u32>,
+}
+
+impl DeltaBipartite {
+    /// Wrap a frozen graph. The default compaction threshold keeps the
+    /// overlay below ~25% of the base size.
+    pub fn new(base: Bipartite) -> DeltaBipartite {
+        let threshold = base.nnz() / 4 + 1024;
+        DeltaBipartite {
+            n_nets: base.n_nets(),
+            n_vertices: base.n_vertices(),
+            nnz: base.nnz(),
+            base,
+            net_patch: BTreeMap::new(),
+            vtx_patch: BTreeMap::new(),
+            pending: 0,
+            dims_dirty: false,
+            compact_threshold: threshold,
+            dirty_nets: Vec::new(),
+            dirty_vertices: Vec::new(),
+        }
+    }
+
+    /// Override the auto-compaction threshold (edits between compactions).
+    pub fn with_compact_threshold(mut self, edits: usize) -> DeltaBipartite {
+        self.compact_threshold = edits.max(1);
+        self
+    }
+
+    /// Logical number of nets (`|V_B|`), overlay included.
+    pub fn n_nets(&self) -> usize {
+        self.n_nets
+    }
+
+    /// Logical number of vertices (`|V_A|`), overlay included.
+    pub fn n_vertices(&self) -> usize {
+        self.n_vertices
+    }
+
+    /// Logical number of incidences, overlay included.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Effective edits buffered since the last compaction.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Whether the overlay is empty (base CSR is exact).
+    pub fn is_compact(&self) -> bool {
+        self.pending == 0 && !self.dims_dirty
+    }
+
+    fn grow(&mut self, net: u32, vtx: u32) {
+        let rn = net as usize + 1;
+        let rv = vtx as usize + 1;
+        if rn > self.n_nets {
+            self.n_nets = rn;
+            self.dims_dirty = true;
+        }
+        if rv > self.n_vertices {
+            self.n_vertices = rv;
+            self.dims_dirty = true;
+        }
+    }
+
+    /// Membership in the frozen base only.
+    fn in_base(&self, net: u32, vtx: u32) -> bool {
+        (net as usize) < self.base.net_vtxs.n_rows
+            && self.base.net_vtxs.row(net as usize).binary_search(&vtx).is_ok()
+    }
+
+    /// Membership under the overlay (base + patches).
+    pub fn has_edge(&self, net: u32, vtx: u32) -> bool {
+        match (self.in_base(net, vtx), self.net_patch.get(&net)) {
+            (true, Some(p)) => !p.remove.contains(&vtx),
+            (true, None) => true,
+            (false, Some(p)) => p.add.contains(&vtx),
+            (false, None) => false,
+        }
+    }
+
+    /// Record "edge (key → other) now exists" in one patch direction.
+    /// `in_base` tells which side of the patch encodes existence.
+    fn patch_insert(map: &mut BTreeMap<u32, Patch>, key: u32, other: u32, in_base: bool) {
+        let p = map.entry(key).or_default();
+        if in_base {
+            // was overlay-removed (the caller saw has_edge() == false)
+            if let Some(i) = p.remove.iter().position(|&x| x == other) {
+                p.remove.swap_remove(i);
+            }
+        } else {
+            p.add.push(other);
+        }
+        if p.is_empty() {
+            map.remove(&key);
+        }
+    }
+
+    /// Record "edge (key → other) no longer exists" in one direction.
+    fn patch_delete(map: &mut BTreeMap<u32, Patch>, key: u32, other: u32, in_base: bool) {
+        let p = map.entry(key).or_default();
+        if in_base {
+            p.remove.push(other);
+        } else if let Some(i) = p.add.iter().position(|&x| x == other) {
+            p.add.swap_remove(i);
+        }
+        if p.is_empty() {
+            map.remove(&key);
+        }
+    }
+
+    /// Add incidence `(net, vtx)`; ids beyond the current shape grow it.
+    /// Returns whether the graph actually changed (duplicates are no-ops).
+    pub fn add_edge(&mut self, net: u32, vtx: u32) -> bool {
+        self.grow(net, vtx);
+        if self.has_edge(net, vtx) {
+            return false;
+        }
+        let in_base = self.in_base(net, vtx);
+        Self::patch_insert(&mut self.net_patch, net, vtx, in_base);
+        Self::patch_insert(&mut self.vtx_patch, vtx, net, in_base);
+        self.nnz += 1;
+        self.pending += 1;
+        self.dirty_nets.push(net);
+        self.dirty_vertices.push(vtx);
+        self.maybe_compact();
+        true
+    }
+
+    /// Remove incidence `(net, vtx)`. Returns whether it existed.
+    /// Deletions never invalidate a coloring, so the net does *not*
+    /// enter the dirty-net detection set (scanning it would be
+    /// guaranteed dead work); the endpoint is still recorded for the
+    /// per-batch metrics.
+    pub fn remove_edge(&mut self, net: u32, vtx: u32) -> bool {
+        if !self.has_edge(net, vtx) {
+            return false;
+        }
+        let in_base = self.in_base(net, vtx);
+        Self::patch_delete(&mut self.net_patch, net, vtx, in_base);
+        Self::patch_delete(&mut self.vtx_patch, vtx, net, in_base);
+        self.nnz -= 1;
+        self.pending += 1;
+        self.dirty_vertices.push(vtx);
+        self.maybe_compact();
+        true
+    }
+
+    /// Append a fresh net with the given members; returns its id.
+    /// Members beyond the current vertex shape grow it.
+    pub fn add_net(&mut self, members: &[u32]) -> u32 {
+        let id = self.n_nets as u32;
+        self.n_nets += 1;
+        self.dims_dirty = true;
+        self.dirty_nets.push(id);
+        for &u in members {
+            self.add_edge(id, u);
+        }
+        id
+    }
+
+    /// Base row merged with its patch: the overlay's view of one row.
+    fn merged_row(csr: &Csr, patch: &BTreeMap<u32, Patch>, id: u32) -> Vec<u32> {
+        let mut row: Vec<u32> = if (id as usize) < csr.n_rows {
+            csr.row(id as usize).to_vec()
+        } else {
+            Vec::new()
+        };
+        if let Some(p) = patch.get(&id) {
+            row.retain(|x| !p.remove.contains(x));
+            row.extend_from_slice(&p.add);
+            row.sort_unstable();
+        }
+        row
+    }
+
+    /// `vtxs(v)` under the overlay (allocates; hot paths should compact
+    /// and use the CSR directly).
+    pub fn vtxs(&self, v: u32) -> Vec<u32> {
+        Self::merged_row(&self.base.net_vtxs, &self.net_patch, v)
+    }
+
+    /// `nets(u)` under the overlay.
+    pub fn nets(&self, u: u32) -> Vec<u32> {
+        Self::merged_row(&self.base.vtx_nets, &self.vtx_patch, u)
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.pending >= self.compact_threshold {
+            self.compact();
+        }
+    }
+
+    /// Fold the overlay back into a fresh CSR (no-op when clean). Dirty
+    /// tracking is *not* cleared — it belongs to the repair cycle, not
+    /// the storage cycle.
+    pub fn compact(&mut self) {
+        if self.is_compact() {
+            return;
+        }
+        let mut replace: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        for &v in self.net_patch.keys() {
+            replace.insert(v, Self::merged_row(&self.base.net_vtxs, &self.net_patch, v));
+        }
+        let csr = self.base.net_vtxs.with_replaced_rows(self.n_nets, self.n_vertices, &replace);
+        debug_assert_eq!(csr.nnz(), self.nnz, "overlay nnz bookkeeping out of sync");
+        self.base = Bipartite::from_net_incidence(csr);
+        self.net_patch.clear();
+        self.vtx_patch.clear();
+        self.pending = 0;
+        self.dims_dirty = false;
+    }
+
+    /// Compact (if needed) and expose the CSR view the engines consume.
+    pub fn graph(&mut self) -> &Bipartite {
+        self.compact();
+        &self.base
+    }
+
+    /// Drain the dirty sets accumulated since the last call:
+    /// `(nets with insertions, endpoints of changed edges)`, sorted and
+    /// deduped. Removal-only nets are excluded by construction — a
+    /// deletion cannot create a duplicate, so detection there is dead
+    /// work (the endpoints still show up in the second list).
+    pub fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>) {
+        let mut nets = std::mem::take(&mut self.dirty_nets);
+        nets.sort_unstable();
+        nets.dedup();
+        let mut vtxs = std::mem::take(&mut self.dirty_vertices);
+        vtxs.sort_unstable();
+        vtxs.dedup();
+        (nets, vtxs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::random_bipartite;
+    use crate::util::prng::Rng;
+    use std::collections::BTreeSet;
+
+    fn tiny() -> Bipartite {
+        // n0 -> {0, 1}, n1 -> {1, 2}
+        Bipartite::from_net_incidence(Csr::from_edges(2, 3, &[(0, 0), (0, 1), (1, 1), (1, 2)]))
+    }
+
+    #[test]
+    fn add_remove_roundtrip_and_queries() {
+        let mut d = DeltaBipartite::new(tiny());
+        assert!(d.has_edge(0, 1));
+        assert!(!d.has_edge(0, 2));
+        assert!(d.add_edge(0, 2));
+        assert!(!d.add_edge(0, 2), "duplicate add is a no-op");
+        assert!(d.has_edge(0, 2));
+        assert_eq!(d.vtxs(0), vec![0, 1, 2]);
+        assert_eq!(d.nets(2), vec![0, 1]);
+        assert!(d.remove_edge(0, 0));
+        assert!(!d.remove_edge(0, 0), "double remove is a no-op");
+        assert_eq!(d.vtxs(0), vec![1, 2]);
+        assert_eq!(d.nets(0), Vec::<u32>::new());
+        assert_eq!(d.nnz(), 4);
+    }
+
+    #[test]
+    fn add_then_remove_cancels_cleanly() {
+        let mut d = DeltaBipartite::new(tiny());
+        let nnz0 = d.nnz();
+        assert!(d.add_edge(1, 0));
+        assert!(d.remove_edge(1, 0));
+        assert_eq!(d.nnz(), nnz0);
+        // base edge removed then re-added: back to base state
+        assert!(d.remove_edge(0, 1));
+        assert!(d.add_edge(0, 1));
+        assert_eq!(d.nnz(), nnz0);
+        assert_eq!(d.vtxs(0), vec![0, 1]);
+        d.compact();
+        let g = d.graph();
+        g.validate().unwrap();
+        assert_eq!(g.vtxs(0), &[0, 1]);
+    }
+
+    #[test]
+    fn growth_via_new_nets_and_vertices() {
+        let mut d = DeltaBipartite::new(tiny());
+        let id = d.add_net(&[0, 4]); // vertex 4 is new
+        assert_eq!(id, 2);
+        assert_eq!(d.n_nets(), 3);
+        assert_eq!(d.n_vertices(), 5);
+        assert!(d.add_edge(5, 3)); // net 5 is new -> nets 3, 4 implicit empty
+        assert_eq!(d.n_nets(), 6);
+        let g = d.graph();
+        g.validate().unwrap();
+        assert_eq!(g.n_nets(), 6);
+        assert_eq!(g.n_vertices(), 5);
+        assert_eq!(g.vtxs(2), &[0, 4]);
+        assert_eq!(g.vtxs(3), &[] as &[u32]);
+        assert_eq!(g.vtxs(5), &[3]);
+        assert_eq!(g.nets(4), &[2]);
+    }
+
+    #[test]
+    fn dirty_tracking_is_batch_scoped() {
+        let mut d = DeltaBipartite::new(tiny());
+        d.add_edge(0, 2);
+        d.remove_edge(1, 1); // removal: endpoint dirty, net NOT (no new conflicts)
+        d.add_edge(0, 2); // no-op: no extra dirt
+        let (nets, vtxs) = d.take_dirty();
+        assert_eq!(nets, vec![0], "removal-only nets stay out of detection");
+        assert_eq!(vtxs, vec![1, 2]);
+        let (nets2, vtxs2) = d.take_dirty();
+        assert!(nets2.is_empty() && vtxs2.is_empty(), "drained");
+        d.add_edge(1, 0);
+        let (nets3, _) = d.take_dirty();
+        assert_eq!(nets3, vec![1]);
+    }
+
+    #[test]
+    fn compaction_matches_ground_truth_edge_set() {
+        // Random edit stream mirrored into a plain edge set; the
+        // compacted CSR must equal Csr::from_edges of the mirror.
+        let g0 = random_bipartite(20, 30, 150, 7);
+        let mut rng = Rng::new(99);
+        let mut mirror: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for v in 0..g0.n_nets() {
+            for &u in g0.vtxs(v) {
+                mirror.insert((v as u32, u));
+            }
+        }
+        let mut d = DeltaBipartite::new(g0).with_compact_threshold(13);
+        for _ in 0..400 {
+            let v = rng.range(0, 20) as u32;
+            let u = rng.range(0, 30) as u32;
+            if rng.chance(0.5) {
+                assert_eq!(d.add_edge(v, u), mirror.insert((v, u)));
+            } else {
+                assert_eq!(d.remove_edge(v, u), mirror.remove(&(v, u)));
+            }
+        }
+        assert_eq!(d.nnz(), mirror.len());
+        let edges: Vec<(u32, u32)> = mirror.iter().copied().collect();
+        let truth = Csr::from_edges(20, 30, &edges);
+        let got = d.graph();
+        got.validate().unwrap();
+        assert_eq!(got.net_vtxs.ptr, truth.ptr);
+        assert_eq!(got.net_vtxs.adj, truth.adj);
+    }
+
+    #[test]
+    fn threshold_triggers_periodic_compaction() {
+        let mut d = DeltaBipartite::new(tiny()).with_compact_threshold(2);
+        d.add_edge(0, 2);
+        assert_eq!(d.pending(), 1);
+        d.add_edge(1, 0); // second edit crosses the threshold
+        assert!(d.is_compact(), "auto-compacted at the threshold");
+        assert_eq!(d.pending(), 0);
+        // dirty sets survive compaction (they belong to the repair cycle)
+        let (nets, _) = d.take_dirty();
+        assert_eq!(nets, vec![0, 1]);
+    }
+}

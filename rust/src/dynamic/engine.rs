@@ -1,0 +1,288 @@
+//! Incremental repair: the paper's speculate → detect → repeat loop
+//! seeded with only the dirty frontier.
+//!
+//! After a batch of edge insertions, a stale coloring can only be wrong
+//! *inside a changed net*: a deletion never creates a clash, and an
+//! insertion `(v, u)` can only clash `u` against the other members of
+//! `v`. So repair is exactly the machinery the optimistic engine
+//! already has, pointed at the dirty set:
+//!
+//! 1. **Detect** — Algorithm 7 restricted to the changed nets
+//!    ([`crate::coloring::bgpc::net::conflict_phase_on`]): keep each
+//!    color's first occurrence per dirty net, uncolor later duplicates.
+//!    Cost: the batch's net footprint, not `O(|E|)`.
+//! 2. **Repair** — the standard vertex-based speculate/detect loop
+//!    (Algorithms 4–5) over the uncolored remainder: detection losers
+//!    plus brand-new vertices. The work queue is the dirty vertex
+//!    frontier's uncolored subset — typically a vanishing fraction of
+//!    `|V_A|`, which is where the orders-of-magnitude win over full
+//!    recoloring comes from (Rokos et al., arXiv:1505.04086, make the
+//!    same observation for iterated speculation).
+//! 3. The `MAX_ITERS` sequential safety net backstops adversarial
+//!    streams, identical to the full engine.
+//!
+//! The caller owns the [`ThreadState`] bank, so the B1/B2 balancing
+//! trackers (`col_max`, `col_next`) persist across batches and the
+//! color-set balance does not degrade as updates stream.
+
+use crate::coloring::balance::Balance;
+use crate::coloring::bgpc::{
+    collect_next, color_cap, net, sequential_finish, vertex, MAX_ITERS,
+};
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::schedule::AlgSpec;
+use crate::graph::Bipartite;
+use crate::par::{ColorStore, Driver, SharedQueue};
+
+use super::BatchStats;
+
+/// Dirty sets are usually far smaller than one chunk per thread; the
+/// paper's chunk-64 exists to amortize cursor contention on big queues,
+/// but on a tiny queue it serializes the whole repair onto one thread.
+/// Drop to chunk 1 when the queue cannot feed every thread a chunk
+/// (static scheduling, chunk 0, is kept as-is).
+fn adaptive_chunk(n_items: usize, threads: usize, spec_chunk: usize) -> usize {
+    if spec_chunk == 0 || n_items >= spec_chunk * threads {
+        spec_chunk
+    } else {
+        1
+    }
+}
+
+/// Repair `prev` (a valid coloring of the graph *before* the batch)
+/// into a valid coloring of `g` (the graph *after* the batch).
+///
+/// * `dirty_nets` — nets with insertions (from
+///   [`super::DeltaBipartite::take_dirty`]; removal-only nets cannot
+///   hold new conflicts and are already excluded there).
+/// * `seeds` — endpoints of changed edges; their uncolored subset
+///   (brand-new vertices) joins the work queue.
+/// * `ts` — caller-owned per-thread state; balancing trackers persist.
+///
+/// `prev` may be shorter than `g.n_vertices()` (vertex growth); the
+/// whole growth tail starts uncolored and is enqueued. Returns the new
+/// coloring plus per-batch metrics (`batch_edits` is left at 0 for the
+/// session layer to fill).
+///
+/// Cost note: the *coloring work* scales with the batch footprint, but
+/// each call still pays O(|V|) memcpy-class setup (store seeding,
+/// scratch vectors, final snapshot) — same class as the session's
+/// per-batch compaction, and excluded from the simulated repair time.
+pub fn repair<D: Driver>(
+    g: &Bipartite,
+    prev: &[i32],
+    dirty_nets: &[u32],
+    seeds: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+    ts: &mut [ThreadState],
+) -> (Vec<i32>, BatchStats) {
+    let n = g.n_vertices();
+    let t0 = std::time::Instant::now();
+
+    // Seed the store with the stale coloring (commit time 0: visible to
+    // every region of this run).
+    let colors = d.new_colors(n);
+    for (u, &c) in prev.iter().enumerate().take(n) {
+        if c >= 0 {
+            colors.write(u, c, 0);
+        }
+    }
+
+    // Forbidden-domain safety: stale colors and persistent balancing
+    // trackers may exceed the *new* graph's cap (e.g. after deletions),
+    // and B1's safety first-fit can probe past both — size for the sum.
+    let prev_max = prev.iter().copied().max().unwrap_or(-1);
+    let ts_max = ts.iter().map(|s| s.col_max.max(s.col_next)).max().unwrap_or(0);
+    let cap = color_cap(g) + prev_max.max(ts_max).max(0) as usize + 2;
+    for s in ts.iter_mut() {
+        s.forbidden.ensure(cap);
+    }
+
+    let mut sim_secs = 0.0f64;
+    let mut work_units = 0u64;
+
+    // --- phase 1: dirty-net conflict detection (Alg. 7 on the subset) ---
+    let det_chunk = adaptive_chunk(dirty_nets.len(), d.threads(), spec.chunk);
+    let det = net::conflict_phase_on(g, dirty_nets, &colors, d, ts, det_chunk);
+    let is_sim = det.sim_ns.is_some();
+    sim_secs += det.seconds();
+    work_units += det.busy_units.iter().sum::<u64>();
+
+    // Dirty vertex frontier: members of changed nets, the changed
+    // edges' endpoints, and the whole growth tail — id-gap growth (e.g.
+    // adding vertex 95 to a 90-vertex graph) creates vertices 90..95
+    // that appear in no edit but still need a color. The frontier's
+    // uncolored subset is the initial work queue.
+    let mut frontier: Vec<u32> = Vec::with_capacity(seeds.len());
+    for &v in dirty_nets {
+        frontier.extend_from_slice(g.vtxs(v as usize));
+    }
+    frontier.extend_from_slice(seeds);
+    frontier.extend(prev.len() as u32..n as u32);
+    frontier.retain(|&u| (u as usize) < n);
+    frontier.sort_unstable();
+    frontier.dedup();
+    let frontier_size = frontier.len();
+    let mut w: Vec<u32> = frontier
+        .iter()
+        .copied()
+        .filter(|&u| colors.committed(u as usize) == -1)
+        .collect();
+    let conflicts = w.len();
+
+    // --- phase 2: vertex-based speculate/detect over the remainder ---
+    let shared = SharedQueue::with_capacity(n);
+    let mut recolored_mark = vec![false; n];
+    let mut recolored = 0usize;
+    let mut iterations = 0usize;
+    while !w.is_empty() && iterations < MAX_ITERS {
+        iterations += 1;
+        for &u in &w {
+            let u = u as usize;
+            if !recolored_mark[u] {
+                recolored_mark[u] = true;
+                recolored += 1;
+            }
+        }
+        let chunk = adaptive_chunk(w.len(), d.threads(), spec.chunk);
+        let cr = vertex::color_phase(g, &w, &colors, d, ts, chunk, bal);
+        sim_secs += cr.seconds();
+        work_units += cr.busy_units.iter().sum::<u64>();
+        let rr = vertex::conflict_phase(
+            g,
+            &w,
+            &colors,
+            d,
+            ts,
+            chunk,
+            spec.lazy_queues,
+            &shared,
+        );
+        sim_secs += rr.seconds();
+        work_units += rr.busy_units.iter().sum::<u64>();
+        w = collect_next(spec.lazy_queues, ts, &shared);
+    }
+    if !w.is_empty() {
+        // adversarial stream: same safety net as the full engine
+        for &u in &w {
+            let u = u as usize;
+            if !recolored_mark[u] {
+                recolored_mark[u] = true;
+                recolored += 1;
+            }
+        }
+        sequential_finish(g, &w, &colors, &mut ts[0], d.now());
+    }
+
+    let colors_vec = colors.to_vec();
+    let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
+    let prev_n_colors = crate::coloring::stats::distinct_colors(prev);
+    let stats = BatchStats {
+        batch_edits: 0,
+        dirty_nets: dirty_nets.len(),
+        frontier: frontier_size,
+        conflicts,
+        recolored,
+        colors_added: n_colors.saturating_sub(prev_n_colors),
+        n_colors,
+        iterations,
+        seconds: if is_sim { sim_secs } else { t0.elapsed().as_secs_f64() },
+        compact_seconds: 0.0,
+        work_units,
+    };
+    (colors_vec, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::schedule;
+    use crate::coloring::verify::bgpc_valid;
+    use crate::dynamic::DeltaBipartite;
+    use crate::graph::Csr;
+    use crate::par::ThreadsDriver;
+    use crate::sim::{CostModel, SimDriver};
+
+    #[test]
+    fn repair_fixes_a_planted_edge_conflict() {
+        // nets: n0 = {0,1}, n1 = {2,3}; valid coloring [0,1,0,1].
+        let m = Csr::from_edges(2, 4, &[(0, 0), (0, 1), (1, 2), (1, 3)]);
+        let mut delta = DeltaBipartite::new(Bipartite::from_net_incidence(m));
+        let prev = vec![0, 1, 0, 1];
+        // add (n0, 2): net 0 becomes {0,1,2} with colors {0,1,0} — clash.
+        assert!(delta.add_edge(0, 2));
+        let (dirty_nets, seeds) = delta.take_dirty();
+        assert_eq!(dirty_nets, vec![0]);
+        assert_eq!(seeds, vec![2]);
+        let g = delta.graph().clone();
+        let mut ts = ThreadState::bank(2, 64);
+        let mut d = ThreadsDriver::new(2);
+        let (colors, stats) = repair(
+            &g,
+            &prev,
+            &dirty_nets,
+            &seeds,
+            &schedule::V_V_64D,
+            Balance::None,
+            &mut d,
+            &mut ts,
+        );
+        assert!(bgpc_valid(&g, &colors).is_ok());
+        assert_eq!(stats.conflicts, 1);
+        assert_eq!(stats.recolored, 1, "only the clash loser is recolored");
+        assert_eq!(colors[0], 0, "untouched vertices keep their colors");
+        assert_eq!(colors[1], 1);
+        assert_eq!(colors[3], 1);
+        assert_eq!(colors[2], 2, "loser takes the first free color");
+    }
+
+    #[test]
+    fn removal_only_batches_recolor_nothing() {
+        let m = Csr::from_edges(2, 4, &[(0, 0), (0, 1), (1, 1), (1, 2), (1, 3)]);
+        let mut delta = DeltaBipartite::new(Bipartite::from_net_incidence(m));
+        let prev = vec![0, 1, 0, 2];
+        assert!(delta.remove_edge(1, 3));
+        let (dirty_nets, seeds) = delta.take_dirty();
+        let g = delta.graph().clone();
+        let mut ts = ThreadState::bank(1, 64);
+        let mut d = ThreadsDriver::new(1);
+        let (colors, stats) = repair(
+            &g,
+            &prev,
+            &dirty_nets,
+            &seeds,
+            &schedule::V_V_64D,
+            Balance::None,
+            &mut d,
+            &mut ts,
+        );
+        assert!(bgpc_valid(&g, &colors).is_ok());
+        assert_eq!(stats.conflicts, 0);
+        assert_eq!(stats.recolored, 0);
+        assert_eq!(colors, prev, "deletions never perturb the coloring");
+    }
+
+    #[test]
+    fn repair_is_deterministic_under_the_simulator() {
+        let m = Csr::from_edges(3, 6, &[(0, 0), (0, 1), (0, 2), (1, 2), (1, 3), (2, 4), (2, 5)]);
+        let g0 = Bipartite::from_net_incidence(m);
+        let prev = vec![0, 1, 2, 0, 0, 1];
+        let run = || {
+            let mut delta = DeltaBipartite::new(g0.clone());
+            delta.add_edge(0, 3);
+            delta.add_edge(2, 0);
+            let (dn, sd) = delta.take_dirty();
+            let g = delta.graph().clone();
+            let mut ts = ThreadState::bank(4, 64);
+            let mut d = SimDriver::new(4, CostModel::default());
+            repair(&g, &prev, &dn, &sd, &schedule::N1_N2, Balance::None, &mut d, &mut ts)
+        };
+        let (c1, s1) = run();
+        let (c2, s2) = run();
+        assert_eq!(c1, c2);
+        assert_eq!(s1.seconds, s2.seconds);
+        assert_eq!(s1.recolored, s2.recolored);
+    }
+}

@@ -1,0 +1,251 @@
+//! [`DynamicSession`] — a long-lived coloring that absorbs update
+//! batches.
+//!
+//! The session owns the three pieces of state that make incremental
+//! BGPC work: the [`DeltaBipartite`] overlay (graph of record), the
+//! current coloring, and the per-thread [`ThreadState`] bank. The bank
+//! is created once at [`DynamicSession::start`] and threaded through
+//! every repair, so the B1/B2 balancing trackers (`col_max`,
+//! `col_next`) keep spreading color mass exactly as they would in one
+//! long run — streaming updates does not degrade color-set balance.
+//!
+//! Jacobian-style clients (Çatalyürek et al., arXiv:1205.3809 motivate
+//! coloring as a *recurring* cost in iterative solvers) submit the
+//! sparsity pattern once, then stream nonzero gains/losses between
+//! solves; each [`DynamicSession::apply`] returns per-batch metrics.
+
+use crate::coloring::bgpc::{self, color_cap};
+use crate::coloring::verify::{bgpc_valid, Violation};
+use crate::coloring::{ColoringResult, Config, ExecMode};
+use crate::coloring::forbidden::ThreadState;
+use crate::graph::Bipartite;
+use crate::par::ThreadsDriver;
+use crate::sim::SimDriver;
+
+use super::{engine, BatchStats, DeltaBipartite, UpdateBatch};
+
+/// A long-lived incremental coloring (see module docs).
+pub struct DynamicSession {
+    delta: DeltaBipartite,
+    colors: Vec<i32>,
+    /// Per-thread scratch, persistent across batches (B1/B2 trackers).
+    ts: Vec<ThreadState>,
+    cfg: Config,
+    batches: usize,
+}
+
+impl DynamicSession {
+    /// Color `g` from scratch under `cfg` and open the session around
+    /// the result. Returns the session and the initial full-run result.
+    pub fn start(g: Bipartite, cfg: Config) -> (DynamicSession, ColoringResult) {
+        let mut ts = ThreadState::bank(cfg.threads, color_cap(&g));
+        let order = cfg.ordering.compute(&g);
+        let r = match cfg.mode {
+            ExecMode::Threads => {
+                let mut d = ThreadsDriver::new(cfg.threads);
+                bgpc::run_capped(&g, &order, &cfg.spec, cfg.balance, &mut d, &mut ts, bgpc::MAX_ITERS)
+            }
+            ExecMode::Sim(model) => {
+                let mut d = SimDriver::new(cfg.threads, model);
+                bgpc::run_capped(&g, &order, &cfg.spec, cfg.balance, &mut d, &mut ts, bgpc::MAX_ITERS)
+            }
+        };
+        let colors = r.colors.clone();
+        let session = DynamicSession { delta: DeltaBipartite::new(g), colors, ts, cfg, batches: 0 };
+        (session, r)
+    }
+
+    /// Apply one update batch: record the edits in the overlay, compact,
+    /// and repair the coloring from the dirty frontier. Returns the
+    /// batch metrics (dirty-set size, recolored count, colors added…).
+    pub fn apply(&mut self, batch: &UpdateBatch) -> BatchStats {
+        let mut edits = 0usize;
+        for &(v, u) in &batch.add_edges {
+            if self.delta.add_edge(v, u) {
+                edits += 1;
+            }
+        }
+        for &(v, u) in &batch.remove_edges {
+            if self.delta.remove_edge(v, u) {
+                edits += 1;
+            }
+        }
+        for members in &batch.add_nets {
+            // one edit for the net itself plus its *effective* incidences
+            // (duplicate members inside add_net are no-ops)
+            let nnz_before = self.delta.nnz();
+            self.delta.add_net(members);
+            edits += 1 + (self.delta.nnz() - nnz_before);
+        }
+        let (dirty_nets, seeds) = self.delta.take_dirty();
+        // The engines consume CSR, so the session compacts every batch.
+        // This is a splice + transpose — memcpy-speed, not coloring work
+        // — and is reported separately (compact_seconds, wall-clock)
+        // from the repair cost the simulator models. DeltaBipartite's
+        // lazy threshold matters for clients buffering edits directly.
+        let tc = std::time::Instant::now();
+        let g = self.delta.graph();
+        let compact_seconds = tc.elapsed().as_secs_f64();
+        let (colors, mut stats) = match self.cfg.mode {
+            ExecMode::Threads => {
+                let mut d = ThreadsDriver::new(self.cfg.threads);
+                engine::repair(
+                    g,
+                    &self.colors,
+                    &dirty_nets,
+                    &seeds,
+                    &self.cfg.spec,
+                    self.cfg.balance,
+                    &mut d,
+                    &mut self.ts,
+                )
+            }
+            ExecMode::Sim(model) => {
+                let mut d = SimDriver::new(self.cfg.threads, model);
+                engine::repair(
+                    g,
+                    &self.colors,
+                    &dirty_nets,
+                    &seeds,
+                    &self.cfg.spec,
+                    self.cfg.balance,
+                    &mut d,
+                    &mut self.ts,
+                )
+            }
+        };
+        stats.batch_edits = edits;
+        stats.compact_seconds = compact_seconds;
+        self.colors = colors;
+        self.batches += 1;
+        stats
+    }
+
+    /// The current graph (compacting the overlay if needed).
+    pub fn graph(&mut self) -> &Bipartite {
+        self.delta.graph()
+    }
+
+    /// Direct access to the overlay (tests, ad-hoc edits between
+    /// batches; remember that [`Self::apply`] is what repairs colors).
+    pub fn delta(&mut self) -> &mut DeltaBipartite {
+        &mut self.delta
+    }
+
+    /// The current committed coloring.
+    pub fn colors(&self) -> &[i32] {
+        &self.colors
+    }
+
+    /// Number of distinct colors in the current coloring.
+    pub fn n_colors(&self) -> usize {
+        crate::coloring::stats::distinct_colors(&self.colors)
+    }
+
+    /// Batches applied so far.
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// The persistent per-thread state (inspect B1/B2 trackers).
+    pub fn thread_states(&self) -> &[ThreadState] {
+        &self.ts
+    }
+
+    /// The session's run configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Check the current coloring against the current graph.
+    pub fn verify(&mut self) -> Result<(), Violation> {
+        let g = self.delta.graph();
+        bgpc_valid(g, &self.colors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::{schedule, Balance};
+    use crate::graph::generators::random_bipartite;
+    use crate::testing::forall_bipartite;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn session_survives_random_edit_streams() {
+        forall_bipartite(12, 0xD11A, |g0, case| {
+            let mut rng = Rng::new(case.seed ^ 0x1234);
+            let (mut s, init) = DynamicSession::start(g0.clone(), Config::sim(schedule::N1_N2, 4));
+            assert!(init.colors.iter().all(|&c| c >= 0));
+            for round in 0..3 {
+                let mut batch = UpdateBatch::default();
+                let n_nets = g0.n_nets();
+                let n_vtxs = g0.n_vertices();
+                for _ in 0..rng.range(1, 12) {
+                    let v = rng.range(0, n_nets) as u32;
+                    let u = rng.range(0, n_vtxs) as u32;
+                    if rng.chance(0.6) {
+                        batch.add_edges.push((v, u));
+                    } else {
+                        batch.remove_edges.push((v, u));
+                    }
+                }
+                if rng.chance(0.3) {
+                    // occasionally grow: a new net over (possibly new) vertices
+                    let k = rng.range(0, 4);
+                    let members: Vec<u32> =
+                        (0..k).map(|_| rng.range(0, n_vtxs + 2) as u32).collect();
+                    batch.add_nets.push(members);
+                }
+                let st = s.apply(&batch);
+                assert!(
+                    s.verify().is_ok(),
+                    "invalid after round {round} on {case:?} ({st:?})"
+                );
+                assert_eq!(s.batches(), round + 1);
+            }
+        });
+    }
+
+    #[test]
+    fn balancing_trackers_persist_across_batches() {
+        let g = random_bipartite(60, 90, 700, 5);
+        let cfg = Config::sim(schedule::V_N2, 4).with_balance(Balance::B2);
+        let (mut s, _init) = DynamicSession::start(g, cfg);
+        let before: Vec<i32> = s.thread_states().iter().map(|t| t.col_max).collect();
+        assert!(before.iter().any(|&m| m > 0), "initial run populated the trackers");
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push((0, 0));
+        batch.add_edges.push((1, 5));
+        batch.add_edges.push((2, 9));
+        s.apply(&batch);
+        let after: Vec<i32> = s.thread_states().iter().map(|t| t.col_max).collect();
+        for (b, a) in before.iter().zip(after.iter()) {
+            assert!(a >= b, "col_max must never reset across batches");
+        }
+        assert!(s.verify().is_ok());
+    }
+
+    #[test]
+    fn untouched_regions_keep_their_colors() {
+        let g = random_bipartite(100, 150, 1000, 11);
+        let (mut s, init) = DynamicSession::start(g, Config::sim(schedule::V_N2, 8));
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push((0, 0));
+        batch.add_edges.push((0, 1));
+        let st = s.apply(&batch);
+        let changed = init
+            .colors
+            .iter()
+            .zip(s.colors().iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            changed <= st.recolored,
+            "only repaired vertices may change ({changed} vs {})",
+            st.recolored
+        );
+        assert!(s.verify().is_ok());
+    }
+}

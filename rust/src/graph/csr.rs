@@ -128,6 +128,34 @@ impl Csr {
         Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, adj }
     }
 
+    /// Splice-rebuild: a new CSR that keeps every row verbatim except
+    /// the listed replacements (each a sorted, deduped id list). The
+    /// shape may grow (`n_rows >= self.n_rows`, `n_cols >= self.n_cols`);
+    /// rows beyond the old shape default to empty unless replaced. This
+    /// is the compaction primitive of the dynamic delta overlay: only
+    /// dirty rows are rebuilt, clean rows are a straight memcpy.
+    pub fn with_replaced_rows(
+        &self,
+        n_rows: usize,
+        n_cols: usize,
+        replace: &std::collections::BTreeMap<u32, Vec<u32>>,
+    ) -> Csr {
+        assert!(n_rows >= self.n_rows, "splice cannot drop rows");
+        assert!(n_cols >= self.n_cols, "splice cannot drop columns");
+        let mut ptr = Vec::with_capacity(n_rows + 1);
+        ptr.push(0usize);
+        let mut adj: Vec<u32> = Vec::with_capacity(self.adj.len());
+        for r in 0..n_rows {
+            if let Some(row) = replace.get(&(r as u32)) {
+                adj.extend_from_slice(row);
+            } else if r < self.n_rows {
+                adj.extend_from_slice(self.row(r));
+            }
+            ptr.push(adj.len());
+        }
+        Csr { n_rows, n_cols, ptr, adj }
+    }
+
     /// True if the matrix is square and its pattern is symmetric.
     pub fn is_structurally_symmetric(&self) -> bool {
         if self.n_rows != self.n_cols {
@@ -220,6 +248,23 @@ mod tests {
         g.validate().unwrap();
         assert_eq!(g.row(0), &[2, 3]);
         assert_eq!(g.row(1), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn with_replaced_rows_splices_and_grows() {
+        let g = sample(); // r0 -> {0,2}, r1 -> {1,2,3}, r2 -> {}
+        let mut replace = std::collections::BTreeMap::new();
+        replace.insert(1u32, vec![0u32, 4]);
+        replace.insert(4u32, vec![2u32]);
+        let s = g.with_replaced_rows(5, 6, &replace);
+        s.validate().unwrap();
+        assert_eq!(s.n_rows, 5);
+        assert_eq!(s.n_cols, 6);
+        assert_eq!(s.row(0), &[0, 2], "clean row copied verbatim");
+        assert_eq!(s.row(1), &[0, 4], "replaced row");
+        assert_eq!(s.row(2), &[] as &[u32]);
+        assert_eq!(s.row(3), &[] as &[u32], "new row defaults empty");
+        assert_eq!(s.row(4), &[2], "new row replaced");
     }
 
     #[test]

@@ -171,6 +171,59 @@ fn prop_verify_rejects_fuzzed_corruptions() {
 }
 
 #[test]
+fn prop_balancing_on_presets_valid_capped_and_less_skewed() {
+    // Table VI's claim, as properties over every calibrated preset:
+    // balanced runs verify, stay inside the engine's color_cap bound,
+    // and reduce color-cardinality skew relative to the unbalanced
+    // baseline (per-preset with slack; strictly in aggregate).
+    use bgpc::coloring::bgpc::color_cap;
+    use bgpc::graph::PRESETS;
+    let mut ratios = Vec::new();
+    for p in PRESETS.iter() {
+        let g = p.bipartite(0.02, 5);
+        let cap = color_cap(&g) as i32;
+        let base = color_bgpc(&g, &Config::sim(schedule::V_N2, 16));
+        assert!(bgpc_valid(&g, &base.colors).is_ok(), "{} baseline invalid", p.name);
+        let u_std = base.stats().stddev_cardinality;
+        let mut best = f64::INFINITY;
+        for bal in [Balance::B1, Balance::B2] {
+            let r = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
+            assert!(bgpc_valid(&g, &r.colors).is_ok(), "{} {bal:?} invalid", p.name);
+            let max_c = r.colors.iter().copied().max().unwrap_or(-1);
+            assert!(max_c < cap, "{} {bal:?}: color {max_c} >= cap {cap}", p.name);
+            best = best.min(r.stats().stddev_cardinality);
+        }
+        assert!(
+            best <= u_std * 1.05 + 1.0,
+            "{}: balanced skew {best:.2} vs unbalanced {u_std:.2}",
+            p.name
+        );
+        ratios.push(best.max(1e-9) / u_std.max(1e-9));
+    }
+    let geo = bgpc::util::geomean(&ratios);
+    assert!(
+        geo < 0.95,
+        "balancing should lower cardinality skew in aggregate, got ratio {geo:.3}"
+    );
+}
+
+#[test]
+fn prop_balanced_runs_always_valid() {
+    forall_bipartite(20, 0xBA1, |g, case| {
+        for bal in [Balance::B1, Balance::B2] {
+            for spec in [schedule::V_N2, schedule::N1_N2] {
+                let r = color_bgpc(g, &Config::sim(spec, 8).with_balance(bal));
+                assert!(
+                    bgpc_valid(g, &r.colors).is_ok(),
+                    "{bal:?} {} invalid on {case:?}",
+                    spec.name
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_relabeled_graph_same_color_count_seq() {
     // sequential greedy is order-dependent but relabeling + identical
     // visit order must give the same number of colors.

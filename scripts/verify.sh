@@ -1,8 +1,9 @@
 #!/usr/bin/env sh
 # Local mirror of CI: tier-1 gate plus target-coverage builds.
 #
-#   scripts/verify.sh            # build + test + benches/examples + fmt
-#   SKIP_FMT=1 scripts/verify.sh # when rustfmt is not installed
+#   scripts/verify.sh              # build + test + benches/examples + clippy + fmt
+#   SKIP_FMT=1 scripts/verify.sh   # when rustfmt is not installed
+#   SKIP_CLIPPY=1 scripts/verify.sh# when clippy is not installed
 set -eu
 
 cd "$(dirname "$0")/../rust"
@@ -16,6 +17,15 @@ BGPC_ARTIFACTS="${BGPC_ARTIFACTS:-../artifacts}" cargo test -q
 
 echo "== cargo build --benches --examples =="
 cargo build --benches --examples
+
+if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
+    echo "== clippy skipped (SKIP_CLIPPY=1) =="
+elif cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy -- -D warnings
+else
+    echo "== clippy skipped (cargo-clippy not installed) =="
+fi
 
 if [ "${SKIP_FMT:-0}" = "1" ]; then
     echo "== fmt skipped (SKIP_FMT=1) =="
