@@ -1,4 +1,5 @@
-//! Incremental repair vs. full recolor across update-batch sizes.
+//! Incremental repair vs. full recolor across update-batch sizes —
+//! BGPC on every preset, D2GC on the symmetric ones.
 //!
 //! For every preset and batch sizes from 0.01% to 10% of the edges
 //! (half insertions, half deletions), a dynamic session absorbs the
@@ -6,8 +7,10 @@
 //! graph from scratch, both under the simulator's deterministic
 //! 16-thread cost model. The acceptance row is the 0.1% batch (a "≤1%"
 //! update): repair must be ≥5× faster than full recolor and touch ≤10%
-//! of the vertices on every preset. A small real-`ThreadsDriver` pass
-//! at the end smoke-checks the same flow off the simulator.
+//! of the vertices on every preset — for BGPC *and* for D2GC (the
+//! problem-generic engine, DESIGN.md §9; symmetric presets mirror
+//! Table V's eligibility column). A small real-`ThreadsDriver` pass
+//! at the end smoke-checks both flows off the simulator.
 //!
 //!   cargo bench --bench dynamic            # BGPC_SCALE=0.5 default
 //!   BGPC_SCALE=1.0 cargo bench --bench dynamic
@@ -15,33 +18,13 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use bgpc::coloring::{color_bgpc, schedule, Config, ExecMode};
-use bgpc::dynamic::{DynamicSession, UpdateBatch};
-use bgpc::graph::{Bipartite, PRESETS};
+use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Config, ExecMode};
+use bgpc::dynamic::DynamicSession;
+use bgpc::graph::PRESETS;
+// One batch-distribution definition shared with tests/dynamic_integration.rs,
+// so the test-scale and bench-scale acceptance checks gate the same stream.
+use bgpc::testing::{random_symmetric_update_batch, random_update_batch};
 use bgpc::util::prng::Rng;
-
-/// A mixed batch: `edits` incidences, alternating remove-existing /
-/// add-random, drawn deterministically from `rng`.
-fn random_batch(g: &Bipartite, edits: usize, rng: &mut Rng) -> UpdateBatch {
-    let mut b = UpdateBatch::default();
-    for i in 0..edits {
-        if i % 2 == 0 {
-            let v = rng.range(0, g.n_nets());
-            let row = g.vtxs(v);
-            if row.is_empty() {
-                continue;
-            }
-            let u = row[rng.range(0, row.len())];
-            b.remove_edges.push((v as u32, u));
-        } else {
-            b.add_edges.push((
-                rng.range(0, g.n_nets()) as u32,
-                rng.range(0, g.n_vertices()) as u32,
-            ));
-        }
-    }
-    b
-}
 
 fn main() {
     let fractions = [0.0001f64, 0.001, 0.01, 0.1];
@@ -68,7 +51,7 @@ fn main() {
             let (mut session, _init) = DynamicSession::start(g.clone(), cfg.clone());
             let mut rng = Rng::new(common::seed() ^ 0xD1A0 ^ ((fi as u64) << 32));
             let edits = ((nnz as f64 * frac) as usize).max(16);
-            let batch = random_batch(session.graph(), edits, &mut rng);
+            let batch = random_update_batch(session.graph(), edits, &mut rng);
             let stats = session.apply(&batch);
             assert!(session.verify().is_ok(), "{}: repair left an invalid coloring", p.name);
 
@@ -121,18 +104,115 @@ fn main() {
         &csv,
     );
 
-    // Real-thread smoke pass: same flow, tiny scale, wall-clock timing.
+    // === D2GC: the same sweep through the problem-generic engine, on
+    // the symmetric presets (Table V's eligibility column). Scale is
+    // halved: D2GC work is quadratic in the neighborhood, so the full
+    // recolor baseline — not the repair — dominates wall-clock.
+    let d2scale = common::scale() * 0.5;
+    println!("\n=== dynamic D2GC: incremental repair vs full recolor (sim, t=16, N1-N2) ===");
+    println!(
+        "{:<16} {:>8} | {:>7} {:>8} {:>9} {:>9} | {:>10} {:>10} | {:>8}",
+        "graph", "batch%", "edits", "dirty", "recolor", "+colors", "repair_s", "full_s", "speedup"
+    );
+    let mut d2csv = Vec::new();
+    for p in PRESETS.iter().filter(|p| p.symmetric) {
+        let m = p.net_incidence(d2scale, common::seed());
+        let n = m.n_rows;
+        let nnz = m.nnz();
+        for (fi, &frac) in fractions.iter().enumerate() {
+            let (mut session, _init) = DynamicSession::start(m.clone(), cfg.clone());
+            let mut rng = Rng::new(common::seed() ^ 0xD2D2 ^ ((fi as u64) << 32));
+            // fractions of the *undirected* edge count: directed nnz
+            // counts each off-diagonal pair twice, and every batch
+            // entry mirrors into two incidences — this keeps the
+            // labeled batch% on the same per-incidence basis as the
+            // BGPC sweep above
+            let edits = ((nnz as f64 * frac / 2.0) as usize).max(16);
+            let batch = random_symmetric_update_batch(session.graph(), edits, &mut rng);
+            let stats = session.apply(&batch);
+            assert!(
+                session.verify().is_ok(),
+                "{}: D2GC repair left an invalid coloring",
+                p.name
+            );
+
+            // baseline: recolor the *updated* graph from scratch
+            let full = color_d2gc(session.graph(), &cfg);
+            let speedup = full.seconds / stats.seconds.max(1e-12);
+            println!(
+                "{:<16} {:>8.3} | {:>7} {:>8} {:>9} {:>9} | {:>10.3e} {:>10.3e} | {:>8.1}",
+                p.name,
+                frac * 100.0,
+                stats.batch_edits,
+                stats.dirty_nets,
+                stats.recolored,
+                stats.colors_added,
+                stats.seconds,
+                full.seconds,
+                speedup
+            );
+            d2csv.push(format!(
+                "{},{},{},{},{},{},{:.6e},{:.6e},{:.2}",
+                p.name,
+                frac,
+                stats.batch_edits,
+                stats.dirty_nets,
+                stats.recolored,
+                stats.colors_added,
+                stats.seconds,
+                full.seconds,
+                speedup
+            ));
+            if frac <= 0.001 {
+                // the acceptance row: D2GC parity with the BGPC gate
+                assert!(
+                    stats.recolored * 10 <= n,
+                    "{} @{frac}: recolored {} of {n} vertices (>10%)",
+                    p.name,
+                    stats.recolored
+                );
+                assert!(
+                    speedup >= 5.0,
+                    "{} @{frac}: only {speedup:.1}x over full D2GC recolor",
+                    p.name
+                );
+            }
+        }
+    }
+    common::write_csv(
+        "dynamic_d2gc.csv",
+        "graph,fraction,edits,dirty_rows,recolored,colors_added,repair_secs,full_secs,speedup",
+        &d2csv,
+    );
+
+    // Real-thread smoke pass: same flows, tiny scale, wall-clock timing.
     println!("\n--- ThreadsDriver smoke (t=4, scale 0.02) ---");
     let tcfg = Config::threads(schedule::V_V_64D, 4);
     for p in PRESETS.iter().take(3) {
         let g = p.bipartite(0.02, common::seed());
         let (mut session, _init) = DynamicSession::start(g.clone(), tcfg.clone());
         let mut rng = Rng::new(7);
-        let batch = random_batch(session.graph(), (g.nnz() / 1000).max(16), &mut rng);
+        let batch = random_update_batch(session.graph(), (g.nnz() / 1000).max(16), &mut rng);
         let stats = session.apply(&batch);
         assert!(session.verify().is_ok(), "{}: threads repair invalid", p.name);
         println!(
             "  {:<16} edits={:<5} recolored={:<5} wall={:.3}ms",
+            p.name,
+            stats.batch_edits,
+            stats.recolored,
+            stats.seconds * 1e3
+        );
+    }
+    for p in PRESETS.iter().filter(|p| p.symmetric).take(2) {
+        let m = p.net_incidence(0.02, common::seed());
+        let (mut session, _init) = DynamicSession::start(m.clone(), tcfg.clone());
+        let mut rng = Rng::new(11);
+        let edits = (m.nnz() / 2000).max(16);
+        let batch = random_symmetric_update_batch(session.graph(), edits, &mut rng);
+        let stats = session.apply(&batch);
+        assert!(session.verify().is_ok(), "{}: D2GC threads repair invalid", p.name);
+        println!(
+            "  {:<16} edits={:<5} recolored={:<5} wall={:.3}ms (d2gc)",
             p.name,
             stats.batch_edits,
             stats.recolored,

@@ -19,6 +19,10 @@
 //! ```bash
 //! cargo run --release --example dynamic_jacobian
 //! ```
+//!
+//! The symmetric sibling is `examples/dynamic_hessian.rs`: the same
+//! streaming flow through a *D2GC* session (drifting Hessian pattern,
+//! distance-2 repair) — one engine, two problems (DESIGN.md §9).
 
 use std::sync::Arc;
 

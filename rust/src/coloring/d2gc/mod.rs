@@ -7,6 +7,15 @@
 //! so every item first processes the *visited vertex itself* (Alg. 9
 //! lines 4–7, Alg. 10 lines 3–4). Self-loops (diagonal entries) are
 //! skipped explicitly.
+//!
+//! Like BGPC, the engine comes in two entry points: [`run`] (one-shot,
+//! private thread state) and [`run_capped`] (caller-owned
+//! [`ThreadState`] bank plus an iteration cap) — the latter is what the
+//! [`crate::dynamic`] subsystem threads a persistent bank through so
+//! B1/B2 balancing trackers survive a stream of update batches. The
+//! dirty-frontier detection half of that subsystem lives here too:
+//! [`conflict_phase_on`] is Algorithm 10 restricted to an explicit row
+//! subset (DESIGN.md §9).
 
 pub mod vertex;
 
@@ -86,29 +95,63 @@ pub fn net_conflict_phase<D: Driver>(
     chunk: usize,
 ) -> RegionOut {
     d.region(ts, g.n_rows, chunk, |_tid, s, v, now| {
-        let mut units = 1u64;
-        s.forbidden.next_gen();
-        let cv = colors.read(v, now);
-        if cv >= 0 {
-            s.forbidden.insert(cv);
-        }
-        for &u in g.row(v) {
-            let u = u as usize;
-            if u == v {
-                continue;
-            }
-            units += 1;
-            let c = colors.read(u, now + units);
-            if c >= 0 {
-                if s.forbidden.contains(c) {
-                    colors.write(u, -1, now + units);
-                } else {
-                    s.forbidden.insert(c);
-                }
-            }
-        }
-        Cost::new(units)
+        conflict_one_row(g, v, colors, s, now)
     })
+}
+
+/// Algorithm 10 restricted to an explicit row subset — the dynamic
+/// subsystem's dirty-frontier detection. After a batch of symmetric
+/// edge insertions, every new distance-≤2 clash runs through a new edge
+/// `(a, b)`, and both endpoints are insertion-dirty rows; scanning just
+/// `{v} ∪ nbor(v)` for each dirty row `v` therefore uncolors every
+/// clash loser at the cost of the batch's neighborhood footprint, not
+/// `O(|E|)` (DESIGN.md §9).
+pub fn conflict_phase_on<D: Driver>(
+    g: &Csr,
+    rows: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, rows.len(), chunk, |_tid, s, i, now| {
+        conflict_one_row(g, rows[i] as usize, colors, s, now)
+    })
+}
+
+/// Shared body of the two conflict-removal drivers: the visited
+/// vertex's color is processed first and always kept; duplicates among
+/// its neighbors are uncolored.
+#[inline]
+fn conflict_one_row<C: ColorStore>(
+    g: &Csr,
+    v: usize,
+    colors: &C,
+    s: &mut ThreadState,
+    now: u64,
+) -> Cost {
+    let mut units = 1u64;
+    s.forbidden.next_gen();
+    let cv = colors.read(v, now);
+    if cv >= 0 {
+        s.forbidden.insert(cv);
+    }
+    for &u in g.row(v) {
+        let u = u as usize;
+        if u == v {
+            continue;
+        }
+        units += 1;
+        let c = colors.read(u, now + units);
+        if c >= 0 {
+            if s.forbidden.contains(c) {
+                colors.write(u, -1, now + units);
+            } else {
+                s.forbidden.insert(c);
+            }
+        }
+    }
+    Cost::new(units)
 }
 
 /// Gather uncolored vertices after a net-style removal.
@@ -147,12 +190,56 @@ fn collect_next(lazy: bool, ts: &mut [ThreadState], shared: &SharedQueue) -> Vec
     }
 }
 
-fn color_cap(g: &Csr) -> usize {
+/// Upper bound on any color the D2GC engine can produce, for sizing
+/// forbidden arrays: first-fit never exceeds the closed distance-2
+/// degree, and the net-style reverse fit starts at `|nbor(v)|`. Public
+/// because the dynamic subsystem sizes persistent [`ThreadState`] banks
+/// with it.
+pub fn color_cap(g: &Csr) -> usize {
     let max2: usize = (0..g.n_rows)
         .map(|v| g.row(v).iter().map(|&u| g.deg(u as usize)).sum())
         .max()
         .unwrap_or(0);
     max2 + 4
+}
+
+/// The `MAX_ITERS` safety net: exact sequential greedy over the
+/// remaining queue at distance 2, reading and writing through the color
+/// store at time `now`. Also the last line of defense of the
+/// incremental repair loop, and (with the whole queue) the `cap = 0`
+/// baseline that must reproduce [`seq_greedy`].
+pub fn sequential_finish<C: ColorStore>(
+    g: &Csr,
+    w: &[u32],
+    colors: &C,
+    ts0: &mut ThreadState,
+    now: u64,
+) {
+    for &wv in w {
+        let wv = wv as usize;
+        ts0.forbidden.next_gen();
+        for &u in g.row(wv) {
+            let u = u as usize;
+            if u == wv {
+                continue;
+            }
+            let c = colors.read(u, now);
+            if c >= 0 {
+                ts0.forbidden.insert(c);
+            }
+            for &x in g.row(u) {
+                let x = x as usize;
+                if x != wv {
+                    let c = colors.read(x, now);
+                    if c >= 0 {
+                        ts0.forbidden.insert(c);
+                    }
+                }
+            }
+        }
+        let (c, _) = ts0.forbidden.first_fit();
+        colors.write(wv, c, now);
+    }
 }
 
 /// Run a full D2GC coloring with driver `d` (same loop as BGPC).
@@ -163,10 +250,32 @@ pub fn run<D: Driver>(
     bal: Balance,
     d: &mut D,
 ) -> ColoringResult {
+    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    run_capped(g, order, spec, bal, d, &mut ts, MAX_ITERS)
+}
+
+/// [`run`] with an explicit iteration cap and a caller-owned
+/// [`ThreadState`] bank — the D2GC mirror of
+/// [`crate::coloring::bgpc::run_capped`]. The bank is how per-thread
+/// state (B1/B2 `col_max`/`col_next` trackers, forbidden arrays)
+/// persists across calls; the forbidden domains are re-`ensure`d here,
+/// so a bank sized for a previous (smaller) graph stays safe.
+pub fn run_capped<D: Driver>(
+    g: &Csr,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    max_iters: usize,
+) -> ColoringResult {
     let n = g.n_rows;
     let t0 = std::time::Instant::now();
     let colors = d.new_colors(n);
-    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    let cap = color_cap(g);
+    for s in ts.iter_mut() {
+        s.forbidden.ensure(cap);
+    }
     let shared = SharedQueue::with_capacity(n);
     let mut w: Vec<u32> = order.to_vec();
     let mut trace = RunTrace::default();
@@ -174,7 +283,7 @@ pub fn run<D: Driver>(
     let mut work_units = 0u64;
     let mut iterations = 0usize;
 
-    while !w.is_empty() && iterations < MAX_ITERS {
+    while !w.is_empty() && iterations < max_iters {
         iterations += 1;
         let net_color = iterations <= spec.net_color_iters;
         let net_conflict = iterations <= spec.net_conflict_iters;
@@ -186,18 +295,18 @@ pub fn run<D: Driver>(
         };
 
         let cr = if net_color {
-            net_color_phase(g, &colors, d, &mut ts, spec.chunk)
+            net_color_phase(g, &colors, d, ts, spec.chunk)
         } else {
-            vertex::color_phase(g, &w, &colors, d, &mut ts, spec.chunk, bal)
+            vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
         };
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
         work_units += cr.busy_units.iter().sum::<u64>();
 
         let (rr, w_next) = if net_conflict {
-            let r1 = net_conflict_phase(g, &colors, d, &mut ts, spec.chunk);
-            let r2 = rebuild_queue(g, &colors, d, &mut ts, spec.chunk, spec.lazy_queues, &shared);
-            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            let r1 = net_conflict_phase(g, &colors, d, ts, spec.chunk);
+            let r2 = rebuild_queue(g, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
+            let wn = collect_next(spec.lazy_queues, ts, &shared);
             work_units +=
                 r1.busy_units.iter().sum::<u64>() + r2.busy_units.iter().sum::<u64>();
             let combined = RegionOut {
@@ -215,13 +324,13 @@ pub fn run<D: Driver>(
                 &w,
                 &colors,
                 d,
-                &mut ts,
+                ts,
                 spec.chunk,
                 spec.lazy_queues,
                 &shared,
             );
             work_units += r.busy_units.iter().sum::<u64>();
-            let wn = collect_next(spec.lazy_queues, &mut ts, &shared);
+            let wn = collect_next(spec.lazy_queues, ts, &shared);
             (r, wn)
         };
         it.conflict_secs = rr.seconds();
@@ -231,34 +340,8 @@ pub fn run<D: Driver>(
     }
 
     if !w.is_empty() {
-        // sequential exact finish (safety net)
-        let ts0 = &mut ts[0];
-        let now = d.now();
-        for &wv in &w {
-            let wv = wv as usize;
-            ts0.forbidden.next_gen();
-            for &u in g.row(wv) {
-                let u = u as usize;
-                if u == wv {
-                    continue;
-                }
-                let c = colors.read(u, now);
-                if c >= 0 {
-                    ts0.forbidden.insert(c);
-                }
-                for &x in g.row(u) {
-                    let x = x as usize;
-                    if x != wv {
-                        let c = colors.read(x, now);
-                        if c >= 0 {
-                            ts0.forbidden.insert(c);
-                        }
-                    }
-                }
-            }
-            let (c, _) = ts0.forbidden.first_fit();
-            colors.write(wv, c, now);
-        }
+        // safety net: finish sequentially (exact greedy over what's left)
+        sequential_finish(g, &w, &colors, &mut ts[0], d.now());
     }
 
     let colors_vec = colors.to_vec();

@@ -2,6 +2,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
 
+use crate::coloring::Problem;
+
 /// Aggregated job counters.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -11,8 +13,10 @@ pub struct Metrics {
     total_colors: AtomicU64,
     /// Total engine seconds, in microseconds (atomic f64 substitute).
     total_us: AtomicU64,
-    /// Dynamic-session update batches applied.
-    updates: AtomicU64,
+    /// BGPC dynamic-session update batches applied.
+    updates_bgpc: AtomicU64,
+    /// D2GC dynamic-session update batches applied.
+    updates_d2gc: AtomicU64,
     /// Vertices recolored across all update batches.
     recolored: AtomicU64,
 }
@@ -27,7 +31,12 @@ impl Metrics {
             self.pjrt_jobs.fetch_add(1, AOrd::Relaxed);
         }
         if let Some(b) = &o.batch {
-            self.updates.fetch_add(1, AOrd::Relaxed);
+            // updates are counted per problem (BGPC and D2GC sessions
+            // share the update path but not the repair engine)
+            match o.problem {
+                Some(Problem::D2gc) => self.updates_d2gc.fetch_add(1, AOrd::Relaxed),
+                _ => self.updates_bgpc.fetch_add(1, AOrd::Relaxed),
+            };
             self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
         }
         self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
@@ -46,9 +55,19 @@ impl Metrics {
         self.pjrt_jobs.load(AOrd::Relaxed)
     }
 
-    /// Dynamic-session update batches applied.
+    /// Dynamic-session update batches applied (all problems).
     pub fn updates(&self) -> u64 {
-        self.updates.load(AOrd::Relaxed)
+        self.updates_bgpc() + self.updates_d2gc()
+    }
+
+    /// BGPC update batches applied.
+    pub fn updates_bgpc(&self) -> u64 {
+        self.updates_bgpc.load(AOrd::Relaxed)
+    }
+
+    /// D2GC update batches applied.
+    pub fn updates_d2gc(&self) -> u64 {
+        self.updates_d2gc.load(AOrd::Relaxed)
     }
 
     /// Vertices recolored across all update batches.
@@ -63,11 +82,13 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} failures={} pjrt={} updates={} recolored={} engine_secs={:.3}",
+            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} engine_secs={:.3}",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
             self.updates(),
+            self.updates_bgpc(),
+            self.updates_d2gc(),
             self.recolored(),
             self.total_seconds()
         )
@@ -84,6 +105,7 @@ mod tests {
         let ok = crate::coordinator::JobOutcome {
             name: "a".into(),
             engine: "native",
+            problem: Some(Problem::Bgpc),
             n_colors: 5,
             iterations: 1,
             seconds: 0.25,
@@ -102,12 +124,13 @@ mod tests {
     }
 
     #[test]
-    fn update_batches_counted() {
+    fn update_batches_counted_per_problem() {
         let m = Metrics::default();
         let stats = crate::dynamic::BatchStats { recolored: 7, ..Default::default() };
         let upd = crate::coordinator::JobOutcome {
             name: "u".into(),
             engine: "native",
+            problem: Some(Problem::Bgpc),
             n_colors: 5,
             iterations: 1,
             seconds: 0.01,
@@ -115,10 +138,18 @@ mod tests {
             error: None,
             batch: Some(stats),
         };
+        let upd2 = crate::coordinator::JobOutcome {
+            problem: Some(Problem::D2gc),
+            ..upd.clone()
+        };
         m.record(&upd);
         m.record(&upd);
-        assert_eq!(m.updates(), 2);
-        assert_eq!(m.recolored(), 14);
-        assert!(m.summary().contains("updates=2"));
+        m.record(&upd2);
+        assert_eq!(m.updates(), 3);
+        assert_eq!(m.updates_bgpc(), 2);
+        assert_eq!(m.updates_d2gc(), 1);
+        assert_eq!(m.recolored(), 21);
+        assert!(m.summary().contains("updates=3"));
+        assert!(m.summary().contains("d2gc=1"));
     }
 }

@@ -9,10 +9,16 @@
 //! executable per bucket, per DESIGN.md §3); Python is never involved.
 //!
 //! **Dynamic sessions** (the [`crate::dynamic`] subsystem, DESIGN.md
-//! §8): [`Service::open_session`] colors a graph once and keeps the
-//! [`crate::dynamic::DynamicSession`] alive inside the service; clients
-//! then stream [`JobInput::Update`] jobs carrying
-//! [`crate::dynamic::UpdateBatch`] edits. Updates always run on the
+//! §8–§9): sessions are *problem-tagged* — [`Service::open_session`]
+//! opens a BGPC session over a [`Bipartite`],
+//! [`Service::open_session_d2gc`] a D2GC session over a square
+//! symmetric [`Csr`] — and the service keeps the
+//! [`crate::dynamic::DynamicSession`] alive internally. Clients then
+//! stream [`JobInput::Update`] jobs carrying
+//! [`crate::dynamic::UpdateBatch`] edits; the update path is shared,
+//! and the service routes each batch to the repair path of the
+//! session's problem (reported back in [`JobOutcome::problem`] and
+//! counted per-problem by [`Metrics`]). Updates always run on the
 //! native pool, are applied strictly in submit order per session (a
 //! seq/condvar handshake — concurrent workers may *pick up* batches out
 //! of order but never apply them out of order), and each outcome
@@ -28,14 +34,54 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::coloring::{color_bgpc, color_d2gc, Config, Problem};
-use crate::dynamic::{BatchStats, DynamicSession, UpdateBatch};
+use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
 use crate::graph::{Bipartite, Csr};
 use crate::runtime::{NetStepOffload, Runtime};
 
 pub use metrics::Metrics;
 
-/// Identifier of an open dynamic session (see [`Service::open_session`]).
+/// Identifier of an open dynamic session (see [`Service::open_session`]
+/// and [`Service::open_session_d2gc`]).
 pub type SessionId = u64;
+
+/// A problem-tagged dynamic session as the service stores it. The two
+/// instantiations of [`crate::dynamic::DynamicSession`] share one
+/// update path; this enum is the runtime dispatch point that routes a
+/// batch to the right repair engine.
+enum AnySession {
+    Bgpc(BgpcSession),
+    D2gc(D2gcSession),
+}
+
+impl AnySession {
+    fn problem(&self) -> Problem {
+        match self {
+            AnySession::Bgpc(_) => Problem::Bgpc,
+            AnySession::D2gc(_) => Problem::D2gc,
+        }
+    }
+
+    fn apply(&mut self, batch: &UpdateBatch) -> BatchStats {
+        match self {
+            AnySession::Bgpc(s) => s.apply(batch),
+            AnySession::D2gc(s) => s.apply(batch),
+        }
+    }
+
+    fn verify_ok(&mut self) -> bool {
+        match self {
+            AnySession::Bgpc(s) => s.verify().is_ok(),
+            AnySession::D2gc(s) => s.verify().is_ok(),
+        }
+    }
+
+    fn colors(&self) -> &[i32] {
+        match self {
+            AnySession::Bgpc(s) => s.colors(),
+            AnySession::D2gc(s) => s.colors(),
+        }
+    }
+}
 
 /// A session as the service holds it: the mutable state under a lock,
 /// an admission counter assigning each update its sequence number at
@@ -48,7 +94,7 @@ struct SessionSlot {
 }
 
 struct SessionInner {
-    session: DynamicSession,
+    session: AnySession,
     /// Batches applied so far == the next admissible seq.
     applied: u64,
     /// Set by [`Service::close_session`]; wakes and fails parked workers
@@ -92,11 +138,16 @@ pub enum JobInput {
 }
 
 impl JobInput {
-    pub fn problem(&self) -> Problem {
+    /// The coloring problem this input runs, when it is statically
+    /// known. `Update` jobs return `None`: the problem is a property of
+    /// the open session — BGPC and D2GC sessions share the update path
+    /// — and the service resolves it when the batch is applied (see
+    /// [`Service::session_problem`] and [`JobOutcome::problem`]).
+    pub fn problem(&self) -> Option<Problem> {
         match self {
-            JobInput::Bgpc(_) => Problem::Bgpc,
-            JobInput::D2gc(_) => Problem::D2gc,
-            JobInput::Update { .. } => Problem::Bgpc,
+            JobInput::Bgpc(_) => Some(Problem::Bgpc),
+            JobInput::D2gc(_) => Some(Problem::D2gc),
+            JobInput::Update { .. } => None,
         }
     }
 }
@@ -106,6 +157,10 @@ impl JobInput {
 pub struct JobOutcome {
     pub name: String,
     pub engine: &'static str,
+    /// The problem that actually ran — for update jobs, the open
+    /// session's problem. `None` only on routing errors where it is
+    /// unknowable (e.g. an update against an unknown session).
+    pub problem: Option<Problem>,
     pub n_colors: usize,
     pub iterations: usize,
     pub seconds: f64,
@@ -140,6 +195,7 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64) -> JobOutcome {
             JobOutcome {
                 name: job.name.clone(),
                 engine: "native",
+                problem: Some(Problem::Bgpc),
                 n_colors: r.n_colors,
                 iterations: r.iterations,
                 seconds: r.seconds,
@@ -154,6 +210,7 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64) -> JobOutcome {
             JobOutcome {
                 name: job.name.clone(),
                 engine: "native",
+                problem: Some(Problem::D2gc),
                 n_colors: r.n_colors,
                 iterations: r.iterations,
                 seconds: r.seconds,
@@ -180,6 +237,7 @@ fn run_update(
         return JobOutcome {
             name: name.to_string(),
             engine: "native",
+            problem: None,
             n_colors: 0,
             iterations: 0,
             seconds: 0.0,
@@ -189,6 +247,7 @@ fn run_update(
         };
     };
     let mut inner = slot.state.lock().unwrap();
+    let problem = inner.session.problem();
     while inner.applied != seq {
         if inner.closed {
             // a predecessor batch was dropped by close_session: fail
@@ -196,6 +255,7 @@ fn run_update(
             return JobOutcome {
                 name: name.to_string(),
                 engine: "native",
+                problem: Some(problem),
                 n_colors: 0,
                 iterations: 0,
                 seconds: 0.0,
@@ -212,6 +272,7 @@ fn run_update(
         return JobOutcome {
             name: name.to_string(),
             engine: "native",
+            problem: Some(problem),
             n_colors: 0,
             iterations: 0,
             seconds: 0.0,
@@ -223,14 +284,16 @@ fn run_update(
     let stats = inner.session.apply(batch);
     inner.applied += 1;
     // Service contract: every outcome the coordinator hands back is
-    // verified, exactly like run_native's full-graph check. This is
+    // verified, exactly like run_native's full-graph check — with the
+    // session's own problem checker (bgpc_valid / d2gc_valid). This is
     // O(|E|) under the session lock; latency-sensitive clients that
     // trust the repair invariants can use DynamicSession directly.
-    let valid = inner.session.verify().is_ok();
+    let valid = inner.session.verify_ok();
     slot.cv.notify_all();
     JobOutcome {
         name: name.to_string(),
         engine: "native",
+        problem: Some(problem),
         n_colors: stats.n_colors,
         iterations: stats.iterations,
         seconds: stats.seconds,
@@ -250,6 +313,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                     JobOutcome {
                         name: job.name.clone(),
                         engine: "pjrt",
+                        problem: Some(Problem::Bgpc),
                         n_colors: crate::coloring::stats::distinct_colors(&colors),
                         iterations: stats.iterations,
                         seconds: t0.elapsed().as_secs_f64(),
@@ -261,6 +325,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                 Err(e) => JobOutcome {
                     name: job.name.clone(),
                     engine: "pjrt",
+                    problem: Some(Problem::Bgpc),
                     n_colors: 0,
                     iterations: 0,
                     seconds: t0.elapsed().as_secs_f64(),
@@ -273,6 +338,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
         JobInput::D2gc(_) | JobInput::Update { .. } => JobOutcome {
             name: job.name.clone(),
             engine: "pjrt",
+            problem: job.input.problem(),
             n_colors: 0,
             iterations: 0,
             seconds: 0.0,
@@ -385,6 +451,7 @@ impl Service {
                     let _ = tx.send(JobOutcome {
                         name: job.name,
                         engine: "native",
+                        problem: None,
                         n_colors: 0,
                         iterations: 0,
                         seconds: 0.0,
@@ -412,6 +479,7 @@ impl Service {
                     let _ = tx.send(JobOutcome {
                         name: job.name,
                         engine: "pjrt",
+                        problem: job.input.problem(),
                         n_colors: 0,
                         iterations: 0,
                         seconds: 0.0,
@@ -427,16 +495,42 @@ impl Service {
         rx
     }
 
-    /// Open a dynamic session: color `g` from scratch under `cfg`
+    /// Open a BGPC dynamic session: color `g` from scratch under `cfg`
     /// (synchronously, on the caller's thread) and keep the session
     /// alive inside the service. Stream [`JobInput::Update`] jobs
     /// against the returned id, then [`Service::close_session`].
     pub fn open_session(&self, name: &str, g: &Bipartite, cfg: Config) -> (SessionId, JobOutcome) {
-        let (mut session, init) = DynamicSession::start(g.clone(), cfg);
+        let (mut session, init) = crate::dynamic::DynamicSession::start(g.clone(), cfg);
         let valid = session.verify().is_ok();
+        self.install_session(name, AnySession::Bgpc(session), &init, valid)
+    }
+
+    /// Open a D2GC dynamic session over a square, structurally
+    /// symmetric graph: same contract as [`Service::open_session`], but
+    /// updates are undirected edge edits repaired at distance 2 (the
+    /// overlay keeps the pattern symmetric across the stream).
+    ///
+    /// # Panics
+    /// If `g` is not square and structurally symmetric.
+    pub fn open_session_d2gc(&self, name: &str, g: &Csr, cfg: Config) -> (SessionId, JobOutcome) {
+        let (mut session, init) = crate::dynamic::DynamicSession::start(g.clone(), cfg);
+        let valid = session.verify().is_ok();
+        self.install_session(name, AnySession::D2gc(session), &init, valid)
+    }
+
+    /// Shared tail of the `open_session*` pair: record the bring-up
+    /// outcome and park the session under a fresh id.
+    fn install_session(
+        &self,
+        name: &str,
+        session: AnySession,
+        init: &crate::coloring::ColoringResult,
+        valid: bool,
+    ) -> (SessionId, JobOutcome) {
         let outcome = JobOutcome {
             name: name.to_string(),
             engine: "native",
+            problem: Some(session.problem()),
             n_colors: init.n_colors,
             iterations: init.iterations,
             seconds: init.seconds,
@@ -463,6 +557,15 @@ impl Service {
         let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
         let inner = slot.state.lock().unwrap();
         Some(inner.session.colors().to_vec())
+    }
+
+    /// The problem an open session repairs (`None` if the id is
+    /// unknown) — the authoritative answer [`JobInput::problem`] cannot
+    /// give for `Update` jobs.
+    pub fn session_problem(&self, id: SessionId) -> Option<Problem> {
+        let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
+        let inner = slot.state.lock().unwrap();
+        Some(inner.session.problem())
     }
 
     /// Close a session. The update a worker is currently applying still
@@ -577,15 +680,57 @@ mod tests {
         for rx in rxs {
             let o = rx.recv().unwrap();
             assert!(o.valid, "{}: {:?}", o.name, o.error);
+            assert_eq!(o.problem, Some(Problem::Bgpc), "update reports the session's problem");
             let b = o.batch.expect("update outcomes carry batch stats");
             assert!(b.dirty_nets > 0 || b.batch_edits == 0);
         }
+        assert_eq!(svc.session_problem(sid), Some(Problem::Bgpc));
         let colors = svc.session_colors(sid).expect("session open");
         assert_eq!(colors.len(), 120);
         assert!(colors.iter().all(|&c| c >= 0));
         assert!(svc.close_session(sid));
         assert!(!svc.close_session(sid), "second close is a no-op");
         assert!(svc.session_colors(sid).is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn d2gc_session_streams_through_the_same_update_path() {
+        use crate::dynamic::UpdateBatch;
+        use crate::graph::generators::random_symmetric;
+        let svc = Service::start(2, None);
+        let g = random_symmetric(100, 500, 9);
+        let (sid, init) = svc.open_session_d2gc("hessian", &g, Config::sim(schedule::N1_N2, 4));
+        assert!(init.valid, "initial D2GC coloring must verify");
+        assert_eq!(init.problem, Some(Problem::D2gc));
+        assert_eq!(svc.session_problem(sid), Some(Problem::D2gc));
+        let mut rxs = Vec::new();
+        for k in 0..2u32 {
+            let mut batch = UpdateBatch::default();
+            for i in 0..8u32 {
+                let a = (k * 13 + i * 7) % 100;
+                let b = (k * 31 + i * 11) % 100;
+                batch.add_edges.push((a, b));
+            }
+            rxs.push(svc.submit(Job {
+                name: format!("h{k}"),
+                input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+                cfg: Config::sim(schedule::N1_N2, 4),
+                engine: EngineSel::Auto,
+            }));
+        }
+        for rx in rxs {
+            let o = rx.recv().unwrap();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+            assert_eq!(o.problem, Some(Problem::D2gc), "update reports the session's problem");
+            assert!(o.batch.is_some());
+        }
+        assert_eq!(svc.metrics().updates_d2gc(), 2);
+        assert_eq!(svc.metrics().updates_bgpc(), 0);
+        let colors = svc.session_colors(sid).expect("session open");
+        assert_eq!(colors.len(), 100);
+        assert!(colors.iter().all(|&c| c >= 0));
+        assert!(svc.close_session(sid));
         svc.shutdown();
     }
 

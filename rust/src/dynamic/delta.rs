@@ -1,5 +1,5 @@
-//! [`DeltaBipartite`] — a mutable overlay over the frozen CSR
-//! [`Bipartite`].
+//! [`DeltaBipartite`] / [`DeltaSymmetric`] — mutable overlays over the
+//! frozen CSR graphs the engines consume.
 //!
 //! The coloring engines consume an immutable CSR; a streaming client
 //! mutates the graph. This type bridges the two: batched
@@ -17,6 +17,13 @@
 //! Only those nets can hold a stale duplicate color (edge deletions
 //! never invalidate a coloring), which is what makes repair cost scale
 //! with the batch instead of the graph.
+//!
+//! [`DeltaSymmetric`] is the D2GC face of the same machinery: a thin
+//! wrapper that mirrors every edit onto both incidence directions so
+//! the square CSR stays structurally symmetric across the stream
+//! (DESIGN.md §9). Its dirty nets double as D2GC's dirty *rows* — both
+//! endpoints of an inserted undirected edge — which is exactly the set
+//! [`crate::coloring::d2gc::conflict_phase_on`] must scan.
 
 use std::collections::BTreeMap;
 
@@ -214,14 +221,24 @@ impl DeltaBipartite {
     /// Append a fresh net with the given members; returns its id.
     /// Members beyond the current vertex shape grow it.
     pub fn add_net(&mut self, members: &[u32]) -> u32 {
+        self.add_net_counted(members).0
+    }
+
+    /// [`Self::add_net`], also returning how many member incidences
+    /// were actually inserted (duplicate members are no-ops) — the
+    /// session layer's `batch_edits` unit.
+    pub fn add_net_counted(&mut self, members: &[u32]) -> (u32, usize) {
         let id = self.n_nets as u32;
         self.n_nets += 1;
         self.dims_dirty = true;
         self.dirty_nets.push(id);
+        let mut edits = 0;
         for &u in members {
-            self.add_edge(id, u);
+            if self.add_edge(id, u) {
+                edits += 1;
+            }
         }
-        id
+        (id, edits)
     }
 
     /// Base row merged with its patch: the overlay's view of one row.
@@ -295,6 +312,125 @@ impl DeltaBipartite {
         vtxs.sort_unstable();
         vtxs.dedup();
         (nets, vtxs)
+    }
+}
+
+/// Symmetric-update overlay for D2GC: a [`DeltaBipartite`] whose edits
+/// are mirrored onto both incidence directions, so the underlying
+/// square CSR stays structurally symmetric across
+/// `add_edge`/`remove_edge`/`add_vertex` (the invariant
+/// [`crate::coloring::verify::d2gc_valid`] and the D2GC kernels
+/// assume). Edits are *undirected*: `add_edge(a, b)` records both
+/// `(a, b)` and `(b, a)`, and growth through either endpoint keeps the
+/// shape square because the mirror op grows the other side to match.
+#[derive(Clone, Debug)]
+pub struct DeltaSymmetric {
+    inner: DeltaBipartite,
+}
+
+impl DeltaSymmetric {
+    /// Wrap a frozen square symmetric graph.
+    ///
+    /// # Panics
+    /// If `base` is not square or not structurally symmetric — the
+    /// overlay preserves symmetry, it cannot create it.
+    pub fn new(base: Csr) -> DeltaSymmetric {
+        assert!(
+            base.is_structurally_symmetric(),
+            "DeltaSymmetric requires a square, structurally symmetric base"
+        );
+        DeltaSymmetric { inner: DeltaBipartite::new(Bipartite::from_net_incidence(base)) }
+    }
+
+    /// Override the auto-compaction threshold (edits between compactions).
+    pub fn with_compact_threshold(mut self, edits: usize) -> DeltaSymmetric {
+        self.inner = self.inner.with_compact_threshold(edits);
+        self
+    }
+
+    /// Logical number of vertices (square shape), overlay included.
+    pub fn n_vertices(&self) -> usize {
+        self.inner.n_nets().max(self.inner.n_vertices())
+    }
+
+    /// Logical number of (directed) incidences, overlay included —
+    /// off-diagonal undirected edges count twice.
+    pub fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+
+    /// Whether the undirected edge `{a, b}` exists under the overlay.
+    pub fn has_edge(&self, a: u32, b: u32) -> bool {
+        self.inner.has_edge(a, b)
+    }
+
+    /// Neighbors of `v` under the overlay (allocates; hot paths should
+    /// use the compacted CSR via [`Self::graph`]).
+    pub fn row(&self, v: u32) -> Vec<u32> {
+        self.inner.vtxs(v)
+    }
+
+    /// Insert the undirected edge `{a, b}` (both directions; a diagonal
+    /// `a == b` is inserted once). Ids beyond the current shape grow
+    /// it, square. Returns whether the graph changed.
+    pub fn add_edge(&mut self, a: u32, b: u32) -> bool {
+        let changed = self.inner.add_edge(a, b);
+        if a != b {
+            let mirrored = self.inner.add_edge(b, a);
+            debug_assert_eq!(changed, mirrored, "symmetric overlay out of sync");
+        }
+        changed
+    }
+
+    /// Delete the undirected edge `{a, b}` (both directions). Returns
+    /// whether it existed.
+    pub fn remove_edge(&mut self, a: u32, b: u32) -> bool {
+        let changed = self.inner.remove_edge(a, b);
+        if a != b {
+            let mirrored = self.inner.remove_edge(b, a);
+            debug_assert_eq!(changed, mirrored, "symmetric overlay out of sync");
+        }
+        changed
+    }
+
+    /// Append a fresh vertex adjacent to `members` (a new Hessian row /
+    /// mesh node): its diagonal entry plus the mirrored off-diagonal
+    /// edges. Returns the new vertex id.
+    pub fn add_vertex(&mut self, members: &[u32]) -> u32 {
+        self.add_vertex_counted(members).0
+    }
+
+    /// [`Self::add_vertex`], also returning how many distinct member
+    /// edges were inserted (duplicates are no-ops; the diagonal and
+    /// the mirrored halves count as part of the row, not as member
+    /// edits) — the session layer's `batch_edits` unit.
+    pub fn add_vertex_counted(&mut self, members: &[u32]) -> (u32, usize) {
+        let id = self.n_vertices() as u32;
+        self.add_edge(id, id); // diagonal; grows both sides to id + 1
+        let mut edits = 0;
+        for &m in members {
+            if m != id && self.add_edge(id, m) {
+                edits += 1;
+            }
+        }
+        (id, edits)
+    }
+
+    /// Compact (if needed) and expose the square CSR the D2GC kernels
+    /// consume. Structural symmetry is a debug-checked invariant.
+    pub fn graph(&mut self) -> &Csr {
+        let g = &self.inner.graph().net_vtxs;
+        debug_assert!(g.is_structurally_symmetric(), "symmetric overlay drifted");
+        g
+    }
+
+    /// Drain the dirty sets accumulated since the last call:
+    /// `(insertion-dirty rows, endpoints of changed edges)`, sorted and
+    /// deduped. Because edits are mirrored, *both* endpoints of every
+    /// inserted edge appear as dirty rows — the exact scan set the
+    /// D2GC dirty-frontier detection needs.
+    pub fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>) {
+        self.inner.take_dirty()
     }
 }
 
@@ -422,5 +558,94 @@ mod tests {
         // dirty sets survive compaction (they belong to the repair cycle)
         let (nets, _) = d.take_dirty();
         assert_eq!(nets, vec![0, 1]);
+    }
+
+    fn tiny_sym() -> Csr {
+        // triangle 0-1-2 plus isolated 3, diagonals present
+        Csr::from_edges(
+            4,
+            4,
+            &[
+                (0, 0), (1, 1), (2, 2), (3, 3),
+                (0, 1), (1, 0), (1, 2), (2, 1), (0, 2), (2, 0),
+            ],
+        )
+    }
+
+    #[test]
+    fn symmetric_overlay_mirrors_every_edit() {
+        let mut d = DeltaSymmetric::new(tiny_sym());
+        assert!(d.has_edge(0, 1) && d.has_edge(1, 0));
+        assert!(d.add_edge(3, 1));
+        assert!(!d.add_edge(1, 3), "undirected duplicate is a no-op");
+        assert!(d.has_edge(1, 3) && d.has_edge(3, 1));
+        assert!(d.remove_edge(0, 2));
+        assert!(!d.has_edge(2, 0), "mirror direction removed too");
+        let g = d.graph();
+        assert!(g.is_structurally_symmetric());
+        assert_eq!(g.row(3), &[1, 3]);
+        assert_eq!(g.row(1), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn symmetric_growth_stays_square() {
+        let mut d = DeltaSymmetric::new(tiny_sym());
+        assert!(d.add_edge(6, 2)); // id 6 grows the shape to 7x7
+        assert_eq!(d.n_vertices(), 7);
+        let id = d.add_vertex(&[0, 6]);
+        assert_eq!(id, 7);
+        let g = d.graph();
+        assert_eq!(g.n_rows, 8);
+        assert_eq!(g.n_cols, 8);
+        assert!(g.is_structurally_symmetric());
+        assert_eq!(g.row(7), &[0, 6, 7], "diagonal + mirrored members");
+        assert!(g.row(0).contains(&7));
+    }
+
+    #[test]
+    fn symmetric_dirty_rows_are_both_endpoints() {
+        let mut d = DeltaSymmetric::new(tiny_sym());
+        d.add_edge(3, 0);
+        d.remove_edge(1, 2); // removal: endpoints dirty, rows NOT
+        let (rows, vtxs) = d.take_dirty();
+        assert_eq!(rows, vec![0, 3], "both endpoints of the insertion");
+        assert_eq!(vtxs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn symmetric_overlay_tracks_ground_truth() {
+        let base = crate::graph::generators::random_symmetric(24, 60, 17);
+        let mut mirror: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for v in 0..base.n_rows {
+            for &u in base.row(v) {
+                mirror.insert((v as u32, u));
+            }
+        }
+        let mut d = DeltaSymmetric::new(base).with_compact_threshold(9);
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let a = rng.range(0, 24) as u32;
+            let b = rng.range(0, 24) as u32;
+            if rng.chance(0.5) {
+                let changed = d.add_edge(a, b);
+                let m1 = mirror.insert((a, b));
+                let m2 = if a != b { mirror.insert((b, a)) } else { m1 };
+                assert_eq!(changed, m1);
+                assert_eq!(m1, m2, "mirror set out of sync");
+            } else {
+                let changed = d.remove_edge(a, b);
+                let m1 = mirror.remove(&(a, b));
+                let m2 = if a != b { mirror.remove(&(b, a)) } else { m1 };
+                assert_eq!(changed, m1);
+                assert_eq!(m1, m2);
+            }
+        }
+        assert_eq!(d.nnz(), mirror.len());
+        let edges: Vec<(u32, u32)> = mirror.iter().copied().collect();
+        let truth = Csr::from_edges(24, 24, &edges);
+        let got = d.graph();
+        assert!(got.is_structurally_symmetric());
+        assert_eq!(got.ptr, truth.ptr);
+        assert_eq!(got.adj, truth.adj);
     }
 }

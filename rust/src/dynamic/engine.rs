@@ -1,39 +1,49 @@
 //! Incremental repair: the paper's speculate → detect → repeat loop
-//! seeded with only the dirty frontier.
+//! seeded with only the dirty frontier — one implementation, generic
+//! over the coloring [`Problem`].
 //!
 //! After a batch of edge insertions, a stale coloring can only be wrong
-//! *inside a changed net*: a deletion never creates a clash, and an
-//! insertion `(v, u)` can only clash `u` against the other members of
-//! `v`. So repair is exactly the machinery the optimistic engine
-//! already has, pointed at the dirty set:
+//! *near a changed neighborhood*: a deletion never creates a clash, and
+//! every new clash runs through an inserted edge. So repair is exactly
+//! the machinery the optimistic engine already has, pointed at the
+//! dirty set:
 //!
-//! 1. **Detect** — Algorithm 7 restricted to the changed nets
-//!    ([`crate::coloring::bgpc::net::conflict_phase_on`]): keep each
-//!    color's first occurrence per dirty net, uncolor later duplicates.
-//!    Cost: the batch's net footprint, not `O(|E|)`.
+//! 1. **Detect** — the net/row-style removal pass restricted to the
+//!    insertion-dirty units ([`Problem::conflict_phase_on`]: Algorithm
+//!    7 on changed nets for BGPC, Algorithm 10 on changed rows for
+//!    D2GC): keep each color's first occurrence per unit, uncolor later
+//!    duplicates. Cost: the batch's neighborhood footprint, not
+//!    `O(|E|)`.
 //! 2. **Repair** — the standard vertex-based speculate/detect loop
-//!    (Algorithms 4–5) over the uncolored remainder: detection losers
-//!    plus brand-new vertices. The work queue is the dirty vertex
-//!    frontier's uncolored subset — typically a vanishing fraction of
-//!    `|V_A|`, which is where the orders-of-magnitude win over full
-//!    recoloring comes from (Rokos et al., arXiv:1505.04086, make the
-//!    same observation for iterated speculation).
-//! 3. The `MAX_ITERS` sequential safety net backstops adversarial
-//!    streams, identical to the full engine.
+//!    ([`Problem::color_phase`] / [`Problem::conflict_phase`],
+//!    Algorithms 4–5 and their D2GC analogues) over the uncolored
+//!    remainder: detection losers plus brand-new vertices. The work
+//!    queue is the dirty vertex frontier's uncolored subset — typically
+//!    a vanishing fraction of the vertex set, which is where the
+//!    orders-of-magnitude win over full recoloring comes from (Rokos
+//!    et al., arXiv:1505.04086, make the same observation for iterated
+//!    speculation).
+//! 3. The `MAX_ITERS` sequential safety net
+//!    ([`Problem::sequential_finish`]) backstops adversarial streams,
+//!    identical to the full engines.
+//!
+//! Why the loop is sound for any [`Problem`]: stale colors are
+//! committed before repair begins, so a recolored vertex always sees
+//! every kept neighbor color in its forbidden set — clashes can only
+//! arise between vertices recolored in the same round, and both are in
+//! the work queue, where the conflict phase's tie-break catches them.
 //!
 //! The caller owns the [`ThreadState`] bank, so the B1/B2 balancing
 //! trackers (`col_max`, `col_next`) persist across batches and the
 //! color-set balance does not degrade as updates stream.
 
 use crate::coloring::balance::Balance;
-use crate::coloring::bgpc::{
-    collect_next, color_cap, net, sequential_finish, vertex, MAX_ITERS,
-};
+use crate::coloring::bgpc::{collect_next, MAX_ITERS};
 use crate::coloring::forbidden::ThreadState;
 use crate::coloring::schedule::AlgSpec;
-use crate::graph::Bipartite;
 use crate::par::{ColorStore, Driver, SharedQueue};
 
+use super::problem::Problem;
 use super::BatchStats;
 
 /// Dirty sets are usually far smaller than one chunk per thread; the
@@ -50,11 +60,14 @@ fn adaptive_chunk(n_items: usize, threads: usize, spec_chunk: usize) -> usize {
 }
 
 /// Repair `prev` (a valid coloring of the graph *before* the batch)
-/// into a valid coloring of `g` (the graph *after* the batch).
+/// into a valid coloring of `g` (the graph *after* the batch). Generic
+/// over the coloring [`Problem`] — the same loop drives BGPC
+/// ([`crate::graph::Bipartite`]) and D2GC (square symmetric
+/// [`crate::graph::Csr`]).
 ///
-/// * `dirty_nets` — nets with insertions (from
-///   [`super::DeltaBipartite::take_dirty`]; removal-only nets cannot
-///   hold new conflicts and are already excluded there).
+/// * `dirty` — insertion-dirty detection units (nets for BGPC, rows
+///   for D2GC; from the overlay's `take_dirty` — removal-only units
+///   cannot hold new conflicts and are already excluded there).
 /// * `seeds` — endpoints of changed edges; their uncolored subset
 ///   (brand-new vertices) joins the work queue.
 /// * `ts` — caller-owned per-thread state; balancing trackers persist.
@@ -68,10 +81,10 @@ fn adaptive_chunk(n_items: usize, threads: usize, spec_chunk: usize) -> usize {
 /// each call still pays O(|V|) memcpy-class setup (store seeding,
 /// scratch vectors, final snapshot) — same class as the session's
 /// per-batch compaction, and excluded from the simulated repair time.
-pub fn repair<D: Driver>(
-    g: &Bipartite,
+pub fn repair<P: Problem, D: Driver>(
+    g: &P,
     prev: &[i32],
-    dirty_nets: &[u32],
+    dirty: &[u32],
     seeds: &[u32],
     spec: &AlgSpec,
     bal: Balance,
@@ -95,7 +108,7 @@ pub fn repair<D: Driver>(
     // and B1's safety first-fit can probe past both — size for the sum.
     let prev_max = prev.iter().copied().max().unwrap_or(-1);
     let ts_max = ts.iter().map(|s| s.col_max.max(s.col_next)).max().unwrap_or(0);
-    let cap = color_cap(g) + prev_max.max(ts_max).max(0) as usize + 2;
+    let cap = g.color_cap() + prev_max.max(ts_max).max(0) as usize + 2;
     for s in ts.iter_mut() {
         s.forbidden.ensure(cap);
     }
@@ -103,22 +116,21 @@ pub fn repair<D: Driver>(
     let mut sim_secs = 0.0f64;
     let mut work_units = 0u64;
 
-    // --- phase 1: dirty-net conflict detection (Alg. 7 on the subset) ---
-    let det_chunk = adaptive_chunk(dirty_nets.len(), d.threads(), spec.chunk);
-    let det = net::conflict_phase_on(g, dirty_nets, &colors, d, ts, det_chunk);
+    // --- phase 1: dirty-unit conflict detection (Alg. 7 / Alg. 10 on
+    // the subset) ---
+    let det_chunk = adaptive_chunk(dirty.len(), d.threads(), spec.chunk);
+    let det = g.conflict_phase_on(dirty, &colors, d, ts, det_chunk);
     let is_sim = det.sim_ns.is_some();
     sim_secs += det.seconds();
     work_units += det.busy_units.iter().sum::<u64>();
 
-    // Dirty vertex frontier: members of changed nets, the changed
-    // edges' endpoints, and the whole growth tail — id-gap growth (e.g.
-    // adding vertex 95 to a 90-vertex graph) creates vertices 90..95
-    // that appear in no edit but still need a color. The frontier's
-    // uncolored subset is the initial work queue.
+    // Dirty vertex frontier: the neighborhoods of changed units, the
+    // changed edges' endpoints, and the whole growth tail — id-gap
+    // growth (e.g. adding vertex 95 to a 90-vertex graph) creates
+    // vertices 90..95 that appear in no edit but still need a color.
+    // The frontier's uncolored subset is the initial work queue.
     let mut frontier: Vec<u32> = Vec::with_capacity(seeds.len());
-    for &v in dirty_nets {
-        frontier.extend_from_slice(g.vtxs(v as usize));
-    }
+    g.extend_frontier(dirty, &mut frontier);
     frontier.extend_from_slice(seeds);
     frontier.extend(prev.len() as u32..n as u32);
     frontier.retain(|&u| (u as usize) < n);
@@ -147,25 +159,16 @@ pub fn repair<D: Driver>(
             }
         }
         let chunk = adaptive_chunk(w.len(), d.threads(), spec.chunk);
-        let cr = vertex::color_phase(g, &w, &colors, d, ts, chunk, bal);
+        let cr = g.color_phase(&w, &colors, d, ts, chunk, bal);
         sim_secs += cr.seconds();
         work_units += cr.busy_units.iter().sum::<u64>();
-        let rr = vertex::conflict_phase(
-            g,
-            &w,
-            &colors,
-            d,
-            ts,
-            chunk,
-            spec.lazy_queues,
-            &shared,
-        );
+        let rr = g.conflict_phase(&w, &colors, d, ts, chunk, spec.lazy_queues, &shared);
         sim_secs += rr.seconds();
         work_units += rr.busy_units.iter().sum::<u64>();
         w = collect_next(spec.lazy_queues, ts, &shared);
     }
     if !w.is_empty() {
-        // adversarial stream: same safety net as the full engine
+        // adversarial stream: same safety net as the full engines
         for &u in &w {
             let u = u as usize;
             if !recolored_mark[u] {
@@ -173,7 +176,7 @@ pub fn repair<D: Driver>(
                 recolored += 1;
             }
         }
-        sequential_finish(g, &w, &colors, &mut ts[0], d.now());
+        g.sequential_finish(&w, &colors, &mut ts[0], d.now());
     }
 
     let colors_vec = colors.to_vec();
@@ -181,7 +184,7 @@ pub fn repair<D: Driver>(
     let prev_n_colors = crate::coloring::stats::distinct_colors(prev);
     let stats = BatchStats {
         batch_edits: 0,
-        dirty_nets: dirty_nets.len(),
+        dirty_nets: dirty.len(),
         frontier: frontier_size,
         conflicts,
         recolored,
@@ -199,9 +202,9 @@ pub fn repair<D: Driver>(
 mod tests {
     use super::*;
     use crate::coloring::schedule;
-    use crate::coloring::verify::bgpc_valid;
-    use crate::dynamic::DeltaBipartite;
-    use crate::graph::Csr;
+    use crate::coloring::verify::{bgpc_valid, d2gc_valid};
+    use crate::dynamic::{DeltaBipartite, DeltaSymmetric};
+    use crate::graph::{Bipartite, Csr};
     use crate::par::ThreadsDriver;
     use crate::sim::{CostModel, SimDriver};
 
@@ -284,5 +287,109 @@ mod tests {
         assert_eq!(c1, c2);
         assert_eq!(s1.seconds, s2.seconds);
         assert_eq!(s1.recolored, s2.recolored);
+    }
+
+    #[test]
+    fn d2gc_repair_fixes_a_planted_distance2_clash() {
+        // path 0-1-2 plus isolated 3 (diagonals present): [0,1,2,1] is
+        // a valid distance-2 coloring. Inserting {2,3} puts 3 at
+        // distance 2 from 1 through the new edge — c(3)=c(1)=1 is now
+        // a clash the dirty-row scan must catch.
+        let m = Csr::from_edges(
+            4,
+            4,
+            &[(0, 0), (1, 1), (2, 2), (3, 3), (0, 1), (1, 0), (1, 2), (2, 1)],
+        );
+        let mut delta = DeltaSymmetric::new(m);
+        let prev = vec![0, 1, 2, 1];
+        assert!(delta.add_edge(2, 3));
+        let (dirty, seeds) = delta.take_dirty();
+        assert_eq!(dirty, vec![2, 3], "both endpoints are dirty rows");
+        assert_eq!(seeds, vec![2, 3]);
+        let g = delta.graph().clone();
+        // single thread: row 2 is scanned before row 3, so exactly
+        // vertex 3 loses (both dirty rows racing would also be valid,
+        // just not bit-predictable)
+        let mut ts = ThreadState::bank(1, 64);
+        let mut d = ThreadsDriver::new(1);
+        let (colors, stats) = repair(
+            &g,
+            &prev,
+            &dirty,
+            &seeds,
+            &schedule::V_V_64D,
+            Balance::None,
+            &mut d,
+            &mut ts,
+        );
+        assert!(d2gc_valid(&g, &colors).is_ok());
+        assert_eq!(colors[0], 0, "vertices away from the edit keep their colors");
+        assert_eq!(colors[1], 1);
+        assert_eq!(colors[2], 2, "the scan of row 2 keeps the visited vertex");
+        assert_eq!(stats.conflicts, 1);
+        assert_eq!(stats.recolored, 1, "only the clash loser is recolored");
+        assert_eq!(colors[3], 0, "3 avoids 2 (distance 1) and 1 (distance 2)");
+    }
+
+    #[test]
+    fn d2gc_removal_only_batches_recolor_nothing() {
+        let g0 = crate::graph::generators::random_symmetric(30, 80, 9);
+        let order: Vec<u32> = (0..30u32).collect();
+        let (prev, _) = crate::coloring::d2gc::seq_greedy(&g0, &order);
+        let mut delta = DeltaSymmetric::new(g0);
+        // remove a handful of existing off-diagonal edges
+        let mut removed = 0;
+        for v in 0..30u32 {
+            if let Some(&u) = delta.row(v).iter().find(|&&u| u != v) {
+                removed += usize::from(delta.remove_edge(v, u));
+            }
+            if removed >= 5 {
+                break;
+            }
+        }
+        assert!(removed >= 1);
+        let (dirty, seeds) = delta.take_dirty();
+        assert!(dirty.is_empty(), "removals never enter detection");
+        let g = delta.graph().clone();
+        let mut ts = ThreadState::bank(1, 256);
+        let mut d = ThreadsDriver::new(1);
+        let (colors, stats) = repair(
+            &g,
+            &prev,
+            &dirty,
+            &seeds,
+            &schedule::V_V_64D,
+            Balance::None,
+            &mut d,
+            &mut ts,
+        );
+        assert!(d2gc_valid(&g, &colors).is_ok());
+        assert_eq!(stats.recolored, 0);
+        assert_eq!(colors, prev, "deletions never perturb the coloring");
+    }
+
+    #[test]
+    fn d2gc_repair_is_deterministic_under_the_simulator() {
+        let g0 = crate::graph::generators::random_symmetric(40, 120, 3);
+        let order: Vec<u32> = (0..40u32).collect();
+        let (prev, _) = crate::coloring::d2gc::seq_greedy(&g0, &order);
+        let run = || {
+            let mut delta = DeltaSymmetric::new(g0.clone());
+            delta.add_edge(0, 17);
+            delta.add_edge(5, 33);
+            let (dirty, seeds) = delta.take_dirty();
+            let g = delta.graph().clone();
+            let mut ts = ThreadState::bank(4, 256);
+            let mut d = SimDriver::new(4, CostModel::default());
+            repair(&g, &prev, &dirty, &seeds, &schedule::N1_N2, Balance::None, &mut d, &mut ts)
+        };
+        let (c1, s1) = run();
+        let (c2, s2) = run();
+        assert_eq!(c1, c2);
+        assert_eq!(s1.seconds, s2.seconds);
+        let mut dd = DeltaSymmetric::new(g0.clone());
+        dd.add_edge(0, 17);
+        dd.add_edge(5, 33);
+        assert!(d2gc_valid(dd.graph(), &c1).is_ok());
     }
 }

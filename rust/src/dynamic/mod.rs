@@ -1,51 +1,74 @@
-//! Incremental BGPC — streaming graph updates against a live coloring.
+//! Incremental coloring — streaming graph updates against a live
+//! coloring, generic over the coloring problem.
 //!
 //! The paper's optimistic speculate → detect → repeat loop (Algorithms
-//! 1, 4–8) is naturally incremental: after a batch of edge insertions
-//! and deletions, only vertices whose two-hop neighborhoods changed can
-//! conflict, so the same conflict-detection machinery that repairs
+//! 1, 4–10) is naturally incremental: after a batch of edge insertions
+//! and deletions, only vertices whose relevant neighborhoods changed
+//! can conflict, so the same conflict-detection machinery that repairs
 //! speculative races repairs a *stale* coloring at the cost of the
-//! batch footprint instead of the graph. This module packages that
-//! observation as a subsystem:
+//! batch footprint instead of the graph. And because §VI of the paper
+//! derives the D2GC phases from the BGPC ones by swapping the
+//! neighborhood definition, the incremental engine is written once,
+//! against a [`Problem`] seam, and drives both. This module packages
+//! that observation as a subsystem:
 //!
-//! * [`DeltaBipartite`] — a mutable overlay over the frozen CSR
-//!   [`crate::graph::Bipartite`]: batched `add_edge` / `remove_edge` /
+//! * [`Problem`] / [`DeltaOps`] ([`problem`]) — the seam: what
+//!   [`engine::repair`] actually needs from a coloring problem
+//!   (dirty-frontier detection, frontier expansion, the vertex-based
+//!   speculate/detect phases with balance-aware selection, the
+//!   sequential safety net), implemented on the graph types themselves
+//!   — [`crate::graph::Bipartite`] for BGPC, a square symmetric
+//!   [`crate::graph::Csr`] for D2GC.
+//! * [`DeltaBipartite`] / [`DeltaSymmetric`] ([`delta`]) — mutable
+//!   overlays over the frozen CSR: batched `add_edge` / `remove_edge` /
 //!   `add_net` with dirty tracking and periodic compaction back to CSR.
-//! * [`engine::repair`] — dirty-net detection (Algorithm 7 on the
-//!   changed subset) followed by the standard vertex-based repair loop
-//!   over the uncolored remainder, reusing the `bgpc` phase variants,
+//!   The symmetric overlay mirrors every edit so the square D2GC graph
+//!   stays structurally symmetric across the stream.
+//! * [`engine::repair`] — dirty-unit detection (Algorithm 7 / 10 on
+//!   the changed subset) followed by the standard vertex-based repair
+//!   loop over the uncolored remainder, reusing the phase variants,
 //!   the `ThreadState` forbidden arrays and `verify` unchanged.
 //! * [`DynamicSession`] — graph + coloring + persistent per-thread
 //!   state; one [`DynamicSession::apply`] per batch, returning
 //!   [`BatchStats`]. The B1/B2 balancing trackers live in the session,
-//!   so color-set balance survives the stream.
+//!   so color-set balance survives the stream. [`BgpcSession`] and
+//!   [`D2gcSession`] are the two instantiations.
 //! * The coordinator exposes sessions as a service:
-//!   [`crate::coordinator::Service::open_session`] plus the
+//!   [`crate::coordinator::Service::open_session`] /
+//!   [`crate::coordinator::Service::open_session_d2gc`] plus the
 //!   [`crate::coordinator::JobInput::Update`] job kind.
 //!
 //! Motivation: coloring is a *recurring* cost in iterative solvers
 //! (Çatalyürek et al., arXiv:1205.3809); Rokos et al. (arXiv:1505.04086)
 //! show the speculate-and-iterate scheme converges in a handful of
-//! rounds when the dirty set is small. `benches/dynamic.rs` measures
-//! the resulting repair-vs-recolor gap across batch sizes.
+//! rounds when the dirty set is small — and that the loop is
+//! problem-agnostic once detection is factored out. `benches/dynamic.rs`
+//! measures the repair-vs-recolor gap across batch sizes for both
+//! problems.
 
 pub mod delta;
 pub mod engine;
+pub mod problem;
 pub mod session;
 
-pub use delta::DeltaBipartite;
+pub use delta::{DeltaBipartite, DeltaSymmetric};
 pub use engine::repair;
-pub use session::DynamicSession;
+pub use problem::{DeltaOps, Problem};
+pub use session::{BgpcSession, D2gcSession, DynamicSession};
 
 /// One batch of graph edits, applied atomically by
-/// [`DynamicSession::apply`].
+/// [`DynamicSession::apply`]. Edit pairs are *problem-shaped*: for a
+/// BGPC session they are `(net, vertex)` incidences; for a D2GC
+/// session they are undirected `{a, b}` edges (mirrored by the
+/// symmetric overlay) and `add_nets` entries append new vertices
+/// adjacent to the listed members.
 #[derive(Clone, Debug, Default)]
 pub struct UpdateBatch {
-    /// `(net, vertex)` incidences to insert (duplicates are no-ops).
+    /// Edit pairs to insert (duplicates are no-ops).
     pub add_edges: Vec<(u32, u32)>,
-    /// `(net, vertex)` incidences to delete (absent ones are no-ops).
+    /// Edit pairs to delete (absent ones are no-ops).
     pub remove_edges: Vec<(u32, u32)>,
-    /// Fresh nets to append, each given by its member vertices.
+    /// Fresh constraint rows to append, each given by its members.
     pub add_nets: Vec<Vec<u32>>,
 }
 
@@ -68,10 +91,11 @@ impl UpdateBatch {
 pub struct BatchStats {
     /// Edits that actually changed the graph (no-ops excluded).
     pub batch_edits: usize,
-    /// Nets with insertions — the detection footprint (removal-only
-    /// nets cannot hold new conflicts and are excluded).
+    /// Detection units with insertions — nets for BGPC, rows for D2GC
+    /// (removal-only units cannot hold new conflicts and are excluded).
     pub dirty_nets: usize,
-    /// Dirty vertex frontier: members of changed nets plus endpoints.
+    /// Dirty vertex frontier: neighborhoods of changed units plus
+    /// endpoints.
     pub frontier: usize,
     /// Vertices found in conflict (or brand-new) after detection.
     pub conflicts: usize,

@@ -1,0 +1,481 @@
+//! The problem seam: what [`super::engine::repair`] actually needs.
+//!
+//! The paper's central claim is that the optimistic speculate → detect
+//! loop is *problem-agnostic*: §VI ports every BGPC phase variant to
+//! distance-2 graph coloring by swapping the neighborhood definition
+//! and keeping the loop. Rokos et al. (arXiv:1505.04086) make the same
+//! point for the repair formulation — once conflict detection is
+//! factored out, speculate-and-repair does not care which coloring
+//! problem it is fixing. This module encodes that observation as two
+//! traits instead of two parallel code paths:
+//!
+//! * [`Problem`] — implemented *on the graph type itself* ([`Bipartite`]
+//!   for BGPC, a square symmetric [`Csr`] for D2GC), it bundles the
+//!   five capabilities the incremental engine consumes: dirty-frontier
+//!   conflict detection, frontier expansion, the vertex-based
+//!   speculate/detect phases (balance-aware color selection included),
+//!   the sequential safety net, and a full capped run for session
+//!   bring-up. One generic [`super::engine::repair`] drives both.
+//! * [`DeltaOps`] — the mutable overlay contract
+//!   ([`super::DeltaBipartite`] / [`super::DeltaSymmetric`]): batched
+//!   edits, dirty tracking, compaction back to the frozen graph the
+//!   phase kernels consume. Each problem names its overlay via
+//!   [`Problem::Delta`], so the overlay enforces the problem's
+//!   structural invariant (both incidence directions in sync for BGPC;
+//!   structural symmetry of the square CSR for D2GC).
+//!
+//! Note the type-level pun: the *trait* `dynamic::Problem` is the
+//! capability seam; the *enum* [`crate::coloring::Problem`] (exposed
+//! here as [`Problem::KIND`]) stays the plain tag the coordinator's
+//! metrics and routing report.
+
+use crate::coloring::balance::Balance;
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::schedule::AlgSpec;
+use crate::coloring::verify::Violation;
+use crate::coloring::{bgpc, d2gc, ColoringResult, Problem as ProblemKind};
+use crate::graph::{Bipartite, Csr, Ordering};
+use crate::par::{ColorStore, Driver, RegionOut, SharedQueue};
+
+use super::delta::{DeltaBipartite, DeltaSymmetric};
+
+/// The mutable-overlay contract the session layer streams edits
+/// through. Edits are *problem-shaped*: for BGPC `(a, b)` is the
+/// incidence (net `a`, vertex `b`); for D2GC it is the undirected edge
+/// `{a, b}` and the overlay mirrors it to keep the square CSR
+/// structurally symmetric.
+pub trait DeltaOps: Send {
+    /// The frozen graph type the phase kernels consume.
+    type Graph;
+
+    /// Insert one edit unit; returns whether the graph changed
+    /// (duplicates are no-ops). Ids beyond the current shape grow it.
+    fn add_edge(&mut self, a: u32, b: u32) -> bool;
+
+    /// Delete one edit unit; returns whether it existed.
+    fn remove_edge(&mut self, a: u32, b: u32) -> bool;
+
+    /// Append a fresh constraint row: a new net over `members` for
+    /// BGPC, a new vertex adjacent to `members` for D2GC. Returns how
+    /// many *member edits* were actually applied (duplicates are
+    /// no-ops; the symmetric overlay's mirrored incidences and the
+    /// fresh row's diagonal count as part of the row, not as member
+    /// edits) — the unit of the session's `batch_edits` metric.
+    fn add_net(&mut self, members: &[u32]) -> usize;
+
+    /// Logical incidence count under the overlay (metrics). Directed:
+    /// the symmetric overlay counts each off-diagonal undirected edge
+    /// twice.
+    fn nnz(&self) -> usize;
+
+    /// Compact (if needed) and expose the frozen graph view.
+    fn graph(&mut self) -> &Self::Graph;
+
+    /// Drain the dirty sets accumulated since the last call:
+    /// `(insertion-dirty detection units, endpoints of changed edges)`,
+    /// sorted and deduped.
+    fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>);
+}
+
+/// A coloring problem the incremental engine can repair — see the
+/// module docs for why this is implemented on the graph type itself.
+pub trait Problem: Clone + Send + Sync + Sized + 'static {
+    /// The overlay that preserves this problem's structural invariant.
+    type Delta: DeltaOps<Graph = Self>;
+
+    /// The plain tag ([`crate::coloring::Problem`]) the service layer
+    /// reports for sessions of this problem.
+    const KIND: ProblemKind;
+
+    /// Cheap structural validation, run by
+    /// [`super::DynamicSession::start`] *before* any coloring work —
+    /// fail fast with the problem's own message instead of deep inside
+    /// a kernel. Default: every graph is acceptable.
+    ///
+    /// # Panics
+    /// When the graph violates the problem's structural contract
+    /// (D2GC: square and structurally symmetric).
+    fn validate_input(&self) {}
+
+    /// Number of vertices to color.
+    fn n_vertices(&self) -> usize;
+
+    /// Upper bound on any color the engine can produce (forbidden-array
+    /// sizing).
+    fn color_cap(&self) -> usize;
+
+    /// Wrap the frozen graph into its mutable overlay.
+    fn into_delta(self) -> Self::Delta;
+
+    /// Compute the initial visit order for a full run.
+    fn order(&self, ordering: &Ordering) -> Vec<u32>;
+
+    /// Dirty-frontier conflict detection: the net/row-style removal
+    /// pass (Alg. 7 / Alg. 10) restricted to the insertion-dirty units,
+    /// uncoloring every clash loser the batch could have created.
+    fn conflict_phase_on<D: Driver>(
+        &self,
+        dirty: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+    ) -> RegionOut;
+
+    /// Expand the dirty units into the vertex frontier detection may
+    /// have uncolored (net members for BGPC; the closed distance-1
+    /// neighborhood of dirty rows for D2GC).
+    fn extend_frontier(&self, dirty: &[u32], out: &mut Vec<u32>);
+
+    /// Vertex-based speculative coloring over the work queue (Alg. 4 /
+    /// its D2GC analogue), with balance-aware color selection.
+    fn color_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        bal: Balance,
+    ) -> RegionOut;
+
+    /// Vertex-based conflict detection over the work queue (Alg. 5 /
+    /// its D2GC analogue), requeueing losers.
+    fn conflict_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        lazy: bool,
+        shared: &SharedQueue,
+    ) -> RegionOut;
+
+    /// Exact sequential greedy over the remaining queue — the
+    /// `MAX_ITERS` safety net.
+    fn sequential_finish<C: ColorStore>(
+        &self,
+        w: &[u32],
+        colors: &C,
+        ts0: &mut ThreadState,
+        now: u64,
+    );
+
+    /// Full engine run with a caller-owned [`ThreadState`] bank and an
+    /// iteration cap (session bring-up; `cap = 0` is the sequential
+    /// greedy baseline).
+    fn run_capped<D: Driver>(
+        &self,
+        order: &[u32],
+        spec: &AlgSpec,
+        bal: Balance,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        max_iters: usize,
+    ) -> ColoringResult;
+
+    /// Ground-truth validity of `colors` against this graph.
+    fn verify(&self, colors: &[i32]) -> Result<(), Violation>;
+}
+
+impl Problem for Bipartite {
+    type Delta = DeltaBipartite;
+    const KIND: ProblemKind = ProblemKind::Bgpc;
+
+    fn n_vertices(&self) -> usize {
+        self.vtx_nets.n_rows
+    }
+
+    fn color_cap(&self) -> usize {
+        bgpc::color_cap(self)
+    }
+
+    fn into_delta(self) -> DeltaBipartite {
+        DeltaBipartite::new(self)
+    }
+
+    fn order(&self, ordering: &Ordering) -> Vec<u32> {
+        ordering.compute(self)
+    }
+
+    fn conflict_phase_on<D: Driver>(
+        &self,
+        dirty: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+    ) -> RegionOut {
+        bgpc::net::conflict_phase_on(self, dirty, colors, d, ts, chunk)
+    }
+
+    fn extend_frontier(&self, dirty: &[u32], out: &mut Vec<u32>) {
+        // nets are not colored: the frontier is their member vertices
+        for &v in dirty {
+            out.extend_from_slice(self.vtxs(v as usize));
+        }
+    }
+
+    fn color_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        bal: Balance,
+    ) -> RegionOut {
+        bgpc::vertex::color_phase(self, w, colors, d, ts, chunk, bal)
+    }
+
+    fn conflict_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        lazy: bool,
+        shared: &SharedQueue,
+    ) -> RegionOut {
+        bgpc::vertex::conflict_phase(self, w, colors, d, ts, chunk, lazy, shared)
+    }
+
+    fn sequential_finish<C: ColorStore>(
+        &self,
+        w: &[u32],
+        colors: &C,
+        ts0: &mut ThreadState,
+        now: u64,
+    ) {
+        bgpc::sequential_finish(self, w, colors, ts0, now)
+    }
+
+    fn run_capped<D: Driver>(
+        &self,
+        order: &[u32],
+        spec: &AlgSpec,
+        bal: Balance,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        max_iters: usize,
+    ) -> ColoringResult {
+        bgpc::run_capped(self, order, spec, bal, d, ts, max_iters)
+    }
+
+    fn verify(&self, colors: &[i32]) -> Result<(), Violation> {
+        crate::coloring::verify::bgpc_valid(self, colors)
+    }
+}
+
+impl Problem for Csr {
+    type Delta = DeltaSymmetric;
+    const KIND: ProblemKind = ProblemKind::D2gc;
+
+    fn validate_input(&self) {
+        assert!(
+            self.is_structurally_symmetric(),
+            "D2GC requires a square, structurally symmetric graph"
+        );
+    }
+
+    fn n_vertices(&self) -> usize {
+        self.n_rows
+    }
+
+    fn color_cap(&self) -> usize {
+        d2gc::color_cap(self)
+    }
+
+    fn into_delta(self) -> DeltaSymmetric {
+        DeltaSymmetric::new(self)
+    }
+
+    fn order(&self, ordering: &Ordering) -> Vec<u32> {
+        match *ordering {
+            Ordering::Natural => (0..self.n_rows as u32).collect(),
+            // Orderings beyond natural are defined on the bipartite
+            // view: reuse them by treating rows as nets over the same
+            // vertex set (mirrors `color_d2gc`).
+            ref o => o.compute(&Bipartite::from_net_incidence(self.clone())),
+        }
+    }
+
+    fn conflict_phase_on<D: Driver>(
+        &self,
+        dirty: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+    ) -> RegionOut {
+        d2gc::conflict_phase_on(self, dirty, colors, d, ts, chunk)
+    }
+
+    fn extend_frontier(&self, dirty: &[u32], out: &mut Vec<u32>) {
+        // rows are colored too: the closed distance-1 neighborhood
+        for &v in dirty {
+            out.push(v);
+            out.extend_from_slice(self.row(v as usize));
+        }
+    }
+
+    fn color_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        bal: Balance,
+    ) -> RegionOut {
+        d2gc::vertex::color_phase(self, w, colors, d, ts, chunk, bal)
+    }
+
+    fn conflict_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        lazy: bool,
+        shared: &SharedQueue,
+    ) -> RegionOut {
+        d2gc::vertex::conflict_phase(self, w, colors, d, ts, chunk, lazy, shared)
+    }
+
+    fn sequential_finish<C: ColorStore>(
+        &self,
+        w: &[u32],
+        colors: &C,
+        ts0: &mut ThreadState,
+        now: u64,
+    ) {
+        d2gc::sequential_finish(self, w, colors, ts0, now)
+    }
+
+    fn run_capped<D: Driver>(
+        &self,
+        order: &[u32],
+        spec: &AlgSpec,
+        bal: Balance,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        max_iters: usize,
+    ) -> ColoringResult {
+        d2gc::run_capped(self, order, spec, bal, d, ts, max_iters)
+    }
+
+    fn verify(&self, colors: &[i32]) -> Result<(), Violation> {
+        crate::coloring::verify::d2gc_valid(self, colors)
+    }
+}
+
+impl DeltaOps for DeltaBipartite {
+    type Graph = Bipartite;
+
+    fn add_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaBipartite::add_edge(self, a, b)
+    }
+
+    fn remove_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaBipartite::remove_edge(self, a, b)
+    }
+
+    fn add_net(&mut self, members: &[u32]) -> usize {
+        DeltaBipartite::add_net_counted(self, members).1
+    }
+
+    fn nnz(&self) -> usize {
+        DeltaBipartite::nnz(self)
+    }
+
+    fn graph(&mut self) -> &Bipartite {
+        DeltaBipartite::graph(self)
+    }
+
+    fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>) {
+        DeltaBipartite::take_dirty(self)
+    }
+}
+
+impl DeltaOps for DeltaSymmetric {
+    type Graph = Csr;
+
+    fn add_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaSymmetric::add_edge(self, a, b)
+    }
+
+    fn remove_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaSymmetric::remove_edge(self, a, b)
+    }
+
+    fn add_net(&mut self, members: &[u32]) -> usize {
+        DeltaSymmetric::add_vertex_counted(self, members).1
+    }
+
+    fn nnz(&self) -> usize {
+        DeltaSymmetric::nnz(self)
+    }
+
+    fn graph(&mut self) -> &Csr {
+        DeltaSymmetric::graph(self)
+    }
+
+    fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>) {
+        DeltaSymmetric::take_dirty(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{random_bipartite, random_symmetric};
+
+    #[test]
+    fn kinds_and_caps_line_up() {
+        let b = random_bipartite(10, 20, 60, 1);
+        assert_eq!(<Bipartite as Problem>::KIND, ProblemKind::Bgpc);
+        assert_eq!(Problem::color_cap(&b), bgpc::color_cap(&b));
+        let s = random_symmetric(15, 40, 2);
+        assert_eq!(<Csr as Problem>::KIND, ProblemKind::D2gc);
+        assert_eq!(Problem::color_cap(&s), d2gc::color_cap(&s));
+        assert_eq!(Problem::n_vertices(&s), 15);
+    }
+
+    #[test]
+    fn frontier_shapes_match_the_problem() {
+        // BGPC: members of the dirty nets only (nets are not colored).
+        let b = random_bipartite(5, 8, 20, 3);
+        let mut f = Vec::new();
+        Problem::extend_frontier(&b, &[2], &mut f);
+        assert_eq!(f, b.vtxs(2).to_vec());
+        // D2GC: the dirty row itself plus its neighbors.
+        let s = random_symmetric(10, 20, 4);
+        let mut f = Vec::new();
+        Problem::extend_frontier(&s, &[3], &mut f);
+        assert_eq!(f[0], 3);
+        assert_eq!(&f[1..], s.row(3));
+    }
+
+    #[test]
+    fn add_net_counts_member_edits_in_problem_units() {
+        let mut d = Problem::into_delta(random_bipartite(3, 5, 8, 1));
+        // fresh net: both members effective, the duplicate is a no-op
+        assert_eq!(DeltaOps::add_net(&mut d, &[0, 1, 1]), 2);
+        let mut s = Problem::into_delta(random_symmetric(4, 6, 2));
+        // mirrored pairs and the diagonal count as part of the row
+        assert_eq!(DeltaOps::add_net(&mut s, &[0, 0, 2]), 2);
+        assert_eq!(DeltaOps::add_net(&mut s, &[]), 0, "bare row: no member edits");
+    }
+
+    #[test]
+    fn natural_order_is_identity_for_both() {
+        let b = random_bipartite(6, 9, 25, 5);
+        assert_eq!(Problem::order(&b, &Ordering::Natural), (0..9u32).collect::<Vec<_>>());
+        let s = random_symmetric(7, 10, 6);
+        assert_eq!(Problem::order(&s, &Ordering::Natural), (0..7u32).collect::<Vec<_>>());
+    }
+}

@@ -1,32 +1,39 @@
 //! [`DynamicSession`] — a long-lived coloring that absorbs update
-//! batches.
+//! batches, generic over the coloring [`Problem`].
 //!
 //! The session owns the three pieces of state that make incremental
-//! BGPC work: the [`DeltaBipartite`] overlay (graph of record), the
-//! current coloring, and the per-thread [`ThreadState`] bank. The bank
-//! is created once at [`DynamicSession::start`] and threaded through
-//! every repair, so the B1/B2 balancing trackers (`col_max`,
-//! `col_next`) keep spreading color mass exactly as they would in one
-//! long run — streaming updates does not degrade color-set balance.
+//! coloring work: the problem's delta overlay (graph of record — a
+//! [`super::DeltaBipartite`] for BGPC, a [`super::DeltaSymmetric`] for
+//! D2GC), the current coloring, and the per-thread [`ThreadState`]
+//! bank. The bank is created once at [`DynamicSession::start`] and
+//! threaded through every repair, so the B1/B2 balancing trackers
+//! (`col_max`, `col_next`) keep spreading color mass exactly as they
+//! would in one long run — streaming updates does not degrade
+//! color-set balance.
 //!
 //! Jacobian-style clients (Çatalyürek et al., arXiv:1205.3809 motivate
 //! coloring as a *recurring* cost in iterative solvers) submit the
 //! sparsity pattern once, then stream nonzero gains/losses between
-//! solves; each [`DynamicSession::apply`] returns per-batch metrics.
+//! solves; Hessian-style clients do the same with symmetric patterns
+//! through a D2GC session ([`D2gcSession`]). Each
+//! [`DynamicSession::apply`] returns per-batch metrics.
 
-use crate::coloring::bgpc::{self, color_cap};
-use crate::coloring::verify::{bgpc_valid, Violation};
-use crate::coloring::{ColoringResult, Config, ExecMode};
+use crate::coloring::bgpc::MAX_ITERS;
 use crate::coloring::forbidden::ThreadState;
-use crate::graph::Bipartite;
+use crate::coloring::verify::Violation;
+use crate::coloring::{ColoringResult, Config, ExecMode, Problem as ProblemKind};
+use crate::graph::{Bipartite, Csr};
 use crate::par::ThreadsDriver;
 use crate::sim::SimDriver;
 
-use super::{engine, BatchStats, DeltaBipartite, UpdateBatch};
+use super::problem::{DeltaOps, Problem};
+use super::{engine, BatchStats, UpdateBatch};
 
-/// A long-lived incremental coloring (see module docs).
-pub struct DynamicSession {
-    delta: DeltaBipartite,
+/// A long-lived incremental coloring (see module docs). `P` is the
+/// graph-cum-problem type: [`Bipartite`] for BGPC, a square symmetric
+/// [`Csr`] for D2GC.
+pub struct DynamicSession<P: Problem> {
+    delta: P::Delta,
     colors: Vec<i32>,
     /// Per-thread scratch, persistent across batches (B1/B2 trackers).
     ts: Vec<ThreadState>,
@@ -34,30 +41,56 @@ pub struct DynamicSession {
     batches: usize,
 }
 
-impl DynamicSession {
+/// A BGPC streaming session (column coloring of a drifting sparse
+/// pattern — Jacobians, constraint sets).
+pub type BgpcSession = DynamicSession<Bipartite>;
+
+/// A D2GC streaming session (distance-2 coloring of a drifting square
+/// symmetric pattern — Hessians, evolving meshes and social graphs).
+pub type D2gcSession = DynamicSession<Csr>;
+
+impl<P: Problem> DynamicSession<P> {
     /// Color `g` from scratch under `cfg` and open the session around
     /// the result. Returns the session and the initial full-run result.
-    pub fn start(g: Bipartite, cfg: Config) -> (DynamicSession, ColoringResult) {
-        let mut ts = ThreadState::bank(cfg.threads, color_cap(&g));
-        let order = cfg.ordering.compute(&g);
+    ///
+    /// # Panics
+    /// When `g` violates the problem's structural contract
+    /// ([`Problem::validate_input`] — for D2GC, a square structurally
+    /// symmetric graph). The check runs before any coloring work.
+    pub fn start(g: P, cfg: Config) -> (DynamicSession<P>, ColoringResult) {
+        g.validate_input();
+        let mut ts = ThreadState::bank(cfg.threads, g.color_cap());
+        let order = g.order(&cfg.ordering);
         let r = match cfg.mode {
             ExecMode::Threads => {
                 let mut d = ThreadsDriver::new(cfg.threads);
-                bgpc::run_capped(&g, &order, &cfg.spec, cfg.balance, &mut d, &mut ts, bgpc::MAX_ITERS)
+                g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
             }
             ExecMode::Sim(model) => {
                 let mut d = SimDriver::new(cfg.threads, model);
-                bgpc::run_capped(&g, &order, &cfg.spec, cfg.balance, &mut d, &mut ts, bgpc::MAX_ITERS)
+                g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
             }
         };
         let colors = r.colors.clone();
-        let session = DynamicSession { delta: DeltaBipartite::new(g), colors, ts, cfg, batches: 0 };
+        let session = DynamicSession { delta: g.into_delta(), colors, ts, cfg, batches: 0 };
         (session, r)
+    }
+
+    /// The tag of the problem this session repairs (what the service
+    /// reports in metrics).
+    pub fn kind(&self) -> ProblemKind {
+        P::KIND
     }
 
     /// Apply one update batch: record the edits in the overlay, compact,
     /// and repair the coloring from the dirty frontier. Returns the
     /// batch metrics (dirty-set size, recolored count, colors added…).
+    ///
+    /// Edit pairs are problem-shaped: `(net, vertex)` incidences for
+    /// BGPC, undirected `{a, b}` edges for D2GC (the overlay mirrors
+    /// them to preserve structural symmetry); `add_nets` entries are
+    /// new constraint rows for BGPC and new vertices (adjacent to the
+    /// listed members) for D2GC.
     pub fn apply(&mut self, batch: &UpdateBatch) -> BatchStats {
         let mut edits = 0usize;
         for &(v, u) in &batch.add_edges {
@@ -71,17 +104,16 @@ impl DynamicSession {
             }
         }
         for members in &batch.add_nets {
-            // one edit for the net itself plus its *effective* incidences
-            // (duplicate members inside add_net are no-ops)
-            let nnz_before = self.delta.nnz();
-            self.delta.add_net(members);
-            edits += 1 + (self.delta.nnz() - nnz_before);
+            // one edit for the row itself plus its *effective* member
+            // edits (duplicates are no-ops; the symmetric overlay's
+            // mirrored incidences count once)
+            edits += 1 + self.delta.add_net(members);
         }
-        let (dirty_nets, seeds) = self.delta.take_dirty();
+        let (dirty, seeds) = self.delta.take_dirty();
         // The engines consume CSR, so the session compacts every batch.
         // This is a splice + transpose — memcpy-speed, not coloring work
         // — and is reported separately (compact_seconds, wall-clock)
-        // from the repair cost the simulator models. DeltaBipartite's
+        // from the repair cost the simulator models. The overlay's
         // lazy threshold matters for clients buffering edits directly.
         let tc = std::time::Instant::now();
         let g = self.delta.graph();
@@ -92,7 +124,7 @@ impl DynamicSession {
                 engine::repair(
                     g,
                     &self.colors,
-                    &dirty_nets,
+                    &dirty,
                     &seeds,
                     &self.cfg.spec,
                     self.cfg.balance,
@@ -105,7 +137,7 @@ impl DynamicSession {
                 engine::repair(
                     g,
                     &self.colors,
-                    &dirty_nets,
+                    &dirty,
                     &seeds,
                     &self.cfg.spec,
                     self.cfg.balance,
@@ -122,13 +154,13 @@ impl DynamicSession {
     }
 
     /// The current graph (compacting the overlay if needed).
-    pub fn graph(&mut self) -> &Bipartite {
+    pub fn graph(&mut self) -> &P {
         self.delta.graph()
     }
 
     /// Direct access to the overlay (tests, ad-hoc edits between
     /// batches; remember that [`Self::apply`] is what repairs colors).
-    pub fn delta(&mut self) -> &mut DeltaBipartite {
+    pub fn delta(&mut self) -> &mut P::Delta {
         &mut self.delta
     }
 
@@ -157,10 +189,11 @@ impl DynamicSession {
         &self.cfg
     }
 
-    /// Check the current coloring against the current graph.
+    /// Check the current coloring against the current graph with the
+    /// problem's ground-truth checker ([`crate::coloring::verify`]).
     pub fn verify(&mut self) -> Result<(), Violation> {
         let g = self.delta.graph();
-        bgpc_valid(g, &self.colors)
+        Problem::verify(g, &self.colors)
     }
 }
 
@@ -168,7 +201,7 @@ impl DynamicSession {
 mod tests {
     use super::*;
     use crate::coloring::{schedule, Balance};
-    use crate::graph::generators::random_bipartite;
+    use crate::graph::generators::{random_bipartite, random_symmetric};
     use crate::testing::forall_bipartite;
     use crate::util::prng::Rng;
 
@@ -247,5 +280,47 @@ mod tests {
             st.recolored
         );
         assert!(s.verify().is_ok());
+    }
+
+    #[test]
+    fn d2gc_session_streams_symmetric_edits() {
+        let g0 = random_symmetric(80, 300, 21);
+        let (mut s, init) = DynamicSession::start(g0.clone(), Config::sim(schedule::N1_N2, 4));
+        assert_eq!(s.kind(), ProblemKind::D2gc);
+        assert!(init.colors.iter().all(|&c| c >= 0));
+        let mut rng = Rng::new(0xD2);
+        for round in 0..4 {
+            let mut batch = UpdateBatch::default();
+            for _ in 0..10 {
+                let a = rng.range(0, 80) as u32;
+                let b = rng.range(0, 80) as u32;
+                if rng.chance(0.6) {
+                    batch.add_edges.push((a, b));
+                } else {
+                    batch.remove_edges.push((a, b));
+                }
+            }
+            let st = s.apply(&batch);
+            assert!(s.verify().is_ok(), "invalid after round {round} ({st:?})");
+            assert!(s.graph().is_structurally_symmetric(), "symmetry drifted");
+        }
+        assert_eq!(s.batches(), 4);
+    }
+
+    #[test]
+    fn d2gc_session_grows_by_vertices() {
+        let g0 = random_symmetric(40, 120, 33);
+        let (mut s, _init) = DynamicSession::start(g0, Config::sim(schedule::V_N2, 4));
+        let mut batch = UpdateBatch::default();
+        batch.add_nets.push(vec![0, 1, 2]); // new vertex 40
+        batch.add_nets.push(vec![40, 3]); // new vertex 41, touching 40
+        let st = s.apply(&batch);
+        assert!(s.verify().is_ok(), "{st:?}");
+        // edit pairs, not directed incidences: (1 row + 3 members) +
+        // (1 row + 2 members) — mirrored halves count once
+        assert_eq!(st.batch_edits, 7, "{st:?}");
+        assert_eq!(s.colors().len(), 42);
+        assert!(s.colors().iter().all(|&c| c >= 0));
+        assert!(s.graph().is_structurally_symmetric());
     }
 }

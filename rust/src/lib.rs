@@ -20,11 +20,13 @@
 //!   (Algorithms 4–8), D2GC (Algorithms 9–10), the hybrid schedules
 //!   (`V-V` … `N1-N2`), the balancing heuristics B1/B2 (Algorithms
 //!   11–12), plus D1GC, verification and color statistics.
-//! * [`dynamic`] — incremental BGPC for streaming graph updates: a
-//!   mutable delta overlay over the frozen CSR, dirty-frontier repair
-//!   that reuses the optimistic phase machinery, and long-lived
-//!   sessions whose balancing trackers persist across update batches
-//!   (DESIGN.md §8).
+//! * [`dynamic`] — incremental coloring for streaming graph updates,
+//!   generic over the problem (BGPC and D2GC): mutable delta overlays
+//!   over the frozen CSR (the D2GC one keeps the square pattern
+//!   structurally symmetric), dirty-frontier repair that reuses the
+//!   optimistic phase machinery through the [`dynamic::Problem`] seam,
+//!   and long-lived sessions whose balancing trackers persist across
+//!   update batches (DESIGN.md §8–§9).
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled
 //!   JAX/Pallas net-step artifacts (`artifacts/*.hlo.txt`) and runs the
 //!   batched coloring step from Rust; Python is never on this path.
@@ -52,5 +54,5 @@ pub mod testing;
 pub mod util;
 
 pub use coloring::{ColoringResult, Problem, Schedule};
-pub use dynamic::{BatchStats, DynamicSession, UpdateBatch};
+pub use dynamic::{BatchStats, BgpcSession, D2gcSession, DynamicSession, UpdateBatch};
 pub use graph::{Bipartite, Csr};

@@ -6,6 +6,7 @@
 //! the failing case's parameters (seed + shape) so any failure is
 //! reproducible with a one-liner.
 
+use crate::dynamic::UpdateBatch;
 use crate::graph::generators::{random_bipartite, random_symmetric};
 use crate::graph::{Bipartite, Csr};
 use crate::util::prng::Rng;
@@ -77,6 +78,57 @@ pub fn forall_symmetric(cases: usize, master_seed: u64, f: impl Fn(&Csr, u64)) {
             panic!("property failed on case #{i}: n={n} m={m} seed={seed}\n{e:?}");
         }
     }
+}
+
+/// A mixed update batch for a BGPC instance: `edits` incidences,
+/// alternating remove-existing / add-random, deterministic in `rng`.
+/// One definition shared by `benches/dynamic.rs` and the integration
+/// tests, so the test-scale and bench-scale acceptance checks exercise
+/// the same batch distribution.
+pub fn random_update_batch(g: &Bipartite, edits: usize, rng: &mut Rng) -> UpdateBatch {
+    let mut b = UpdateBatch::default();
+    for i in 0..edits {
+        if i % 2 == 0 {
+            let v = rng.range(0, g.n_nets());
+            let row = g.vtxs(v);
+            if row.is_empty() {
+                continue;
+            }
+            let u = row[rng.range(0, row.len())];
+            b.remove_edges.push((v as u32, u));
+        } else {
+            b.add_edges.push((
+                rng.range(0, g.n_nets()) as u32,
+                rng.range(0, g.n_vertices()) as u32,
+            ));
+        }
+    }
+    b
+}
+
+/// The symmetric (D2GC) analogue of [`random_update_batch`]: `edits`
+/// undirected pairs, alternating remove-existing-off-diagonal /
+/// add-random.
+pub fn random_symmetric_update_batch(g: &Csr, edits: usize, rng: &mut Rng) -> UpdateBatch {
+    let mut b = UpdateBatch::default();
+    for i in 0..edits {
+        if i % 2 == 0 {
+            let a = rng.range(0, g.n_rows);
+            let off: Vec<u32> =
+                g.row(a).iter().copied().filter(|&u| u as usize != a).collect();
+            if off.is_empty() {
+                continue;
+            }
+            b.remove_edges.push((a as u32, off[rng.range(0, off.len())]));
+        } else {
+            let a = rng.range(0, g.n_rows) as u32;
+            let c = rng.range(0, g.n_rows) as u32;
+            if a != c {
+                b.add_edges.push((a, c));
+            }
+        }
+    }
+    b
 }
 
 /// A random partial coloring (mix of -1 and small colors) for fuzzing

@@ -208,6 +208,49 @@ fn prop_balancing_on_presets_valid_capped_and_less_skewed() {
 }
 
 #[test]
+fn prop_d2gc_repair_with_balancing_keeps_skew_no_worse() {
+    // The Table VI claim carried into the streaming path by the
+    // problem-generic engine (DESIGN.md §9): after a D2GC session
+    // absorbs an update batch, the B1/B2-balanced coloring's
+    // cardinality skew is no worse than the unbalanced baseline's
+    // (per symmetric preset, with slack for the tiny scale), and every
+    // balanced repair still verifies.
+    use bgpc::coloring::stats::ColorStats;
+    use bgpc::dynamic::{DynamicSession, UpdateBatch};
+    use bgpc::graph::PRESETS;
+    for p in PRESETS.iter().filter(|p| p.symmetric) {
+        let m = p.net_incidence(0.02, 5);
+        let n = m.n_rows;
+        let mk_batch = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut b = UpdateBatch::default();
+            for _ in 0..(m.nnz() / 500).max(16) {
+                let a = rng.range(0, n) as u32;
+                let c = rng.range(0, n) as u32;
+                if a != c {
+                    b.add_edges.push((a, c));
+                }
+            }
+            b
+        };
+        let run_with = |bal: Balance| {
+            let cfg = Config::sim(schedule::V_N2, 16).with_balance(bal);
+            let (mut s, _init) = DynamicSession::start(m.clone(), cfg);
+            s.apply(&mk_batch(0xBA1A ^ n as u64));
+            assert!(s.verify().is_ok(), "{} {bal:?}: invalid after repair", p.name);
+            ColorStats::from_colors(s.colors()).stddev_cardinality
+        };
+        let unbalanced = run_with(Balance::None);
+        let best = run_with(Balance::B1).min(run_with(Balance::B2));
+        assert!(
+            best <= unbalanced * 1.05 + 1.0,
+            "{}: balanced repair skew {best:.2} vs unbalanced {unbalanced:.2}",
+            p.name
+        );
+    }
+}
+
+#[test]
 fn prop_balanced_runs_always_valid() {
     forall_bipartite(20, 0xBA1, |g, case| {
         for bal in [Balance::B1, Balance::B2] {

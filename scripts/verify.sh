@@ -1,9 +1,10 @@
 #!/usr/bin/env sh
 # Local mirror of CI: tier-1 gate plus target-coverage builds.
 #
-#   scripts/verify.sh              # build + test + benches/examples + clippy + fmt
+#   scripts/verify.sh              # build + test + benches/examples + docs + clippy + fmt
 #   SKIP_FMT=1 scripts/verify.sh   # when rustfmt is not installed
 #   SKIP_CLIPPY=1 scripts/verify.sh# when clippy is not installed
+#   SKIP_DOCS=1 scripts/verify.sh  # skip the rustdoc warnings gate
 set -eu
 
 cd "$(dirname "$0")/../rust"
@@ -17,6 +18,15 @@ BGPC_ARTIFACTS="${BGPC_ARTIFACTS:-../artifacts}" cargo test -q
 
 echo "== cargo build --benches --examples =="
 cargo build --benches --examples
+
+# Rustdoc gate: the public API (dynamic, coordinator, coloring::d2gc…)
+# is documented; broken intra-doc links and missing docs regress here.
+if [ "${SKIP_DOCS:-0}" = "1" ]; then
+    echo "== docs skipped (SKIP_DOCS=1) =="
+else
+    echo '== RUSTDOCFLAGS="-D warnings" cargo doc --no-deps =='
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+fi
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "== clippy skipped (SKIP_CLIPPY=1) =="
