@@ -6,13 +6,14 @@
 #   make test            cargo test (artifacts built first when possible)
 #   make test-artifacts  like test, but PJRT roundtrip skips become errors
 #   make bench           all hand-rolled bench harnesses (release)
+#   make fmt             rustfmt the crate (the verify/CI gate checks it)
 #   make clean
 
 CARGO_DIR := rust
 ARTIFACTS := artifacts
 PYTHON    ?= python3
 
-.PHONY: verify artifacts test test-artifacts bench clean
+.PHONY: verify artifacts test test-artifacts bench fmt clean
 
 verify:
 	cd $(CARGO_DIR) && cargo build --release && BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
@@ -32,6 +33,11 @@ test-artifacts: artifacts
 
 bench:
 	cd $(CARGO_DIR) && cargo bench
+
+# Apply the formatting the verify.sh / CI `cargo fmt --check` gate
+# enforces (SKIP_FMT=1 skips the gate where rustfmt is unavailable).
+fmt:
+	cd $(CARGO_DIR) && cargo fmt
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

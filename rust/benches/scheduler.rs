@@ -1,0 +1,111 @@
+//! Scheduler microbench: region-dispatch overhead of the persistent
+//! worker pool vs the old spawn-per-region backend (DESIGN.md §10).
+//!
+//! For region sizes 1e2..1e6 and chunking {1, 64, static}, the same
+//! trivial body runs through (a) a pool-backed `ThreadsDriver` (one
+//! team, parked between regions) and (b) the retired pre-pool driver
+//! (`bgpc::testing::SpawnDriver`: a scope per region). Reported times
+//! are medians of many single-region dispatches, so small sizes measure
+//! pure handoff cost. Acceptance: on small regions (≤ 1e3 items) the
+//! pool must dispatch ≥ 2× faster than spawn-per-region — that is the
+//! overhead the engine's conflict-removal rounds and the dynamic
+//! subsystem's ≤1% batches pay per region.
+//!
+//!   cargo bench --bench scheduler
+//!
+//! CSV artifact: `scheduler.csv`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bgpc::par::{Cost, Driver, ThreadsDriver};
+// the retired spawn-per-region driver — the same reference backend
+// `tests/driver_equivalence.rs` certifies
+use bgpc::testing::SpawnDriver;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// The trivial region body: one add per item, so timings are dominated
+/// by dispatch/scheduling, not arithmetic.
+fn body(_tid: usize, ts: &mut u64, item: usize, _now: u64) -> Cost {
+    *ts = ts.wrapping_add(black_box(item as u64));
+    Cost::new(1)
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+fn reps_for(n: usize) -> usize {
+    match n {
+        0..=1_000 => 101,
+        1_001..=10_000 => 31,
+        10_001..=100_000 => 11,
+        _ => 3,
+    }
+}
+
+fn main() {
+    const T: usize = 4;
+    let sizes = [100usize, 1_000, 10_000, 100_000, 1_000_000];
+    let chunks: [(usize, &str); 3] = [(1, "1"), (64, "64"), (0, "static")];
+
+    let mut pool_driver = ThreadsDriver::new(T);
+    let mut spawn_driver = SpawnDriver { t: T };
+    let mut states = vec![0u64; T];
+
+    // warm-up: wake the team once so the first timed sample is not a
+    // cold page-in
+    pool_driver.region(&mut states, 1_000, 64, body);
+
+    println!("=== scheduler: region dispatch, pool vs spawn-per-region (t={T}) ===");
+    println!(
+        "{:>9} {:>7} | {:>12} {:>12} | {:>7}",
+        "n_items", "chunk", "pool_s", "spawn_s", "spawn/pool"
+    );
+    let mut csv = Vec::new();
+    for &n in &sizes {
+        for &(chunk, label) in &chunks {
+            let reps = reps_for(n);
+            let pool_med = median(
+                (0..reps)
+                    .map(|_| {
+                        let t0 = Instant::now();
+                        pool_driver.region(&mut states, n, chunk, body);
+                        t0.elapsed().as_secs_f64()
+                    })
+                    .collect(),
+            );
+            let spawn_med = median(
+                (0..reps)
+                    .map(|_| {
+                        let t0 = Instant::now();
+                        spawn_driver.region(&mut states, n, chunk, body);
+                        t0.elapsed().as_secs_f64()
+                    })
+                    .collect(),
+            );
+            let ratio = spawn_med / pool_med.max(1e-12);
+            println!(
+                "{:>9} {:>7} | {:>12.3e} {:>12.3e} | {:>9.1}",
+                n, label, pool_med, spawn_med, ratio
+            );
+            csv.push(format!("{n},{label},{pool_med:.6e},{spawn_med:.6e},{ratio:.2}"));
+            if n <= 1_000 {
+                // acceptance: persistent-team handoff must beat thread
+                // creation by a wide margin where regions are small
+                assert!(
+                    ratio >= 2.0,
+                    "pool only {ratio:.2}x faster than spawn at n={n} chunk={label}"
+                );
+            }
+        }
+    }
+    common::write_csv("scheduler.csv", "n_items,chunk,pool_secs,spawn_secs,ratio", &csv);
+
+    let stats = pool_driver.pool().stats();
+    println!("pool counters: {}", stats.summary());
+    assert_eq!(stats.threads, T);
+    println!("ok");
+}

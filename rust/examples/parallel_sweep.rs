@@ -6,7 +6,10 @@
 //! it touches) on REAL threads, using the coloring as the race-freedom
 //! certificate, and demonstrates the paper's §V point: the balancing
 //! heuristics shrink the tail of tiny color sets, which is what keeps
-//! every wave wide enough to feed all cores.
+//! every wave wide enough to feed all cores. Each wave is one region on
+//! a persistent `par::pool` team (DESIGN.md §10) — hundreds of waves,
+//! one thread spawn total — and the pool's dispatch/utilization
+//! counters are printed at the end.
 //!
 //! ```bash
 //! cargo run --release --example parallel_sweep
@@ -21,6 +24,11 @@ use bgpc::par::{Cost, Driver, ThreadsDriver};
 fn main() {
     let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.1, 3);
     let n_rows = g.n_nets();
+
+    // one persistent team for the whole example: every wave of every
+    // configuration below is a park/wake of these four threads
+    let mut driver = ThreadsDriver::new(4);
+    let mut states = vec![(); 4];
 
     for (tag, bal) in [("unbalanced", Balance::None), ("B2", Balance::B2)] {
         let cfg = Config::sim(schedule::V_N2, 16).with_balance(bal);
@@ -39,8 +47,6 @@ fn main() {
         // is touched by at most one column per wave (checked below).
         let row_state: Vec<AtomicU32> = (0..n_rows).map(|_| AtomicU32::new(0)).collect();
         let touched: Vec<AtomicU32> = (0..n_rows).map(|_| AtomicU32::new(0)).collect();
-        let mut driver = ThreadsDriver::new(4);
-        let mut states = vec![(); 4];
         let mut narrow_waves = 0usize;
         for wave in waves.iter().filter(|w| !w.is_empty()) {
             if wave.len() < 4 {
@@ -63,6 +69,7 @@ fn main() {
         // every row incidence processed exactly once overall
         let processed: u32 = row_state.iter().map(|x| x.load(AOrd::Relaxed)).sum();
         assert_eq!(processed as usize, g.nnz());
+        println!("  pool after {tag}: {}", driver.pool().stats().summary());
 
         println!(
             "{tag:<11}: {} waves, card avg {:>6.1} / stddev {:>7.1}, singleton sets {:>4}, waves narrower than 4 cols: {}",

@@ -113,6 +113,7 @@ pub fn run_capped<D: Driver>(
     let mut sim_secs = 0.0f64;
     let mut work_units = 0u64;
     let mut iterations = 0usize;
+    let mut is_sim = false;
 
     while !w.is_empty() && iterations < max_iters {
         iterations += 1;
@@ -134,6 +135,7 @@ pub fn run_capped<D: Driver>(
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
         work_units += cr.busy_units.iter().sum::<u64>();
+        is_sim = cr.sim_ns.is_some();
 
         // --- conflict removal phase (Alg. 5 / 7) ---
         let (rr, w_next) = if net_conflict {
@@ -187,7 +189,6 @@ pub fn run_capped<D: Driver>(
 
     let colors_vec = colors.to_vec();
     let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
-    let is_sim = trace.iters.first().map(|i| !i.color_busy.is_empty()).unwrap_or(false);
     ColoringResult {
         colors: colors_vec,
         n_colors,

@@ -146,6 +146,18 @@ impl ThreadState {
     pub fn bank(t: usize, color_cap: usize) -> Vec<ThreadState> {
         (0..t).map(|_| ThreadState::new(color_cap)).collect()
     }
+
+    /// Reset the per-run state (balancing trackers, local queues) while
+    /// keeping every allocation. A pool-resident bank calls this
+    /// between unrelated jobs so reuse is observably identical to a
+    /// fresh [`ThreadState::bank`] — the forbidden array needs no touch
+    /// at all, its generation stamps already isolate runs.
+    pub fn reset_for_run(&mut self) {
+        self.wlocal.clear();
+        self.next_local.clear();
+        self.col_max = 0;
+        self.col_next = 0;
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +218,24 @@ mod tests {
         f.insert(4);
         assert_eq!(f.first_fit_from(4).0, 5);
         assert_eq!(f.first_fit_from(2).0, 2);
+    }
+
+    #[test]
+    fn reset_for_run_clears_state_but_keeps_capacity() {
+        let mut s = ThreadState::new(16);
+        s.forbidden.next_gen();
+        s.forbidden.insert(200); // grows the domain
+        s.wlocal.push(1);
+        s.next_local.push(2);
+        s.col_max = 9;
+        s.col_next = 3;
+        let cap_before = s.forbidden.stamp.len();
+        s.reset_for_run();
+        assert!(s.wlocal.is_empty() && s.next_local.is_empty());
+        assert_eq!((s.col_max, s.col_next), (0, 0));
+        assert_eq!(s.forbidden.stamp.len(), cap_before, "allocations must survive");
+        s.forbidden.next_gen();
+        assert!(!s.forbidden.contains(200), "old generations stay invisible");
     }
 
     #[test]

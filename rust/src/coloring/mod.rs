@@ -27,10 +27,12 @@ pub use forbidden::{StampSet, ThreadState};
 pub use schedule::{AlgSpec, NetColorAlg, Schedule};
 pub use stats::ColorStats;
 
+use std::sync::Arc;
+
 use crate::graph::{Bipartite, Csr, Ordering};
 use crate::sim::trace::RunTrace;
 use crate::sim::{CostModel, SimDriver};
-use crate::par::ThreadsDriver;
+use crate::par::{ThreadsDriver, WorkerPool};
 
 /// Which coloring problem to solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -112,7 +114,8 @@ pub struct ColoringResult {
     pub seconds: f64,
     /// Per-iteration phase trace (Figure 1 raw data).
     pub trace: RunTrace,
-    /// Total work units (simulator only; 0 otherwise).
+    /// Total work units: modeled units under the simulator, summed
+    /// per-worker [`crate::par::Cost::units`] on real threads.
     pub work_units: u64,
 }
 
@@ -122,7 +125,11 @@ impl ColoringResult {
     }
 }
 
-/// Color a BGPC instance with the given configuration.
+/// Color a BGPC instance with the given configuration. Threads mode
+/// builds a private [`WorkerPool`] for the run; long-lived callers
+/// (the coordinator, sessions) should prefer [`color_bgpc_on`] /
+/// [`crate::dynamic::DynamicSession::start_on`], which reuse a shared
+/// team and its resident scratch.
 pub fn color_bgpc(g: &Bipartite, cfg: &Config) -> ColoringResult {
     let order = cfg.ordering.compute(g);
     match cfg.mode {
@@ -137,15 +144,51 @@ pub fn color_bgpc(g: &Bipartite, cfg: &Config) -> ColoringResult {
     }
 }
 
+/// [`color_bgpc`] on a shared [`WorkerPool`] (threads mode only; sim
+/// configs delegate unchanged). The run borrows the pool's team —
+/// clamped to its size, never a spawn — and the pool-resident
+/// [`ThreadState`] bank, so forbidden arrays are allocated once across
+/// *jobs*, not just across the iterations of one run (DESIGN.md §10).
+pub fn color_bgpc_on(g: &Bipartite, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
+    match cfg.mode {
+        ExecMode::Threads => {
+            let order = cfg.ordering.compute(g);
+            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
+            let t = d.threads();
+            with_pool_bank(pool, t, bgpc::color_cap(g), |bank| {
+                bgpc::run_capped(g, &order, &cfg.spec, cfg.balance, &mut d, bank, bgpc::MAX_ITERS)
+            })
+        }
+        ExecMode::Sim(_) => color_bgpc(g, cfg),
+    }
+}
+
+/// Borrow the pool-resident [`ThreadState`] bank for one job: grow it
+/// to the team size if needed, reset the per-run state of the slots the
+/// team will use (allocations survive — DESIGN.md §10), and hand the
+/// team-sized slice to `f`. Shared by [`color_bgpc_on`] and
+/// [`color_d2gc_on`] so the reuse protocol cannot diverge per problem.
+fn with_pool_bank<R>(
+    pool: &Arc<WorkerPool>,
+    t: usize,
+    cap: usize,
+    f: impl FnOnce(&mut [ThreadState]) -> R,
+) -> R {
+    pool.with_scratch(Vec::new, |bank: &mut Vec<ThreadState>| {
+        if bank.len() < t {
+            bank.resize_with(t, || ThreadState::new(cap));
+        }
+        for s in bank.iter_mut().take(t) {
+            s.reset_for_run();
+        }
+        f(&mut bank[..t])
+    })
+}
+
 /// Color a D2GC instance (square graph) with the given configuration.
 pub fn color_d2gc(g: &Csr, cfg: &Config) -> ColoringResult {
     assert_eq!(g.n_rows, g.n_cols, "D2GC needs a square graph");
-    let order: Vec<u32> = match cfg.ordering {
-        Ordering::Natural => (0..g.n_rows as u32).collect(),
-        // Orderings beyond natural are defined on the bipartite view:
-        // reuse them by treating rows as nets over the same vertex set.
-        o => o.compute(&Bipartite::from_net_incidence(g.clone())),
-    };
+    let order = d2gc_order(g, cfg);
     match cfg.mode {
         ExecMode::Threads => {
             let mut d = ThreadsDriver::new(cfg.threads);
@@ -155,5 +198,32 @@ pub fn color_d2gc(g: &Csr, cfg: &Config) -> ColoringResult {
             let mut d = SimDriver::new(cfg.threads, model);
             d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d)
         }
+    }
+}
+
+/// [`color_d2gc`] on a shared [`WorkerPool`] — the D2GC mirror of
+/// [`color_bgpc_on`] (threads mode only; sim configs delegate).
+pub fn color_d2gc_on(g: &Csr, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
+    match cfg.mode {
+        ExecMode::Threads => {
+            assert_eq!(g.n_rows, g.n_cols, "D2GC needs a square graph");
+            let order = d2gc_order(g, cfg);
+            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
+            let t = d.threads();
+            with_pool_bank(pool, t, d2gc::color_cap(g), |bank| {
+                d2gc::run_capped(g, &order, &cfg.spec, cfg.balance, &mut d, bank, bgpc::MAX_ITERS)
+            })
+        }
+        ExecMode::Sim(_) => color_d2gc(g, cfg),
+    }
+}
+
+/// The D2GC visit order for `cfg.ordering`: natural is the identity;
+/// other orderings are defined on the bipartite view, so reuse them by
+/// treating rows as nets over the same vertex set.
+fn d2gc_order(g: &Csr, cfg: &Config) -> Vec<u32> {
+    match cfg.ordering {
+        Ordering::Natural => (0..g.n_rows as u32).collect(),
+        o => o.compute(&Bipartite::from_net_incidence(g.clone())),
     }
 }

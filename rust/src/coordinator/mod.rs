@@ -1,12 +1,26 @@
 //! Coloring job coordinator — the L3 service layer.
 //!
-//! A [`Service`] owns a pool of native workers plus (optionally) one
-//! PJRT worker that holds the compiled net-step artifacts. Clients
+//! A [`Service`] owns a set of native *dispatchers*, one shared
+//! region-execution [`WorkerPool`] (DESIGN.md §10), and (optionally)
+//! one PJRT worker that holds the compiled net-step artifacts. Clients
 //! [`Service::submit`] jobs (a graph + a [`crate::coloring::Config`] +
 //! an engine selector); the router dispatches each job to the right
-//! worker queue and the caller gets a receiver for the outcome. The
-//! PJRT executable is compiled once and reused across jobs (one
-//! executable per bucket, per DESIGN.md §3); Python is never involved.
+//! queue and the caller gets a receiver for the outcome. Dispatchers
+//! never execute parallel regions themselves: every threads-mode job
+//! and session runs its regions on the single persistent pool (size
+//! via [`Service::start_with`]). Sessions own private scratch banks
+//! and interleave on the team region-by-region; full-recolor jobs
+//! share the one pool-resident bank and therefore serialize with each
+//! other for their whole run (the team is one machine-wide resource
+//! either way — concurrency buys overlap of between-region
+//! bookkeeping, not extra parallelism). Engine panics come back as
+//! failed [`JobOutcome`]s instead of poisoning a worker thread, and a
+//! panic mid-update closes and unregisters the session so torn state
+//! is never served. [`Service::pool_stats`]
+//! exposes the substrate's region-dispatch and worker-utilization
+//! counters. The PJRT executable is compiled once and reused across
+//! jobs (one executable per bucket, per DESIGN.md §3); Python is never
+//! involved.
 //!
 //! **Dynamic sessions** (the [`crate::dynamic`] subsystem, DESIGN.md
 //! §8–§9): sessions are *problem-tagged* — [`Service::open_session`]
@@ -28,17 +42,24 @@
 pub mod metrics;
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::coloring::{color_bgpc, color_d2gc, Config, Problem};
+use crate::coloring::{color_bgpc_on, color_d2gc_on, Config, Problem};
 use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
 use crate::graph::{Bipartite, Csr};
+use crate::par::pool::panic_message;
+use crate::par::{PoolStats, WorkerPool};
 use crate::runtime::{NetStepOffload, Runtime};
 
 pub use metrics::Metrics;
+
+/// Default size of the shared region-execution [`WorkerPool`] (see
+/// [`Service::start_with`] to pick another).
+pub const DEFAULT_POOL_THREADS: usize = 4;
 
 /// Identifier of an open dynamic session (see [`Service::open_session`]
 /// and [`Service::open_session_d2gc`]).
@@ -185,12 +206,36 @@ pub struct Service {
     seq: AtomicU64,
     sessions: Arc<SessionMap>,
     session_seq: AtomicU64,
+    /// The shared region-execution team every native job and session
+    /// multiplexes onto (DESIGN.md §10).
+    pool: Arc<WorkerPool>,
 }
 
-fn run_native(job: &Job, sessions: &SessionMap, seq: u64) -> JobOutcome {
+/// A zeroed failure [`JobOutcome`] — the shape every coordinator error
+/// path reports, differing only in identity and message.
+fn fail_outcome(
+    name: &str,
+    engine: &'static str,
+    problem: Option<Problem>,
+    error: String,
+) -> JobOutcome {
+    JobOutcome {
+        name: name.to_string(),
+        engine,
+        problem,
+        n_colors: 0,
+        iterations: 0,
+        seconds: 0.0,
+        valid: false,
+        error: Some(error),
+        batch: None,
+    }
+}
+
+fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>) -> JobOutcome {
     match &job.input {
         JobInput::Bgpc(g) => {
-            let r = color_bgpc(g, &job.cfg);
+            let r = color_bgpc_on(g, &job.cfg, pool);
             let valid = crate::coloring::verify::bgpc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -205,7 +250,7 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64) -> JobOutcome {
             }
         }
         JobInput::D2gc(g) => {
-            let r = color_d2gc(g, &job.cfg);
+            let r = color_d2gc_on(g, &job.cfg, pool);
             let valid = crate::coloring::verify::d2gc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -234,17 +279,7 @@ fn run_update(
 ) -> JobOutcome {
     let slot = sessions.lock().unwrap().get(&id).cloned();
     let Some(slot) = slot else {
-        return JobOutcome {
-            name: name.to_string(),
-            engine: "native",
-            problem: None,
-            n_colors: 0,
-            iterations: 0,
-            seconds: 0.0,
-            valid: false,
-            error: Some(format!("unknown session {id}")),
-            batch: None,
-        };
+        return fail_outcome(name, "native", None, format!("unknown session {id}"));
     };
     let mut inner = slot.state.lock().unwrap();
     let problem = inner.session.problem();
@@ -252,43 +287,61 @@ fn run_update(
         if inner.closed {
             // a predecessor batch was dropped by close_session: fail
             // cleanly instead of parking forever
-            return JobOutcome {
-                name: name.to_string(),
-                engine: "native",
-                problem: Some(problem),
-                n_colors: 0,
-                iterations: 0,
-                seconds: 0.0,
-                valid: false,
-                error: Some(format!("session {id} closed before batch applied")),
-                batch: None,
-            };
+            return fail_outcome(
+                name,
+                "native",
+                Some(problem),
+                format!("session {id} closed before batch applied"),
+            );
         }
         inner = slot.cv.wait(inner).unwrap();
     }
     if inner.closed {
         // in-order but the session was closed while this batch was
         // queued: refuse to mutate state the client can no longer see
-        return JobOutcome {
-            name: name.to_string(),
-            engine: "native",
-            problem: Some(problem),
-            n_colors: 0,
-            iterations: 0,
-            seconds: 0.0,
-            valid: false,
-            error: Some(format!("session {id} closed before batch applied")),
-            batch: None,
-        };
+        return fail_outcome(
+            name,
+            "native",
+            Some(problem),
+            format!("session {id} closed before batch applied"),
+        );
     }
-    let stats = inner.session.apply(batch);
+    // Apply + verify under catch_unwind: a panic here would otherwise
+    // unwind while holding the slot mutex, poisoning it for every later
+    // client call and hanging successors parked on `applied` — instead
+    // the session is marked closed (its state may be torn mid-apply),
+    // parked successors wake and fail cleanly, and the panic surfaces
+    // as this job's error. The verify pass is the service contract:
+    // every outcome the coordinator hands back is checked with the
+    // session's own problem checker (bgpc_valid / d2gc_valid), O(|E|)
+    // under the session lock; latency-sensitive clients that trust the
+    // repair invariants can use DynamicSession directly.
+    let applied = catch_unwind(AssertUnwindSafe(|| {
+        let stats = inner.session.apply(batch);
+        let valid = inner.session.verify_ok();
+        (stats, valid)
+    }));
+    let (stats, valid) = match applied {
+        Ok(x) => x,
+        Err(p) => {
+            // The session state may be torn mid-apply: close it AND
+            // drop it from the map (exactly like close_session), so
+            // clients get `None` from session_colors/session_problem
+            // instead of a possibly-invalid coloring, and the dead
+            // slot does not leak.
+            inner.closed = true;
+            slot.cv.notify_all();
+            drop(inner);
+            sessions.lock().unwrap().remove(&id);
+            return fail_outcome(
+                name,
+                "native",
+                Some(problem),
+                format!("engine panicked: {}; session {id} closed", panic_message(p.as_ref())),
+            );
+        }
+    };
     inner.applied += 1;
-    // Service contract: every outcome the coordinator hands back is
-    // verified, exactly like run_native's full-graph check — with the
-    // session's own problem checker (bgpc_valid / d2gc_valid). This is
-    // O(|E|) under the session lock; latency-sensitive clients that
-    // trust the repair invariants can use DynamicSession directly.
-    let valid = inner.session.verify_ok();
     slot.cv.notify_all();
     JobOutcome {
         name: name.to_string(),
@@ -323,38 +376,51 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                     }
                 }
                 Err(e) => JobOutcome {
-                    name: job.name.clone(),
-                    engine: "pjrt",
-                    problem: Some(Problem::Bgpc),
-                    n_colors: 0,
-                    iterations: 0,
                     seconds: t0.elapsed().as_secs_f64(),
-                    valid: false,
-                    error: Some(format!("{e:#}")),
-                    batch: None,
+                    ..fail_outcome(&job.name, "pjrt", Some(Problem::Bgpc), format!("{e:#}"))
                 },
             }
         }
-        JobInput::D2gc(_) | JobInput::Update { .. } => JobOutcome {
-            name: job.name.clone(),
-            engine: "pjrt",
-            problem: job.input.problem(),
-            n_colors: 0,
-            iterations: 0,
-            seconds: 0.0,
-            valid: false,
-            error: Some("PJRT engine only supports BGPC jobs".into()),
-            batch: None,
-        },
+        JobInput::D2gc(_) | JobInput::Update { .. } => fail_outcome(
+            &job.name,
+            "pjrt",
+            job.input.problem(),
+            "PJRT engine only supports BGPC jobs".into(),
+        ),
     }
 }
 
 impl Service {
-    /// Start `n_native` native workers; if `artifacts` is given and loads,
-    /// also start one PJRT worker owning the compiled executables.
+    /// Start `n_native` native dispatchers over a
+    /// [`DEFAULT_POOL_THREADS`]-wide shared pool; if `artifacts` is
+    /// given and loads, also start one PJRT worker owning the compiled
+    /// executables. See [`Service::start_with`] for the pool knob.
     pub fn start(n_native: usize, artifacts: Option<std::path::PathBuf>) -> Service {
+        Service::start_with(n_native, DEFAULT_POOL_THREADS, artifacts)
+    }
+
+    /// [`Service::start`] with an explicit region-execution pool size.
+    ///
+    /// Two thread populations exist, spawned here once and never again:
+    /// `n_native` *dispatchers* (they pop the job queue, order session
+    /// updates, and block on outcomes — control plane) and one
+    /// `pool_threads`-wide [`WorkerPool`] that executes every parallel
+    /// region of every threads-mode job and session (data plane).
+    /// Sessions interleave on the team region-by-region; full-recolor
+    /// jobs additionally serialize on the pool-resident scratch bank
+    /// for their whole run. A job's `cfg.threads` is clamped to the
+    /// pool size. A panic inside an
+    /// engine (a structural assert, a driver contract violation)
+    /// surfaces as a failed [`JobOutcome`] — the dispatcher and the
+    /// pool both survive.
+    pub fn start_with(
+        n_native: usize,
+        pool_threads: usize,
+        artifacts: Option<std::path::PathBuf>,
+    ) -> Service {
         let metrics = Arc::new(Metrics::default());
         let sessions: Arc<SessionMap> = Arc::new(Mutex::new(HashMap::new()));
+        let pool = Arc::new(WorkerPool::new(pool_threads.max(1)));
         let (native_tx, native_rx) = channel::<Message>();
         let native_rx = Arc::new(std::sync::Mutex::new(native_rx));
         let mut workers = Vec::new();
@@ -362,11 +428,20 @@ impl Service {
             let rx = Arc::clone(&native_rx);
             let m = Arc::clone(&metrics);
             let sess = Arc::clone(&sessions);
+            let pl = Arc::clone(&pool);
             workers.push(std::thread::spawn(move || loop {
                 let msg = { rx.lock().unwrap().recv() };
                 match msg {
                     Ok(Message::Run(job, seq, out)) => {
-                        let o = run_native(&job, &sess, seq);
+                        let o = catch_unwind(AssertUnwindSafe(|| run_native(&job, &sess, seq, &pl)))
+                            .unwrap_or_else(|p| {
+                                fail_outcome(
+                                    &job.name,
+                                    "native",
+                                    job.input.problem(),
+                                    format!("engine panicked: {}", panic_message(p.as_ref())),
+                                )
+                            });
                         m.record(&o);
                         let _ = out.send(o);
                     }
@@ -425,6 +500,7 @@ impl Service {
             seq: AtomicU64::new(0),
             sessions,
             session_seq: AtomicU64::new(0),
+            pool,
         }
     }
 
@@ -448,17 +524,12 @@ impl Service {
                     let _ = self.native_tx.send(Message::Run(job, seq, tx));
                 }
                 None => {
-                    let _ = tx.send(JobOutcome {
-                        name: job.name,
-                        engine: "native",
-                        problem: None,
-                        n_colors: 0,
-                        iterations: 0,
-                        seconds: 0.0,
-                        valid: false,
-                        error: Some(format!("unknown session {id}")),
-                        batch: None,
-                    });
+                    let _ = tx.send(fail_outcome(
+                        &job.name,
+                        "native",
+                        None,
+                        format!("unknown session {id}"),
+                    ));
                 }
             }
             return rx;
@@ -476,17 +547,12 @@ impl Service {
                     let _ = ptx.send(Message::Run(job, 0, tx));
                 }
                 None => {
-                    let _ = tx.send(JobOutcome {
-                        name: job.name,
-                        engine: "pjrt",
-                        problem: job.input.problem(),
-                        n_colors: 0,
-                        iterations: 0,
-                        seconds: 0.0,
-                        valid: false,
-                        error: Some("PJRT engine not loaded (run `make artifacts`)".into()),
-                        batch: None,
-                    });
+                    let _ = tx.send(fail_outcome(
+                        &job.name,
+                        "pjrt",
+                        job.input.problem(),
+                        "PJRT engine not loaded (run `make artifacts`)".into(),
+                    ));
                 }
             }
         } else {
@@ -500,7 +566,8 @@ impl Service {
     /// alive inside the service. Stream [`JobInput::Update`] jobs
     /// against the returned id, then [`Service::close_session`].
     pub fn open_session(&self, name: &str, g: &Bipartite, cfg: Config) -> (SessionId, JobOutcome) {
-        let (mut session, init) = crate::dynamic::DynamicSession::start(g.clone(), cfg);
+        let (mut session, init) =
+            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, &self.pool);
         let valid = session.verify().is_ok();
         self.install_session(name, AnySession::Bgpc(session), &init, valid)
     }
@@ -513,7 +580,8 @@ impl Service {
     /// # Panics
     /// If `g` is not square and structurally symmetric.
     pub fn open_session_d2gc(&self, name: &str, g: &Csr, cfg: Config) -> (SessionId, JobOutcome) {
-        let (mut session, init) = crate::dynamic::DynamicSession::start(g.clone(), cfg);
+        let (mut session, init) =
+            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, &self.pool);
         let valid = session.verify().is_ok();
         self.install_session(name, AnySession::D2gc(session), &init, valid)
     }
@@ -594,6 +662,19 @@ impl Service {
         &self.metrics
     }
 
+    /// The shared region-execution pool (open sessions against it,
+    /// inspect it, or borrow it for ad-hoc drivers).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Region-dispatch and worker-utilization counters of the shared
+    /// pool — the execution-substrate metrics that complement the
+    /// per-job [`Metrics`].
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
     /// Stop all workers and join them.
     pub fn shutdown(self) {
         for _ in 0..self.workers.len() {
@@ -635,6 +716,76 @@ mod tests {
             assert!(o.n_colors > 0);
         }
         assert_eq!(svc.metrics().jobs_done(), 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn threads_jobs_multiplex_onto_the_shared_pool() {
+        use crate::graph::generators::random_symmetric;
+        let svc = Service::start_with(2, 4, None);
+        assert_eq!(svc.pool_stats().threads, 4);
+        let g = Arc::new(random_bipartite(120, 180, 1400, 5));
+        let m = Arc::new(random_symmetric(80, 300, 7));
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push(svc.submit(Job {
+                name: format!("t{i}"),
+                // cfg.threads is clamped to the pool size (8 -> 4)
+                input: JobInput::Bgpc(Arc::clone(&g)),
+                cfg: Config::threads(schedule::ALL[i % schedule::ALL.len()], 8),
+                engine: EngineSel::Native,
+            }));
+        }
+        rxs.push(svc.submit(Job {
+            name: "t-d2".into(),
+            input: JobInput::D2gc(Arc::clone(&m)),
+            cfg: Config::threads(schedule::V_N2, 4),
+            engine: EngineSel::Native,
+        }));
+        for rx in rxs {
+            let o = rx.recv().unwrap();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+        }
+        let st = svc.pool_stats();
+        assert!(st.regions > 0, "regions must dispatch onto the shared pool");
+        assert!(st.items > 0);
+        assert!(st.utilization() > 0.0 && st.utilization() <= 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn engine_panic_becomes_job_error_and_worker_survives() {
+        // A non-square D2GC job trips the engine's structural assert on
+        // the dispatcher. The old behaviour poisoned the worker thread;
+        // now the panic surfaces through JobOutcome and the service
+        // keeps serving.
+        let svc = Service::start(1, None);
+        let bad = Arc::new(crate::graph::Csr::from_edges(3, 4, &[(0, 1), (1, 0), (2, 3)]));
+        let o = svc
+            .submit(Job {
+                name: "bad".into(),
+                input: JobInput::D2gc(bad),
+                cfg: Config::sim(schedule::N1_N2, 2),
+                engine: EngineSel::Native,
+            })
+            .recv()
+            .unwrap();
+        assert!(!o.valid);
+        let err = o.error.expect("panic must surface as an error");
+        assert!(err.contains("square"), "unexpected message: {err}");
+        assert_eq!(svc.metrics().failures(), 1);
+        // the single dispatcher survived: a healthy job still completes
+        let g = Arc::new(random_bipartite(40, 60, 300, 2));
+        let o = svc
+            .submit(Job {
+                name: "good".into(),
+                input: JobInput::Bgpc(g),
+                cfg: Config::sim(schedule::V_N2, 2),
+                engine: EngineSel::Native,
+            })
+            .recv()
+            .unwrap();
+        assert!(o.valid, "{:?}", o.error);
         svc.shutdown();
     }
 

@@ -33,9 +33,12 @@
 //! arise between vertices recolored in the same round, and both are in
 //! the work queue, where the conflict phase's tie-break catches them.
 //!
-//! The caller owns the [`ThreadState`] bank, so the B1/B2 balancing
-//! trackers (`col_max`, `col_next`) persist across batches and the
-//! color-set balance does not degrade as updates stream.
+//! The caller owns the [`ThreadState`] bank *and* the driver, so the
+//! B1/B2 balancing trackers (`col_max`, `col_next`) persist across
+//! batches — color-set balance does not degrade as updates stream —
+//! and under real threads every region here parks/wakes the caller's
+//! persistent [`crate::par::WorkerPool`] team (the session pins one for
+//! its lifetime; DESIGN.md §10) instead of spawning.
 
 use crate::coloring::balance::Balance;
 use crate::coloring::bgpc::{collect_next, MAX_ITERS};

@@ -1,15 +1,19 @@
 //! [`DynamicSession`] — a long-lived coloring that absorbs update
 //! batches, generic over the coloring [`Problem`].
 //!
-//! The session owns the three pieces of state that make incremental
+//! The session owns the four pieces of state that make incremental
 //! coloring work: the problem's delta overlay (graph of record — a
 //! [`super::DeltaBipartite`] for BGPC, a [`super::DeltaSymmetric`] for
-//! D2GC), the current coloring, and the per-thread [`ThreadState`]
-//! bank. The bank is created once at [`DynamicSession::start`] and
-//! threaded through every repair, so the B1/B2 balancing trackers
-//! (`col_max`, `col_next`) keep spreading color mass exactly as they
-//! would in one long run — streaming updates does not degrade
-//! color-set balance.
+//! D2GC), the current coloring, the per-thread [`ThreadState`] bank,
+//! and its execution driver. The bank and the driver are created once
+//! at [`DynamicSession::start`] (or [`DynamicSession::start_on`], which
+//! borrows a shared [`WorkerPool`] team) and threaded through every
+//! repair: the B1/B2 balancing trackers (`col_max`, `col_next`) keep
+//! spreading color mass exactly as they would in one long run —
+//! streaming updates does not degrade color-set balance — and in
+//! threads mode the forbidden arrays stay pinned to one persistent
+//! team, so a batch costs a pool wakeup, never a thread spawn
+//! (DESIGN.md §10).
 //!
 //! Jacobian-style clients (Çatalyürek et al., arXiv:1205.3809 motivate
 //! coloring as a *recurring* cost in iterative solvers) submit the
@@ -18,16 +22,29 @@
 //! through a D2GC session ([`D2gcSession`]). Each
 //! [`DynamicSession::apply`] returns per-batch metrics.
 
+use std::sync::Arc;
+
 use crate::coloring::bgpc::MAX_ITERS;
 use crate::coloring::forbidden::ThreadState;
 use crate::coloring::verify::Violation;
 use crate::coloring::{ColoringResult, Config, ExecMode, Problem as ProblemKind};
 use crate::graph::{Bipartite, Csr};
-use crate::par::ThreadsDriver;
-use crate::sim::SimDriver;
+use crate::par::{ThreadsDriver, WorkerPool};
+use crate::sim::{CostModel, SimDriver};
 
 use super::problem::{DeltaOps, Problem};
 use super::{engine, BatchStats, UpdateBatch};
+
+/// The session's persistent execution backend. Threads mode pins one
+/// pool-backed driver for the session's lifetime, so a stream of
+/// batches parks/wakes one team instead of spawning per batch (let
+/// alone per region); the simulator is rebuilt per batch — it is a
+/// plain struct, and a fresh virtual clock keeps per-batch timings
+/// independent and deterministic.
+enum SessionDriver {
+    Threads(ThreadsDriver),
+    Sim(CostModel),
+}
 
 /// A long-lived incremental coloring (see module docs). `P` is the
 /// graph-cum-problem type: [`Bipartite`] for BGPC, a square symmetric
@@ -38,6 +55,7 @@ pub struct DynamicSession<P: Problem> {
     /// Per-thread scratch, persistent across batches (B1/B2 trackers).
     ts: Vec<ThreadState>,
     cfg: Config,
+    driver: SessionDriver,
     batches: usize,
 }
 
@@ -58,21 +76,53 @@ impl<P: Problem> DynamicSession<P> {
     /// ([`Problem::validate_input`] — for D2GC, a square structurally
     /// symmetric graph). The check runs before any coloring work.
     pub fn start(g: P, cfg: Config) -> (DynamicSession<P>, ColoringResult) {
+        Self::start_impl(g, cfg, None)
+    }
+
+    /// [`DynamicSession::start`] on a shared [`WorkerPool`]: in threads
+    /// mode the session's driver borrows the pool (team clamped to its
+    /// size) instead of owning a private one — this is how the
+    /// coordinator multiplexes every session onto one machine-wide
+    /// team. Sim-mode configs ignore the pool.
+    pub fn start_on(
+        g: P,
+        cfg: Config,
+        pool: &Arc<WorkerPool>,
+    ) -> (DynamicSession<P>, ColoringResult) {
+        Self::start_impl(g, cfg, Some(pool))
+    }
+
+    fn start_impl(
+        g: P,
+        cfg: Config,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> (DynamicSession<P>, ColoringResult) {
         g.validate_input();
-        let mut ts = ThreadState::bank(cfg.threads, g.color_cap());
+        let mut driver = match cfg.mode {
+            ExecMode::Threads => SessionDriver::Threads(match pool {
+                Some(p) => ThreadsDriver::on_team(p, cfg.threads),
+                None => ThreadsDriver::new(cfg.threads),
+            }),
+            ExecMode::Sim(model) => SessionDriver::Sim(model),
+        };
+        let t = match &driver {
+            SessionDriver::Threads(d) => d.threads(),
+            SessionDriver::Sim(_) => cfg.threads,
+        };
+        let mut ts = ThreadState::bank(t, g.color_cap());
         let order = g.order(&cfg.ordering);
-        let r = match cfg.mode {
-            ExecMode::Threads => {
-                let mut d = ThreadsDriver::new(cfg.threads);
-                g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
+        let r = match &mut driver {
+            SessionDriver::Threads(d) => {
+                g.run_capped(&order, &cfg.spec, cfg.balance, d, &mut ts, MAX_ITERS)
             }
-            ExecMode::Sim(model) => {
-                let mut d = SimDriver::new(cfg.threads, model);
+            SessionDriver::Sim(model) => {
+                let mut d = SimDriver::new(cfg.threads, *model);
                 g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
             }
         };
         let colors = r.colors.clone();
-        let session = DynamicSession { delta: g.into_delta(), colors, ts, cfg, batches: 0 };
+        let session =
+            DynamicSession { delta: g.into_delta(), colors, ts, cfg, driver, batches: 0 };
         (session, r)
     }
 
@@ -118,22 +168,22 @@ impl<P: Problem> DynamicSession<P> {
         let tc = std::time::Instant::now();
         let g = self.delta.graph();
         let compact_seconds = tc.elapsed().as_secs_f64();
-        let (colors, mut stats) = match self.cfg.mode {
-            ExecMode::Threads => {
-                let mut d = ThreadsDriver::new(self.cfg.threads);
-                engine::repair(
-                    g,
-                    &self.colors,
-                    &dirty,
-                    &seeds,
-                    &self.cfg.spec,
-                    self.cfg.balance,
-                    &mut d,
-                    &mut self.ts,
-                )
-            }
-            ExecMode::Sim(model) => {
-                let mut d = SimDriver::new(self.cfg.threads, model);
+        // The session's driver persists across batches: in threads mode
+        // this parks/wakes the pinned pool team — no spawn anywhere on
+        // the repair path.
+        let (colors, mut stats) = match &mut self.driver {
+            SessionDriver::Threads(d) => engine::repair(
+                g,
+                &self.colors,
+                &dirty,
+                &seeds,
+                &self.cfg.spec,
+                self.cfg.balance,
+                d,
+                &mut self.ts,
+            ),
+            SessionDriver::Sim(model) => {
+                let mut d = SimDriver::new(self.cfg.threads, *model);
                 engine::repair(
                     g,
                     &self.colors,
@@ -280,6 +330,27 @@ mod tests {
             st.recolored
         );
         assert!(s.verify().is_ok());
+    }
+
+    #[test]
+    fn threads_session_pins_one_pool_across_batches() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let g = random_bipartite(50, 80, 500, 3);
+        let cfg = Config::threads(schedule::V_V_64D, 2);
+        let (mut s, init) = DynamicSession::start_on(g, cfg, &pool);
+        assert!(init.colors.iter().all(|&c| c >= 0));
+        let after_start = pool.regions_dispatched();
+        assert!(after_start > 0, "bring-up must run on the shared pool");
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push((0, 0));
+        batch.add_edges.push((1, 3));
+        batch.add_edges.push((2, 7));
+        s.apply(&batch);
+        assert!(s.verify().is_ok());
+        assert!(
+            pool.regions_dispatched() > after_start,
+            "repair regions must dispatch onto the same pinned team"
+        );
     }
 
     #[test]

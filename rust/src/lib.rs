@@ -12,8 +12,10 @@
 //!   and vertex orderings (natural / random / largest-first /
 //!   smallest-last).
 //! * [`par`] — an OpenMP-equivalent chunked dynamic-scheduling
-//!   parallel-for over `std::thread` (the paper's `schedule(dynamic, 64)`
-//!   is a first-class knob).
+//!   parallel-for (the paper's `schedule(dynamic, 64)` is a first-class
+//!   knob) executed on a persistent worker pool ([`par::pool`]): one
+//!   parked team per process, epoch-handoff regions, zero spawns on the
+//!   hot path (DESIGN.md §10).
 //! * [`sim`] — a deterministic discrete-event multicore simulator used to
 //!   reproduce the paper's 16-thread experiments on arbitrary hosts.
 //! * [`coloring`] — the paper's contribution: vertex- and net-based BGPC

@@ -8,7 +8,7 @@
 //! bgpc color --preset bone010 [--mtx file] [--alg N1-N2] [--threads 16]
 //!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
 //! bgpc d2color --preset af_shell [--alg V-N2] [--threads 16]
-//! bgpc serve --jobs 32 --workers 2            # coordinator demo loop
+//! bgpc serve --jobs 32 --workers 2 --pool 4   # coordinator demo loop
 //! ```
 
 use std::collections::HashMap;
@@ -16,7 +16,7 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use bgpc::coloring::{self, schedule, Balance, Config, ExecMode};
-use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service, DEFAULT_POOL_THREADS};
 use bgpc::graph::{generators::Preset, mtx, Bipartite, InstanceStats, Ordering, PRESETS};
 use bgpc::runtime::Runtime;
 use bgpc::sim::CostModel;
@@ -222,17 +222,27 @@ fn cmd_gen(flags: &HashMap<String, String>) -> ExitCode {
 fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
     let n_jobs: usize = flags.get("jobs").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
     let workers: usize = flags.get("workers").map(|s| s.parse().unwrap_or(2)).unwrap_or(2);
-    let svc = Service::start(workers, Some(Runtime::default_dir()));
-    println!("coordinator up: {workers} native workers, pjrt={}", svc.has_pjrt());
+    let pool: usize = flags
+        .get("pool")
+        .map(|s| s.parse().unwrap_or(DEFAULT_POOL_THREADS))
+        .unwrap_or(DEFAULT_POOL_THREADS);
+    let svc = Service::start_with(workers, pool, Some(Runtime::default_dir()));
+    println!(
+        "coordinator up: {workers} dispatchers over a {pool}-thread pool, pjrt={}",
+        svc.has_pjrt()
+    );
     let mut rxs = Vec::new();
     for i in 0..n_jobs {
         let p = PRESETS[i % PRESETS.len()];
         let g = Arc::new(p.bipartite(0.02, i as u64));
         let spec = schedule::ALL[i % schedule::ALL.len()];
+        // every fourth job runs on the real shared pool; the rest use
+        // the deterministic 16-thread simulator
+        let cfg = if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
         rxs.push(svc.submit(Job {
             name: format!("{}-{}", p.name, spec.name),
             input: JobInput::Bgpc(g),
-            cfg: Config::sim(spec, 16),
+            cfg,
             engine: if i % 4 == 0 { EngineSel::Auto } else { EngineSel::Native },
         }));
     }
@@ -248,6 +258,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         }
     }
     println!("metrics: {}", svc.metrics().summary());
+    println!("pool: {}", svc.pool_stats().summary());
     svc.shutdown();
     if failures == 0 {
         ExitCode::SUCCESS

@@ -5,25 +5,31 @@
 //! knob (`V-V` ⇒ chunk 1, `V-V-64*` ⇒ chunk 64). This module provides the
 //! same construct three ways behind one [`Driver`] trait:
 //!
-//! * [`ThreadsDriver`] — real `std::thread` workers with a shared atomic
-//!   cursor (lock-free dynamic scheduling). Used for concurrency
-//!   correctness on any host.
+//! * [`ThreadsDriver`] — real threads from a persistent [`WorkerPool`]
+//!   (parked workers, epoch handoff, shared atomic cursor for dynamic
+//!   scheduling; DESIGN.md §10). Used for concurrency correctness on
+//!   any host; regions never spawn threads.
 //! * [`crate::sim::SimDriver`] — deterministic discrete-event virtual
 //!   threads with a calibrated cost model; reproduces the paper's
 //!   16-thread behaviour on this 1-core testbed (DESIGN.md §4).
-//! * `ThreadsDriver` with `t = 1` — the sequential baseline.
+//! * `ThreadsDriver` with `t = 1` — the sequential baseline (an inline
+//!   loop on the calling thread, no synchronization at all).
 //!
 //! A region body is `Fn(tid, &mut TS, item, now) -> Cost`: `TS` is the
 //! thread-private scratch (forbidden arrays, local queues — the paper's
 //! "allocated only once, never reset" state), `now` is the virtual clock
 //! (0 under real threads), and the returned [`Cost`] is the work the item
-//! actually performed (edges traversed, atomics issued) which only the
-//! simulator consumes.
+//! actually performed (edges traversed, atomics issued): the simulator
+//! charges it to virtual clocks, the pool counts it into the per-worker
+//! busy counters.
 
+pub mod pool;
 pub mod queue;
 
-use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+use std::sync::atomic::Ordering as AOrd;
+use std::sync::Arc;
 
+pub use pool::{PoolStats, WorkerPool};
 pub use queue::SharedQueue;
 
 /// Work performed by one item, reported by region bodies.
@@ -50,8 +56,10 @@ pub struct RegionOut {
     pub real_secs: f64,
     /// Simulated nanoseconds (None for real executions).
     pub sim_ns: Option<f64>,
-    /// Per-thread busy work units (simulator only; used for imbalance
-    /// diagnostics and the balancing experiments).
+    /// Per-thread busy work units, used for imbalance diagnostics and
+    /// the balancing experiments. The simulator reports modeled units
+    /// (item base + atomics included); the real-thread pool reports the
+    /// [`Cost::units`] each participant accumulated.
     pub busy_units: Vec<u64>,
 }
 
@@ -150,17 +158,44 @@ pub trait Driver {
         F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync;
 }
 
-/// Real-thread driver: `std::thread::scope` workers + shared atomic
-/// cursor (the OpenMP `schedule(dynamic, chunk)` equivalent). With
-/// `t == 1` no thread is spawned — this doubles as the sequential driver.
+/// Real-thread driver: a thin [`Driver`] veneer over a persistent
+/// [`WorkerPool`] (the OpenMP `parallel for schedule(dynamic, chunk)`
+/// equivalent with a long-lived team — DESIGN.md §10). The old
+/// spawn-per-region implementation is gone from the hot path; it
+/// survives only as the reference driver in `tests/driver_equivalence`
+/// and `benches/scheduler`.
+///
+/// With `t == 1` every region is an inline loop on the calling thread —
+/// this doubles as the sequential driver.
 pub struct ThreadsDriver {
-    pub t: usize,
+    pool: Arc<WorkerPool>,
+    team: usize,
 }
 
 impl ThreadsDriver {
+    /// A driver with its own private `t`-thread pool (spawned here,
+    /// once — regions only park/wake it).
     pub fn new(t: usize) -> ThreadsDriver {
         assert!(t >= 1);
-        ThreadsDriver { t }
+        ThreadsDriver { pool: Arc::new(WorkerPool::new(t)), team: t }
+    }
+
+    /// Borrow an existing shared pool, using its full team. This is how
+    /// the coordinator multiplexes every job onto one machine-wide team.
+    pub fn on(pool: &Arc<WorkerPool>) -> ThreadsDriver {
+        ThreadsDriver { pool: Arc::clone(pool), team: pool.threads() }
+    }
+
+    /// Borrow an existing shared pool with an explicit team size
+    /// (clamped to the pool's — a shared pool never oversubscribes).
+    pub fn on_team(pool: &Arc<WorkerPool>, team: usize) -> ThreadsDriver {
+        let team = team.clamp(1, pool.threads());
+        ThreadsDriver { pool: Arc::clone(pool), team }
+    }
+
+    /// The pool this driver dispatches onto.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 }
 
@@ -168,7 +203,7 @@ impl Driver for ThreadsDriver {
     type Colors = AtomicColors;
 
     fn threads(&self) -> usize {
-        self.t
+        self.team
     }
 
     fn new_colors(&self, n: usize) -> AtomicColors {
@@ -180,55 +215,14 @@ impl Driver for ThreadsDriver {
         TS: Send,
         F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
     {
-        assert!(states.len() >= self.t, "one scratch state per thread required");
-        let t0 = std::time::Instant::now();
-        if self.t == 1 {
-            let ts = &mut states[0];
-            for item in 0..n_items {
-                body(0, ts, item, 0);
-            }
-        } else if chunk == 0 {
-            // schedule(static): contiguous blocks
-            let t = self.t;
-            let body = &body;
-            std::thread::scope(|s| {
-                for (tid, ts) in states.iter_mut().enumerate().take(t) {
-                    s.spawn(move || {
-                        let lo = n_items * tid / t;
-                        let hi = n_items * (tid + 1) / t;
-                        for item in lo..hi {
-                            body(tid, ts, item, 0);
-                        }
-                    });
-                }
-            });
-        } else {
-            let cursor = AtomicUsize::new(0);
-            let body = &body;
-            let cursor = &cursor;
-            std::thread::scope(|s| {
-                for (tid, ts) in states.iter_mut().enumerate().take(self.t) {
-                    s.spawn(move || loop {
-                        let start = cursor.fetch_add(chunk, AOrd::Relaxed);
-                        if start >= n_items {
-                            break;
-                        }
-                        let end = (start + chunk).min(n_items);
-                        for item in start..end {
-                            body(tid, ts, item, 0);
-                        }
-                    });
-                }
-            });
-        }
-        RegionOut { real_secs: t0.elapsed().as_secs_f64(), sim_ns: None, busy_units: Vec::new() }
+        self.pool.region(states, self.team, n_items, chunk, body)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
 
     #[test]
     fn threads_driver_visits_every_item_once() {
@@ -291,5 +285,39 @@ mod tests {
         let mut states = vec![(); 2];
         let out = d.region(&mut states, 0, 64, |_, _, _, _| Cost::new(1));
         assert!(out.real_secs >= 0.0);
+    }
+
+    #[test]
+    fn real_regions_report_per_thread_busy_units() {
+        // The spawn-per-region driver returned an empty vec here; the
+        // pool populates it so imbalance diagnostics work off-simulator.
+        for t in [1usize, 4] {
+            let mut d = ThreadsDriver::new(t);
+            let mut states = vec![(); t];
+            let out = d.region(&mut states, 1_000, 16, |_, _, _, _| Cost::new(3));
+            assert_eq!(out.busy_units.len(), t, "t={t}");
+            assert_eq!(out.busy_units.iter().sum::<u64>(), 3_000, "t={t}");
+        }
+    }
+
+    #[test]
+    fn drivers_share_one_pool() {
+        let pool = std::sync::Arc::new(WorkerPool::new(4));
+        let mut a = ThreadsDriver::on(&pool);
+        let mut b = ThreadsDriver::on_team(&pool, 2);
+        assert_eq!(a.threads(), 4);
+        assert_eq!(b.threads(), 2);
+        let count = AtomicU64::new(0);
+        let mut states = vec![(); 4];
+        a.region(&mut states, 100, 8, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        b.region(&mut states, 100, 8, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        assert_eq!(count.load(AOrd::Relaxed), 200);
+        assert_eq!(pool.regions_dispatched(), 2, "both drivers dispatch onto one team");
     }
 }

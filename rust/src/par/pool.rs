@@ -1,0 +1,591 @@
+//! [`WorkerPool`] — a persistent team of parked worker threads that
+//! executes parallel regions without ever spawning on the hot path.
+//!
+//! The paper's engine is a sequence of short `#pragma omp parallel for`
+//! regions: each speculate → detect iteration runs two or three of
+//! them, a dynamic repair batch a handful more, and an OpenMP runtime
+//! keeps one thread team alive for the whole process. The previous
+//! `ThreadsDriver` instead paid `std::thread::scope` — thread creation
+//! *and* join — for every region, which on small queues (conflict-
+//! removal rounds, ≤1% update batches) rivals the useful work. Rokos et
+//! al. (arXiv:1505.04086) and Çatalyürek et al. (arXiv:1205.3809) both
+//! observe that the scheduling substrate, not the coloring arithmetic,
+//! decides speculative-coloring performance at this granularity.
+//!
+//! Design (DESIGN.md §10):
+//!
+//! * **Epoch handoff.** Workers park on a condvar guarding an epoch
+//!   counter. A region publishes a type-erased [`Job`] (a monomorphized
+//!   trampoline plus a pointer to the caller's stack-held context),
+//!   bumps the epoch and broadcasts; workers that see a new epoch run
+//!   the trampoline and check back in. The calling thread always
+//!   participates as tid 0, so a `team == 1` region is a plain inline
+//!   loop with zero synchronization — the sequential driver for free.
+//! * **Scheduling.** `chunk >= 1` claims chunks from a shared atomic
+//!   cursor (`schedule(dynamic, chunk)`); `chunk == 0` splits the
+//!   index space contiguously (`schedule(static)`), exactly as the
+//!   simulator models them.
+//! * **Scratch residency.** The pool carries one type-erased scratch
+//!   slot ([`WorkerPool::with_scratch`]) so callers that run many
+//!   independent jobs (the coordinator) can keep a `ThreadState` bank —
+//!   the paper's "allocated only once, never reset" arrays — alive
+//!   across jobs, not just across the iterations of one run.
+//! * **Containment.** A panic inside a region body (an engine assert)
+//!   is caught on the worker, the team still checks in, and the panic
+//!   resumes on the *calling* thread — same observable behaviour as the
+//!   old scoped join, but the pool, its workers, and its locks stay
+//!   usable. The coordinator converts such panics into failed
+//!   [`crate::coordinator::JobOutcome`]s instead of losing a worker.
+//! * **Counters.** The pool counts dispatched regions, executed items
+//!   and per-worker busy units ([`WorkerPool::stats`]); every region
+//!   also reports per-worker busy units in
+//!   [`RegionOut::busy_units`], so imbalance diagnostics work on real
+//!   threads, not only under the simulator.
+//!
+//! Multiple OS threads may call [`WorkerPool::region`] concurrently on
+//! one shared pool (the coordinator multiplexes its whole job queue
+//! onto a single team): callers serialize region-by-region on an
+//! internal lock, which is the intended behaviour — one machine-wide
+//! team, never thread oversubscription.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AOrd};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::{Cost, RegionOut};
+
+/// Poison-tolerant lock: a panic that unwinds through a region caller
+/// must not brick the pool for every later job.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Best-effort human-readable panic payload (panics carry `&str` or
+/// `String` in practice). Shared with the coordinator's job-outcome
+/// conversion.
+pub fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// A type-erased parallel region: `run` is the monomorphized trampoline
+/// ([`run_region`]) and `data` points to the publishing caller's
+/// stack-held [`Ctx`].
+#[derive(Clone, Copy)]
+struct Job {
+    run: unsafe fn(*const (), usize),
+    data: *const (),
+    /// Worker tids `1..team` participate; the caller is tid 0.
+    team: usize,
+}
+
+// SAFETY: `data` points into the stack frame of the `region` call that
+// published the job. That frame provably outlives every worker's use of
+// it — the caller blocks until all participants have checked in — and
+// each participant touches only its own disjoint `tid` slot of the
+// mutable state (the `TS: Send` / `F: Sync` bounds on `region` make the
+// transfer itself sound).
+unsafe impl Send for Job {}
+
+struct Gate {
+    /// Bumped once per dispatched region; workers compare against the
+    /// last epoch they served to detect fresh work after a wakeup.
+    epoch: u64,
+    job: Option<Job>,
+    /// Participants that have not yet checked in for the current epoch.
+    outstanding: usize,
+    /// First panic message from a region body on a worker this epoch.
+    panic_msg: Option<String>,
+    shutdown: bool,
+}
+
+struct Shared {
+    sync: Mutex<Gate>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// The caller-side context a [`Job`] points at. One per region, on the
+/// caller's stack; workers reach it only through the trampoline.
+struct Ctx<TS, F> {
+    states: *mut TS,
+    body: *const F,
+    cursor: AtomicUsize,
+    n_items: usize,
+    /// `0` = contiguous static split, `>= 1` = dynamic chunk size.
+    chunk: usize,
+    team: usize,
+    /// Per-participant busy work units for this region (the pool's
+    /// reusable buffer; at least `team` entries, zeroed at publish).
+    busy: *const AtomicU64,
+}
+
+/// The monomorphized region trampoline: claims work for `tid` and runs
+/// the body over it, accumulating the returned [`Cost`] units.
+///
+/// # Safety
+/// `data` must point to a live `Ctx<TS, F>` whose `states` array holds
+/// at least `team` elements, and each `tid` must be used by exactly one
+/// thread per region.
+unsafe fn run_region<TS, F>(data: *const (), tid: usize)
+where
+    TS: Send,
+    F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
+{
+    let ctx = &*(data as *const Ctx<TS, F>);
+    let body = &*ctx.body;
+    let ts = &mut *ctx.states.add(tid);
+    let mut units = 0u64;
+    if ctx.chunk == 0 {
+        // schedule(static): contiguous blocks
+        let lo = ctx.n_items * tid / ctx.team;
+        let hi = ctx.n_items * (tid + 1) / ctx.team;
+        for item in lo..hi {
+            units += body(tid, ts, item, 0).units;
+        }
+    } else {
+        // schedule(dynamic, chunk): shared atomic cursor
+        loop {
+            let start = ctx.cursor.fetch_add(ctx.chunk, AOrd::Relaxed);
+            if start >= ctx.n_items {
+                break;
+            }
+            let end = (start + ctx.chunk).min(ctx.n_items);
+            for item in start..end {
+                units += body(tid, ts, item, 0).units;
+            }
+        }
+    }
+    (*ctx.busy.add(tid)).fetch_add(units, AOrd::Relaxed);
+}
+
+fn worker_loop(shared: &Shared, wid: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = lock(&shared.sync);
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    seen = g.epoch;
+                    break g.job;
+                }
+                g = shared.work_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // `job` is always `Some` while a region is in flight; a stale
+        // `None` can only be seen by a non-participant that slept
+        // through a whole region, and it simply re-parks.
+        let Some(job) = job else { continue };
+        if wid < job.team {
+            // SAFETY: see `Job` — the publishing caller keeps the
+            // context alive until this worker checks in below.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (job.run)(job.data, wid)
+            }));
+            let mut g = lock(&shared.sync);
+            if let Err(p) = r {
+                let msg = panic_message(p.as_ref());
+                g.panic_msg.get_or_insert(msg);
+            }
+            g.outstanding -= 1;
+            if g.outstanding == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Cumulative pool counters (see [`WorkerPool::stats`]).
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    /// Team size (caller + parked workers).
+    pub threads: usize,
+    /// Regions dispatched over the pool's lifetime.
+    pub regions: u64,
+    /// Work items executed across all regions.
+    pub items: u64,
+    /// Cumulative busy work units per worker (index 0 = the callers).
+    pub busy_units: Vec<u64>,
+}
+
+impl PoolStats {
+    /// Mean-over-max busy fraction across workers: 1.0 = perfectly
+    /// balanced, `1/threads` = one worker did everything.
+    pub fn utilization(&self) -> f64 {
+        let max = self.busy_units.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        let sum: u64 = self.busy_units.iter().sum();
+        sum as f64 / (max as f64 * self.busy_units.len() as f64)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "threads={} regions={} items={} utilization={:.2}",
+            self.threads,
+            self.regions,
+            self.items,
+            self.utilization()
+        )
+    }
+}
+
+/// A persistent team of parked workers executing parallel regions (see
+/// the module docs). Constructed once, shared via `Arc`, dropped when
+/// the last driver/service holding it goes away.
+pub struct WorkerPool {
+    t: usize,
+    shared: Arc<Shared>,
+    /// Serializes concurrent callers: one region in flight at a time.
+    region_lock: Mutex<()>,
+    /// Resident type-erased scratch (see [`WorkerPool::with_scratch`]).
+    scratch: Mutex<Option<Box<dyn Any + Send>>>,
+    regions: AtomicU64,
+    items: AtomicU64,
+    busy: Vec<AtomicU64>,
+    /// Per-participant counters of the in-flight region, reused across
+    /// dispatches (exclusive via `region_lock`) — tiny regions pay no
+    /// allocation for their counters.
+    region_busy: Vec<AtomicU64>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `t` threads total: the calling thread (tid 0 of
+    /// every region) plus `t - 1` parked workers. This is the only
+    /// place in the crate that creates threads for region execution.
+    pub fn new(t: usize) -> WorkerPool {
+        assert!(t >= 1, "a pool needs at least the calling thread");
+        let shared = Arc::new(Shared {
+            sync: Mutex::new(Gate {
+                epoch: 0,
+                job: None,
+                outstanding: 0,
+                panic_msg: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..t)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bgpc-pool-{wid}"))
+                    .spawn(move || worker_loop(&shared, wid))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            t,
+            shared,
+            region_lock: Mutex::new(()),
+            scratch: Mutex::new(None),
+            regions: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+            busy: (0..t).map(|_| AtomicU64::new(0)).collect(),
+            region_busy: (0..t).map(|_| AtomicU64::new(0)).collect(),
+            handles,
+        }
+    }
+
+    /// Team size (caller + parked workers).
+    pub fn threads(&self) -> usize {
+        self.t
+    }
+
+    /// Regions dispatched so far.
+    pub fn regions_dispatched(&self) -> u64 {
+        self.regions.load(AOrd::Relaxed)
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.t,
+            regions: self.regions.load(AOrd::Relaxed),
+            items: self.items.load(AOrd::Relaxed),
+            busy_units: self.busy.iter().map(|b| b.load(AOrd::Relaxed)).collect(),
+        }
+    }
+
+    /// Run `f` against the pool-resident scratch value, creating it
+    /// with `init` on first use (or if a previous caller left a
+    /// different type behind). The slot keeps the value alive across
+    /// calls — this is how the coordinator reuses one `ThreadState`
+    /// bank for every job it multiplexes onto the pool, extending the
+    /// paper's "allocated only once" invariant across job boundaries.
+    /// Callers are serialized for the duration of `f`.
+    pub fn with_scratch<S, R>(&self, init: impl FnOnce() -> S, f: impl FnOnce(&mut S) -> R) -> R
+    where
+        S: Send + 'static,
+    {
+        let mut slot = lock(&self.scratch);
+        let fresh = match slot.as_ref() {
+            Some(b) => !b.is::<S>(),
+            None => true,
+        };
+        if fresh {
+            *slot = Some(Box::new(init()));
+        }
+        f(slot.as_mut().unwrap().downcast_mut::<S>().unwrap())
+    }
+
+    /// Execute one parallel region over `0..n_items` with `team`
+    /// threads (clamped to the pool size), one scratch state per
+    /// participant. `chunk == 0` is `schedule(static)`, `chunk >= 1`
+    /// is `schedule(dynamic, chunk)`. The returned
+    /// [`RegionOut::busy_units`] holds per-participant work units.
+    ///
+    /// # Panics
+    /// If `states` holds fewer than `team` entries (a driver contract
+    /// violation — the coordinator surfaces it as a failed job, see
+    /// DESIGN.md §10), or to propagate a panic from the region body.
+    pub fn region<TS, F>(
+        &self,
+        states: &mut [TS],
+        team: usize,
+        n_items: usize,
+        chunk: usize,
+        body: F,
+    ) -> RegionOut
+    where
+        TS: Send,
+        F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
+    {
+        let team = team.clamp(1, self.t);
+        assert!(
+            states.len() >= team,
+            "worker pool: {} scratch states for a team of {team} (one per thread required)",
+            states.len()
+        );
+        let t0 = std::time::Instant::now();
+        self.regions.fetch_add(1, AOrd::Relaxed);
+
+        if team == 1 || n_items == 0 {
+            // Inline sequential path: no handoff, no synchronization.
+            let ts = &mut states[0];
+            let mut units = 0u64;
+            for item in 0..n_items {
+                units += body(0, ts, item, 0).units;
+            }
+            self.items.fetch_add(n_items as u64, AOrd::Relaxed);
+            self.busy[0].fetch_add(units, AOrd::Relaxed);
+            let mut busy_units = vec![0u64; team];
+            busy_units[0] = units;
+            return RegionOut {
+                real_secs: t0.elapsed().as_secs_f64(),
+                sim_ns: None,
+                busy_units,
+            };
+        }
+
+        let _serialize = lock(&self.region_lock);
+        // region_lock is held and every previous participant has checked
+        // in, so the reusable counter buffer has no concurrent writers.
+        for b in self.region_busy.iter().take(team) {
+            b.store(0, AOrd::Relaxed);
+        }
+        let ctx = Ctx::<TS, F> {
+            states: states.as_mut_ptr(),
+            body: &body,
+            cursor: AtomicUsize::new(0),
+            n_items,
+            chunk,
+            team,
+            busy: self.region_busy.as_ptr(),
+        };
+        let job = Job {
+            run: run_region::<TS, F>,
+            data: &ctx as *const Ctx<TS, F> as *const (),
+            team,
+        };
+        {
+            let mut g = lock(&self.shared.sync);
+            g.job = Some(job);
+            g.epoch = g.epoch.wrapping_add(1);
+            g.outstanding = team - 1;
+            g.panic_msg = None;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is always participant 0: region handoff costs one
+        // broadcast, never a spawn. Catch its panics so the workers can
+        // finish with the context still alive, then resume below.
+        // SAFETY: `ctx` outlives the wait loop that follows.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            run_region::<TS, F>(job.data, 0)
+        }));
+        let worker_panic = {
+            let mut g = lock(&self.shared.sync);
+            while g.outstanding > 0 {
+                g = self.shared.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            g.job = None;
+            g.panic_msg.take()
+        };
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(msg) = worker_panic {
+            panic!("pool worker panicked in region body: {msg}");
+        }
+
+        let busy_units: Vec<u64> =
+            self.region_busy.iter().take(team).map(|b| b.load(AOrd::Relaxed)).collect();
+        for (slot, &b) in self.busy.iter().zip(busy_units.iter()) {
+            slot.fetch_add(b, AOrd::Relaxed);
+        }
+        self.items.fetch_add(n_items as u64, AOrd::Relaxed);
+        RegionOut {
+            real_secs: t0.elapsed().as_secs_f64(),
+            sim_ns: None,
+            busy_units,
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = lock(&self.shared.sync);
+            g.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_workers_across_regions() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        let mut states = vec![(); 4];
+        for _ in 0..10 {
+            pool.region(&mut states, 4, 1000, 64, |_tid, _ts, item, _now| {
+                hits[item].fetch_add(1, AOrd::Relaxed);
+                Cost::new(1)
+            });
+        }
+        assert!(hits.iter().all(|h| h.load(AOrd::Relaxed) == 10));
+        let st = pool.stats();
+        assert_eq!(st.threads, 4);
+        assert_eq!(st.regions, 10);
+        assert_eq!(st.items, 10_000);
+        assert_eq!(st.busy_units.iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn static_split_covers_disjointly() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let mut states = vec![(); 3];
+        let out = pool.region(&mut states, 3, 100, 0, |_tid, _ts, item, _now| {
+            hits[item].fetch_add(1, AOrd::Relaxed);
+            Cost::new(2)
+        });
+        assert!(hits.iter().all(|h| h.load(AOrd::Relaxed) == 1));
+        assert_eq!(out.busy_units.len(), 3);
+        assert_eq!(out.busy_units.iter().sum::<u64>(), 200);
+    }
+
+    #[test]
+    fn smaller_team_than_pool_is_fine() {
+        let pool = WorkerPool::new(8);
+        let count = AtomicU64::new(0);
+        let mut states = vec![(); 2];
+        let out = pool.region(&mut states, 2, 500, 16, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        assert_eq!(count.load(AOrd::Relaxed), 500);
+        assert_eq!(out.busy_units.len(), 2);
+    }
+
+    #[test]
+    fn shared_pool_serializes_concurrent_callers() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let mut states = vec![(); 4];
+                    for _ in 0..5 {
+                        pool.region(&mut states, 4, 200, 8, |_, _, _, _| {
+                            total.fetch_add(1, AOrd::Relaxed);
+                            Cost::new(1)
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(AOrd::Relaxed), 3 * 5 * 200);
+        assert_eq!(pool.stats().regions, 15);
+    }
+
+    #[test]
+    fn scratch_slot_persists_across_uses() {
+        let pool = WorkerPool::new(2);
+        let first = pool.with_scratch(|| vec![0u64; 4], |v: &mut Vec<u64>| {
+            v[0] += 1;
+            v[0]
+        });
+        assert_eq!(first, 1);
+        let second = pool.with_scratch(|| vec![0u64; 4], |v: &mut Vec<u64>| {
+            v[0] += 1;
+            v[0]
+        });
+        assert_eq!(second, 2, "the slot must survive between calls");
+        // a different type replaces the slot
+        let replaced = pool.with_scratch(|| 7i64, |x: &mut i64| *x);
+        assert_eq!(replaced, 7);
+    }
+
+    #[test]
+    fn body_panic_resumes_on_caller_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut states = vec![(); 4];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.region(&mut states, 4, 100, 1, |_tid, _ts, item, _now| {
+                assert!(item != 37, "planted failure");
+                Cost::new(1)
+            });
+        }));
+        assert!(r.is_err(), "the region body panic must propagate");
+        // the team is intact: the next region completes normally
+        let count = AtomicU64::new(0);
+        pool.region(&mut states, 4, 100, 8, |_, _, _, _| {
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        assert_eq!(count.load(AOrd::Relaxed), 100);
+    }
+
+    #[test]
+    fn utilization_reflects_skew() {
+        let even = PoolStats { threads: 2, regions: 1, items: 2, busy_units: vec![50, 50] };
+        assert!((even.utilization() - 1.0).abs() < 1e-12);
+        let skewed = PoolStats { threads: 2, regions: 1, items: 2, busy_units: vec![100, 0] };
+        assert!((skewed.utilization() - 0.5).abs() < 1e-12);
+        let idle = PoolStats { threads: 2, regions: 0, items: 0, busy_units: vec![0, 0] };
+        assert_eq!(idle.utilization(), 1.0);
+        assert!(idle.summary().contains("regions=0"));
+    }
+}

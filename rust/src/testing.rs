@@ -2,14 +2,91 @@
 //!
 //! No external crates resolve offline (no `proptest`), so this module
 //! provides the pieces the invariant tests need: seeded random instance
-//! generators with size sweeps and a `forall`-style runner that reports
+//! generators with size sweeps, a `forall`-style runner that reports
 //! the failing case's parameters (seed + shape) so any failure is
-//! reproducible with a one-liner.
+//! reproducible with a one-liner, and [`SpawnDriver`] — the retired
+//! spawn-per-region thread driver kept as the reference backend for the
+//! pool-equivalence tests and the scheduler bench.
+
+use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
 
 use crate::dynamic::UpdateBatch;
 use crate::graph::generators::{random_bipartite, random_symmetric};
 use crate::graph::{Bipartite, Csr};
+use crate::par::{AtomicColors, Cost, Driver, RegionOut};
 use crate::util::prng::Rng;
+
+/// The pre-pool `ThreadsDriver`: `std::thread::scope` workers per
+/// region plus a shared atomic cursor. Retired from the hot path by the
+/// persistent [`crate::par::WorkerPool`] (DESIGN.md §10); kept here,
+/// bit-for-bit, as the reference implementation that
+/// `tests/driver_equivalence.rs` certifies against and
+/// `benches/scheduler.rs` measures against. Do not use in production
+/// code — every region pays thread creation and join.
+pub struct SpawnDriver {
+    pub t: usize,
+}
+
+impl Driver for SpawnDriver {
+    type Colors = AtomicColors;
+
+    fn threads(&self) -> usize {
+        self.t
+    }
+
+    fn new_colors(&self, n: usize) -> AtomicColors {
+        AtomicColors::new(n)
+    }
+
+    fn region<TS, F>(&mut self, states: &mut [TS], n_items: usize, chunk: usize, body: F) -> RegionOut
+    where
+        TS: Send,
+        F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
+    {
+        assert!(states.len() >= self.t, "one scratch state per thread required");
+        let t0 = std::time::Instant::now();
+        if self.t == 1 {
+            let ts = &mut states[0];
+            for item in 0..n_items {
+                body(0, ts, item, 0);
+            }
+        } else if chunk == 0 {
+            // schedule(static): contiguous blocks
+            let t = self.t;
+            let body = &body;
+            std::thread::scope(|s| {
+                for (tid, ts) in states.iter_mut().enumerate().take(t) {
+                    s.spawn(move || {
+                        let lo = n_items * tid / t;
+                        let hi = n_items * (tid + 1) / t;
+                        for item in lo..hi {
+                            body(tid, ts, item, 0);
+                        }
+                    });
+                }
+            });
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let body = &body;
+            let cursor = &cursor;
+            std::thread::scope(|s| {
+                for (tid, ts) in states.iter_mut().enumerate().take(self.t) {
+                    s.spawn(move || loop {
+                        let start = cursor.fetch_add(chunk, AOrd::Relaxed);
+                        if start >= n_items {
+                            break;
+                        }
+                        let end = (start + chunk).min(n_items);
+                        for item in start..end {
+                            body(tid, ts, item, 0);
+                        }
+                    });
+                }
+            });
+        }
+        RegionOut { real_secs: t0.elapsed().as_secs_f64(), sim_ns: None, busy_units: Vec::new() }
+    }
+}
 
 /// Shape of one random BGPC case.
 #[derive(Clone, Copy, Debug)]

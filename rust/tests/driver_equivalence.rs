@@ -1,0 +1,86 @@
+//! Driver equivalence: the pool-backed [`ThreadsDriver`], the old
+//! spawn-per-region driver (kept here as the reference implementation —
+//! it no longer exists on any hot path), and the sequential baseline
+//! must agree on every preset, for BGPC and D2GC.
+//!
+//! Single-threaded real execution is deterministic, so the three
+//! backends must produce bit-identical colorings under a fixed seed;
+//! multi-threaded runs are racy by design, so there the contract is
+//! validity (plus determinism of repeated pool runs at `t = 1`, which
+//! guards against state leaking between regions of a reused team).
+
+use bgpc::coloring::verify::{bgpc_valid, d2gc_valid};
+// aliased: importing the engine modules under their own names would make
+// the first `use` segment `bgpc` ambiguous with the crate name
+use bgpc::coloring::{bgpc as bg, d2gc as d2, schedule, Balance};
+use bgpc::graph::PRESETS;
+use bgpc::par::ThreadsDriver;
+// the retired spawn-per-region driver, kept verbatim as the reference
+use bgpc::testing::SpawnDriver;
+
+const SCALE: f64 = 0.02;
+const SEED: u64 = 7;
+
+#[test]
+fn bgpc_pool_spawn_and_sequential_agree_on_every_preset() {
+    for p in PRESETS.iter() {
+        let g = p.bipartite(SCALE, SEED);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        for spec in [schedule::V_V, schedule::V_V_64D, schedule::N1_N2] {
+            // t = 1: all backends are deterministic and must agree bit-for-bit
+            let r_pool = bg::run(&g, &order, &spec, Balance::None, &mut ThreadsDriver::new(1));
+            let r_spawn = bg::run(&g, &order, &spec, Balance::None, &mut SpawnDriver { t: 1 });
+            assert!(bgpc_valid(&g, &r_pool.colors).is_ok(), "{} {} pool", p.name, spec.name);
+            assert_eq!(
+                r_pool.colors, r_spawn.colors,
+                "{} {}: pool vs spawn at t=1",
+                p.name, spec.name
+            );
+            // multi-thread: races are legal, the coloring must be valid
+            let r_pool4 = bg::run(&g, &order, &spec, Balance::None, &mut ThreadsDriver::new(4));
+            let r_spawn4 = bg::run(&g, &order, &spec, Balance::None, &mut SpawnDriver { t: 4 });
+            assert!(bgpc_valid(&g, &r_pool4.colors).is_ok(), "{} {} pool t=4", p.name, spec.name);
+            assert!(bgpc_valid(&g, &r_spawn4.colors).is_ok(), "{} {} spawn t=4", p.name, spec.name);
+        }
+        // the engine's sequential greedy is the ground truth for V-V at t=1
+        let r_vv = bg::run(&g, &order, &schedule::V_V, Balance::None, &mut ThreadsDriver::new(1));
+        let (seq_colors, _) = bg::seq::greedy(&g, &order);
+        assert_eq!(r_vv.colors, seq_colors, "{}: V-V t=1 must equal sequential greedy", p.name);
+    }
+}
+
+#[test]
+fn d2gc_pool_spawn_and_sequential_agree_on_symmetric_presets() {
+    for p in PRESETS.iter().filter(|p| p.symmetric) {
+        let m = p.net_incidence(SCALE, SEED);
+        let order: Vec<u32> = (0..m.n_rows as u32).collect();
+        for spec in [schedule::V_V_64D, schedule::N1_N2] {
+            let r_pool = d2::run(&m, &order, &spec, Balance::None, &mut ThreadsDriver::new(1));
+            let r_spawn = d2::run(&m, &order, &spec, Balance::None, &mut SpawnDriver { t: 1 });
+            assert!(d2gc_valid(&m, &r_pool.colors).is_ok(), "{} {} pool", p.name, spec.name);
+            assert_eq!(
+                r_pool.colors, r_spawn.colors,
+                "{} {}: pool vs spawn at t=1",
+                p.name, spec.name
+            );
+            let r_pool4 = d2::run(&m, &order, &spec, Balance::None, &mut ThreadsDriver::new(4));
+            let r_spawn4 = d2::run(&m, &order, &spec, Balance::None, &mut SpawnDriver { t: 4 });
+            assert!(d2gc_valid(&m, &r_pool4.colors).is_ok(), "{} {} pool t=4", p.name, spec.name);
+            assert!(d2gc_valid(&m, &r_spawn4.colors).is_ok(), "{} {} spawn t=4", p.name, spec.name);
+        }
+    }
+}
+
+#[test]
+fn reused_pool_runs_are_deterministic_at_t1() {
+    // One driver (one pool, one scratch lifetime) run twice must not
+    // leak state between runs: identical colorings.
+    let p = PRESETS.iter().find(|p| p.name == "coPapersDBLP").unwrap();
+    let g = p.bipartite(SCALE, SEED);
+    let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+    let mut d = ThreadsDriver::new(1);
+    let a = bg::run(&g, &order, &schedule::N1_N2, Balance::None, &mut d);
+    let b = bg::run(&g, &order, &schedule::N1_N2, Balance::None, &mut d);
+    assert_eq!(a.colors, b.colors);
+    assert_eq!(a.iterations, b.iterations);
+}
