@@ -6,6 +6,9 @@
 #   make test            cargo test (artifacts built first when possible)
 #   make test-artifacts  like test, but PJRT roundtrip skips become errors
 #   make bench           all hand-rolled bench harnesses (release)
+#   make bench-smoke     the gated benches (scheduler/dynamic/execute) in
+#                        BENCH_SMOKE=1 reduced-size mode — what the CI
+#                        bench-smoke job runs and uploads CSVs from
 #   make fmt             rustfmt the crate (the verify/CI gate checks it)
 #   make clean
 
@@ -13,7 +16,7 @@ CARGO_DIR := rust
 ARTIFACTS := artifacts
 PYTHON    ?= python3
 
-.PHONY: verify artifacts test test-artifacts bench fmt clean
+.PHONY: verify artifacts test test-artifacts bench bench-smoke fmt clean
 
 verify:
 	cd $(CARGO_DIR) && cargo build --release && BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
@@ -33,6 +36,14 @@ test-artifacts: artifacts
 
 bench:
 	cd $(CARGO_DIR) && cargo bench
+
+# The gated benches at reduced size (scale 0.1, trimmed sweeps), gates
+# intact: scheduler (pool >= 2x spawn on small regions), dynamic (repair
+# >= 5x full recolor at <= 1% batches), execute (colored execution valid
+# + B1/B2 flatten the max-color-set busy time). CSVs land in
+# rust/bench_results/ — CI uploads them as workflow artifacts.
+bench-smoke:
+	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute
 
 # Apply the formatting the verify.sh / CI `cargo fmt --check` gate
 # enforces (SKIP_FMT=1 skips the gate where rustfmt is unavailable).

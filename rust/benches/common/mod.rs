@@ -5,7 +5,9 @@
 //! simulator), so a single repetition regenerates identical numbers.
 //! Scale defaults to 0.5× the calibrated preset sizes; override with
 //! `BGPC_SCALE=1.0 cargo bench` for the full-size run recorded in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. `BENCH_SMOKE=1` (the CI bench-smoke job and
+//! `make bench-smoke`) shrinks the default scale to 0.1 and tells the
+//! gated benches to trim their sweeps — the acceptance gates still run.
 
 #![allow(dead_code)]
 
@@ -17,7 +19,16 @@ use bgpc::util::geomean;
 pub const THREADS: [usize; 4] = [2, 4, 8, 16];
 
 pub fn scale() -> f64 {
-    std::env::var("BGPC_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.5)
+    let default = if smoke() { 0.1 } else { 0.5 };
+    std::env::var("BGPC_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Reduced-size CI mode (`BENCH_SMOKE=1`): smaller preset scale and
+/// trimmed sweeps, same acceptance gates. Shared by the gated benches
+/// (`scheduler`, `dynamic`, `execute`) so local `make bench-smoke` and
+/// the CI bench-smoke job measure the same thing.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
 pub fn seed() -> u64 {

@@ -1,0 +1,246 @@
+//! Colored execution end-to-end: does B1/B2 balancing pay off in the
+//! *execution* step, not just as a cardinality statistic?
+//!
+//! For every preset × {None, B1, B2}: color under the deterministic
+//! 16-thread simulator, bucket the coloring into per-color frontiers
+//! (`exec::ColorSchedule`) and drive a Jacobian-style column-compression
+//! kernel — each column scatters into its incident rows, race-free
+//! within a color by the BGPC guarantee — through `exec::Executor` on a
+//! real `par::WorkerPool`, threads ∈ {1, 2, 4}. The per-color busy-unit
+//! profile is deterministic (kernel work is data-dependent only), so the
+//! skew numbers are thread-count independent; wall seconds are reported
+//! per thread count.
+//!
+//! Gates:
+//! * **validity** — the colored execution's accumulator equals the
+//!   sequential sweep bit-for-bit (integer arithmetic), at every
+//!   (balance, threads) point;
+//! * **payoff** — on the skewed presets (unbalanced max-color-set busy
+//!   ≥ 2× the uniform per-color share), best(B1, B2) reduces the
+//!   max-color-set busy units vs `Balance::None`: ≤ 1.10× per preset
+//!   (small-scale slack) and geomean < 0.95 across them — the same
+//!   shape as the Table VI skew gate in tests/paper_properties.rs,
+//!   measured in execution work units instead of cardinalities.
+//!
+//!   cargo bench --bench execute               # BGPC_SCALE=0.5 default
+//!   BENCH_SMOKE=1 cargo bench --bench execute # CI smoke: scale 0.1,
+//!                                             # threads {1,2}, 1 round
+//!
+//! CSV artifact: `execute.csv`. A closing segment runs a Gauss–Seidel
+//! style relaxation on a D2GC-colored symmetric preset and checks the
+//! executor is thread-count invariant for order-dependent kernels too
+//! (within a color no neighbor is written, so any thread count matches
+//! the color-order sequential reference exactly).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use bgpc::coloring::{color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::exec::{ColorSchedule, Executor, SharedBuf};
+use bgpc::graph::{Bipartite, PRESETS};
+use bgpc::par::{Cost, WorkerPool};
+use bgpc::util::geomean;
+
+/// The Jacobian column-compression kernel: column `u` scatters an
+/// integer contribution into every incident row. Returns the work done.
+fn scatter(g: &Bipartite, acc: &SharedBuf<u64>, u: usize) -> Cost {
+    let mut units = 0u64;
+    for &v in g.nets(u) {
+        // SAFETY: no two columns in one color share a net, and colors
+        // are separated by the executor's barrier.
+        unsafe {
+            *acc.slot(v as usize) =
+                (*acc.slot(v as usize)).wrapping_add((u as u64 + 1) * (v as u64 + 1));
+        }
+        units += 1;
+    }
+    Cost::new(units)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let threads: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let rounds = if smoke { 1usize } else { 2 };
+    let balances = [("None", Balance::None), ("B1", Balance::B1), ("B2", Balance::B2)];
+
+    println!(
+        "=== execute: colored kernel over preset frontiers (rounds={rounds}, sim-colored t=16, N1-N2) ==="
+    );
+    println!(
+        "{:<16} {:<5} {:>3} | {:>7} {:>8} | {:>12} {:>12} {:>7} | {:>10}",
+        "graph", "bal", "t", "colors", "max_set", "busy_total", "max_col_busy", "crit%", "wall_s"
+    );
+    let mut csv = Vec::new();
+    let mut skewed_ratios = Vec::new();
+    for p in PRESETS.iter() {
+        let g = p.bipartite(common::scale(), common::seed());
+        // sequential reference for one sweep (integer, order-free)
+        let mut seq = vec![0u64; g.n_nets()];
+        for u in 0..g.n_vertices() {
+            for &v in g.nets(u) {
+                seq[v as usize] = seq[v as usize].wrapping_add((u as u64 + 1) * (v as u64 + 1));
+            }
+        }
+        let want: Vec<u64> = seq.iter().map(|&x| x.wrapping_mul(rounds as u64)).collect();
+
+        // busy profile per balance (deterministic, thread-independent)
+        let mut max_busy = [0u64; 3];
+        let mut uniform_share = 0.0f64;
+        for (bi, &(tag, bal)) in balances.iter().enumerate() {
+            let r = common::run(&g, schedule::N1_N2, 16, bgpc::graph::Ordering::Natural, bal);
+            let sched = ColorSchedule::from_colors(&r.colors);
+            for &t in threads {
+                let pool = Arc::new(WorkerPool::new(t));
+                let acc = SharedBuf::new(vec![0u64; g.n_nets()]);
+                let mut ex = Executor::new(&pool);
+                let rep = ex.run(&sched, rounds, |item, _color| scatter(&g, &acc, item));
+                // validity gate: colored execution ≡ sequential sweep
+                let got = acc.into_vec();
+                assert_eq!(
+                    got, want,
+                    "{} {tag} t={t}: colored execution diverged from the sequential sweep",
+                    p.name
+                );
+                if t == threads[0] {
+                    max_busy[bi] = rep.max_color_busy();
+                    if bal == Balance::None {
+                        let nc = rep.per_color_busy.iter().filter(|&&b| b > 0).count().max(1);
+                        uniform_share = rep.busy_total() as f64 / nc as f64;
+                    }
+                }
+                println!(
+                    "{:<16} {:<5} {:>3} | {:>7} {:>8} | {:>12} {:>12} {:>6.1}% | {:>10.4}",
+                    p.name,
+                    tag,
+                    t,
+                    r.n_colors,
+                    sched.max_set_len(),
+                    rep.busy_total(),
+                    rep.max_color_busy(),
+                    rep.critical_share() * 100.0,
+                    rep.seconds
+                );
+                csv.push(format!(
+                    "{},{},{},{},{},{},{},{:.4},{:.6e}",
+                    p.name,
+                    tag,
+                    t,
+                    r.n_colors,
+                    sched.max_set_len(),
+                    rep.busy_total(),
+                    rep.max_color_busy(),
+                    rep.critical_share(),
+                    rep.seconds
+                ));
+            }
+        }
+
+        // payoff gate on the skewed presets: balancing must flatten the
+        // costliest color set (the color-parallel critical-path term)
+        let skewed = max_busy[0] as f64 >= 2.0 * uniform_share;
+        let best = max_busy[1].min(max_busy[2]);
+        if skewed {
+            assert!(
+                best as f64 <= max_busy[0] as f64 * 1.10 + 64.0,
+                "{}: balanced max-color-set busy {best} vs unbalanced {} — B1/B2 must not \
+                 worsen the critical path on a skewed preset",
+                p.name,
+                max_busy[0]
+            );
+            skewed_ratios.push(best.max(1) as f64 / max_busy[0].max(1) as f64);
+        }
+        println!(
+            "  -> {:<14} skewed={} unbalanced_max={} best_balanced_max={}",
+            p.name, skewed, max_busy[0], best
+        );
+    }
+    assert!(
+        !skewed_ratios.is_empty(),
+        "no preset qualified as skewed — the payoff gate did not run"
+    );
+    let geo = geomean(&skewed_ratios);
+    assert!(
+        geo < 0.95,
+        "B1/B2 should reduce max-color-set busy on the skewed presets in aggregate, got {geo:.3}"
+    );
+    println!(
+        "payoff gate: {} skewed presets, best-balanced/unbalanced geomean {:.3}",
+        skewed_ratios.len(),
+        geo
+    );
+    common::write_csv(
+        "execute.csv",
+        "graph,balance,threads,n_colors,max_set,busy_total,max_color_busy,critical_share,wall_secs",
+        &csv,
+    );
+
+    // === D2GC Gauss–Seidel segment: order-dependent kernel, thread-count
+    // invariant under a distance-2 schedule (neighbors are never written
+    // in the running color, so reads are stable) ===
+    println!("\n--- D2GC Gauss–Seidel relaxation (thread-count invariance) ---");
+    let p = PRESETS.iter().find(|p| p.symmetric).unwrap();
+    let m = p.net_incidence((common::scale() * 0.5).max(0.01), common::seed());
+    let cfg = Config {
+        spec: schedule::N1_N2,
+        balance: Balance::None,
+        threads: 16,
+        mode: ExecMode::Sim(common::model()),
+        ordering: bgpc::graph::Ordering::Natural,
+    };
+    let r = color_d2gc(&m, &cfg);
+    assert!(bgpc::coloring::verify::d2gc_valid(&m, &r.colors).is_ok());
+    let sched = ColorSchedule::from_colors(&r.colors);
+    // color-order sequential reference
+    let mut reference: Vec<u64> = (0..m.n_rows as u64).collect();
+    for _ in 0..rounds {
+        for (_c, set) in sched.frontiers() {
+            for &u in set {
+                let u = u as usize;
+                let mut acc = reference[u];
+                for &w in m.row(u) {
+                    if w as usize != u {
+                        acc = acc.wrapping_add(reference[w as usize]);
+                    }
+                }
+                reference[u] = acc / (m.deg(u) as u64 + 1);
+            }
+        }
+    }
+    for &t in threads {
+        let pool = Arc::new(WorkerPool::new(t));
+        let x = SharedBuf::new((0..m.n_rows as u64).collect());
+        let rep = Executor::new(&pool).run(&sched, rounds, |u, _color| {
+            // SAFETY: distance-2 schedule — `u` owns its own slot and no
+            // neighbor of `u` is written during this color (peek-only).
+            unsafe {
+                let mut acc = *x.peek(u);
+                let mut units = 1u64;
+                for &w in m.row(u) {
+                    if w as usize != u {
+                        acc = acc.wrapping_add(*x.peek(w as usize));
+                        units += 1;
+                    }
+                }
+                *x.slot(u) = acc / (m.deg(u) as u64 + 1);
+                Cost::new(units)
+            }
+        });
+        let got = x.into_vec();
+        assert_eq!(
+            got, reference,
+            "{} Gauss–Seidel t={t}: colored relaxation diverged from the color-order reference",
+            p.name
+        );
+        println!(
+            "  {:<16} t={} colors={} wall={:.3}ms utilization={:.2}",
+            p.name,
+            t,
+            r.n_colors,
+            rep.seconds * 1e3,
+            rep.utilization()
+        );
+    }
+    println!("ok");
+}

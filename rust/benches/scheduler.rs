@@ -48,7 +48,13 @@ fn reps_for(n: usize) -> usize {
 
 fn main() {
     const T: usize = 4;
-    let sizes = [100usize, 1_000, 10_000, 100_000, 1_000_000];
+    // BENCH_SMOKE keeps the gated sizes (≤ 1e3) and one mid size; the
+    // large-region tail is informational only and dominates wall-clock.
+    let sizes: &[usize] = if common::smoke() {
+        &[100, 1_000, 10_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000, 1_000_000]
+    };
     let chunks: [(usize, &str); 3] = [(1, "1"), (64, "64"), (0, "static")];
 
     let mut pool_driver = ThreadsDriver::new(T);
@@ -65,7 +71,7 @@ fn main() {
         "n_items", "chunk", "pool_s", "spawn_s", "spawn/pool"
     );
     let mut csv = Vec::new();
-    for &n in &sizes {
+    for &n in sizes {
         for &(chunk, label) in &chunks {
             let reps = reps_for(n);
             let pool_med = median(

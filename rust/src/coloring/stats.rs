@@ -44,8 +44,15 @@ pub struct ColorStats {
 
 impl ColorStats {
     pub fn from_colors(colors: &[i32]) -> ColorStats {
-        let cards: Vec<usize> =
-            cardinalities(colors).into_iter().filter(|&c| c > 0).collect();
+        ColorStats::from_cards(cardinalities(colors))
+    }
+
+    /// Same statistics computed from per-color cardinalities directly —
+    /// what [`crate::exec::ColorSchedule`] already tracks as bucket
+    /// sizes — skipping the pass over the colors. Empty classes are
+    /// dropped, as in [`ColorStats::from_colors`].
+    pub fn from_cards(cards: Vec<usize>) -> ColorStats {
+        let cards: Vec<usize> = cards.into_iter().filter(|&c| c > 0).collect();
         let f: Vec<f64> = cards.iter().map(|&c| c as f64).collect();
         ColorStats {
             n_colors: cards.len(),
@@ -80,6 +87,17 @@ mod tests {
         let s = ColorStats::from_colors(&[-1]);
         assert_eq!(s.n_colors, 0);
         assert_eq!(s.avg_cardinality, 0.0);
+    }
+
+    #[test]
+    fn from_cards_matches_from_colors() {
+        let colors = [0, 0, 0, 1, 1, 3];
+        let a = ColorStats::from_colors(&colors);
+        let b = ColorStats::from_cards(cardinalities(&colors));
+        assert_eq!(a.n_colors, b.n_colors);
+        assert_eq!(a.cards, b.cards);
+        assert_eq!(a.max_cardinality, b.max_cardinality);
+        assert!((a.stddev_cardinality - b.stddev_cardinality).abs() < 1e-12);
     }
 
     #[test]

@@ -19,6 +19,10 @@ pub struct Metrics {
     updates_d2gc: AtomicU64,
     /// Vertices recolored across all update batches.
     recolored: AtomicU64,
+    /// Colored-execution jobs completed.
+    executes: AtomicU64,
+    /// Kernel invocations across all execute jobs.
+    exec_items: AtomicU64,
 }
 
 impl Metrics {
@@ -38,6 +42,10 @@ impl Metrics {
                 _ => self.updates_bgpc.fetch_add(1, AOrd::Relaxed),
             };
             self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
+        }
+        if let Some(e) = &o.exec {
+            self.executes.fetch_add(1, AOrd::Relaxed);
+            self.exec_items.fetch_add(e.items, AOrd::Relaxed);
         }
         self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
         self.total_us.fetch_add((o.seconds * 1e6) as u64, AOrd::Relaxed);
@@ -75,6 +83,16 @@ impl Metrics {
         self.recolored.load(AOrd::Relaxed)
     }
 
+    /// Colored-execution jobs completed.
+    pub fn executes(&self) -> u64 {
+        self.executes.load(AOrd::Relaxed)
+    }
+
+    /// Kernel invocations across all execute jobs.
+    pub fn exec_items(&self) -> u64 {
+        self.exec_items.load(AOrd::Relaxed)
+    }
+
     pub fn total_seconds(&self) -> f64 {
         self.total_us.load(AOrd::Relaxed) as f64 * 1e-6
     }
@@ -82,7 +100,7 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} engine_secs={:.3}",
+            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3}",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
@@ -90,6 +108,8 @@ impl Metrics {
             self.updates_bgpc(),
             self.updates_d2gc(),
             self.recolored(),
+            self.executes(),
+            self.exec_items(),
             self.total_seconds()
         )
     }
@@ -112,6 +132,7 @@ mod tests {
             valid: true,
             error: None,
             batch: None,
+            exec: None,
         };
         let bad = crate::coordinator::JobOutcome { valid: false, engine: "pjrt", ..ok.clone() };
         m.record(&ok);
@@ -137,6 +158,7 @@ mod tests {
             valid: true,
             error: None,
             batch: Some(stats),
+            exec: None,
         };
         let upd2 = crate::coordinator::JobOutcome {
             problem: Some(Problem::D2gc),
@@ -151,5 +173,38 @@ mod tests {
         assert_eq!(m.recolored(), 21);
         assert!(m.summary().contains("updates=3"));
         assert!(m.summary().contains("d2gc=1"));
+    }
+
+    #[test]
+    fn execute_jobs_counted_with_items() {
+        let m = Metrics::default();
+        let ex = crate::coordinator::JobOutcome {
+            name: "x".into(),
+            engine: "native",
+            problem: Some(Problem::Bgpc),
+            n_colors: 4,
+            iterations: 2,
+            seconds: 0.01,
+            valid: true,
+            error: None,
+            batch: None,
+            exec: Some(crate::coordinator::ExecStats {
+                colors: 4,
+                rounds: 2,
+                items: 120,
+                busy_units: 600,
+                max_color_busy: 300,
+                utilization: 0.9,
+                sched_moved: 0,
+                sched_dirty_colors: 0,
+                sched_rebuilt: false,
+            }),
+        };
+        m.record(&ex);
+        m.record(&ex);
+        assert_eq!(m.executes(), 2);
+        assert_eq!(m.exec_items(), 240);
+        assert_eq!(m.updates(), 0);
+        assert!(m.summary().contains("executes=2"));
     }
 }

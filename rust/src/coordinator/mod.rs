@@ -38,6 +38,19 @@
 //! of order but never apply them out of order), and each outcome
 //! carries the per-batch [`crate::dynamic::BatchStats`] in
 //! [`JobOutcome::batch`].
+//!
+//! **Colored execution** (the [`crate::exec`] subsystem, DESIGN.md
+//! §11): [`JobInput::Execute`] runs a client [`ExecKernel`] over an
+//! open session's *current* coloring, color set by color set on the
+//! shared pool. The service caches one [`crate::exec::ColorSchedule`]
+//! per session and refreshes it incrementally before each run — after
+//! an update batch, only the colors the repair dirtied are rebuilt
+//! (repair → rebuild dirty frontiers → re-run), and the per-run
+//! [`JobOutcome::exec`] stats report both the execution profile
+//! (max-color-set busy units, utilization) and what the refresh moved.
+//! Execute jobs always run native; they observe the committed coloring
+//! at lock time and serialize with the session's updates on the
+//! session lock.
 
 pub mod metrics;
 
@@ -50,9 +63,10 @@ use std::thread::JoinHandle;
 
 use crate::coloring::{color_bgpc_on, color_d2gc_on, Config, Problem};
 use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
+use crate::exec::{ColorSchedule, Executor, RefreshStats};
 use crate::graph::{Bipartite, Csr};
 use crate::par::pool::panic_message;
-use crate::par::{PoolStats, WorkerPool};
+use crate::par::{Cost, PoolStats, WorkerPool};
 use crate::runtime::{NetStepOffload, Runtime};
 
 pub use metrics::Metrics;
@@ -121,6 +135,11 @@ struct SessionInner {
     /// Set by [`Service::close_session`]; wakes and fails parked workers
     /// whose predecessor batches can no longer arrive.
     closed: bool,
+    /// Cached per-color execution frontiers ([`crate::exec`]), built on
+    /// the first [`JobInput::Execute`] and diff-refreshed afterwards —
+    /// an update batch dirties only the colors its repair touched, and
+    /// only those buckets are rebuilt before the next run.
+    sched: Option<ColorSchedule>,
 }
 
 type SessionMap = Mutex<HashMap<SessionId, Arc<SessionSlot>>>;
@@ -135,6 +154,25 @@ pub enum EngineSel {
     Native,
     /// The AOT JAX/Pallas net-step path.
     Pjrt,
+}
+
+/// A type-erased colored-execution kernel: `(item, color) -> Cost`
+/// (see [`crate::exec::Executor::run`]). Shared state lives in the
+/// closure's captures (e.g. an `Arc<`[`crate::exec::SharedBuf`]`>`);
+/// the schedule's conflict-freedom is what makes lock-free mutation of
+/// it sound. Cheap to clone — jobs carry it by `Arc`.
+#[derive(Clone)]
+pub struct ExecKernel(Arc<dyn Fn(usize, usize) -> Cost + Send + Sync>);
+
+impl ExecKernel {
+    pub fn new(f: impl Fn(usize, usize) -> Cost + Send + Sync + 'static) -> ExecKernel {
+        ExecKernel(Arc::new(f))
+    }
+
+    /// Invoke the kernel on `(item, color)`.
+    pub fn call(&self, item: usize, color: usize) -> Cost {
+        (self.0)(item, color)
+    }
 }
 
 /// A coloring job.
@@ -156,19 +194,25 @@ pub enum JobInput {
     /// the session carries its own [`Config`]); applied strictly in
     /// submit order per session.
     Update { session: SessionId, batch: Arc<UpdateBatch> },
+    /// Colored execution of `kernel` over an open session's current
+    /// coloring, `rounds` full sweeps (see [`crate::exec`]). Always
+    /// runs on the native pool with its full team (the job's `cfg` is
+    /// ignored); the session's cached schedule is refreshed — dirty
+    /// colors only — before the run.
+    Execute { session: SessionId, kernel: ExecKernel, rounds: usize },
 }
 
 impl JobInput {
     /// The coloring problem this input runs, when it is statically
-    /// known. `Update` jobs return `None`: the problem is a property of
-    /// the open session — BGPC and D2GC sessions share the update path
-    /// — and the service resolves it when the batch is applied (see
+    /// known. `Update` and `Execute` jobs return `None`: the problem is
+    /// a property of the open session — both session kinds share those
+    /// paths — and the service resolves it when the job runs (see
     /// [`Service::session_problem`] and [`JobOutcome::problem`]).
     pub fn problem(&self) -> Option<Problem> {
         match self {
             JobInput::Bgpc(_) => Some(Problem::Bgpc),
             JobInput::D2gc(_) => Some(Problem::D2gc),
-            JobInput::Update { .. } => None,
+            JobInput::Update { .. } | JobInput::Execute { .. } => None,
         }
     }
 }
@@ -189,6 +233,35 @@ pub struct JobOutcome {
     pub error: Option<String>,
     /// Per-batch repair metrics (update jobs only).
     pub batch: Option<BatchStats>,
+    /// Colored-execution metrics (execute jobs only).
+    pub exec: Option<ExecStats>,
+}
+
+/// Per-run colored-execution metrics (execute jobs, see
+/// [`crate::exec::ExecReport`] for the full per-color profile —
+/// this is the service-outcome digest).
+#[derive(Clone, Debug)]
+pub struct ExecStats {
+    /// Non-empty color frontiers driven per sweep.
+    pub colors: usize,
+    /// Full sweeps over the color sequence.
+    pub rounds: usize,
+    /// Kernel invocations (items × rounds).
+    pub items: u64,
+    /// Total busy work units reported by the kernel.
+    pub busy_units: u64,
+    /// Busy units of the costliest color set — the color-parallel
+    /// critical-path term B1/B2 exist to shrink.
+    pub max_color_busy: u64,
+    /// Mean-over-max busy fraction across the team.
+    pub utilization: f64,
+    /// Items the pre-run schedule refresh moved between buckets.
+    pub sched_moved: usize,
+    /// Colors the refresh dirtied (0 when the coloring was unchanged).
+    pub sched_dirty_colors: usize,
+    /// True when the schedule was (re)built from scratch (first execute
+    /// on a session) rather than diff-refreshed.
+    pub sched_rebuilt: bool,
 }
 
 enum Message {
@@ -229,6 +302,7 @@ fn fail_outcome(
         valid: false,
         error: Some(error),
         batch: None,
+        exec: None,
     }
 }
 
@@ -247,6 +321,7 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>
                 valid,
                 error: None,
                 batch: None,
+                exec: None,
             }
         }
         JobInput::D2gc(g) => {
@@ -262,9 +337,13 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>
                 valid,
                 error: None,
                 batch: None,
+                exec: None,
             }
         }
         JobInput::Update { session, batch } => run_update(sessions, *session, seq, batch, &job.name),
+        JobInput::Execute { session, kernel, rounds } => {
+            run_execute(sessions, *session, kernel, *rounds, &job.name, pool)
+        }
     }
 }
 
@@ -353,6 +432,90 @@ fn run_update(
         valid,
         error: None,
         batch: Some(stats),
+        exec: None,
+    }
+}
+
+/// Run a colored-execution kernel over a session's committed coloring:
+/// refresh the cached [`ColorSchedule`] (dirty colors only), then drive
+/// the kernel frontier-by-frontier on the shared pool. Holds the
+/// session lock for the run, so executes serialize with the session's
+/// updates and never observe a torn coloring. A kernel panic surfaces
+/// as this job's error — the session and its schedule are *not* torn
+/// by execution (kernels cannot touch them), so the session stays open.
+fn run_execute(
+    sessions: &SessionMap,
+    id: SessionId,
+    kernel: &ExecKernel,
+    rounds: usize,
+    name: &str,
+    pool: &Arc<WorkerPool>,
+) -> JobOutcome {
+    let slot = sessions.lock().unwrap().get(&id).cloned();
+    let Some(slot) = slot else {
+        return fail_outcome(name, "native", None, format!("unknown session {id}"));
+    };
+    let mut guard = slot.state.lock().unwrap();
+    let inner = &mut *guard;
+    let problem = inner.session.problem();
+    if inner.closed {
+        return fail_outcome(
+            name,
+            "native",
+            Some(problem),
+            format!("session {id} closed before execute"),
+        );
+    }
+    let colors = inner.session.colors();
+    let refresh = match inner.sched.as_mut() {
+        Some(s) => s.refresh(colors),
+        None => {
+            let s = ColorSchedule::from_colors(colors);
+            let (moved, dirty_colors) = (s.n_items(), s.n_colors());
+            inner.sched = Some(s);
+            RefreshStats { moved, dirty_colors, rebuilt: true }
+        }
+    };
+    let sched = inner.sched.as_ref().unwrap();
+    // The kernel is client code: contain its panics like the engines'
+    // (the pool resumes them on this thread; unwinding past the session
+    // lock would poison it for every later job).
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        Executor::new(pool).run(sched, rounds, |item, color| kernel.call(item, color))
+    }));
+    let report = match run {
+        Ok(r) => r,
+        Err(p) => {
+            return fail_outcome(
+                name,
+                "native",
+                Some(problem),
+                format!("kernel panicked: {}", panic_message(p.as_ref())),
+            )
+        }
+    };
+    let stats = ExecStats {
+        colors: sched.cardinalities().iter().filter(|&&c| c > 0).count(),
+        rounds,
+        items: report.items,
+        busy_units: report.busy_total(),
+        max_color_busy: report.max_color_busy(),
+        utilization: report.utilization(),
+        sched_moved: refresh.moved,
+        sched_dirty_colors: refresh.dirty_colors,
+        sched_rebuilt: refresh.rebuilt,
+    };
+    JobOutcome {
+        name: name.to_string(),
+        engine: "native",
+        problem: Some(problem),
+        n_colors: stats.colors,
+        iterations: rounds,
+        seconds: report.seconds,
+        valid: true,
+        error: None,
+        batch: None,
+        exec: Some(stats),
     }
 }
 
@@ -373,6 +536,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                         valid,
                         error: None,
                         batch: None,
+                        exec: None,
                     }
                 }
                 Err(e) => JobOutcome {
@@ -381,7 +545,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                 },
             }
         }
-        JobInput::D2gc(_) | JobInput::Update { .. } => fail_outcome(
+        JobInput::D2gc(_) | JobInput::Update { .. } | JobInput::Execute { .. } => fail_outcome(
             &job.name,
             "pjrt",
             job.input.problem(),
@@ -605,6 +769,7 @@ impl Service {
             valid,
             error: None,
             batch: None,
+            exec: None,
         };
         self.metrics.record(&outcome);
         let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
@@ -612,11 +777,41 @@ impl Service {
             id,
             Arc::new(SessionSlot {
                 submitted: AtomicU64::new(0),
-                state: Mutex::new(SessionInner { session, applied: 0, closed: false }),
+                state: Mutex::new(SessionInner {
+                    session,
+                    applied: 0,
+                    closed: false,
+                    sched: None,
+                }),
                 cv: Condvar::new(),
             }),
         );
         (id, outcome)
+    }
+
+    /// Submit a colored-execution job against an open session: run
+    /// `kernel` over the session's current coloring, `rounds` full
+    /// color sweeps, on the shared pool (see [`JobInput::Execute`]).
+    /// Convenience over [`Service::submit`]; returns the outcome
+    /// receiver. Queued-but-unapplied updates are not waited for — the
+    /// run observes the committed coloring when it acquires the
+    /// session.
+    pub fn execute(
+        &self,
+        name: &str,
+        session: SessionId,
+        rounds: usize,
+        kernel: ExecKernel,
+    ) -> Receiver<JobOutcome> {
+        self.submit(Job {
+            name: name.to_string(),
+            input: JobInput::Execute { session, kernel, rounds },
+            // Execute jobs ignore the config (the executor runs on the
+            // shared pool with its full team); any well-formed value
+            // satisfies the Job shape.
+            cfg: Config::threads(crate::coloring::schedule::N1_N2, self.pool.threads()),
+            engine: EngineSel::Native,
+        })
     }
 
     /// Snapshot a session's current committed coloring (batches applied
@@ -899,6 +1094,120 @@ mod tests {
         assert!(!o.valid);
         assert!(o.error.unwrap().contains("unknown session"));
         assert!(o.batch.is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn execute_runs_colored_kernel_over_a_session() {
+        use crate::exec::SharedBuf;
+        let svc = Service::start(2, None);
+        let g = Arc::new(random_bipartite(80, 120, 900, 13));
+        let (sid, init) = svc.open_session("exec", &g, Config::sim(schedule::N1_N2, 4));
+        assert!(init.valid);
+        let acc = Arc::new(SharedBuf::new(vec![0u64; g.n_nets()]));
+        let kernel = {
+            let g = Arc::clone(&g);
+            let acc = Arc::clone(&acc);
+            ExecKernel::new(move |item, _color| {
+                let mut units = 0u64;
+                for &v in g.nets(item) {
+                    // SAFETY: no two columns in one color share a net,
+                    // and colors are separated by the executor barrier.
+                    unsafe { *acc.slot(v as usize) += (item as u64 + 1) * (v as u64 + 1) };
+                    units += 1;
+                }
+                Cost::new(units)
+            })
+        };
+        let o = svc.execute("run", sid, 2, kernel).recv().unwrap();
+        assert!(o.valid, "{:?}", o.error);
+        assert_eq!(o.problem, Some(Problem::Bgpc));
+        let e = o.exec.expect("execute outcomes carry exec stats");
+        assert!(e.sched_rebuilt, "first execute builds the schedule");
+        assert_eq!(e.rounds, 2);
+        assert_eq!(e.items, 2 * g.n_vertices() as u64);
+        assert_eq!(e.busy_units, 2 * g.nnz() as u64);
+        assert!(e.max_color_busy > 0 && e.max_color_busy <= e.busy_units);
+        // bit-for-bit equal to the sequential sweep (integer arithmetic)
+        let mut want = vec![0u64; g.n_nets()];
+        for u in 0..g.n_vertices() {
+            for &v in g.nets(u) {
+                want[v as usize] += 2 * (u as u64 + 1) * (v as u64 + 1);
+            }
+        }
+        // SAFETY: the job completed — no kernel is writing.
+        let got: Vec<u64> = (0..g.n_nets()).map(|v| unsafe { *acc.peek(v) }).collect();
+        assert_eq!(got, want, "colored execution must equal the sequential sweep");
+        assert_eq!(svc.metrics().executes(), 1);
+        assert_eq!(svc.metrics().exec_items(), e.items);
+        assert!(svc.close_session(sid));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn execute_refreshes_only_dirty_colors_after_updates() {
+        use crate::dynamic::UpdateBatch;
+        let svc = Service::start(1, None);
+        let g = random_bipartite(100, 150, 1200, 31);
+        let (sid, _init) = svc.open_session("s", &g, Config::sim(schedule::N1_N2, 4));
+        let noop = ExecKernel::new(|_item, _color| Cost::new(1));
+        let e0 = svc.execute("e0", sid, 1, noop.clone()).recv().unwrap().exec.unwrap();
+        assert!(e0.sched_rebuilt);
+        assert_eq!(e0.sched_moved, 150, "first build places every item");
+        // no updates in between: nothing moves
+        let e1 = svc.execute("e1", sid, 1, noop.clone()).recv().unwrap().exec.unwrap();
+        assert!(!e1.sched_rebuilt);
+        assert_eq!(e1.sched_moved, 0);
+        assert_eq!(e1.sched_dirty_colors, 0);
+        // an update batch dirties only the repaired frontier
+        let mut batch = UpdateBatch::default();
+        for i in 0..12u32 {
+            batch.add_edges.push((i % 100, (i * 7) % 150));
+        }
+        let u = svc
+            .submit(Job {
+                name: "u".into(),
+                input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+                cfg: Config::sim(schedule::N1_N2, 4),
+                engine: EngineSel::Auto,
+            })
+            .recv()
+            .unwrap();
+        assert!(u.valid, "{:?}", u.error);
+        let recolored = u.batch.unwrap().recolored;
+        let e2 = svc.execute("e2", sid, 1, noop).recv().unwrap().exec.unwrap();
+        assert!(!e2.sched_rebuilt, "post-update refresh must be incremental");
+        assert!(
+            e2.sched_moved <= recolored,
+            "refresh moved {} items but the repair recolored only {recolored}",
+            e2.sched_moved
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn execute_errors_cleanly_and_survives_kernel_panics() {
+        let svc = Service::start(1, None);
+        let o = svc
+            .execute("nope", 777, 1, ExecKernel::new(|_, _| Cost::new(1)))
+            .recv()
+            .unwrap();
+        assert!(!o.valid);
+        assert!(o.error.unwrap().contains("unknown session"));
+        let g = random_bipartite(40, 60, 300, 7);
+        let (sid, _init) = svc.open_session("s", &g, Config::sim(schedule::V_N2, 2));
+        let bomb = ExecKernel::new(|item, _color| {
+            assert!(item != 3, "planted kernel failure");
+            Cost::new(1)
+        });
+        let o = svc.execute("boom", sid, 1, bomb).recv().unwrap();
+        assert!(!o.valid);
+        let err = o.error.expect("kernel panic must surface as an error");
+        assert!(err.contains("kernel panicked"), "unexpected message: {err}");
+        // the session and the dispatcher both survive the client's bug
+        let o = svc.execute("ok", sid, 1, ExecKernel::new(|_, _| Cost::new(1))).recv().unwrap();
+        assert!(o.valid, "{:?}", o.error);
+        assert!(svc.close_session(sid));
         svc.shutdown();
     }
 

@@ -37,6 +37,12 @@
 //!   [`crate::coordinator::Service::open_session`] /
 //!   [`crate::coordinator::Service::open_session_d2gc`] plus the
 //!   [`crate::coordinator::JobInput::Update`] job kind.
+//! * Downstream, [`crate::exec`] closes the loop for *consumers* of a
+//!   streamed coloring: a [`crate::exec::ColorSchedule`] diff-refreshes
+//!   against the repaired colors — rebuilding only the colors a batch
+//!   dirtied — so colored execution resumes right after a repair
+//!   (repair → rebuild dirty frontiers → re-run; DESIGN.md §11, and
+//!   [`crate::coordinator::JobInput::Execute`] through the service).
 //!
 //! Motivation: coloring is a *recurring* cost in iterative solvers
 //! (Çatalyürek et al., arXiv:1205.3809); Rokos et al. (arXiv:1505.04086)

@@ -1,0 +1,343 @@
+//! [`Executor`] — drive a kernel over a [`ColorSchedule`], color set by
+//! color set, on a persistent [`WorkerPool`] team.
+//!
+//! One pool region per non-empty frontier: the region's drain (the
+//! caller blocks until every participant checks in, DESIGN.md §10) *is*
+//! the barrier between colors, and within a color the schedule's
+//! conflict-freedom is the lock-freedom certificate — the kernel may
+//! mutate shared state it owns per item without synchronization
+//! ([`SharedBuf`] is the crate's canonical such state). Per-color busy
+//! units are recorded so the color-parallel critical path — the paper's
+//! motivation for B1/B2: "the sets should preferably have similar
+//! sizes" for the execution step — is measurable directly
+//! ([`ExecReport::max_color_busy`]).
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::par::{Cost, WorkerPool};
+
+use super::schedule::ColorSchedule;
+
+/// What one [`Executor::run`] did, with per-color and per-worker
+/// accounting (the `PoolStats`-style imbalance view, but along the
+/// color axis as well as the worker axis).
+#[derive(Clone, Debug)]
+pub struct ExecReport {
+    /// Color buckets the schedule held (incl. empty ones, skipped).
+    pub colors: usize,
+    /// Full sweeps over the color sequence.
+    pub rounds: usize,
+    /// Kernel invocations (items × rounds).
+    pub items: u64,
+    /// Wall-clock seconds for the whole run.
+    pub seconds: f64,
+    /// Busy work units per color, summed over rounds and workers — the
+    /// per-frontier cost profile (skewed colorings skew this).
+    pub per_color_busy: Vec<u64>,
+    /// Wall-clock seconds per color, summed over rounds.
+    pub per_color_secs: Vec<f64>,
+    /// Busy work units per worker, summed over colors and rounds
+    /// (index 0 = the calling thread).
+    pub worker_busy: Vec<u64>,
+}
+
+impl ExecReport {
+    /// Total busy work units.
+    pub fn busy_total(&self) -> u64 {
+        self.per_color_busy.iter().sum()
+    }
+
+    /// Busy units of the costliest color set — the critical-path term
+    /// the B1/B2 balancing heuristics exist to shrink.
+    pub fn max_color_busy(&self) -> u64 {
+        self.per_color_busy.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Share of all busy units spent in the costliest color
+    /// (`1/colors` = perfectly flat profile, `1.0` = one color is the
+    /// whole run).
+    pub fn critical_share(&self) -> f64 {
+        let total = self.busy_total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.max_color_busy() as f64 / total as f64
+    }
+
+    /// Mean-over-max busy fraction across workers — same definition as
+    /// [`crate::par::PoolStats::utilization`], per run.
+    pub fn utilization(&self) -> f64 {
+        let max = self.worker_busy.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        let sum: u64 = self.worker_busy.iter().sum();
+        sum as f64 / (max as f64 * self.worker_busy.len() as f64)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "colors={} rounds={} items={} busy={} max_color_busy={} critical_share={:.3} utilization={:.2} secs={:.4}",
+            self.colors,
+            self.rounds,
+            self.items,
+            self.busy_total(),
+            self.max_color_busy(),
+            self.critical_share(),
+            self.utilization(),
+            self.seconds
+        )
+    }
+}
+
+/// Cap the dynamic chunk so small frontiers still spread across the
+/// team (the dynamic engine's adaptive-chunk rule, applied per color —
+/// a 40-item frontier with chunk 64 would otherwise run sequentially).
+fn effective_chunk(len: usize, team: usize, chunk: usize) -> usize {
+    if chunk == 0 {
+        return 0; // schedule(static)
+    }
+    chunk.min((len / team).max(1))
+}
+
+/// Colored-execution driver over a shared [`WorkerPool`] (see module
+/// docs). Construction is cheap; the coordinator builds one per
+/// `Execute` job on its long-lived pool.
+pub struct Executor {
+    pool: Arc<WorkerPool>,
+    team: usize,
+    chunk: usize,
+    /// Unit per-thread scratch for the pool regions (kernels carry
+    /// their own state; reused across colors and rounds).
+    states: Vec<()>,
+}
+
+impl Executor {
+    /// An executor using the pool's full team and the engine's default
+    /// `schedule(dynamic, 64)` chunking.
+    pub fn new(pool: &Arc<WorkerPool>) -> Executor {
+        Executor::on_team(pool, pool.threads())
+    }
+
+    /// An executor with an explicit team size (clamped to the pool's).
+    pub fn on_team(pool: &Arc<WorkerPool>, team: usize) -> Executor {
+        let team = team.clamp(1, pool.threads());
+        Executor { pool: Arc::clone(pool), team, chunk: 64, states: vec![(); team] }
+    }
+
+    /// Override the dynamic chunk size (`0` = `schedule(static)`).
+    pub fn with_chunk(mut self, chunk: usize) -> Executor {
+        self.chunk = chunk;
+        self
+    }
+
+    /// Team size regions are dispatched with.
+    pub fn threads(&self) -> usize {
+        self.team
+    }
+
+    /// Run `kernel` over every frontier of `sched`, in color order,
+    /// `rounds` full sweeps; one pool region per non-empty color, with
+    /// the region drain as the inter-color barrier. The kernel sees
+    /// `(item, color)` and returns the [`Cost`] it performed; within a
+    /// color it may touch shared state lock-free wherever the
+    /// schedule's conflict-freedom covers the access ([`SharedBuf`]).
+    pub fn run<K>(&mut self, sched: &ColorSchedule, rounds: usize, kernel: K) -> ExecReport
+    where
+        K: Fn(usize, usize) -> Cost + Sync,
+    {
+        let nc = sched.n_colors();
+        let mut per_color_busy = vec![0u64; nc];
+        let mut per_color_secs = vec![0.0f64; nc];
+        let mut worker_busy = vec![0u64; self.team];
+        let mut items = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            for (c, set) in sched.frontiers() {
+                let chunk = effective_chunk(set.len(), self.team, self.chunk);
+                let out = self.pool.region(
+                    &mut self.states,
+                    self.team,
+                    set.len(),
+                    chunk,
+                    |_tid, _ts, i, _now| kernel(set[i] as usize, c),
+                );
+                per_color_busy[c] += out.busy_units.iter().sum::<u64>();
+                per_color_secs[c] += out.real_secs;
+                for (w, &b) in worker_busy.iter_mut().zip(out.busy_units.iter()) {
+                    *w += b;
+                }
+                items += set.len() as u64;
+            }
+        }
+        ExecReport {
+            colors: nc,
+            rounds,
+            items,
+            seconds: t0.elapsed().as_secs_f64(),
+            per_color_busy,
+            per_color_secs,
+            worker_busy,
+        }
+    }
+}
+
+/// A shared buffer whose race-freedom certificate is the coloring: the
+/// paper's "a valid graph coloring yields a lock-free processing of the
+/// colored tasks" made into a type. Kernels running under a
+/// [`ColorSchedule`] may take [`SharedBuf::slot`] for the slots their
+/// item owns (a BGPC column's incident rows, a D2GC vertex's own cell)
+/// — no two items in one color share such a slot, and colors are
+/// separated by the executor's barrier, so the aliasing contract holds
+/// without any synchronization.
+pub struct SharedBuf<T> {
+    cells: Box<[UnsafeCell<T>]>,
+}
+
+// SAFETY: all concurrent access goes through `slot`/`peek`, whose
+// contracts push disjointness to the caller — exactly what a
+// conflict-free color set certifies.
+unsafe impl<T: Send> Sync for SharedBuf<T> {}
+
+impl<T> SharedBuf<T> {
+    /// Wrap `init` for colored access.
+    pub fn new(init: Vec<T>) -> SharedBuf<T> {
+        SharedBuf { cells: init.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Mutable access to slot `i` from inside a kernel.
+    ///
+    /// # Safety
+    /// No other thread may access slot `i` for the duration of the
+    /// borrow. Under a conflict-free [`ColorSchedule`] this holds
+    /// whenever the running item owns slot `i` w.r.t. the coloring's
+    /// conflict definition (e.g. BGPC: `i` is one of the column's
+    /// incident rows).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot(&self, i: usize) -> &mut T {
+        &mut *self.cells[i].get()
+    }
+
+    /// Shared read of slot `i` from inside a kernel.
+    ///
+    /// # Safety
+    /// No thread may concurrently *write* slot `i`. Under a distance-2
+    /// schedule a kernel may read its item's neighbors this way: no
+    /// neighbor is in the running color, so none is being written.
+    pub unsafe fn peek(&self, i: usize) -> &T {
+        &*self.cells[i].get()
+    }
+
+    /// Exclusive view for setup and inspection between runs.
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: `&mut self` guarantees no concurrent kernel access,
+        // and `UnsafeCell<T>` is `repr(transparent)` over `T`.
+        unsafe { &mut *(self.cells.as_mut() as *mut [UnsafeCell<T>] as *mut [T]) }
+    }
+
+    /// Unwrap into the plain vector.
+    pub fn into_vec(self) -> Vec<T> {
+        self.cells.into_vec().into_iter().map(UnsafeCell::into_inner).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+
+    #[test]
+    fn barrier_separates_colors_and_accounting_adds_up() {
+        // colors 0/1/2 with frontier sizes 3/2/1
+        let colors = [0, 0, 0, 1, 1, 2];
+        let sched = ColorSchedule::from_colors(&colors);
+        let pool = Arc::new(WorkerPool::new(3));
+        let mut ex = Executor::new(&pool);
+        // each item records the epoch (number of earlier invocations)
+        // it ran at; with the inter-color barrier, every color-0 epoch
+        // precedes every color-1 epoch, etc.
+        let clock = AtomicU64::new(0);
+        let stamp: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        let rep = ex.run(&sched, 1, |item, color| {
+            assert_eq!(colors[item], color as i32);
+            stamp[item].store(clock.fetch_add(1, AOrd::SeqCst), AOrd::SeqCst);
+            Cost::new(1)
+        });
+        let s: Vec<u64> = stamp.iter().map(|x| x.load(AOrd::SeqCst)).collect();
+        let max0 = s[0..3].iter().max().unwrap();
+        let min1 = s[3..5].iter().min().unwrap();
+        let max1 = s[3..5].iter().max().unwrap();
+        assert!(max0 < min1, "color 0 must drain before color 1 starts: {s:?}");
+        assert!(max1 < &s[5], "color 1 must drain before color 2 starts: {s:?}");
+        assert_eq!(rep.items, 6);
+        assert_eq!(rep.busy_total(), 6);
+        assert_eq!(rep.per_color_busy, vec![3, 2, 1]);
+        assert_eq!(rep.max_color_busy(), 3);
+        assert!((rep.critical_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounds_multiply_work_and_empty_buckets_are_skipped() {
+        // bucket 1 left empty by a refresh
+        let mut sched = ColorSchedule::from_colors(&[0, 1, 2]);
+        sched.refresh(&[0, 2, 2]);
+        let pool = Arc::new(WorkerPool::new(2));
+        let count = AtomicU64::new(0);
+        let rep = Executor::new(&pool).run(&sched, 4, |_item, color| {
+            assert_ne!(color, 1, "empty bucket must not dispatch");
+            count.fetch_add(1, AOrd::Relaxed);
+            Cost::new(2)
+        });
+        assert_eq!(count.load(AOrd::Relaxed), 12);
+        assert_eq!(rep.items, 12);
+        assert_eq!(rep.rounds, 4);
+        assert_eq!(rep.per_color_busy, vec![8, 0, 16]);
+        assert_eq!(rep.worker_busy.iter().sum::<u64>(), 24);
+    }
+
+    #[test]
+    fn shared_buf_roundtrips_and_colored_writes_land() {
+        let mut buf = SharedBuf::new(vec![0u64; 4]);
+        buf.as_mut_slice()[1] = 7;
+        assert_eq!(buf.len(), 4);
+        assert!(!buf.is_empty());
+        let sched = ColorSchedule::from_colors(&[0, 0, 1, 1]);
+        let pool = Arc::new(WorkerPool::new(2));
+        Executor::new(&pool).run(&sched, 1, |item, _color| {
+            // SAFETY: each item owns exactly its own slot here.
+            unsafe { *buf.slot(item) += item as u64 + 1 };
+            Cost::new(1)
+        });
+        assert_eq!(buf.into_vec(), vec![1, 9, 3, 4]);
+    }
+
+    #[test]
+    fn effective_chunk_spreads_small_frontiers() {
+        assert_eq!(effective_chunk(1000, 4, 64), 64);
+        assert_eq!(effective_chunk(40, 4, 64), 10);
+        assert_eq!(effective_chunk(3, 4, 64), 1);
+        assert_eq!(effective_chunk(1000, 4, 0), 0, "static split passes through");
+    }
+
+    #[test]
+    fn zero_rounds_is_a_no_op() {
+        let sched = ColorSchedule::from_colors(&[0, 1]);
+        let pool = Arc::new(WorkerPool::new(2));
+        let rep = Executor::new(&pool).run(&sched, 0, |_, _| Cost::new(1));
+        assert_eq!(rep.items, 0);
+        assert_eq!(rep.busy_total(), 0);
+        assert_eq!(rep.critical_share(), 0.0);
+        assert_eq!(rep.utilization(), 1.0);
+    }
+}

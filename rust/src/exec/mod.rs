@@ -1,0 +1,83 @@
+//! Color-parallel execution — what the coloring is *for*.
+//!
+//! The paper's premise (§I) is that "a valid graph coloring yields a
+//! lock-free processing of the colored tasks": partition the items into
+//! color sets, process one set at a time, and within a set no two items
+//! conflict — shared state needs no locks, only a barrier between sets.
+//! Its B1/B2 balancing heuristics exist *for this step*: "the sets
+//! should preferably have similar sizes", because the color-parallel
+//! critical path is the costliest set of each wave. Everything below
+//! the coordinator produced colorings; this subsystem consumes them
+//! (DESIGN.md §11):
+//!
+//! * [`ColorSchedule`] — per-color frontiers counting-sorted from a
+//!   `&[i32]` coloring, position-indexed so the colors dirtied by a
+//!   [`crate::dynamic`] repair are rebuilt incrementally
+//!   ([`ColorSchedule::refresh`]: O(n) diff + O(changed) moves) instead
+//!   of re-sorting the world per batch.
+//! * [`Executor`] / [`run_colored`] — drive a `(item, color) -> Cost`
+//!   kernel frontier-by-frontier on the shared [`WorkerPool`]: one pool
+//!   region per color, the region drain as the barrier, per-color busy
+//!   units recorded so skew shows up as [`ExecReport::max_color_busy`]
+//!   — wall-clock evidence for the balancing experiments, not just a
+//!   cardinality statistic.
+//! * [`SharedBuf`] — shared mutable state whose race-freedom
+//!   certificate is the coloring itself (unsafe access scoped to the
+//!   slots an item owns under the schedule).
+//!
+//! The coordinator wires this through as
+//! [`crate::coordinator::JobInput::Execute`]: a kernel re-runs against
+//! a live dynamic session, with the session's cached schedule refreshed
+//! from whatever the last repair dirtied (repair → rebuild dirty
+//! frontiers → re-run). `benches/execute.rs` gates the payoff end to
+//! end; `examples/colored_spmv.rs` is the front door.
+
+pub mod executor;
+pub mod schedule;
+
+pub use executor::{ExecReport, Executor, SharedBuf};
+pub use schedule::{ColorSchedule, RefreshStats};
+
+use std::sync::Arc;
+
+use crate::par::{Cost, WorkerPool};
+
+/// One-shot front door: bucket `colors` and run `kernel` over the
+/// frontiers for `rounds` sweeps on `pool`'s full team. Returns the
+/// schedule (reuse it — and [`ColorSchedule::refresh`] — for later
+/// runs) and the execution report.
+pub fn run_colored<K>(
+    pool: &Arc<WorkerPool>,
+    colors: &[i32],
+    rounds: usize,
+    kernel: K,
+) -> (ColorSchedule, ExecReport)
+where
+    K: Fn(usize, usize) -> Cost + Sync,
+{
+    let sched = ColorSchedule::from_colors(colors);
+    let report = Executor::new(pool).run(&sched, rounds, kernel);
+    (sched, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+
+    #[test]
+    fn run_colored_front_door_covers_every_item() {
+        let colors = [0, 1, 0, 2, 1];
+        let pool = Arc::new(WorkerPool::new(2));
+        let hits: Vec<AtomicU64> = (0..5).map(|_| AtomicU64::new(0)).collect();
+        let (sched, rep) = run_colored(&pool, &colors, 3, |item, color| {
+            assert_eq!(colors[item], color as i32);
+            hits[item].fetch_add(1, AOrd::Relaxed);
+            Cost::new(1)
+        });
+        assert!(hits.iter().all(|h| h.load(AOrd::Relaxed) == 3));
+        assert_eq!(sched.n_colors(), 3);
+        assert_eq!(rep.items, 15);
+        assert!(rep.summary().contains("rounds=3"));
+    }
+}

@@ -1,0 +1,310 @@
+//! [`ColorSchedule`] — per-color execution frontiers built from a
+//! coloring.
+//!
+//! The schedule buckets the colored items (BGPC columns, D2GC vertices)
+//! into one frontier per color with a counting sort, and keeps the
+//! buckets position-indexed so a *dynamic repair* — which recolors only
+//! a small frontier of the graph (DESIGN.md §8) — costs an O(n) diff
+//! scan plus O(changed) bucket surgery instead of a full re-sort
+//! ([`ColorSchedule::refresh`]). All allocations are reusable: a
+//! rebuild clears and refills, a refresh moves items in place.
+
+use crate::coloring::stats::ColorStats;
+
+/// Outcome of an incremental [`ColorSchedule::refresh`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefreshStats {
+    /// Items moved between color buckets.
+    pub moved: usize,
+    /// Distinct colors whose bucket changed (sources and destinations).
+    pub dirty_colors: usize,
+    /// True when the refresh fell back to a full counting-sort rebuild
+    /// (item shrink — never produced by the engines — or first build).
+    pub rebuilt: bool,
+}
+
+/// Per-color frontiers of a complete coloring (see module docs).
+///
+/// Invariants: `buckets[c]` holds exactly the items whose snapshot
+/// color is `c`; `pos[u]` is `u`'s index inside its bucket (what makes
+/// a [`ColorSchedule::refresh`] move O(1) per changed item). Bucket
+/// order within a color is unspecified — colored execution must not
+/// depend on it, and [`super::Executor`] does not.
+pub struct ColorSchedule {
+    buckets: Vec<Vec<u32>>,
+    /// Snapshot of the coloring the buckets currently reflect.
+    color_of: Vec<i32>,
+    /// Position of each item within its bucket.
+    pos: Vec<u32>,
+}
+
+impl ColorSchedule {
+    /// Bucket `colors` into per-color frontiers (counting sort).
+    ///
+    /// # Panics
+    /// If any item is uncolored (`< 0`) — schedules are built from the
+    /// *complete* colorings the engines and sessions hand back.
+    pub fn from_colors(colors: &[i32]) -> ColorSchedule {
+        let mut s = ColorSchedule { buckets: Vec::new(), color_of: Vec::new(), pos: Vec::new() };
+        s.rebuild(colors);
+        s
+    }
+
+    /// Full counting-sort rebuild, reusing the bucket allocations.
+    ///
+    /// # Panics
+    /// If any item is uncolored (`< 0`).
+    pub fn rebuild(&mut self, colors: &[i32]) {
+        let nc = (colors.iter().copied().max().unwrap_or(-1) + 1) as usize;
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        if self.buckets.len() < nc {
+            self.buckets.resize_with(nc, Vec::new);
+        } else {
+            self.buckets.truncate(nc);
+        }
+        self.color_of.clear();
+        self.color_of.extend_from_slice(colors);
+        self.pos.clear();
+        self.pos.resize(colors.len(), 0);
+        for (u, &c) in colors.iter().enumerate() {
+            assert!(c >= 0, "item {u} is uncolored; schedules need a complete coloring");
+            let b = &mut self.buckets[c as usize];
+            self.pos[u] = b.len() as u32;
+            b.push(u as u32);
+        }
+    }
+
+    /// Incremental refresh against the internal snapshot: an O(n)
+    /// compare finds the items a repair recolored, and only the buckets
+    /// those items leave or join are touched — the colors dirtied by
+    /// the batch, not the whole schedule. Item growth (a session that
+    /// gained vertices) extends the snapshot in place; shrink falls
+    /// back to [`ColorSchedule::rebuild`]. Returns what moved.
+    ///
+    /// # Panics
+    /// If any item of `colors` is uncolored (`< 0`).
+    pub fn refresh(&mut self, colors: &[i32]) -> RefreshStats {
+        if colors.len() < self.color_of.len() {
+            self.rebuild(colors);
+            return RefreshStats {
+                moved: colors.len(),
+                dirty_colors: self.buckets.len(),
+                rebuilt: true,
+            };
+        }
+        if colors.len() > self.color_of.len() {
+            // growth tail: snapshot as "uncolored", moved below
+            self.color_of.resize(colors.len(), -1);
+            self.pos.resize(colors.len(), 0);
+        }
+        let mut moved = 0usize;
+        let mut dirty: Vec<u32> = Vec::new();
+        for (u, &c) in colors.iter().enumerate() {
+            // checked before the no-change test: a grown tail snapshots
+            // as -1, and an uncolored new item must reject, not skip
+            assert!(c >= 0, "item {u} became uncolored; schedules need a complete coloring");
+            let old = self.color_of[u];
+            if c == old {
+                continue;
+            }
+            if old >= 0 {
+                dirty.push(old as u32);
+            }
+            dirty.push(c as u32);
+            self.move_item(u, c);
+            moved += 1;
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        RefreshStats { moved, dirty_colors: dirty.len(), rebuilt: false }
+    }
+
+    /// O(1) bucket surgery: swap-remove `u` from its old bucket (fixing
+    /// the displaced item's position index), append it to the new one.
+    fn move_item(&mut self, u: usize, new_c: i32) {
+        let old = self.color_of[u];
+        if old >= 0 {
+            let b = &mut self.buckets[old as usize];
+            let p = self.pos[u] as usize;
+            b.swap_remove(p);
+            if p < b.len() {
+                self.pos[b[p] as usize] = p as u32;
+            }
+        }
+        let nc = new_c as usize;
+        if nc >= self.buckets.len() {
+            self.buckets.resize_with(nc + 1, Vec::new);
+        }
+        let b = &mut self.buckets[nc];
+        self.pos[u] = b.len() as u32;
+        b.push(u as u32);
+        self.color_of[u] = new_c;
+    }
+
+    /// Number of color buckets (refreshes may leave empty ones behind;
+    /// [`ColorSchedule::frontiers`] skips them).
+    pub fn n_colors(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Items scheduled.
+    pub fn n_items(&self) -> usize {
+        self.color_of.len()
+    }
+
+    /// The frontier of color `c` (possibly empty), in unspecified order.
+    pub fn color_set(&self, c: usize) -> &[u32] {
+        &self.buckets[c]
+    }
+
+    /// Snapshot color of item `u` — what the buckets currently reflect,
+    /// which may lag the session until the next [`ColorSchedule::refresh`].
+    pub fn color_of(&self, u: usize) -> i32 {
+        self.color_of[u]
+    }
+
+    /// Non-empty frontiers in color order — the executor's wave sequence.
+    pub fn frontiers(&self) -> impl Iterator<Item = (usize, &[u32])> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty())
+            .map(|(c, b)| (c, b.as_slice()))
+    }
+
+    /// Cardinality of the largest frontier (the color-parallel critical
+    /// path is bounded below by its work).
+    pub fn max_set_len(&self) -> usize {
+        self.buckets.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Bucket cardinalities, including empty buckets.
+    pub fn cardinalities(&self) -> Vec<usize> {
+        self.buckets.iter().map(Vec::len).collect()
+    }
+
+    /// Color-set statistics straight off the bucket sizes — the same
+    /// numbers the balancing experiments report
+    /// ([`ColorStats`], Table VI), without another pass over the colors.
+    pub fn stats(&self) -> ColorStats {
+        ColorStats::from_cards(self.cardinalities())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Bucket `c` sorted for order-insensitive comparison (empty when
+    /// the schedule has no such bucket — refreshes may differ from a
+    /// fresh build only by trailing empty buckets).
+    fn bucket_sorted(s: &ColorSchedule, c: usize) -> Vec<u32> {
+        let mut v = Vec::new();
+        if c < s.n_colors() {
+            v.extend_from_slice(s.color_set(c));
+        }
+        v.sort_unstable();
+        v
+    }
+
+    fn assert_matches(sched: &ColorSchedule, colors: &[i32]) {
+        assert_eq!(sched.n_items(), colors.len());
+        let total: usize = sched.cardinalities().iter().sum();
+        assert_eq!(total, colors.len(), "buckets must partition the items");
+        for (c, set) in sched.frontiers() {
+            for &u in set {
+                assert_eq!(colors[u as usize], c as i32, "item {u} in the wrong bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn counting_sort_partitions_items() {
+        let colors = [0, 2, 1, 0, 2, 2];
+        let s = ColorSchedule::from_colors(&colors);
+        assert_eq!(s.n_colors(), 3);
+        assert_eq!(s.n_items(), 6);
+        assert_eq!(s.max_set_len(), 3);
+        assert_eq!(s.cardinalities(), vec![2, 1, 3]);
+        assert_matches(&s, &colors);
+        let st = s.stats();
+        assert_eq!(st.n_colors, 3);
+        assert_eq!(st.max_cardinality, 3);
+    }
+
+    #[test]
+    fn refresh_equals_rebuild_under_random_recolors() {
+        let mut rng = Rng::new(0xEC);
+        let n = 300usize;
+        let mut colors: Vec<i32> = (0..n).map(|_| rng.range(0, 7) as i32).collect();
+        let mut sched = ColorSchedule::from_colors(&colors);
+        for round in 0..10 {
+            // recolor a small frontier, occasionally inventing a color
+            for _ in 0..rng.range(1, 25) {
+                let u = rng.range(0, n);
+                colors[u] = rng.range(0, 9) as i32;
+            }
+            let rs = sched.refresh(&colors);
+            assert!(!rs.rebuilt, "same-size refresh must not rebuild");
+            assert!(rs.moved <= 24, "round {round}: moved {}", rs.moved);
+            assert_matches(&sched, &colors);
+            // bucket contents equal a fresh counting sort (order aside)
+            let fresh = ColorSchedule::from_colors(&colors);
+            for c in 0..sched.n_colors().max(fresh.n_colors()) {
+                assert_eq!(
+                    bucket_sorted(&sched, c),
+                    bucket_sorted(&fresh, c),
+                    "round {round}: bucket {c} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_counts_only_dirty_colors() {
+        let colors = [0, 0, 1, 1, 2, 2];
+        let mut s = ColorSchedule::from_colors(&colors);
+        let unchanged = s.refresh(&colors);
+        assert_eq!(unchanged, RefreshStats { moved: 0, dirty_colors: 0, rebuilt: false });
+        // one item moves 1 -> 3: colors 1 and 3 are dirty, 0 and 2 not
+        let rs = s.refresh(&[0, 0, 1, 3, 2, 2]);
+        assert_eq!(rs.moved, 1);
+        assert_eq!(rs.dirty_colors, 2);
+        assert!(!rs.rebuilt);
+        assert_eq!(s.n_colors(), 4);
+        assert_eq!(s.color_set(1), &[2]);
+        assert_eq!(s.color_set(3), &[3]);
+    }
+
+    #[test]
+    fn growth_extends_shrink_rebuilds() {
+        let mut s = ColorSchedule::from_colors(&[0, 1]);
+        let grown = [0, 1, 1, 2];
+        let rs = s.refresh(&grown);
+        assert!(!rs.rebuilt);
+        assert_eq!(rs.moved, 2, "both new items join buckets");
+        assert_matches(&s, &grown);
+        let shrunk = [1, 0];
+        let rs = s.refresh(&shrunk);
+        assert!(rs.rebuilt);
+        assert_matches(&s, &shrunk);
+    }
+
+    #[test]
+    #[should_panic(expected = "uncolored")]
+    fn uncolored_items_are_rejected() {
+        ColorSchedule::from_colors(&[0, -1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "uncolored")]
+    fn uncolored_growth_tail_is_rejected_by_refresh() {
+        // a grown item whose color is still -1 must panic, not silently
+        // land in no bucket (the partition invariant)
+        let mut s = ColorSchedule::from_colors(&[0, 1]);
+        s.refresh(&[0, 1, -1]);
+    }
+}

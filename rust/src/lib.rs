@@ -29,6 +29,12 @@
 //!   optimistic phase machinery through the [`dynamic::Problem`] seam,
 //!   and long-lived sessions whose balancing trackers persist across
 //!   update batches (DESIGN.md §8–§9).
+//! * [`exec`] — the consumer side of a coloring: per-color execution
+//!   frontiers ([`exec::ColorSchedule`], with incremental rebuild of
+//!   only the colors a dynamic repair dirtied) and a color-by-color
+//!   [`exec::Executor`] that drives user kernels lock-free within a
+//!   color on the shared worker pool, barrier between colors
+//!   (DESIGN.md §11).
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled
 //!   JAX/Pallas net-step artifacts (`artifacts/*.hlo.txt`) and runs the
 //!   batched coloring step from Rust; Python is never on this path.
@@ -48,6 +54,7 @@
 pub mod coloring;
 pub mod coordinator;
 pub mod dynamic;
+pub mod exec;
 pub mod graph;
 pub mod par;
 pub mod runtime;
@@ -57,4 +64,5 @@ pub mod util;
 
 pub use coloring::{ColoringResult, Problem, Schedule};
 pub use dynamic::{BatchStats, BgpcSession, D2gcSession, DynamicSession, UpdateBatch};
+pub use exec::{ColorSchedule, ExecReport, Executor, SharedBuf};
 pub use graph::{Bipartite, Csr};

@@ -47,6 +47,13 @@
 //! onto a single team): callers serialize region-by-region on an
 //! internal lock, which is the intended behaviour — one machine-wide
 //! team, never thread oversubscription.
+//!
+//! The region drain doubles as a barrier primitive: the caller returns
+//! only after every participant has checked in, and the epoch mutex
+//! orders all of region *k*'s writes before region *k + 1*'s reads.
+//! [`crate::exec::Executor`] builds colored execution on exactly this —
+//! one region per color frontier, the drain as the inter-color barrier
+//! (DESIGN.md §11).
 
 use std::any::Any;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AOrd};

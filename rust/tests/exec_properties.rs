@@ -1,0 +1,193 @@
+//! exec-subsystem properties (ISSUE 5 / DESIGN.md §11): every per-color
+//! frontier a [`bgpc::exec::ColorSchedule`] builds is conflict-free —
+//! for every preset × {None, B1, B2} × both problems — and the
+//! [`bgpc::exec::Executor`] is equivalent to a sequential sweep at
+//! t = 1 and t = 4. Plus: the incremental refresh after a dynamic
+//! repair produces exactly the schedule a full rebuild would.
+
+use std::sync::Arc;
+
+use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Balance, Config};
+use bgpc::dynamic::DynamicSession;
+use bgpc::exec::{ColorSchedule, Executor, SharedBuf};
+use bgpc::graph::generators::Preset;
+use bgpc::graph::PRESETS;
+use bgpc::par::{Cost, WorkerPool};
+use bgpc::testing::random_update_batch;
+use bgpc::util::prng::Rng;
+
+/// Bucket `c` sorted for order-insensitive comparison (empty when the
+/// schedule has no such bucket — a refreshed schedule may differ from
+/// a fresh build only by trailing empty buckets).
+fn bucket_sorted(s: &ColorSchedule, c: usize) -> Vec<u32> {
+    let mut v = Vec::new();
+    if c < s.n_colors() {
+        v.extend_from_slice(s.color_set(c));
+    }
+    v.sort_unstable();
+    v
+}
+
+/// Bucket membership must mirror the coloring exactly: a partition,
+/// each item in the bucket of its own color.
+fn assert_partition(sched: &ColorSchedule, colors: &[i32], ctx: &str) {
+    assert_eq!(sched.n_items(), colors.len(), "{ctx}: item count");
+    let total: usize = sched.cardinalities().iter().sum();
+    assert_eq!(total, colors.len(), "{ctx}: buckets must partition the items");
+    for (c, set) in sched.frontiers() {
+        for &u in set {
+            assert_eq!(colors[u as usize], c as i32, "{ctx}: item {u} in the wrong bucket");
+        }
+    }
+}
+
+#[test]
+fn prop_bgpc_frontiers_conflict_free_on_every_preset_and_balance() {
+    // BGPC conflict definition: two columns conflict iff they share a
+    // net. Stamp each net with the color of the frontier that last
+    // touched it — a second touch within one frontier is a conflict.
+    for p in PRESETS.iter() {
+        let g = p.bipartite(0.02, 9);
+        for bal in [Balance::None, Balance::B1, Balance::B2] {
+            let r = color_bgpc(&g, &Config::sim(schedule::V_N2, 8).with_balance(bal));
+            let sched = ColorSchedule::from_colors(&r.colors);
+            let ctx = format!("{} {bal:?}", p.name);
+            assert_partition(&sched, &r.colors, &ctx);
+            let mut stamp = vec![usize::MAX; g.n_nets()];
+            for (c, set) in sched.frontiers() {
+                for &u in set {
+                    for &v in g.nets(u as usize) {
+                        assert_ne!(
+                            stamp[v as usize], c,
+                            "{ctx}: two items of frontier {c} share net {v}"
+                        );
+                        stamp[v as usize] = c;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_d2gc_frontiers_distance2_conflict_free_on_symmetric_presets() {
+    // D2GC conflict definition: distance ≤ 2. For each frontier, mark
+    // its members; no member may see another member among its
+    // neighbors (distance 1) or its neighbors' neighbors (distance 2).
+    for p in PRESETS.iter().filter(|p| p.symmetric) {
+        let m = p.net_incidence(0.02, 9);
+        for bal in [Balance::None, Balance::B1, Balance::B2] {
+            let r = color_d2gc(&m, &Config::sim(schedule::V_N2, 8).with_balance(bal));
+            let sched = ColorSchedule::from_colors(&r.colors);
+            let ctx = format!("{} {bal:?}", p.name);
+            assert_partition(&sched, &r.colors, &ctx);
+            let mut marked = vec![false; m.n_rows];
+            for (c, set) in sched.frontiers() {
+                for &u in set {
+                    marked[u as usize] = true;
+                }
+                for &u in set {
+                    let u = u as usize;
+                    for &w in m.row(u) {
+                        let w = w as usize;
+                        if w == u {
+                            continue; // diagonal entry
+                        }
+                        assert!(
+                            !marked[w],
+                            "{ctx}: frontier {c} holds adjacent items {u} and {w}"
+                        );
+                        for &x in m.row(w) {
+                            let x = x as usize;
+                            assert!(
+                                x == u || x == w || !marked[x],
+                                "{ctx}: frontier {c} holds {u} and {x} at distance 2 (via {w})"
+                            );
+                        }
+                    }
+                }
+                for &u in set {
+                    marked[u as usize] = false;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_equals_sequential_sweep_at_t1_and_t4() {
+    // An order-free integer scatter: the colored execution must equal
+    // the natural-order sequential sweep bit-for-bit, at every thread
+    // count and round count.
+    for preset in ["20M_movielens", "coPapersDBLP"] {
+        let g = Preset::by_name(preset).unwrap().bipartite(0.05, 3);
+        let r = color_bgpc(&g, &Config::sim(schedule::N1_N2, 8));
+        let sched = ColorSchedule::from_colors(&r.colors);
+        let mut base = vec![0u64; g.n_nets()];
+        for u in 0..g.n_vertices() {
+            for &v in g.nets(u) {
+                base[v as usize] = base[v as usize].wrapping_add((u as u64 + 1) * (v as u64 + 1));
+            }
+        }
+        for rounds in [1usize, 3] {
+            let want: Vec<u64> = base.iter().map(|&x| x.wrapping_mul(rounds as u64)).collect();
+            for t in [1usize, 4] {
+                let pool = Arc::new(WorkerPool::new(t));
+                let acc = SharedBuf::new(vec![0u64; g.n_nets()]);
+                let mut ex = Executor::new(&pool);
+                let rep = ex.run(&sched, rounds, |u, _color| {
+                    let mut units = 0u64;
+                    for &v in g.nets(u) {
+                        // SAFETY: no two columns in one frontier share
+                        // a net; colors are barrier-separated.
+                        unsafe {
+                            *acc.slot(v as usize) = (*acc.slot(v as usize))
+                                .wrapping_add((u as u64 + 1) * (v as u64 + 1));
+                        }
+                        units += 1;
+                    }
+                    Cost::new(units)
+                });
+                assert_eq!(
+                    acc.into_vec(),
+                    want,
+                    "{preset} rounds={rounds} t={t}: executor diverged from sequential"
+                );
+                assert_eq!(rep.items, (g.n_vertices() * rounds) as u64, "{preset} t={t}");
+                assert_eq!(rep.busy_total(), (g.nnz() * rounds) as u64, "{preset} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn refresh_after_dynamic_repair_equals_full_rebuild() {
+    let g = Preset::by_name("20M_movielens").unwrap().bipartite(0.05, 11);
+    let (mut session, init) = DynamicSession::start(g, Config::sim(schedule::N1_N2, 8));
+    let mut sched = ColorSchedule::from_colors(&init.colors);
+    let mut rng = Rng::new(0xE8EC);
+    for round in 0..4 {
+        let edits = 30 + round * 10;
+        let batch = random_update_batch(session.graph(), edits, &mut rng);
+        let st = session.apply(&batch);
+        assert!(session.verify().is_ok(), "round {round}: repair left an invalid coloring");
+        let rs = sched.refresh(session.colors());
+        assert!(!rs.rebuilt, "round {round}: same-size refresh must be incremental");
+        assert!(
+            rs.moved <= st.recolored,
+            "round {round}: refresh moved {} items but the repair recolored only {}",
+            rs.moved,
+            st.recolored
+        );
+        // the incremental schedule equals a fresh counting sort,
+        // bucket by bucket (order within a bucket aside)
+        let fresh = ColorSchedule::from_colors(session.colors());
+        for c in 0..sched.n_colors().max(fresh.n_colors()) {
+            assert_eq!(
+                bucket_sorted(&sched, c),
+                bucket_sorted(&fresh, c),
+                "round {round}: bucket {c} diverged from a full rebuild"
+            );
+        }
+    }
+}

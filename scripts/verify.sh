@@ -1,10 +1,13 @@
 #!/usr/bin/env sh
 # Local mirror of CI: tier-1 gate plus target-coverage builds.
 #
-#   scripts/verify.sh              # build + test + benches/examples + docs + clippy + fmt
-#   SKIP_FMT=1 scripts/verify.sh   # when rustfmt is not installed
-#   SKIP_CLIPPY=1 scripts/verify.sh# when clippy is not installed
-#   SKIP_DOCS=1 scripts/verify.sh  # skip the rustdoc warnings gate
+#   scripts/verify.sh                  # build + test + benches/examples + example smoke + docs + clippy + fmt
+#   TEST_SHARD=threads scripts/verify.sh   # concurrency-focused test shard (CI matrix)
+#   TEST_SHARD=sim scripts/verify.sh       # simulator/property test shard (CI matrix)
+#   BENCH_SMOKE=1 scripts/verify.sh    # additionally run the gated benches reduced-size
+#   SKIP_FMT=1 scripts/verify.sh       # when rustfmt is not installed
+#   SKIP_CLIPPY=1 scripts/verify.sh    # when clippy is not installed
+#   SKIP_DOCS=1 scripts/verify.sh      # skip the rustdoc warnings gate
 set -eu
 
 cd "$(dirname "$0")/../rust"
@@ -12,15 +15,74 @@ cd "$(dirname "$0")/../rust"
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
 # pick up repo-root artifacts when `make artifacts` has run (tests skip otherwise)
-BGPC_ARTIFACTS="${BGPC_ARTIFACTS:-../artifacts}" cargo test -q
+BGPC_ARTIFACTS="${BGPC_ARTIFACTS:-../artifacts}"
+export BGPC_ARTIFACTS
+
+# The CI matrix splits the suite into a concurrency-focused shard
+# (real-thread drivers, executor, streaming integration) and a
+# simulator/property shard (unit tests + the sim-heavy integration
+# targets); unset means the full suite. The union guard below fails
+# loudly when a new tests/*.rs file is in neither shard — otherwise a
+# green matrix could silently skip it forever.
+THREADS_SHARD="driver_equivalence exec_properties dynamic_integration"
+SIM_SHARD="paper_properties engine_integration graph_io pjrt_roundtrip"
+for f in tests/*.rs; do
+    t="$(basename "$f" .rs)"
+    case " $THREADS_SHARD $SIM_SHARD " in
+        *" $t "*) ;;
+        *)
+            echo "verify: tests/$t.rs is in neither TEST_SHARD list — add it in scripts/verify.sh" >&2
+            exit 2
+            ;;
+    esac
+done
+shard_args() {
+    for t in $1; do
+        printf -- '--test %s ' "$t"
+    done
+}
+case "${TEST_SHARD:-all}" in
+    threads)
+        echo "== cargo test -q (shard: threads) =="
+        # shellcheck disable=SC2046  # intentional word splitting of --test flags
+        cargo test -q $(shard_args "$THREADS_SHARD")
+        ;;
+    sim)
+        echo "== cargo test -q (shard: sim) =="
+        # shellcheck disable=SC2046  # intentional word splitting of --test flags
+        cargo test -q --lib --bins $(shard_args "$SIM_SHARD")
+        ;;
+    all)
+        echo "== cargo test -q =="
+        cargo test -q
+        ;;
+    *)
+        echo "verify: unknown TEST_SHARD '${TEST_SHARD}' (use threads|sim|all)" >&2
+        exit 2
+        ;;
+esac
 
 echo "== cargo build --benches --examples =="
 cargo build --benches --examples
 
-# Rustdoc gate: the public API (dynamic, coordinator, coloring::d2gc…)
-# is documented; broken intra-doc links and missing docs regress here.
+# Built targets must also *run*: smoke one real-thread example end to
+# end (colored waves on the persistent pool) so bit-rot in the example
+# layer fails verify, not a user.
+echo "== example smoke: parallel_sweep =="
+cargo run --release --example parallel_sweep >/dev/null
+
+# Reduced-size gated benches — delegated to `make bench-smoke` so this
+# and the CI bench-smoke job share one command (no drift in the bench
+# list): scheduler (pool >= 2x spawn), dynamic (repair >= 5x recolor),
+# execute (colored exec valid + B1/B2 flatten the critical path).
+if [ "${BENCH_SMOKE:-0}" = "1" ]; then
+    echo "== bench smoke (BENCH_SMOKE=1; make bench-smoke) =="
+    (cd .. && make bench-smoke)
+fi
+
+# Rustdoc gate: the public API (exec, dynamic, coordinator, ...) is
+# documented; broken intra-doc links and missing docs regress here.
 if [ "${SKIP_DOCS:-0}" = "1" ]; then
     echo "== docs skipped (SKIP_DOCS=1) =="
 else
