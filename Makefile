@@ -6,7 +6,7 @@
 #   make test            cargo test (artifacts built first when possible)
 #   make test-artifacts  like test, but PJRT roundtrip skips become errors
 #   make bench           all hand-rolled bench harnesses (release)
-#   make bench-smoke     the gated benches (scheduler/dynamic/execute) in
+#   make bench-smoke     the gated benches (scheduler/dynamic/execute/service) in
 #                        BENCH_SMOKE=1 reduced-size mode — what the CI
 #                        bench-smoke job runs and uploads CSVs from
 #   make fmt             rustfmt the crate (the verify/CI gate checks it)
@@ -43,7 +43,7 @@ bench:
 # + B1/B2 flatten the max-color-set busy time). CSVs land in
 # rust/bench_results/ — CI uploads them as workflow artifacts.
 bench-smoke:
-	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute
+	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute --bench service
 
 # Apply the formatting the verify.sh / CI `cargo fmt --check` gate
 # enforces (SKIP_FMT=1 skips the gate where rustfmt is unavailable).

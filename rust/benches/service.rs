@@ -1,0 +1,369 @@
+//! Service throughput bench: the sharded async coordinator vs the seed
+//! single-mutex design (DESIGN.md §12).
+//!
+//! The baseline below reproduces the retired coordinator's shape
+//! faithfully: one global mpsc job queue behind `Arc<Mutex<Receiver>>`
+//! (a worker holds the lock *while it waits* for work) and one big
+//! per-session mutex that updates, executes, and colors reads all
+//! serialize on, with every update paying its own compact + repair +
+//! verify. The sharded service replaces that with lock-free-admission
+//! `submit_async`, per-session pending queues that fuse tiny batches
+//! into one repair, and epoch snapshots that keep reads/executes off
+//! the repair lock.
+//!
+//! Workload: a mixed firehose over S dynamic sessions at 16 simulated
+//! threads — per round and session, 12 tiny (2-edit) update batches,
+//! one colored execute, one colors read. Acceptance: the sharded
+//! service sustains ≥ 4× the single-mutex jobs/sec with p99 latency
+//! bounded by 1.5× the baseline's.
+//!
+//!   cargo bench --bench service
+//!
+//! CSV artifact: `service.csv`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bgpc::coloring::{schedule, Config};
+use bgpc::coordinator::{EngineSel, ExecKernel, Job, JobHandle, JobInput, Service, ServiceOpts};
+use bgpc::dynamic::UpdateBatch;
+use bgpc::graph::generators::random_bipartite;
+use bgpc::graph::Bipartite;
+use bgpc::par::Cost;
+use bgpc::util::prng::Rng;
+
+/// The seed coordinator's concurrency shape, kept as the measured
+/// baseline (see the module doc — this is deliberately the *old*
+/// design, including the lock-around-channel pickup idiom).
+mod baseline {
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+
+    use bgpc::coloring::Config;
+    use bgpc::dynamic::{BgpcSession, DynamicSession, UpdateBatch};
+    use bgpc::exec::{ColorSchedule, Executor};
+    use bgpc::graph::Bipartite;
+    use bgpc::par::{Cost, WorkerPool};
+
+    pub struct Sess {
+        session: BgpcSession,
+        sched: Option<ColorSchedule>,
+    }
+
+    pub enum Req {
+        Update { sid: usize, batch: UpdateBatch, done: Sender<bool> },
+        Execute { sid: usize, rounds: usize, done: Sender<bool> },
+        Stop,
+    }
+
+    pub struct MutexCoordinator {
+        tx: Sender<Req>,
+        workers: Vec<JoinHandle<()>>,
+        sessions: Arc<Vec<Mutex<Sess>>>,
+    }
+
+    impl MutexCoordinator {
+        pub fn start(graphs: &[Bipartite], cfg: &Config, n_workers: usize) -> MutexCoordinator {
+            let pool = Arc::new(WorkerPool::new(1));
+            let sessions: Arc<Vec<Mutex<Sess>>> = Arc::new(
+                graphs
+                    .iter()
+                    .map(|g| {
+                        let (session, _init) =
+                            DynamicSession::start_on(g.clone(), cfg.clone(), &pool);
+                        Mutex::new(Sess { session, sched: None })
+                    })
+                    .collect(),
+            );
+            let (tx, rx) = channel::<Req>();
+            // the measured idiom: a mutex wrapped around the receiver,
+            // held while a worker waits for the next job
+            let rx = Arc::new(Mutex::new(rx));
+            let mut workers = Vec::new();
+            for _ in 0..n_workers {
+                let rx: Arc<Mutex<Receiver<Req>>> = Arc::clone(&rx);
+                let sessions = Arc::clone(&sessions);
+                let pool = Arc::clone(&pool);
+                workers.push(std::thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Req::Update { sid, batch, done }) => {
+                            let mut s = sessions[sid].lock().unwrap();
+                            s.session.apply(&batch);
+                            let ok = s.session.verify().is_ok();
+                            let _ = done.send(ok);
+                        }
+                        Ok(Req::Execute { sid, rounds, done }) => {
+                            let mut s = sessions[sid].lock().unwrap();
+                            let colors = s.session.colors().to_vec();
+                            match s.sched.as_mut() {
+                                Some(sc) => {
+                                    sc.refresh(&colors);
+                                }
+                                None => s.sched = Some(ColorSchedule::from_colors(&colors)),
+                            }
+                            let sched = s.sched.as_ref().unwrap();
+                            let rep = Executor::new(&pool).run(sched, rounds, |_, _| Cost::new(1));
+                            let _ = done.send(rep.items > 0);
+                        }
+                        Ok(Req::Stop) | Err(_) => break,
+                    }
+                }));
+            }
+            MutexCoordinator { tx, workers, sessions }
+        }
+
+        pub fn submit(&self, req: Req) {
+            let _ = self.tx.send(req);
+        }
+
+        /// A colors read — serializes on the session mutex, exactly as
+        /// the seed service did.
+        pub fn colors(&self, sid: usize) -> Vec<i32> {
+            self.sessions[sid].lock().unwrap().session.colors().to_vec()
+        }
+
+        pub fn shutdown(self) {
+            for _ in 0..self.workers.len() {
+                let _ = self.tx.send(Req::Stop);
+            }
+            drop(self.tx);
+            for w in self.workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let ix = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[ix]
+}
+
+struct RunStats {
+    jobs: u64,
+    secs: f64,
+    p50: f64,
+    p99: f64,
+}
+
+impl RunStats {
+    fn jps(&self) -> f64 {
+        self.jobs as f64 / self.secs.max(1e-12)
+    }
+}
+
+fn finish(mut lat: Vec<f64>, jobs: u64, secs: f64) -> RunStats {
+    lat.sort_by(f64::total_cmp);
+    RunStats { jobs, secs, p50: quantile(&lat, 0.50), p99: quantile(&lat, 0.99) }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let n_sessions = if smoke { 3 } else { 6 };
+    let rounds = if smoke { 4 } else { 8 };
+    let upd_per_round = 12usize;
+    let cfg = Config::sim(schedule::N1_N2, 16);
+
+    let graphs: Vec<Bipartite> = (0..n_sessions)
+        .map(|i| random_bipartite(300 + 40 * i, 450 + 60 * i, 5000 + 400 * i, 90 + i as u64))
+        .collect();
+    // one pre-generated batch stream, replayed identically on both sides
+    let mut rng = Rng::new(0x5EC7);
+    let stream: Vec<Vec<Vec<UpdateBatch>>> = graphs
+        .iter()
+        .map(|g| {
+            (0..rounds)
+                .map(|_| {
+                    (0..upd_per_round)
+                        .map(|_| {
+                            let mut b = UpdateBatch::default();
+                            for _ in 0..2 {
+                                b.add_edges.push((
+                                    rng.range(0, g.n_nets()) as u32,
+                                    rng.range(0, g.n_vertices()) as u32,
+                                ));
+                            }
+                            b
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    println!("=== service: sharded submit_async vs single-mutex baseline ===");
+    println!(
+        "sessions={n_sessions} rounds={rounds} updates/round={upd_per_round} (sim t=16, 1-thread pools)"
+    );
+
+    // ---- baseline: global mutex-guarded queue, per-session big lock ----
+    let base = baseline::MutexCoordinator::start(&graphs, &cfg, 2);
+    let t0 = Instant::now();
+    let mut lat = Vec::new();
+    let mut jobs = 0u64;
+    for r in 0..rounds {
+        let mut pending: Vec<(Instant, std::sync::mpsc::Receiver<bool>)> = Vec::new();
+        for sid in 0..n_sessions {
+            for batch in &stream[sid][r] {
+                let (dtx, drx) = std::sync::mpsc::channel();
+                pending.push((Instant::now(), drx));
+                base.submit(baseline::Req::Update { sid, batch: batch.clone(), done: dtx });
+            }
+        }
+        for sid in 0..n_sessions {
+            let (dtx, drx) = std::sync::mpsc::channel();
+            pending.push((Instant::now(), drx));
+            base.submit(baseline::Req::Execute { sid, rounds: 1, done: dtx });
+        }
+        for (at, drx) in pending {
+            assert!(drx.recv().unwrap(), "baseline job failed");
+            lat.push(at.elapsed().as_secs_f64());
+            jobs += 1;
+        }
+        for sid in 0..n_sessions {
+            assert!(!base.colors(sid).is_empty());
+        }
+    }
+    let base_stats = finish(lat, jobs, t0.elapsed().as_secs_f64());
+    base.shutdown();
+
+    // ---- sharded: lock-free admission, fused drains, epoch snapshots ----
+    let svc = Service::start_sharded(ServiceOpts {
+        shards: 2,
+        dispatchers: 2,
+        pool_threads: 1,
+        fuse_updates: 64,
+        artifacts: None,
+    });
+    let sids: Vec<_> = graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let (sid, init) = svc.open_session(&format!("fire{i}"), g, cfg.clone());
+            assert!(init.valid, "session {i} bring-up failed");
+            sid
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut lat = Vec::new();
+    let mut jobs = 0u64;
+    let mut fused_updates = 0u64;
+    for r in 0..rounds {
+        let mut pending: Vec<(Instant, JobHandle)> = Vec::new();
+        for (i, &sid) in sids.iter().enumerate() {
+            for batch in &stream[i][r] {
+                let at = Instant::now();
+                pending.push((
+                    at,
+                    svc.submit_async(Job {
+                        name: String::new(),
+                        input: JobInput::Update { session: sid, batch: Arc::new(batch.clone()) },
+                        cfg: cfg.clone(),
+                        engine: EngineSel::Native,
+                    }),
+                ));
+            }
+        }
+        for &sid in &sids {
+            let at = Instant::now();
+            let h = svc.execute("", sid, 1, ExecKernel::new(|_, _| Cost::new(1)));
+            pending.push((at, h));
+        }
+        for (at, h) in pending {
+            let o = h.wait();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+            if o.fused > 1 {
+                fused_updates += 1;
+            }
+            lat.push(at.elapsed().as_secs_f64());
+            jobs += 1;
+        }
+        for &sid in &sids {
+            assert!(!svc.session_colors(sid).expect("session open").is_empty());
+        }
+    }
+    let sh_stats = finish(lat, jobs, t0.elapsed().as_secs_f64());
+    let qs = svc.queue_stats();
+    let m = svc.metrics();
+    println!(
+        "sharded internals: fused_members={fused_updates} queue(pushed={} popped={} stolen={}) wait_p99={:.3}ms",
+        qs.pushed,
+        qs.popped,
+        qs.stolen,
+        m.queue_wait_quantile(0.99) * 1e3
+    );
+    svc.shutdown();
+
+    let ratio = sh_stats.jps() / base_stats.jps().max(1e-12);
+    println!(
+        "{:>8} {:>6} | {:>9} {:>9} | {:>9} {:>9} | {:>7}",
+        "mode", "jobs", "secs", "jobs/s", "p50_ms", "p99_ms", "speedup"
+    );
+    println!(
+        "{:>8} {:>6} | {:>9.4} {:>9.1} | {:>9.3} {:>9.3} | {:>7}",
+        "mutex",
+        base_stats.jobs,
+        base_stats.secs,
+        base_stats.jps(),
+        base_stats.p50 * 1e3,
+        base_stats.p99 * 1e3,
+        ""
+    );
+    println!(
+        "{:>8} {:>6} | {:>9.4} {:>9.1} | {:>9.3} {:>9.3} | {:>6.1}x",
+        "sharded",
+        sh_stats.jobs,
+        sh_stats.secs,
+        sh_stats.jps(),
+        sh_stats.p50 * 1e3,
+        sh_stats.p99 * 1e3,
+        ratio
+    );
+
+    let csv = vec![
+        format!(
+            "mutex,1,2,{n_sessions},{},{:.6},{:.2},{:.4},{:.4},",
+            base_stats.jobs,
+            base_stats.secs,
+            base_stats.jps(),
+            base_stats.p50 * 1e3,
+            base_stats.p99 * 1e3
+        ),
+        format!(
+            "sharded,2,2,{n_sessions},{},{:.6},{:.2},{:.4},{:.4},{ratio:.3}",
+            sh_stats.jobs,
+            sh_stats.secs,
+            sh_stats.jps(),
+            sh_stats.p50 * 1e3,
+            sh_stats.p99 * 1e3
+        ),
+    ];
+    common::write_csv(
+        "service.csv",
+        "mode,shards,dispatchers,sessions,jobs,secs,jobs_per_sec,p50_ms,p99_ms,speedup_vs_mutex",
+        &csv,
+    );
+
+    // acceptance: fused, snapshot-backed admission must beat the
+    // single-mutex design by 4x on the mixed firehose, with tail
+    // latency in the same neighbourhood (floor guards sub-ms jitter)
+    assert!(
+        ratio >= 4.0,
+        "sharded submit_async only {ratio:.2}x over the single-mutex baseline"
+    );
+    assert!(
+        sh_stats.p99 <= (base_stats.p99 * 1.5).max(0.05),
+        "sharded p99 {:.3}ms vs baseline {:.3}ms — tail latency unbounded",
+        sh_stats.p99 * 1e3,
+        base_stats.p99 * 1e3
+    );
+    println!("ok");
+}

@@ -49,7 +49,7 @@ fn main() {
 
     let mut failed = 0;
     for rx in rxs {
-        let o = rx.recv().expect("worker alive");
+        let o = rx.wait();
         println!(
             "  {:<24} engine={:<6} colors={:>6} iters={:>2} secs={:>8.4} valid={}{}",
             o.name,

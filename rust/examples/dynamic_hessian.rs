@@ -100,8 +100,7 @@ fn main() {
                 cfg: cfg.clone(),
                 engine: EngineSel::Auto,
             })
-            .recv()
-            .expect("worker alive");
+            .wait();
         assert!(o.valid, "iter {it}: {:?}", o.error);
         assert_eq!(o.problem, Some(Problem::D2gc));
         let b = o.batch.expect("update outcomes carry batch stats");

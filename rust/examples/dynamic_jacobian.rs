@@ -97,8 +97,7 @@ fn main() {
                 cfg: cfg.clone(),
                 engine: EngineSel::Auto,
             })
-            .recv()
-            .expect("worker alive");
+            .wait();
         assert!(o.valid, "iter {it}: {:?}", o.error);
         let b = o.batch.expect("update outcomes carry batch stats");
 

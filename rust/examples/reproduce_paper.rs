@@ -113,7 +113,7 @@ fn main() {
         }));
     }
     for rx in rxs {
-        let o = rx.recv().unwrap();
+        let o = rx.wait();
         println!(
             "  {:<16} engine={:<6} colors={:>6} valid={}",
             o.name, o.engine, o.n_colors, o.valid

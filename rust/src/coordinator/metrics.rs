@@ -1,8 +1,78 @@
-//! Service metrics: lock-free counters recorded per completed job.
+//! Service metrics: lock-free counters recorded per completed job,
+//! plus log-bucketed latency histograms (queue wait / service time)
+//! feeding the p50/p99 figures the `serve --pool` summary prints.
 
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::time::Duration;
 
 use crate::coloring::Problem;
+
+/// Number of log-2 microsecond buckets (bucket `b` holds durations in
+/// `[2^b, 2^(b+1))` µs — 64 buckets cover anything a u64 can express).
+const BUCKETS: usize = 64;
+
+/// A lock-free log-2 latency histogram over microseconds. Observation
+/// is two relaxed atomic adds; quantiles are bucket upper bounds (a
+/// ≤2× overestimate by construction — fine for p50/p99 trend lines and
+/// regression gates, which compare like against like).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        // bucket = floor(log2(us)), with 0µs landing in bucket 0
+        let b = 63 - us.max(1).leading_zeros() as usize;
+        self.counts[b].fetch_add(1, AOrd::Relaxed);
+        self.sum_us.fetch_add(us, AOrd::Relaxed);
+        self.n.fetch_add(1, AOrd::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(AOrd::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(AOrd::Relaxed) as f64 * 1e-6 / n as f64
+    }
+
+    /// The `q`-quantile (0 < q <= 1) in seconds: walk the buckets to
+    /// the one holding the ceil(q·n)-th observation and report its
+    /// upper bound. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c.load(AOrd::Relaxed);
+            if seen >= target {
+                return (1u128 << (b + 1)) as f64 * 1e-6;
+            }
+        }
+        (1u128 << BUCKETS) as f64 * 1e-6
+    }
+}
 
 /// Aggregated job counters.
 #[derive(Debug, Default)]
@@ -23,6 +93,11 @@ pub struct Metrics {
     executes: AtomicU64,
     /// Kernel invocations across all execute jobs.
     exec_items: AtomicU64,
+    /// Admission → dispatcher pickup, per job.
+    queue_wait: Histogram,
+    /// Pickup → outcome, per job (members of a fused group share the
+    /// group's service time — that IS their latency).
+    service_time: Histogram,
 }
 
 impl Metrics {
@@ -41,7 +116,13 @@ impl Metrics {
                 Some(Problem::D2gc) => self.updates_d2gc.fetch_add(1, AOrd::Relaxed),
                 _ => self.updates_bgpc.fetch_add(1, AOrd::Relaxed),
             };
-            self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
+            // A fused group shares one BatchStats: counting it per
+            // member would multiply the repair's work by the group
+            // size. The drain charges the group once via
+            // add_recolored; lone batches (fused <= 1) count here.
+            if o.fused <= 1 {
+                self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
+            }
         }
         if let Some(e) = &o.exec {
             self.executes.fetch_add(1, AOrd::Relaxed);
@@ -49,6 +130,20 @@ impl Metrics {
         }
         self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
         self.total_us.fetch_add((o.seconds * 1e6) as u64, AOrd::Relaxed);
+    }
+
+    /// Observe one job's queue wait (admission → pickup) and service
+    /// time (pickup → outcome). Called by dispatchers for every job,
+    /// including failures — tail latency includes the unlucky.
+    pub fn observe_job(&self, wait: Duration, service: Duration) {
+        self.queue_wait.observe(wait);
+        self.service_time.observe(service);
+    }
+
+    /// Charge a fused group's recolored-vertices total once (see
+    /// [`Metrics::record`] for why members must not each add it).
+    pub fn add_recolored(&self, n: u64) {
+        self.recolored.fetch_add(n, AOrd::Relaxed);
     }
 
     pub fn jobs_done(&self) -> u64 {
@@ -78,7 +173,8 @@ impl Metrics {
         self.updates_d2gc.load(AOrd::Relaxed)
     }
 
-    /// Vertices recolored across all update batches.
+    /// Vertices recolored across all update batches (fused groups
+    /// counted once).
     pub fn recolored(&self) -> u64 {
         self.recolored.load(AOrd::Relaxed)
     }
@@ -97,10 +193,30 @@ impl Metrics {
         self.total_us.load(AOrd::Relaxed) as f64 * 1e-6
     }
 
+    /// The queue-wait histogram (admission → dispatcher pickup).
+    pub fn queue_wait(&self) -> &Histogram {
+        &self.queue_wait
+    }
+
+    /// The service-time histogram (pickup → outcome).
+    pub fn service_time(&self) -> &Histogram {
+        &self.service_time
+    }
+
+    /// Queue-wait `q`-quantile in seconds (0.0 when no jobs ran).
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        self.queue_wait.quantile(q)
+    }
+
+    /// Service-time `q`-quantile in seconds (0.0 when no jobs ran).
+    pub fn service_time_quantile(&self, q: f64) -> f64 {
+        self.service_time.quantile(q)
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3}",
+            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3} wait_p50={:.3}ms wait_p99={:.3}ms service_p50={:.3}ms service_p99={:.3}ms",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
@@ -110,7 +226,11 @@ impl Metrics {
             self.recolored(),
             self.executes(),
             self.exec_items(),
-            self.total_seconds()
+            self.total_seconds(),
+            self.queue_wait_quantile(0.50) * 1e3,
+            self.queue_wait_quantile(0.99) * 1e3,
+            self.service_time_quantile(0.50) * 1e3,
+            self.service_time_quantile(0.99) * 1e3,
         )
     }
 }
@@ -133,6 +253,8 @@ mod tests {
             error: None,
             batch: None,
             exec: None,
+            fused: 0,
+            epoch: None,
         };
         let bad = crate::coordinator::JobOutcome { valid: false, engine: "pjrt", ..ok.clone() };
         m.record(&ok);
@@ -159,6 +281,8 @@ mod tests {
             error: None,
             batch: Some(stats),
             exec: None,
+            fused: 1,
+            epoch: Some(1),
         };
         let upd2 = crate::coordinator::JobOutcome {
             problem: Some(Problem::D2gc),
@@ -173,6 +297,33 @@ mod tests {
         assert_eq!(m.recolored(), 21);
         assert!(m.summary().contains("updates=3"));
         assert!(m.summary().contains("d2gc=1"));
+    }
+
+    #[test]
+    fn fused_group_members_share_one_recolored_charge() {
+        let m = Metrics::default();
+        let stats = crate::dynamic::BatchStats { recolored: 9, ..Default::default() };
+        let member = crate::coordinator::JobOutcome {
+            name: "f".into(),
+            engine: "native",
+            problem: Some(Problem::Bgpc),
+            n_colors: 5,
+            iterations: 1,
+            seconds: 0.01,
+            valid: true,
+            error: None,
+            batch: Some(stats),
+            exec: None,
+            fused: 3,
+            epoch: Some(3),
+        };
+        // the drain records each member, then charges the group once
+        m.record(&member);
+        m.record(&member);
+        m.record(&member);
+        m.add_recolored(9);
+        assert_eq!(m.updates(), 3, "each member still counts as an applied batch");
+        assert_eq!(m.recolored(), 9, "the shared repair is charged exactly once");
     }
 
     #[test]
@@ -199,6 +350,8 @@ mod tests {
                 sched_dirty_colors: 0,
                 sched_rebuilt: false,
             }),
+            fused: 0,
+            epoch: Some(0),
         };
         m.record(&ex);
         m.record(&ex);
@@ -206,5 +359,34 @@ mod tests {
         assert_eq!(m.exec_items(), 240);
         assert_eq!(m.updates(), 0);
         assert!(m.summary().contains("executes=2"));
+    }
+
+    #[test]
+    fn histogram_quantiles_walk_log_buckets() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.99), 0.0, "empty histogram reports 0");
+        // 99 fast observations (~100µs) and one slow outlier (~50ms)
+        for _ in 0..99 {
+            h.observe(Duration::from_micros(100));
+        }
+        h.observe(Duration::from_millis(50));
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p100 = h.quantile(1.0);
+        // 100µs lands in [64µs,128µs): upper bound 128µs
+        assert!((p50 - 128e-6).abs() < 1e-9, "p50={p50}");
+        assert!((p99 - 128e-6).abs() < 1e-9, "p99 is still a fast bucket");
+        // 50ms lands in [32.768ms,65.536ms): upper bound 65.536ms
+        assert!((p100 - 65.536e-3).abs() < 1e-9, "max={p100}");
+        assert!(h.mean_secs() > 100e-6 && h.mean_secs() < 1e-3);
+        // latency histograms feed the summary line
+        let m = Metrics::default();
+        m.observe_job(Duration::from_micros(10), Duration::from_micros(300));
+        assert!(m.summary().contains("wait_p50="));
+        assert!(m.queue_wait_quantile(0.5) > 0.0);
+        assert!(m.service_time_quantile(0.5) > 0.0);
+        assert_eq!(m.queue_wait().count(), 1);
+        assert_eq!(m.service_time().count(), 1);
     }
 }

@@ -1,78 +1,67 @@
-//! Coloring job coordinator — the L3 service layer.
+//! Coloring job coordinator — the L3 service layer, sharded and async.
 //!
-//! A [`Service`] owns a set of native *dispatchers*, one shared
-//! region-execution [`WorkerPool`] (DESIGN.md §10), and (optionally)
-//! one PJRT worker that holds the compiled net-step artifacts. Clients
-//! [`Service::submit`] jobs (a graph + a [`crate::coloring::Config`] +
-//! an engine selector); the router dispatches each job to the right
-//! queue and the caller gets a receiver for the outcome. Dispatchers
-//! never execute parallel regions themselves: every threads-mode job
-//! and session runs its regions on the single persistent pool (size
-//! via [`Service::start_with`]). Sessions own private scratch banks
-//! and interleave on the team region-by-region; full-recolor jobs
-//! share the one pool-resident bank and therefore serialize with each
-//! other for their whole run (the team is one machine-wide resource
-//! either way — concurrency buys overlap of between-region
-//! bookkeeping, not extra parallelism). Engine panics come back as
-//! failed [`JobOutcome`]s instead of poisoning a worker thread, and a
-//! panic mid-update closes and unregisters the session so torn state
-//! is never served. [`Service::pool_stats`]
-//! exposes the substrate's region-dispatch and worker-utilization
-//! counters. The PJRT executable is compiled once and reused across
-//! jobs (one executable per bucket, per DESIGN.md §3); Python is never
-//! involved.
+//! A [`Service`] owns a finely-sharded MPMC admission queue
+//! ([`crate::par::ShardedQueue`]), a set of native *dispatchers* that
+//! pop it (stealing from sibling shards when their home shard is dry),
+//! a [`crate::par::PoolSet`] of region-execution [`WorkerPool`] teams
+//! (one per shard, DESIGN.md §10/§12), and (optionally) one PJRT worker
+//! holding the compiled net-step artifacts. Clients
+//! [`Service::submit_async`] jobs and get a [`JobHandle`] back
+//! immediately — `wait` blocks for the [`JobOutcome`], `try_poll` never
+//! blocks. Admission takes no service-wide lock and no lock is ever
+//! held while a dispatcher waits for work (the queue parks on its own
+//! tick condvar, not on a shard mutex around a channel).
 //!
-//! **Dynamic sessions** (the [`crate::dynamic`] subsystem, DESIGN.md
-//! §8–§9): sessions are *problem-tagged* — [`Service::open_session`]
-//! opens a BGPC session over a [`Bipartite`],
-//! [`Service::open_session_d2gc`] a D2GC session over a square
-//! symmetric [`Csr`] — and the service keeps the
-//! [`crate::dynamic::DynamicSession`] alive internally. Clients then
-//! stream [`JobInput::Update`] jobs carrying
-//! [`crate::dynamic::UpdateBatch`] edits; the update path is shared,
-//! and the service routes each batch to the repair path of the
-//! session's problem (reported back in [`JobOutcome::problem`] and
-//! counted per-problem by [`Metrics`]). Updates always run on the
-//! native pool, are applied strictly in submit order per session (a
-//! seq/condvar handshake — concurrent workers may *pick up* batches out
-//! of order but never apply them out of order), and each outcome
-//! carries the per-batch [`crate::dynamic::BatchStats`] in
-//! [`JobOutcome::batch`].
+//! **Sessions and epochs** (DESIGN.md §12): each open dynamic session
+//! is pinned to a shard (`id % shards`) and runs its repairs on that
+//! shard's pool. Updates are *admitted* to a per-session pending queue
+//! (seq assigned under the pending lock, so seq order == queue order)
+//! and *applied* by whichever dispatcher drains the session — the drain
+//! holds the session state lock, pulls up to `fuse_updates` contiguous
+//! batches, and applies them as ONE fused
+//! [`crate::dynamic::DynamicSession::apply_many`] group: one overlay
+//! edit pass per batch, then a single compact + repair + verify for the
+//! whole group. Every committed group publishes a fresh immutable
+//! [`Snapshot`] — `{epoch, Arc<colors>}` — *before* completing its
+//! handles, so [`Service::session_colors`] and [`JobInput::Execute`]
+//! runs read the last committed epoch without touching the session
+//! state lock: reads and executes proceed while a repair is in flight
+//! (they may lag it by exactly one epoch, never observe a torn one).
 //!
-//! **Colored execution** (the [`crate::exec`] subsystem, DESIGN.md
-//! §11): [`JobInput::Execute`] runs a client [`ExecKernel`] over an
-//! open session's *current* coloring, color set by color set on the
-//! shared pool. The service caches one [`crate::exec::ColorSchedule`]
-//! per session and refreshes it incrementally before each run — after
-//! an update batch, only the colors the repair dirtied are rebuilt
-//! (repair → rebuild dirty frontiers → re-run), and the per-run
-//! [`JobOutcome::exec`] stats report both the execution profile
-//! (max-color-set busy units, utilization) and what the refresh moved.
-//! Execute jobs always run native; they observe the committed coloring
-//! at lock time and serialize with the session's updates on the
-//! session lock.
+//! **Colored execution** (DESIGN.md §11): [`JobInput::Execute`] runs a
+//! client [`ExecKernel`] over the session's snapshot coloring on the
+//! session's shard pool. The per-session [`EpochSchedule`] caches the
+//! [`crate::exec::ColorSchedule`] keyed by epoch — same epoch: no
+//! refresh at all; new epoch: only the colors the repair dirtied are
+//! rebuilt. Engine and kernel panics surface as failed outcomes; a
+//! panic mid-repair closes and unregisters the session (torn state is
+//! never served), a kernel panic leaves the session and its shard
+//! healthy. [`Metrics`] additionally histograms per-job queue-wait and
+//! service time (p50/p99 via [`Metrics::queue_wait_quantile`] /
+//! [`Metrics::service_time_quantile`]).
 
 pub mod metrics;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::coloring::{color_bgpc_on, color_d2gc_on, Config, Problem};
 use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
-use crate::exec::{ColorSchedule, Executor, RefreshStats};
+use crate::exec::{EpochSchedule, Executor};
 use crate::graph::{Bipartite, Csr};
 use crate::par::pool::panic_message;
-use crate::par::{Cost, PoolStats, WorkerPool};
+use crate::par::{Cost, PoolSet, PoolStats, QueueStats, ShardedQueue, WorkerPool};
 use crate::runtime::{NetStepOffload, Runtime};
 
 pub use metrics::Metrics;
 
-/// Default size of the shared region-execution [`WorkerPool`] (see
-/// [`Service::start_with`] to pick another).
+/// Default per-shard size of the region-execution [`WorkerPool`]s (see
+/// [`ServiceOpts::pool_threads`] to pick another).
 pub const DEFAULT_POOL_THREADS: usize = 4;
 
 /// Identifier of an open dynamic session (see [`Service::open_session`]
@@ -82,7 +71,7 @@ pub type SessionId = u64;
 /// A problem-tagged dynamic session as the service stores it. The two
 /// instantiations of [`crate::dynamic::DynamicSession`] share one
 /// update path; this enum is the runtime dispatch point that routes a
-/// batch to the right repair engine.
+/// fused batch group to the right repair engine.
 enum AnySession {
     Bgpc(BgpcSession),
     D2gc(D2gcSession),
@@ -96,10 +85,13 @@ impl AnySession {
         }
     }
 
-    fn apply(&mut self, batch: &UpdateBatch) -> BatchStats {
+    /// Apply a contiguous group of batches as one fused repair (one
+    /// compact + repair + verify for the whole group; per-batch edit
+    /// order is preserved — see `DynamicSession::apply_many`).
+    fn apply_many(&mut self, batches: &[&UpdateBatch]) -> BatchStats {
         match self {
-            AnySession::Bgpc(s) => s.apply(batch),
-            AnySession::D2gc(s) => s.apply(batch),
+            AnySession::Bgpc(s) => s.apply_many(batches),
+            AnySession::D2gc(s) => s.apply_many(batches),
         }
     }
 
@@ -110,36 +102,72 @@ impl AnySession {
         }
     }
 
-    fn colors(&self) -> &[i32] {
+    /// The committed coloring as a shared immutable snapshot (repairs
+    /// install a fresh `Arc`, they never mutate a published one).
+    fn colors_arc(&self) -> Arc<Vec<i32>> {
         match self {
-            AnySession::Bgpc(s) => s.colors(),
-            AnySession::D2gc(s) => s.colors(),
+            AnySession::Bgpc(s) => s.colors_arc(),
+            AnySession::D2gc(s) => s.colors_arc(),
         }
     }
 }
 
-/// A session as the service holds it: the mutable state under a lock,
-/// an admission counter assigning each update its sequence number at
-/// submit time, and a condvar that parks workers holding a batch whose
-/// predecessors are still being applied.
+/// An immutable committed-coloring snapshot, double-buffered behind the
+/// session's `snap` slot: epoch `k` means "after the `k`-th committed
+/// update batch" (0 = the bring-up coloring). Readers and executes
+/// clone the `Arc` and drop the lock — a repair in flight never blocks
+/// them and never tears what they see.
+struct Snapshot {
+    epoch: u64,
+    colors: Arc<Vec<i32>>,
+}
+
+/// One update admitted to a session's pending queue but not yet
+/// applied.
+struct PendingUpdate {
+    seq: u64,
+    batch: Arc<UpdateBatch>,
+    name: String,
+    handle: JobHandle,
+    submitted: Instant,
+}
+
+/// Per-session admission queue: seq assignment and FIFO order live
+/// under one small lock, taken only for queue surgery — never while a
+/// repair runs or a dispatcher waits.
+#[derive(Default)]
+struct PendingQueue {
+    next_seq: u64,
+    items: VecDeque<PendingUpdate>,
+    closed: bool,
+}
+
+/// A session as the service holds it. Lock order (when holding more
+/// than one): `state` → `pending`; `snap` and `sched` are leaf locks.
+/// The submit path takes map → `pending` only; the read/execute paths
+/// take `snap` (+ `sched`) only — neither ever touches `state`, which
+/// is exactly what lets them proceed while a drain holds it.
 struct SessionSlot {
-    submitted: AtomicU64,
+    /// The shard (pool + queue lane) this session is pinned to.
+    shard: usize,
+    /// The session's problem, readable without any lock.
+    problem: Problem,
+    pending: Mutex<PendingQueue>,
     state: Mutex<SessionInner>,
-    cv: Condvar,
+    /// Last committed epoch snapshot (published before handles
+    /// complete; swapped, never mutated).
+    snap: Mutex<Arc<Snapshot>>,
+    /// Epoch-keyed cached execution frontiers ([`crate::exec`]).
+    sched: Mutex<EpochSchedule>,
 }
 
 struct SessionInner {
     session: AnySession,
-    /// Batches applied so far == the next admissible seq.
+    /// Batches committed so far == the current epoch == the next
+    /// admissible seq.
     applied: u64,
-    /// Set by [`Service::close_session`]; wakes and fails parked workers
-    /// whose predecessor batches can no longer arrive.
+    /// Set by close or a mid-repair panic; pending items fail cleanly.
     closed: bool,
-    /// Cached per-color execution frontiers ([`crate::exec`]), built on
-    /// the first [`JobInput::Execute`] and diff-refreshed afterwards —
-    /// an update batch dirties only the colors its repair touched, and
-    /// only those buckets are rebuilt before the next run.
-    sched: Option<ColorSchedule>,
 }
 
 type SessionMap = Mutex<HashMap<SessionId, Arc<SessionSlot>>>;
@@ -190,15 +218,16 @@ pub enum JobInput {
     Bgpc(Arc<Bipartite>),
     D2gc(Arc<Csr>),
     /// Incremental update batch against an open dynamic session. Always
-    /// runs on the native pool (the job's `cfg`/`engine` are ignored —
-    /// the session carries its own [`Config`]); applied strictly in
-    /// submit order per session.
+    /// runs on the session's shard pool (the job's `cfg`/`engine` are
+    /// ignored — the session carries its own [`Config`]); applied
+    /// strictly in submit order per session, possibly fused with
+    /// adjacent tiny batches into one repair.
     Update { session: SessionId, batch: Arc<UpdateBatch> },
-    /// Colored execution of `kernel` over an open session's current
-    /// coloring, `rounds` full sweeps (see [`crate::exec`]). Always
-    /// runs on the native pool with its full team (the job's `cfg` is
-    /// ignored); the session's cached schedule is refreshed — dirty
-    /// colors only — before the run.
+    /// Colored execution of `kernel` over an open session's last
+    /// committed epoch snapshot, `rounds` full sweeps (see
+    /// [`crate::exec`]). Always runs native on the session's shard pool
+    /// (the job's `cfg` is ignored); the session's epoch-keyed schedule
+    /// is refreshed — dirty colors only — before the run.
     Execute { session: SessionId, kernel: ExecKernel, rounds: usize },
 }
 
@@ -217,7 +246,7 @@ impl JobInput {
     }
 }
 
-/// Outcome delivered to the submitter.
+/// Outcome delivered through the [`JobHandle`].
 #[derive(Clone, Debug)]
 pub struct JobOutcome {
     pub name: String,
@@ -231,10 +260,21 @@ pub struct JobOutcome {
     pub seconds: f64,
     pub valid: bool,
     pub error: Option<String>,
-    /// Per-batch repair metrics (update jobs only).
+    /// Per-group repair metrics (update jobs only; shared by every
+    /// member of a fused group).
     pub batch: Option<BatchStats>,
     /// Colored-execution metrics (execute jobs only).
     pub exec: Option<ExecStats>,
+    /// Size of the fused drain group this update committed with: 0 for
+    /// non-update jobs, 1 when the batch was applied alone, N when N
+    /// contiguous batches shared one compact + repair + verify.
+    pub fused: usize,
+    /// The session epoch this outcome observed or committed: update
+    /// jobs report the epoch their group committed (== batches applied
+    /// so far), execute jobs the snapshot epoch the run was scheduled
+    /// against, session bring-up `Some(0)`. `None` for stateless jobs
+    /// and routing errors.
+    pub epoch: Option<u64>,
 }
 
 /// Per-run colored-execution metrics (execute jobs, see
@@ -257,31 +297,122 @@ pub struct ExecStats {
     pub utilization: f64,
     /// Items the pre-run schedule refresh moved between buckets.
     pub sched_moved: usize,
-    /// Colors the refresh dirtied (0 when the coloring was unchanged).
+    /// Colors the refresh dirtied (0 when the epoch was unchanged).
     pub sched_dirty_colors: usize,
     /// True when the schedule was (re)built from scratch (first execute
     /// on a session) rather than diff-refreshed.
     pub sched_rebuilt: bool,
 }
 
+/// Async outcome slot: `submit_async` returns one immediately; the
+/// dispatcher that finishes the job completes it. Clone freely —
+/// every clone observes the same slot. Completion is idempotent
+/// (first writer wins), so racing failure paths are harmless.
+#[derive(Clone)]
+pub struct JobHandle(Arc<HandleInner>);
+
+struct HandleInner {
+    slot: Mutex<Option<JobOutcome>>,
+    cv: Condvar,
+}
+
+impl JobHandle {
+    fn new() -> JobHandle {
+        JobHandle(Arc::new(HandleInner { slot: Mutex::new(None), cv: Condvar::new() }))
+    }
+
+    /// Block until the outcome arrives, then clone it out. The outcome
+    /// stays readable — `wait`/`try_poll` can be called repeatedly.
+    pub fn wait(&self) -> JobOutcome {
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            if let Some(o) = slot.as_ref() {
+                return o.clone();
+            }
+            slot = self.0.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking peek: `None` while the job is still in flight.
+    pub fn try_poll(&self) -> Option<JobOutcome> {
+        self.0.slot.lock().unwrap().clone()
+    }
+
+    /// Whether the outcome has been delivered.
+    pub fn is_done(&self) -> bool {
+        self.0.slot.lock().unwrap().is_some()
+    }
+
+    fn complete(&self, o: JobOutcome) {
+        let mut slot = self.0.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(o);
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+/// What flows through the sharded admission queue.
+enum Task {
+    /// A stateless or execute job, pinned to `shard`'s pool (a stealing
+    /// dispatcher still runs it on the task's shard, not its own).
+    Run { job: Job, handle: JobHandle, submitted: Instant, shard: usize },
+    /// "Session `id` has pending updates" — the drain pulls and fuses
+    /// whatever is queued. One Drain is pushed per admitted update; a
+    /// drain that finds the queue empty (a sibling fused its work) is
+    /// a no-op.
+    Drain(SessionId),
+}
+
+/// PJRT worker mailbox (the runtime is not Send; it lives on one
+/// thread).
 enum Message {
-    /// A job plus its session seq (0 and unused for non-update jobs).
-    Run(Job, u64, Sender<JobOutcome>),
+    Run(Job, JobHandle, Instant),
     Stop,
+}
+
+/// Knobs for [`Service::start_sharded`].
+#[derive(Clone, Debug)]
+pub struct ServiceOpts {
+    /// Queue lanes / pool teams / session homes. Sessions pin to
+    /// `id % shards`; stateless jobs round-robin.
+    pub shards: usize,
+    /// Dispatcher threads popping the queue (home lane `i % shards`,
+    /// stealing from the others when home is dry).
+    pub dispatchers: usize,
+    /// Worker threads per shard pool.
+    pub pool_threads: usize,
+    /// Max contiguous update batches fused into one repair per drain.
+    pub fuse_updates: usize,
+    /// PJRT artifact directory (None: native only).
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for ServiceOpts {
+    fn default() -> ServiceOpts {
+        ServiceOpts {
+            shards: 1,
+            dispatchers: 2,
+            pool_threads: DEFAULT_POOL_THREADS,
+            fuse_updates: 16,
+            artifacts: None,
+        }
+    }
 }
 
 /// The coordinator service.
 pub struct Service {
-    native_tx: Sender<Message>,
+    queue: Arc<ShardedQueue<Task>>,
     pjrt_tx: Option<Sender<Message>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     seq: AtomicU64,
     sessions: Arc<SessionMap>,
     session_seq: AtomicU64,
-    /// The shared region-execution team every native job and session
-    /// multiplexes onto (DESIGN.md §10).
-    pool: Arc<WorkerPool>,
+    /// The sharded region-execution teams (DESIGN.md §10/§12).
+    pools: Arc<PoolSet>,
+    /// Round-robin cursor for stateless-job shard assignment.
+    rr: AtomicU64,
 }
 
 /// A zeroed failure [`JobOutcome`] — the shape every coordinator error
@@ -303,13 +434,22 @@ fn fail_outcome(
         error: Some(error),
         batch: None,
         exec: None,
+        fused: 0,
+        epoch: None,
     }
 }
 
-fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>) -> JobOutcome {
+/// Run a non-update job on `shard`'s pool. Update jobs never reach
+/// here — they drain through the session's pending queue.
+fn run_stateless(
+    job: &Job,
+    sessions: &SessionMap,
+    pools: &Arc<PoolSet>,
+    shard: usize,
+) -> JobOutcome {
     match &job.input {
         JobInput::Bgpc(g) => {
-            let r = color_bgpc_on(g, &job.cfg, pool);
+            let r = color_bgpc_on(g, &job.cfg, pools.shard(shard));
             let valid = crate::coloring::verify::bgpc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -322,10 +462,12 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>
                 error: None,
                 batch: None,
                 exec: None,
+                fused: 0,
+                epoch: None,
             }
         }
         JobInput::D2gc(g) => {
-            let r = color_d2gc_on(g, &job.cfg, pool);
+            let r = color_d2gc_on(g, &job.cfg, pools.shard(shard));
             let valid = crate::coloring::verify::d2gc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -338,150 +480,174 @@ fn run_native(job: &Job, sessions: &SessionMap, seq: u64, pool: &Arc<WorkerPool>
                 error: None,
                 batch: None,
                 exec: None,
+                fused: 0,
+                epoch: None,
             }
         }
-        JobInput::Update { session, batch } => run_update(sessions, *session, seq, batch, &job.name),
         JobInput::Execute { session, kernel, rounds } => {
-            run_execute(sessions, *session, kernel, *rounds, &job.name, pool)
+            run_execute(sessions, pools, *session, kernel, *rounds, &job.name)
         }
+        JobInput::Update { .. } => fail_outcome(
+            &job.name,
+            "native",
+            None,
+            "update jobs drain via the session queue".into(),
+        ),
     }
 }
 
-/// Apply one update batch in session order: wait (on the slot's condvar)
-/// until every earlier-seq batch has been applied, then repair.
-fn run_update(
-    sessions: &SessionMap,
-    id: SessionId,
-    seq: u64,
-    batch: &UpdateBatch,
-    name: &str,
-) -> JobOutcome {
+/// Drain a session's pending queue: pull up to `fuse` contiguous
+/// batches, apply them as one fused repair, publish the new epoch
+/// snapshot, then complete every member handle. Holds the session
+/// state lock across the loop — a concurrent `close_session` blocks
+/// until the in-flight group commits, and a sibling Drain for the same
+/// session parks on `state` and finds the queue empty afterwards.
+fn drain_session(sessions: &SessionMap, metrics: &Metrics, id: SessionId, fuse: usize) {
     let slot = sessions.lock().unwrap().get(&id).cloned();
     let Some(slot) = slot else {
-        return fail_outcome(name, "native", None, format!("unknown session {id}"));
+        return; // closed between admission and drain; close failed the items
     };
+    let problem = slot.problem;
     let mut inner = slot.state.lock().unwrap();
-    let problem = inner.session.problem();
-    while inner.applied != seq {
+    loop {
+        let group: Vec<PendingUpdate> = {
+            let mut pq = slot.pending.lock().unwrap();
+            let take = fuse.max(1).min(pq.items.len());
+            pq.items.drain(..take).collect()
+        };
+        if group.is_empty() {
+            return;
+        }
         if inner.closed {
-            // a predecessor batch was dropped by close_session: fail
-            // cleanly instead of parking forever
-            return fail_outcome(
-                name,
-                "native",
-                Some(problem),
-                format!("session {id} closed before batch applied"),
-            );
+            for p in &group {
+                let o = fail_outcome(
+                    &p.name,
+                    "native",
+                    Some(problem),
+                    format!("session {id} closed before batch applied"),
+                );
+                metrics.record(&o);
+                p.handle.complete(o);
+            }
+            continue;
         }
-        inner = slot.cv.wait(inner).unwrap();
-    }
-    if inner.closed {
-        // in-order but the session was closed while this batch was
-        // queued: refuse to mutate state the client can no longer see
-        return fail_outcome(
-            name,
-            "native",
-            Some(problem),
-            format!("session {id} closed before batch applied"),
-        );
-    }
-    // Apply + verify under catch_unwind: a panic here would otherwise
-    // unwind while holding the slot mutex, poisoning it for every later
-    // client call and hanging successors parked on `applied` — instead
-    // the session is marked closed (its state may be torn mid-apply),
-    // parked successors wake and fail cleanly, and the panic surfaces
-    // as this job's error. The verify pass is the service contract:
-    // every outcome the coordinator hands back is checked with the
-    // session's own problem checker (bgpc_valid / d2gc_valid), O(|E|)
-    // under the session lock; latency-sensitive clients that trust the
-    // repair invariants can use DynamicSession directly.
-    let applied = catch_unwind(AssertUnwindSafe(|| {
-        let stats = inner.session.apply(batch);
-        let valid = inner.session.verify_ok();
-        (stats, valid)
-    }));
-    let (stats, valid) = match applied {
-        Ok(x) => x,
-        Err(p) => {
-            // The session state may be torn mid-apply: close it AND
-            // drop it from the map (exactly like close_session), so
-            // clients get `None` from session_colors/session_problem
-            // instead of a possibly-invalid coloring, and the dead
-            // slot does not leak.
-            inner.closed = true;
-            slot.cv.notify_all();
-            drop(inner);
-            sessions.lock().unwrap().remove(&id);
-            return fail_outcome(
-                name,
-                "native",
-                Some(problem),
-                format!("engine panicked: {}; session {id} closed", panic_message(p.as_ref())),
-            );
+        debug_assert_eq!(group[0].seq, inner.applied, "pending queue is FIFO in seq order");
+        let picked = Instant::now();
+        let batches: Vec<&UpdateBatch> = group.iter().map(|p| p.batch.as_ref()).collect();
+        // Apply + verify under catch_unwind: a panic mid-repair leaves
+        // torn session state, so the session is closed and removed
+        // (clients get None / "unknown session"), every queued handle
+        // fails cleanly, and the dispatcher survives. The verify pass
+        // is the service contract: every outcome handed back is checked
+        // with the session's own problem checker.
+        let applied = catch_unwind(AssertUnwindSafe(|| {
+            let stats = inner.session.apply_many(&batches);
+            let valid = inner.session.verify_ok();
+            (stats, valid)
+        }));
+        match applied {
+            Ok((stats, valid)) => {
+                inner.applied += group.len() as u64;
+                let epoch = inner.applied;
+                // Publish the snapshot BEFORE completing handles: a
+                // client that sees its outcome and immediately reads
+                // session_colors observes at least this epoch.
+                *slot.snap.lock().unwrap() =
+                    Arc::new(Snapshot { epoch, colors: inner.session.colors_arc() });
+                let fused = group.len();
+                if fused > 1 {
+                    // record() skips per-outcome recolored counts for
+                    // fused groups; charge the group's repair once.
+                    metrics.add_recolored(stats.recolored as u64);
+                }
+                let service = picked.elapsed();
+                for p in group {
+                    let wait = picked.saturating_duration_since(p.submitted);
+                    metrics.observe_job(wait, service);
+                    let o = JobOutcome {
+                        name: p.name,
+                        engine: "native",
+                        problem: Some(problem),
+                        n_colors: stats.n_colors,
+                        iterations: stats.iterations,
+                        seconds: stats.seconds,
+                        valid,
+                        error: None,
+                        batch: Some(stats.clone()),
+                        exec: None,
+                        fused,
+                        epoch: Some(epoch),
+                    };
+                    metrics.record(&o);
+                    p.handle.complete(o);
+                }
+            }
+            Err(p) => {
+                inner.closed = true;
+                let msg = format!(
+                    "engine panicked: {}; session {id} closed",
+                    panic_message(p.as_ref())
+                );
+                let service = picked.elapsed();
+                for pu in group {
+                    let wait = picked.saturating_duration_since(pu.submitted);
+                    metrics.observe_job(wait, service);
+                    let o = fail_outcome(&pu.name, "native", Some(problem), msg.clone());
+                    metrics.record(&o);
+                    pu.handle.complete(o);
+                }
+                let leftovers: Vec<PendingUpdate> = {
+                    let mut pq = slot.pending.lock().unwrap();
+                    pq.closed = true;
+                    pq.items.drain(..).collect()
+                };
+                for pu in leftovers {
+                    let o = fail_outcome(
+                        &pu.name,
+                        "native",
+                        Some(problem),
+                        format!("session {id} closed before batch applied"),
+                    );
+                    metrics.record(&o);
+                    pu.handle.complete(o);
+                }
+                drop(inner);
+                sessions.lock().unwrap().remove(&id);
+                return;
+            }
         }
-    };
-    inner.applied += 1;
-    slot.cv.notify_all();
-    JobOutcome {
-        name: name.to_string(),
-        engine: "native",
-        problem: Some(problem),
-        n_colors: stats.n_colors,
-        iterations: stats.iterations,
-        seconds: stats.seconds,
-        valid,
-        error: None,
-        batch: Some(stats),
-        exec: None,
     }
 }
 
-/// Run a colored-execution kernel over a session's committed coloring:
-/// refresh the cached [`ColorSchedule`] (dirty colors only), then drive
-/// the kernel frontier-by-frontier on the shared pool. Holds the
-/// session lock for the run, so executes serialize with the session's
-/// updates and never observe a torn coloring. A kernel panic surfaces
-/// as this job's error — the session and its schedule are *not* torn
-/// by execution (kernels cannot touch them), so the session stays open.
+/// Run a colored-execution kernel over a session's last committed
+/// epoch snapshot: clone the snapshot `Arc` (no session state lock —
+/// an in-flight repair does not block this), ensure the epoch-keyed
+/// [`EpochSchedule`] is current (same epoch: free; new epoch: dirty
+/// colors only), then drive the kernel frontier-by-frontier on the
+/// session's shard pool. A kernel panic surfaces as this job's error —
+/// the session and its schedule are not torn by execution (kernels
+/// cannot touch them), so the session stays open.
 fn run_execute(
     sessions: &SessionMap,
+    pools: &Arc<PoolSet>,
     id: SessionId,
     kernel: &ExecKernel,
     rounds: usize,
     name: &str,
-    pool: &Arc<WorkerPool>,
 ) -> JobOutcome {
     let slot = sessions.lock().unwrap().get(&id).cloned();
     let Some(slot) = slot else {
         return fail_outcome(name, "native", None, format!("unknown session {id}"));
     };
-    let mut guard = slot.state.lock().unwrap();
-    let inner = &mut *guard;
-    let problem = inner.session.problem();
-    if inner.closed {
-        return fail_outcome(
-            name,
-            "native",
-            Some(problem),
-            format!("session {id} closed before execute"),
-        );
-    }
-    let colors = inner.session.colors();
-    let refresh = match inner.sched.as_mut() {
-        Some(s) => s.refresh(colors),
-        None => {
-            let s = ColorSchedule::from_colors(colors);
-            let (moved, dirty_colors) = (s.n_items(), s.n_colors());
-            inner.sched = Some(s);
-            RefreshStats { moved, dirty_colors, rebuilt: true }
-        }
-    };
-    let sched = inner.sched.as_ref().unwrap();
-    // The kernel is client code: contain its panics like the engines'
-    // (the pool resumes them on this thread; unwinding past the session
-    // lock would poison it for every later job).
+    let problem = slot.problem;
+    let snap = slot.snap.lock().unwrap().clone();
+    let mut es = slot.sched.lock().unwrap();
+    let refresh = es.ensure(snap.epoch, &snap.colors);
+    let sched = es.sched().expect("ensure installs a schedule");
     let run = catch_unwind(AssertUnwindSafe(|| {
-        Executor::new(pool).run(sched, rounds, |item, color| kernel.call(item, color))
+        Executor::new(pools.shard(slot.shard)).run(sched, rounds, |item, color| {
+            kernel.call(item, color)
+        })
     }));
     let report = match run {
         Ok(r) => r,
@@ -516,6 +682,8 @@ fn run_execute(
         error: None,
         batch: None,
         exec: Some(stats),
+        fused: 0,
+        epoch: Some(snap.epoch),
     }
 }
 
@@ -537,6 +705,8 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                         error: None,
                         batch: None,
                         exec: None,
+                        fused: 0,
+                        epoch: None,
                     }
                 }
                 Err(e) => JobOutcome {
@@ -555,68 +725,94 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
 }
 
 impl Service {
-    /// Start `n_native` native dispatchers over a
-    /// [`DEFAULT_POOL_THREADS`]-wide shared pool; if `artifacts` is
-    /// given and loads, also start one PJRT worker owning the compiled
-    /// executables. See [`Service::start_with`] for the pool knob.
+    /// Start `n_native` dispatchers over one shard with a
+    /// [`DEFAULT_POOL_THREADS`]-wide pool; if `artifacts` is given and
+    /// loads, also start one PJRT worker owning the compiled
+    /// executables. See [`Service::start_sharded`] for every knob.
     pub fn start(n_native: usize, artifacts: Option<std::path::PathBuf>) -> Service {
-        Service::start_with(n_native, DEFAULT_POOL_THREADS, artifacts)
+        Service::start_sharded(ServiceOpts {
+            dispatchers: n_native,
+            artifacts,
+            ..ServiceOpts::default()
+        })
     }
 
-    /// [`Service::start`] with an explicit region-execution pool size.
-    ///
-    /// Two thread populations exist, spawned here once and never again:
-    /// `n_native` *dispatchers* (they pop the job queue, order session
-    /// updates, and block on outcomes — control plane) and one
-    /// `pool_threads`-wide [`WorkerPool`] that executes every parallel
-    /// region of every threads-mode job and session (data plane).
-    /// Sessions interleave on the team region-by-region; full-recolor
-    /// jobs additionally serialize on the pool-resident scratch bank
-    /// for their whole run. A job's `cfg.threads` is clamped to the
-    /// pool size. A panic inside an
-    /// engine (a structural assert, a driver contract violation)
-    /// surfaces as a failed [`JobOutcome`] — the dispatcher and the
-    /// pool both survive.
+    /// [`Service::start`] with an explicit per-shard pool size.
     pub fn start_with(
         n_native: usize,
         pool_threads: usize,
         artifacts: Option<std::path::PathBuf>,
     ) -> Service {
+        Service::start_sharded(ServiceOpts {
+            dispatchers: n_native,
+            pool_threads,
+            artifacts,
+            ..ServiceOpts::default()
+        })
+    }
+
+    /// Start the sharded service. Two thread populations exist, spawned
+    /// here once and never again: `opts.dispatchers` dispatcher threads
+    /// popping the sharded admission queue (control plane — they order
+    /// and fuse session updates and run jobs to completion) and
+    /// `opts.shards` pools of `opts.pool_threads` workers executing
+    /// every parallel region (data plane). No dispatcher ever holds a
+    /// lock while waiting for work, and no client lock is held across
+    /// a repair's parallel regions. A panic inside an engine surfaces
+    /// as a failed [`JobOutcome`] — dispatcher and pools survive.
+    pub fn start_sharded(opts: ServiceOpts) -> Service {
+        let shards = opts.shards.max(1);
+        let fuse = opts.fuse_updates.max(1);
         let metrics = Arc::new(Metrics::default());
         let sessions: Arc<SessionMap> = Arc::new(Mutex::new(HashMap::new()));
-        let pool = Arc::new(WorkerPool::new(pool_threads.max(1)));
-        let (native_tx, native_rx) = channel::<Message>();
-        let native_rx = Arc::new(std::sync::Mutex::new(native_rx));
+        let pools = Arc::new(PoolSet::new(shards, opts.pool_threads.max(1)));
+        let queue: Arc<ShardedQueue<Task>> = Arc::new(ShardedQueue::new(shards));
         let mut workers = Vec::new();
-        for _ in 0..n_native.max(1) {
-            let rx = Arc::clone(&native_rx);
+        for i in 0..opts.dispatchers.max(1) {
+            let home = i % shards;
+            let q = Arc::clone(&queue);
             let m = Arc::clone(&metrics);
             let sess = Arc::clone(&sessions);
-            let pl = Arc::clone(&pool);
-            workers.push(std::thread::spawn(move || loop {
-                let msg = { rx.lock().unwrap().recv() };
-                match msg {
-                    Ok(Message::Run(job, seq, out)) => {
-                        let o = catch_unwind(AssertUnwindSafe(|| run_native(&job, &sess, seq, &pl)))
-                            .unwrap_or_else(|p| {
-                                fail_outcome(
-                                    &job.name,
-                                    "native",
-                                    job.input.problem(),
-                                    format!("engine panicked: {}", panic_message(p.as_ref())),
-                                )
-                            });
-                        m.record(&o);
-                        let _ = out.send(o);
-                    }
-                    Ok(Message::Stop) | Err(_) => break,
-                }
-            }));
+            let pl = Arc::clone(&pools);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bgpc-dispatch-{i}"))
+                    .spawn(move || {
+                        while let Some(task) = q.pop(home) {
+                            match task {
+                                Task::Run { job, handle, submitted, shard } => {
+                                    let wait =
+                                        Instant::now().saturating_duration_since(submitted);
+                                    let t0 = Instant::now();
+                                    let o = catch_unwind(AssertUnwindSafe(|| {
+                                        run_stateless(&job, &sess, &pl, shard)
+                                    }))
+                                    .unwrap_or_else(|p| {
+                                        fail_outcome(
+                                            &job.name,
+                                            "native",
+                                            job.input.problem(),
+                                            format!(
+                                                "engine panicked: {}",
+                                                panic_message(p.as_ref())
+                                            ),
+                                        )
+                                    });
+                                    m.observe_job(wait, t0.elapsed());
+                                    m.record(&o);
+                                    handle.complete(o);
+                                }
+                                Task::Drain(id) => drain_session(&sess, &m, id, fuse),
+                            }
+                        }
+                    })
+                    .expect("spawn dispatcher"),
+            );
         }
 
         // PJRT handles are not Send: the runtime must be created *inside*
         // its worker thread; a oneshot reports whether loading succeeded.
-        let pjrt_tx = artifacts.and_then(|dir| {
+        let pjrt_tx = opts.artifacts.and_then(|dir| {
             let (tx, rx) = channel::<Message>();
             let (ready_tx, ready_rx) = channel::<Result<(), String>>();
             let m = Arc::clone(&metrics);
@@ -633,10 +829,13 @@ impl Service {
                 };
                 loop {
                     match rx.recv() {
-                        Ok(Message::Run(job, _seq, out)) => {
+                        Ok(Message::Run(job, handle, submitted)) => {
+                            let wait = Instant::now().saturating_duration_since(submitted);
+                            let t0 = Instant::now();
                             let o = run_pjrt(&rt, &job);
+                            m.observe_job(wait, t0.elapsed());
                             m.record(&o);
-                            let _ = out.send(o);
+                            handle.complete(o);
                         }
                         Ok(Message::Stop) | Err(_) => break,
                     }
@@ -657,83 +856,154 @@ impl Service {
         });
 
         Service {
-            native_tx,
+            queue,
             pjrt_tx,
             workers,
             metrics,
             seq: AtomicU64::new(0),
             sessions,
             session_seq: AtomicU64::new(0),
-            pool,
+            pools,
+            rr: AtomicU64::new(0),
         }
     }
 
-    /// Route a job; returns the outcome receiver.
-    pub fn submit(&self, mut job: Job) -> Receiver<JobOutcome> {
+    fn next_shard(&self) -> usize {
+        self.rr.fetch_add(1, AOrd::Relaxed) as usize % self.pools.n_shards()
+    }
+
+    /// Enqueue a Run task for `shard`'s lane; fail the handle if the
+    /// service has stopped.
+    fn push_run(&self, job: Job, handle: &JobHandle, shard: usize) {
+        let name = job.name.clone();
+        let problem = job.input.problem();
+        let task = Task::Run { job, handle: handle.clone(), submitted: Instant::now(), shard };
+        if self.queue.push(shard, task).is_err() {
+            handle.complete(fail_outcome(&name, "native", problem, "service stopped".into()));
+        }
+    }
+
+    /// Non-blocking admission: route the job and return a [`JobHandle`]
+    /// immediately. Updates are admitted to their session's pending
+    /// queue (seq assigned under the pending lock, so admission order
+    /// is apply order) and a Drain token is pushed to the session's
+    /// shard lane; everything else is queued as a Run task. No
+    /// service-wide lock is taken.
+    pub fn submit_async(&self, mut job: Job) -> JobHandle {
         if job.name.is_empty() {
             job.name = format!("job-{}", self.seq.fetch_add(1, AOrd::Relaxed));
         }
-        let (tx, rx) = channel();
-        // Updates bypass engine selection: they are session-ordered and
-        // always native. The seq assignment and the channel send happen
-        // under one lock so seq order == queue order — otherwise two
-        // racing submitters could enqueue seq 1 ahead of seq 0 and park
-        // a worker (or the whole pool) on a predecessor stuck behind it.
-        if let JobInput::Update { session, .. } = &job.input {
-            let id = *session;
-            let sessions = self.sessions.lock().unwrap();
-            match sessions.get(&id) {
-                Some(slot) => {
-                    let seq = slot.submitted.fetch_add(1, AOrd::SeqCst);
-                    let _ = self.native_tx.send(Message::Run(job, seq, tx));
-                }
-                None => {
-                    let _ = tx.send(fail_outcome(
+        let handle = JobHandle::new();
+        match &job.input {
+            JobInput::Update { session, batch } => {
+                let id = *session;
+                let batch = Arc::clone(batch);
+                let slot = self.sessions.lock().unwrap().get(&id).cloned();
+                let Some(slot) = slot else {
+                    handle.complete(fail_outcome(
                         &job.name,
                         "native",
                         None,
                         format!("unknown session {id}"),
                     ));
-                }
-            }
-            return rx;
-        }
-        let use_pjrt = match job.engine {
-            EngineSel::Pjrt => true,
-            EngineSel::Native => false,
-            EngineSel::Auto => {
-                self.pjrt_tx.is_some() && matches!(job.input, JobInput::Bgpc(_))
-            }
-        };
-        if use_pjrt {
-            match &self.pjrt_tx {
-                Some(ptx) => {
-                    let _ = ptx.send(Message::Run(job, 0, tx));
-                }
-                None => {
-                    let _ = tx.send(fail_outcome(
+                    return handle;
+                };
+                let seq = {
+                    let mut pq = slot.pending.lock().unwrap();
+                    if pq.closed {
+                        drop(pq);
+                        handle.complete(fail_outcome(
+                            &job.name,
+                            "native",
+                            Some(slot.problem),
+                            format!("session {id} closed before batch applied"),
+                        ));
+                        return handle;
+                    }
+                    let seq = pq.next_seq;
+                    pq.next_seq += 1;
+                    pq.items.push_back(PendingUpdate {
+                        seq,
+                        batch,
+                        name: job.name.clone(),
+                        handle: handle.clone(),
+                        submitted: Instant::now(),
+                    });
+                    seq
+                };
+                if self.queue.push(slot.shard, Task::Drain(id)).is_err() {
+                    let mut pq = slot.pending.lock().unwrap();
+                    if let Some(pos) = pq.items.iter().position(|p| p.seq == seq) {
+                        pq.items.remove(pos);
+                    }
+                    drop(pq);
+                    handle.complete(fail_outcome(
                         &job.name,
-                        "pjrt",
-                        job.input.problem(),
-                        "PJRT engine not loaded (run `make artifacts`)".into(),
+                        "native",
+                        Some(slot.problem),
+                        "service stopped".into(),
                     ));
                 }
             }
-        } else {
-            let _ = self.native_tx.send(Message::Run(job, 0, tx));
+            JobInput::Execute { session, .. } => {
+                let shard = self
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .get(session)
+                    .map(|s| s.shard)
+                    .unwrap_or_else(|| self.next_shard());
+                self.push_run(job, &handle, shard);
+            }
+            JobInput::Bgpc(_) | JobInput::D2gc(_) => {
+                let use_pjrt = match job.engine {
+                    EngineSel::Pjrt => true,
+                    EngineSel::Native => false,
+                    EngineSel::Auto => {
+                        self.pjrt_tx.is_some() && matches!(job.input, JobInput::Bgpc(_))
+                    }
+                };
+                if use_pjrt {
+                    match &self.pjrt_tx {
+                        Some(ptx) => {
+                            let _ =
+                                ptx.send(Message::Run(job, handle.clone(), Instant::now()));
+                        }
+                        None => handle.complete(fail_outcome(
+                            &job.name,
+                            "pjrt",
+                            job.input.problem(),
+                            "PJRT engine not loaded (run `make artifacts`)".into(),
+                        )),
+                    }
+                } else {
+                    let shard = self.next_shard();
+                    self.push_run(job, &handle, shard);
+                }
+            }
         }
-        rx
+        handle
+    }
+
+    /// Route a job (alias of [`Service::submit_async`] — kept as the
+    /// historical front door; `.wait()` the handle for the old blocking
+    /// behaviour).
+    pub fn submit(&self, job: Job) -> JobHandle {
+        self.submit_async(job)
     }
 
     /// Open a BGPC dynamic session: color `g` from scratch under `cfg`
-    /// (synchronously, on the caller's thread) and keep the session
-    /// alive inside the service. Stream [`JobInput::Update`] jobs
-    /// against the returned id, then [`Service::close_session`].
+    /// (synchronously, on the caller's thread, using the session's
+    /// shard pool) and keep the session alive inside the service.
+    /// Stream [`JobInput::Update`] jobs against the returned id, then
+    /// [`Service::close_session`].
     pub fn open_session(&self, name: &str, g: &Bipartite, cfg: Config) -> (SessionId, JobOutcome) {
+        let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
+        let shard = id as usize % self.pools.n_shards();
         let (mut session, init) =
-            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, &self.pool);
+            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, self.pools.shard(shard));
         let valid = session.verify().is_ok();
-        self.install_session(name, AnySession::Bgpc(session), &init, valid)
+        self.install_session(id, shard, name, AnySession::Bgpc(session), &init, valid)
     }
 
     /// Open a D2GC dynamic session over a square, structurally
@@ -744,25 +1014,31 @@ impl Service {
     /// # Panics
     /// If `g` is not square and structurally symmetric.
     pub fn open_session_d2gc(&self, name: &str, g: &Csr, cfg: Config) -> (SessionId, JobOutcome) {
+        let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
+        let shard = id as usize % self.pools.n_shards();
         let (mut session, init) =
-            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, &self.pool);
+            crate::dynamic::DynamicSession::start_on(g.clone(), cfg, self.pools.shard(shard));
         let valid = session.verify().is_ok();
-        self.install_session(name, AnySession::D2gc(session), &init, valid)
+        self.install_session(id, shard, name, AnySession::D2gc(session), &init, valid)
     }
 
     /// Shared tail of the `open_session*` pair: record the bring-up
-    /// outcome and park the session under a fresh id.
+    /// outcome, publish the epoch-0 snapshot, and park the session
+    /// under its id.
     fn install_session(
         &self,
+        id: SessionId,
+        shard: usize,
         name: &str,
         session: AnySession,
         init: &crate::coloring::ColoringResult,
         valid: bool,
     ) -> (SessionId, JobOutcome) {
+        let problem = session.problem();
         let outcome = JobOutcome {
             name: name.to_string(),
             engine: "native",
-            problem: Some(session.problem()),
+            problem: Some(problem),
             n_colors: init.n_colors,
             iterations: init.iterations,
             seconds: init.seconds,
@@ -770,82 +1046,104 @@ impl Service {
             error: None,
             batch: None,
             exec: None,
+            fused: 0,
+            epoch: Some(0),
         };
         self.metrics.record(&outcome);
-        let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
+        let snap = Arc::new(Snapshot { epoch: 0, colors: session.colors_arc() });
         self.sessions.lock().unwrap().insert(
             id,
             Arc::new(SessionSlot {
-                submitted: AtomicU64::new(0),
-                state: Mutex::new(SessionInner {
-                    session,
-                    applied: 0,
-                    closed: false,
-                    sched: None,
-                }),
-                cv: Condvar::new(),
+                shard,
+                problem,
+                pending: Mutex::new(PendingQueue::default()),
+                state: Mutex::new(SessionInner { session, applied: 0, closed: false }),
+                snap: Mutex::new(snap),
+                sched: Mutex::new(EpochSchedule::new()),
             }),
         );
         (id, outcome)
     }
 
     /// Submit a colored-execution job against an open session: run
-    /// `kernel` over the session's current coloring, `rounds` full
-    /// color sweeps, on the shared pool (see [`JobInput::Execute`]).
-    /// Convenience over [`Service::submit`]; returns the outcome
-    /// receiver. Queued-but-unapplied updates are not waited for — the
-    /// run observes the committed coloring when it acquires the
-    /// session.
+    /// `kernel` over the session's last committed epoch snapshot,
+    /// `rounds` full color sweeps, on the session's shard pool (see
+    /// [`JobInput::Execute`]). Convenience over [`Service::submit_async`].
+    /// Queued-but-unapplied updates are not waited for — the run
+    /// observes the last committed epoch.
     pub fn execute(
         &self,
         name: &str,
         session: SessionId,
         rounds: usize,
         kernel: ExecKernel,
-    ) -> Receiver<JobOutcome> {
-        self.submit(Job {
+    ) -> JobHandle {
+        self.submit_async(Job {
             name: name.to_string(),
             input: JobInput::Execute { session, kernel, rounds },
             // Execute jobs ignore the config (the executor runs on the
-            // shared pool with its full team); any well-formed value
-            // satisfies the Job shape.
-            cfg: Config::threads(crate::coloring::schedule::N1_N2, self.pool.threads()),
+            // session's shard pool with its full team); any well-formed
+            // value satisfies the Job shape.
+            cfg: Config::threads(crate::coloring::schedule::N1_N2, self.pools.shard(0).threads()),
             engine: EngineSel::Native,
         })
     }
 
-    /// Snapshot a session's current committed coloring (batches applied
-    /// so far; does not wait for still-queued updates).
-    pub fn session_colors(&self, id: SessionId) -> Option<Vec<i32>> {
+    /// Snapshot a session's last committed coloring (epoch snapshot —
+    /// never blocks on an in-flight repair; does not wait for
+    /// still-queued updates).
+    pub fn session_colors(&self, id: SessionId) -> Option<Arc<Vec<i32>>> {
         let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
-        let inner = slot.state.lock().unwrap();
-        Some(inner.session.colors().to_vec())
+        let snap = slot.snap.lock().unwrap().clone();
+        Some(Arc::clone(&snap.colors))
+    }
+
+    /// The session's last committed epoch (== update batches applied so
+    /// far; 0 right after open). Never blocks on an in-flight repair.
+    pub fn session_epoch(&self, id: SessionId) -> Option<u64> {
+        let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
+        let epoch = slot.snap.lock().unwrap().epoch;
+        Some(epoch)
     }
 
     /// The problem an open session repairs (`None` if the id is
     /// unknown) — the authoritative answer [`JobInput::problem`] cannot
-    /// give for `Update` jobs.
+    /// give for `Update` jobs. Lock-free beyond the map read.
     pub fn session_problem(&self, id: SessionId) -> Option<Problem> {
         let slot = self.sessions.lock().unwrap().get(&id).cloned()?;
-        let inner = slot.state.lock().unwrap();
-        Some(inner.session.problem())
+        Some(slot.problem)
     }
 
-    /// Close a session. The update a worker is currently applying still
-    /// completes; updates parked behind a predecessor that can no longer
-    /// arrive are woken and fail cleanly ("session closed"); later
-    /// submits error with "unknown session". Returns whether the id was
-    /// open.
+    /// Close a session. The fused group a dispatcher is currently
+    /// applying still completes (this call blocks on the state lock
+    /// until it commits); updates still pending afterwards are failed
+    /// cleanly ("session closed"); later submits error with "unknown
+    /// session". Returns whether the id was open.
     pub fn close_session(&self, id: SessionId) -> bool {
         let slot = self.sessions.lock().unwrap().remove(&id);
-        match slot {
-            Some(slot) => {
-                slot.state.lock().unwrap().closed = true;
-                slot.cv.notify_all();
-                true
-            }
-            None => false,
+        let Some(slot) = slot else {
+            return false;
+        };
+        {
+            let mut inner = slot.state.lock().unwrap();
+            inner.closed = true;
         }
+        let leftovers: Vec<PendingUpdate> = {
+            let mut pq = slot.pending.lock().unwrap();
+            pq.closed = true;
+            pq.items.drain(..).collect()
+        };
+        for p in leftovers {
+            let o = fail_outcome(
+                &p.name,
+                "native",
+                Some(slot.problem),
+                format!("session {id} closed before batch applied"),
+            );
+            self.metrics.record(&o);
+            p.handle.complete(o);
+        }
+        true
     }
 
     /// Whether the PJRT engine is up.
@@ -857,32 +1155,56 @@ impl Service {
         &self.metrics
     }
 
-    /// The shared region-execution pool (open sessions against it,
-    /// inspect it, or borrow it for ad-hoc drivers).
+    /// Shard 0's region-execution pool (open ad-hoc drivers against it,
+    /// inspect it). See [`Service::pools`] for the full set.
     pub fn pool(&self) -> &Arc<WorkerPool> {
-        &self.pool
+        self.pools.shard(0)
     }
 
-    /// Region-dispatch and worker-utilization counters of the shared
-    /// pool — the execution-substrate metrics that complement the
-    /// per-job [`Metrics`].
+    /// The sharded region-execution pool set.
+    pub fn pools(&self) -> &Arc<PoolSet> {
+        &self.pools
+    }
+
+    /// Aggregated region-dispatch and worker-utilization counters
+    /// across every shard pool — the execution-substrate metrics that
+    /// complement the per-job [`Metrics`].
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.stats()
+        self.pools.stats()
     }
 
-    /// Stop all workers and join them.
-    pub fn shutdown(self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.native_tx.send(Message::Stop);
-        }
-        if let Some(ptx) = &self.pjrt_tx {
+    /// Per-shard pool counters, in shard order.
+    pub fn shard_stats(&self) -> Vec<PoolStats> {
+        self.pools.shard_stats()
+    }
+
+    /// Admission-queue counters (pushed / popped / stolen across
+    /// lanes) — `stolen > 0` is work stealing paying off.
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.queue.close();
+        if let Some(ptx) = self.pjrt_tx.take() {
             let _ = ptx.send(Message::Stop);
         }
-        drop(self.native_tx);
-        drop(self.pjrt_tx);
-        for w in self.workers {
+        for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
+    }
+
+    /// Stop all workers and join them (queued-but-unpopped tasks are
+    /// still drained first — the queue rejects new pushes but hands
+    /// out what it holds).
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_impl();
     }
 }
 
@@ -896,17 +1218,17 @@ mod tests {
     fn native_jobs_round_trip() {
         let svc = Service::start(2, None);
         let g = Arc::new(random_bipartite(100, 150, 1200, 21));
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for (i, spec) in schedule::ALL.iter().enumerate() {
-            rxs.push(svc.submit(Job {
+            handles.push(svc.submit(Job {
                 name: format!("j{i}"),
                 input: JobInput::Bgpc(Arc::clone(&g)),
                 cfg: Config::sim(*spec, 4),
                 engine: EngineSel::Native,
             }));
         }
-        for rx in rxs {
-            let o = rx.recv().unwrap();
+        for h in handles {
+            let o = h.wait();
             assert!(o.valid, "{}: {:?}", o.name, o.error);
             assert!(o.n_colors > 0);
         }
@@ -921,9 +1243,9 @@ mod tests {
         assert_eq!(svc.pool_stats().threads, 4);
         let g = Arc::new(random_bipartite(120, 180, 1400, 5));
         let m = Arc::new(random_symmetric(80, 300, 7));
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for i in 0..4 {
-            rxs.push(svc.submit(Job {
+            handles.push(svc.submit(Job {
                 name: format!("t{i}"),
                 // cfg.threads is clamped to the pool size (8 -> 4)
                 input: JobInput::Bgpc(Arc::clone(&g)),
@@ -931,14 +1253,14 @@ mod tests {
                 engine: EngineSel::Native,
             }));
         }
-        rxs.push(svc.submit(Job {
+        handles.push(svc.submit(Job {
             name: "t-d2".into(),
             input: JobInput::D2gc(Arc::clone(&m)),
             cfg: Config::threads(schedule::V_N2, 4),
             engine: EngineSel::Native,
         }));
-        for rx in rxs {
-            let o = rx.recv().unwrap();
+        for h in handles {
+            let o = h.wait();
             assert!(o.valid, "{}: {:?}", o.name, o.error);
         }
         let st = svc.pool_stats();
@@ -963,8 +1285,7 @@ mod tests {
                 cfg: Config::sim(schedule::N1_N2, 2),
                 engine: EngineSel::Native,
             })
-            .recv()
-            .unwrap();
+            .wait();
         assert!(!o.valid);
         let err = o.error.expect("panic must surface as an error");
         assert!(err.contains("square"), "unexpected message: {err}");
@@ -978,8 +1299,7 @@ mod tests {
                 cfg: Config::sim(schedule::V_N2, 2),
                 engine: EngineSel::Native,
             })
-            .recv()
-            .unwrap();
+            .wait();
         assert!(o.valid, "{:?}", o.error);
         svc.shutdown();
     }
@@ -988,13 +1308,14 @@ mod tests {
     fn pjrt_request_without_artifacts_errors_cleanly() {
         let svc = Service::start(1, None);
         let g = Arc::new(random_bipartite(10, 20, 60, 1));
-        let rx = svc.submit(Job {
-            name: "x".into(),
-            input: JobInput::Bgpc(g),
-            cfg: Config::sim(schedule::N1_N2, 2),
-            engine: EngineSel::Pjrt,
-        });
-        let o = rx.recv().unwrap();
+        let o = svc
+            .submit(Job {
+                name: "x".into(),
+                input: JobInput::Bgpc(g),
+                cfg: Config::sim(schedule::N1_N2, 2),
+                engine: EngineSel::Pjrt,
+            })
+            .wait();
         assert!(!o.valid);
         assert!(o.error.unwrap().contains("artifacts"));
         svc.shutdown();
@@ -1008,29 +1329,32 @@ mod tests {
         let (sid, init) = svc.open_session("sess", &g, Config::sim(schedule::N1_N2, 4));
         assert!(init.valid, "initial coloring must verify");
         assert!(init.n_colors > 0);
-        // three dependent batches streamed through two workers: the
-        // seq/condvar handshake must apply them in submit order.
-        let mut rxs = Vec::new();
+        assert_eq!(init.epoch, Some(0));
+        // three dependent batches streamed through two dispatchers: the
+        // pending-queue admission must apply them in submit order.
+        let mut handles = Vec::new();
         for k in 0..3u32 {
             let mut batch = UpdateBatch::default();
             for i in 0..10u32 {
                 batch.add_edges.push(((k * 7 + i) % 80, (k * 11 + i * 3) % 120));
             }
-            rxs.push(svc.submit(Job {
+            handles.push(svc.submit(Job {
                 name: format!("u{k}"),
                 input: JobInput::Update { session: sid, batch: Arc::new(batch) },
                 cfg: Config::sim(schedule::N1_N2, 4),
                 engine: EngineSel::Auto,
             }));
         }
-        for rx in rxs {
-            let o = rx.recv().unwrap();
+        for h in handles {
+            let o = h.wait();
             assert!(o.valid, "{}: {:?}", o.name, o.error);
             assert_eq!(o.problem, Some(Problem::Bgpc), "update reports the session's problem");
+            assert!(o.fused >= 1, "update outcomes report their fuse group size");
             let b = o.batch.expect("update outcomes carry batch stats");
             assert!(b.dirty_nets > 0 || b.batch_edits == 0);
         }
         assert_eq!(svc.session_problem(sid), Some(Problem::Bgpc));
+        assert_eq!(svc.session_epoch(sid), Some(3), "three batches committed three epochs");
         let colors = svc.session_colors(sid).expect("session open");
         assert_eq!(colors.len(), 120);
         assert!(colors.iter().all(|&c| c >= 0));
@@ -1050,7 +1374,7 @@ mod tests {
         assert!(init.valid, "initial D2GC coloring must verify");
         assert_eq!(init.problem, Some(Problem::D2gc));
         assert_eq!(svc.session_problem(sid), Some(Problem::D2gc));
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for k in 0..2u32 {
             let mut batch = UpdateBatch::default();
             for i in 0..8u32 {
@@ -1058,15 +1382,15 @@ mod tests {
                 let b = (k * 31 + i * 11) % 100;
                 batch.add_edges.push((a, b));
             }
-            rxs.push(svc.submit(Job {
+            handles.push(svc.submit(Job {
                 name: format!("h{k}"),
                 input: JobInput::Update { session: sid, batch: Arc::new(batch) },
                 cfg: Config::sim(schedule::N1_N2, 4),
                 engine: EngineSel::Auto,
             }));
         }
-        for rx in rxs {
-            let o = rx.recv().unwrap();
+        for h in handles {
+            let o = h.wait();
             assert!(o.valid, "{}: {:?}", o.name, o.error);
             assert_eq!(o.problem, Some(Problem::D2gc), "update reports the session's problem");
             assert!(o.batch.is_some());
@@ -1084,13 +1408,14 @@ mod tests {
     fn update_to_unknown_session_errors_cleanly() {
         use crate::dynamic::UpdateBatch;
         let svc = Service::start(1, None);
-        let rx = svc.submit(Job {
-            name: "nope".into(),
-            input: JobInput::Update { session: 999, batch: Arc::new(UpdateBatch::default()) },
-            cfg: Config::sim(schedule::N1_N2, 2),
-            engine: EngineSel::Native,
-        });
-        let o = rx.recv().unwrap();
+        let o = svc
+            .submit(Job {
+                name: "nope".into(),
+                input: JobInput::Update { session: 999, batch: Arc::new(UpdateBatch::default()) },
+                cfg: Config::sim(schedule::N1_N2, 2),
+                engine: EngineSel::Native,
+            })
+            .wait();
         assert!(!o.valid);
         assert!(o.error.unwrap().contains("unknown session"));
         assert!(o.batch.is_none());
@@ -1119,9 +1444,10 @@ mod tests {
                 Cost::new(units)
             })
         };
-        let o = svc.execute("run", sid, 2, kernel).recv().unwrap();
+        let o = svc.execute("run", sid, 2, kernel).wait();
         assert!(o.valid, "{:?}", o.error);
         assert_eq!(o.problem, Some(Problem::Bgpc));
+        assert_eq!(o.epoch, Some(0), "no updates yet: the run observed epoch 0");
         let e = o.exec.expect("execute outcomes carry exec stats");
         assert!(e.sched_rebuilt, "first execute builds the schedule");
         assert_eq!(e.rounds, 2);
@@ -1151,11 +1477,11 @@ mod tests {
         let g = random_bipartite(100, 150, 1200, 31);
         let (sid, _init) = svc.open_session("s", &g, Config::sim(schedule::N1_N2, 4));
         let noop = ExecKernel::new(|_item, _color| Cost::new(1));
-        let e0 = svc.execute("e0", sid, 1, noop.clone()).recv().unwrap().exec.unwrap();
+        let e0 = svc.execute("e0", sid, 1, noop.clone()).wait().exec.unwrap();
         assert!(e0.sched_rebuilt);
         assert_eq!(e0.sched_moved, 150, "first build places every item");
-        // no updates in between: nothing moves
-        let e1 = svc.execute("e1", sid, 1, noop.clone()).recv().unwrap().exec.unwrap();
+        // same epoch in between: nothing moves, nothing is even diffed
+        let e1 = svc.execute("e1", sid, 1, noop.clone()).wait().exec.unwrap();
         assert!(!e1.sched_rebuilt);
         assert_eq!(e1.sched_moved, 0);
         assert_eq!(e1.sched_dirty_colors, 0);
@@ -1171,11 +1497,13 @@ mod tests {
                 cfg: Config::sim(schedule::N1_N2, 4),
                 engine: EngineSel::Auto,
             })
-            .recv()
-            .unwrap();
+            .wait();
         assert!(u.valid, "{:?}", u.error);
+        assert_eq!(u.epoch, Some(1), "first committed batch is epoch 1");
         let recolored = u.batch.unwrap().recolored;
-        let e2 = svc.execute("e2", sid, 1, noop).recv().unwrap().exec.unwrap();
+        let o2 = svc.execute("e2", sid, 1, noop).wait();
+        assert_eq!(o2.epoch, Some(1), "execute observes the committed epoch");
+        let e2 = o2.exec.unwrap();
         assert!(!e2.sched_rebuilt, "post-update refresh must be incremental");
         assert!(
             e2.sched_moved <= recolored,
@@ -1190,8 +1518,7 @@ mod tests {
         let svc = Service::start(1, None);
         let o = svc
             .execute("nope", 777, 1, ExecKernel::new(|_, _| Cost::new(1)))
-            .recv()
-            .unwrap();
+            .wait();
         assert!(!o.valid);
         assert!(o.error.unwrap().contains("unknown session"));
         let g = random_bipartite(40, 60, 300, 7);
@@ -1200,12 +1527,12 @@ mod tests {
             assert!(item != 3, "planted kernel failure");
             Cost::new(1)
         });
-        let o = svc.execute("boom", sid, 1, bomb).recv().unwrap();
+        let o = svc.execute("boom", sid, 1, bomb).wait();
         assert!(!o.valid);
         let err = o.error.expect("kernel panic must surface as an error");
         assert!(err.contains("kernel panicked"), "unexpected message: {err}");
         // the session and the dispatcher both survive the client's bug
-        let o = svc.execute("ok", sid, 1, ExecKernel::new(|_, _| Cost::new(1))).recv().unwrap();
+        let o = svc.execute("ok", sid, 1, ExecKernel::new(|_, _| Cost::new(1))).wait();
         assert!(o.valid, "{:?}", o.error);
         assert!(svc.close_session(sid));
         svc.shutdown();
@@ -1223,10 +1550,147 @@ mod tests {
                 cfg: Config::sim(schedule::V_N2, 2),
                 engine: EngineSel::Auto,
             })
-            .recv()
-            .unwrap();
+            .wait();
         assert_eq!(o.engine, "native");
         assert!(o.valid);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_async_handle_polls_then_waits() {
+        let svc = Service::start(1, None);
+        let g = Arc::new(random_bipartite(60, 90, 500, 11));
+        let h = svc.submit_async(Job {
+            name: "async".into(),
+            input: JobInput::Bgpc(g),
+            cfg: Config::sim(schedule::N1_N2, 4),
+            engine: EngineSel::Native,
+        });
+        let o = h.wait();
+        assert!(o.valid, "{:?}", o.error);
+        assert!(h.is_done());
+        let again = h.try_poll().expect("outcome stays readable after wait");
+        assert_eq!(again.name, "async");
+        assert_eq!(again.fused, 0);
+        assert_eq!(again.epoch, None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn snapshot_reads_and_executes_complete_while_repair_holds_the_session() {
+        // The acceptance property of the epoch-snapshot design: with
+        // the session *state* lock held (exactly what an in-flight
+        // repair holds for its whole apply+verify), colors reads,
+        // epoch reads, and a full Execute job all run to completion
+        // against the last committed epoch. Under the old design every
+        // one of these parked on the session lock.
+        let svc = Service::start_sharded(ServiceOpts { dispatchers: 2, ..ServiceOpts::default() });
+        let g = random_bipartite(80, 120, 900, 41);
+        let (sid, init) = svc.open_session("snap", &g, Config::sim(schedule::N1_N2, 4));
+        assert!(init.valid);
+        let slot = svc.sessions.lock().unwrap().get(&sid).cloned().unwrap();
+        let repair_guard = slot.state.lock().unwrap();
+        let colors = svc.session_colors(sid).expect("snapshot read must not block");
+        assert_eq!(colors.len(), 120);
+        assert_eq!(svc.session_epoch(sid), Some(0));
+        let o = svc
+            .execute("during-repair", sid, 1, ExecKernel::new(|_, _| Cost::new(1)))
+            .wait();
+        assert!(o.valid, "{:?}", o.error);
+        assert_eq!(o.epoch, Some(0), "execute ran against the committed snapshot");
+        drop(repair_guard);
+        assert!(svc.close_session(sid));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tiny_updates_fuse_into_one_repair() {
+        use crate::dynamic::UpdateBatch;
+        let svc = Service::start_sharded(ServiceOpts {
+            shards: 1,
+            dispatchers: 1,
+            pool_threads: 1,
+            fuse_updates: 64,
+            artifacts: None,
+        });
+        let g = random_bipartite(60, 90, 600, 17);
+        let (sid, init) = svc.open_session("fuse", &g, Config::sim(schedule::N1_N2, 4));
+        assert!(init.valid);
+        // Occupy the lone dispatcher with a gated kernel so the updates
+        // pile up in the pending queue, then open the gate: the drain
+        // must pick all five up as ONE fused group — one compact +
+        // repair + verify, one committed epoch.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let kernel = {
+            let gate = Arc::clone(&gate);
+            ExecKernel::new(move |_item, _color| {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Cost::new(1)
+            })
+        };
+        let exec_h = svc.execute("gate", sid, 1, kernel);
+        let mut handles = Vec::new();
+        for k in 0..5u32 {
+            let mut batch = UpdateBatch::default();
+            batch.add_edges.push((k % 60, (k * 7) % 90));
+            handles.push(svc.submit_async(Job {
+                name: format!("tiny{k}"),
+                input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+                cfg: Config::sim(schedule::N1_N2, 4),
+                engine: EngineSel::Auto,
+            }));
+        }
+        assert!(
+            handles.iter().all(|h| h.try_poll().is_none()),
+            "updates must be parked behind the gated execute"
+        );
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert!(exec_h.wait().valid);
+        for h in handles {
+            let o = h.wait();
+            assert!(o.valid, "{}: {:?}", o.name, o.error);
+            assert_eq!(o.fused, 5, "all five tiny updates drained as one group");
+            assert_eq!(o.epoch, Some(5), "the fused group committed all five batches");
+        }
+        assert_eq!(svc.session_epoch(sid), Some(5));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_spreads_sessions_across_pools() {
+        let svc = Service::start_sharded(ServiceOpts {
+            shards: 2,
+            dispatchers: 2,
+            pool_threads: 1,
+            fuse_updates: 16,
+            artifacts: None,
+        });
+        let g1 = random_bipartite(50, 70, 400, 3);
+        let g2 = random_bipartite(60, 80, 500, 4);
+        let (s1, i1) = svc.open_session("a", &g1, Config::sim(schedule::N1_N2, 4));
+        let (s2, i2) = svc.open_session("b", &g2, Config::sim(schedule::N1_N2, 4));
+        assert!(i1.valid && i2.valid);
+        let noop = ExecKernel::new(|_, _| Cost::new(1));
+        let o1 = svc.execute("e1", s1, 1, noop.clone()).wait();
+        let o2 = svc.execute("e2", s2, 1, noop).wait();
+        assert!(o1.valid && o2.valid, "{:?} / {:?}", o1.error, o2.error);
+        let per = svc.shard_stats();
+        assert_eq!(per.len(), 2);
+        assert!(
+            per.iter().all(|s| s.regions > 0),
+            "sessions pin to distinct shards, so both pools dispatch regions"
+        );
+        let qs = svc.queue_stats();
+        assert_eq!(qs.pushed, qs.popped, "admission queue fully drained");
+        assert!(svc.close_session(s1) && svc.close_session(s2));
         svc.shutdown();
     }
 }

@@ -51,7 +51,11 @@ enum SessionDriver {
 /// [`Csr`] for D2GC.
 pub struct DynamicSession<P: Problem> {
     delta: P::Delta,
-    colors: Vec<i32>,
+    /// The committed coloring, shared by refcount so the coordinator's
+    /// epoch snapshots (DESIGN.md §12) can hand out immutable views
+    /// without copying; a repair installs a fresh `Arc`, never mutates
+    /// the published one.
+    colors: Arc<Vec<i32>>,
     /// Per-thread scratch, persistent across batches (B1/B2 trackers).
     ts: Vec<ThreadState>,
     cfg: Config,
@@ -120,7 +124,7 @@ impl<P: Problem> DynamicSession<P> {
                 g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
             }
         };
-        let colors = r.colors.clone();
+        let colors = Arc::new(r.colors.clone());
         let session =
             DynamicSession { delta: g.into_delta(), colors, ts, cfg, driver, batches: 0 };
         (session, r)
@@ -142,22 +146,40 @@ impl<P: Problem> DynamicSession<P> {
     /// new constraint rows for BGPC and new vertices (adjacent to the
     /// listed members) for D2GC.
     pub fn apply(&mut self, batch: &UpdateBatch) -> BatchStats {
+        self.apply_many(&[batch])
+    }
+
+    /// Apply several batches as one *fused* repair: each batch's edits
+    /// are recorded in the overlay in submission order (so the graph of
+    /// record is exactly what sequential [`DynamicSession::apply`] calls
+    /// would produce — a later batch may remove an edge an earlier one
+    /// added), then the session pays one compaction and one repair for
+    /// the union dirty frontier. This is the coordinator's
+    /// tiny-update-batching seam (DESIGN.md §12): a firehose of 2-edit
+    /// batches costs one pool region group, not one per batch.
+    ///
+    /// The returned stats describe the fused repair; `batch_edits` sums
+    /// the effective edits across all batches, and [`Self::batches`]
+    /// advances by `batches.len()`. An empty slice is a no-op repair.
+    pub fn apply_many(&mut self, batches: &[&UpdateBatch]) -> BatchStats {
         let mut edits = 0usize;
-        for &(v, u) in &batch.add_edges {
-            if self.delta.add_edge(v, u) {
-                edits += 1;
+        for batch in batches {
+            for &(v, u) in &batch.add_edges {
+                if self.delta.add_edge(v, u) {
+                    edits += 1;
+                }
             }
-        }
-        for &(v, u) in &batch.remove_edges {
-            if self.delta.remove_edge(v, u) {
-                edits += 1;
+            for &(v, u) in &batch.remove_edges {
+                if self.delta.remove_edge(v, u) {
+                    edits += 1;
+                }
             }
-        }
-        for members in &batch.add_nets {
-            // one edit for the row itself plus its *effective* member
-            // edits (duplicates are no-ops; the symmetric overlay's
-            // mirrored incidences count once)
-            edits += 1 + self.delta.add_net(members);
+            for members in &batch.add_nets {
+                // one edit for the row itself plus its *effective*
+                // member edits (duplicates are no-ops; the symmetric
+                // overlay's mirrored incidences count once)
+                edits += 1 + self.delta.add_net(members);
+            }
         }
         let (dirty, seeds) = self.delta.take_dirty();
         // The engines consume CSR, so the session compacts every batch.
@@ -198,8 +220,8 @@ impl<P: Problem> DynamicSession<P> {
         };
         stats.batch_edits = edits;
         stats.compact_seconds = compact_seconds;
-        self.colors = colors;
-        self.batches += 1;
+        self.colors = Arc::new(colors);
+        self.batches += batches.len();
         stats
     }
 
@@ -217,6 +239,13 @@ impl<P: Problem> DynamicSession<P> {
     /// The current committed coloring.
     pub fn colors(&self) -> &[i32] {
         &self.colors
+    }
+
+    /// The committed coloring as a shared handle — what the coordinator
+    /// publishes in its epoch snapshots: cloning is a refcount bump, and
+    /// the next repair replaces (never mutates) the shared vector.
+    pub fn colors_arc(&self) -> Arc<Vec<i32>> {
+        Arc::clone(&self.colors)
     }
 
     /// Number of distinct colors in the current coloring.
@@ -351,6 +380,46 @@ mod tests {
             pool.regions_dispatched() > after_start,
             "repair regions must dispatch onto the same pinned team"
         );
+    }
+
+    #[test]
+    fn apply_many_matches_sequential_applies_on_the_graph_of_record() {
+        // Fusion must preserve per-batch edit order: batch 2 removes an
+        // edge batch 1 added, batch 3 re-adds an edge batch 2 removed —
+        // a concat-and-apply fusion would get both wrong.
+        let g = random_bipartite(40, 60, 500, 7);
+        let cfg = Config::sim(schedule::N1_N2, 4);
+        let (mut seq, _) = DynamicSession::start(g.clone(), cfg.clone());
+        let (mut fused, _) = DynamicSession::start(g, cfg);
+        let mut b1 = UpdateBatch::default();
+        b1.add_edges.push((3, 10));
+        b1.remove_edges.push((5, seq.graph().vtxs(5).first().copied().unwrap_or(0)));
+        let mut b2 = UpdateBatch::default();
+        b2.remove_edges.push((3, 10)); // undoes b1's add
+        b2.add_edges.push((7, 20));
+        let mut b3 = UpdateBatch::default();
+        b3.add_edges.push((3, 10)); // re-adds what b2 removed
+        b3.add_nets.push(vec![1, 2, 61]); // grows the vertex side
+        let mut total_edits = 0;
+        for b in [&b1, &b2, &b3] {
+            total_edits += seq.apply(b).batch_edits;
+        }
+        let st = fused.apply_many(&[&b1, &b2, &b3]);
+        assert_eq!(st.batch_edits, total_edits, "effective edits must agree");
+        assert_eq!(fused.batches(), 3, "fusion still counts every batch");
+        assert!(seq.verify().is_ok() && fused.verify().is_ok());
+        // the graphs of record are identical net by net
+        let (a, b) = (seq.graph().clone(), fused.graph().clone());
+        assert_eq!(a.n_nets(), b.n_nets());
+        assert_eq!(a.n_vertices(), b.n_vertices());
+        for v in 0..a.n_nets() {
+            let mut x = a.vtxs(v).to_vec();
+            let mut y = b.vtxs(v).to_vec();
+            x.sort_unstable();
+            y.sort_unstable();
+            assert_eq!(x, y, "net {v} diverged between fused and sequential");
+        }
+        assert!(fused.graph().vtxs(3).contains(&10), "b3's re-add must win");
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod executor;
 pub mod schedule;
 
 pub use executor::{ExecReport, Executor, SharedBuf};
-pub use schedule::{ColorSchedule, RefreshStats};
+pub use schedule::{ColorSchedule, EpochSchedule, RefreshStats};
 
 use std::sync::Arc;
 

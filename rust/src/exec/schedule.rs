@@ -193,6 +193,62 @@ impl ColorSchedule {
     }
 }
 
+/// A [`ColorSchedule`] tagged with the commit *epoch* of the coloring
+/// it reflects (DESIGN.md §12). The coordinator's epoch-snapshot
+/// sessions hand executes an `(epoch, colors)` pair; `ensure` makes the
+/// schedule current for that epoch at the minimum cost — a no-op when
+/// the epoch matches, an incremental [`ColorSchedule::refresh`] when it
+/// lags, a full build only the first time.
+#[derive(Default)]
+pub struct EpochSchedule {
+    epoch: Option<u64>,
+    sched: Option<ColorSchedule>,
+}
+
+impl EpochSchedule {
+    /// An empty schedule; the first [`EpochSchedule::ensure`] builds it.
+    pub fn new() -> EpochSchedule {
+        EpochSchedule::default()
+    }
+
+    /// The epoch the cached schedule reflects (`None` before first use).
+    pub fn epoch(&self) -> Option<u64> {
+        self.epoch
+    }
+
+    /// The cached schedule (`None` before first use).
+    pub fn sched(&self) -> Option<&ColorSchedule> {
+        self.sched.as_ref()
+    }
+
+    /// Make the cached schedule reflect `colors` as of `epoch`.
+    /// Same epoch ⇒ nothing to do; a newer epoch ⇒ diff-refresh against
+    /// the cached buckets; first call ⇒ full counting-sort build
+    /// (reported as `rebuilt` with every item "moved", matching what
+    /// [`ColorSchedule::from_colors`] pays).
+    pub fn ensure(&mut self, epoch: u64, colors: &[i32]) -> RefreshStats {
+        match (&mut self.sched, self.epoch) {
+            (Some(_), Some(e)) if e == epoch => RefreshStats::default(),
+            (Some(s), _) => {
+                let rs = s.refresh(colors);
+                self.epoch = Some(epoch);
+                rs
+            }
+            (None, _) => {
+                let s = ColorSchedule::from_colors(colors);
+                let rs = RefreshStats {
+                    moved: s.n_items(),
+                    dirty_colors: s.n_colors(),
+                    rebuilt: true,
+                };
+                self.sched = Some(s);
+                self.epoch = Some(epoch);
+                rs
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +347,28 @@ mod tests {
         let rs = s.refresh(&shrunk);
         assert!(rs.rebuilt);
         assert_matches(&s, &shrunk);
+    }
+
+    #[test]
+    fn epoch_schedule_builds_refreshes_and_skips() {
+        let mut es = EpochSchedule::new();
+        assert!(es.sched().is_none() && es.epoch().is_none());
+        // first ensure: full build
+        let rs = es.ensure(0, &[0, 1, 0]);
+        assert!(rs.rebuilt);
+        assert_eq!(rs.moved, 3);
+        assert_eq!(es.epoch(), Some(0));
+        assert_eq!(es.sched().unwrap().n_items(), 3);
+        // same epoch: no work, even if the slice differs (the epoch is
+        // the authority on staleness)
+        let rs = es.ensure(0, &[0, 1, 0]);
+        assert_eq!(rs, RefreshStats::default());
+        // newer epoch: incremental refresh of the dirtied colors only
+        let rs = es.ensure(1, &[0, 2, 0]);
+        assert!(!rs.rebuilt);
+        assert_eq!(rs.moved, 1);
+        assert_eq!(es.epoch(), Some(1));
+        assert_eq!(es.sched().unwrap().color_set(2), &[1]);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use bgpc::coloring::{self, schedule, Balance, Config, ExecMode};
-use bgpc::coordinator::{EngineSel, Job, JobInput, Service, DEFAULT_POOL_THREADS};
+use bgpc::coordinator::{EngineSel, Job, JobInput, Service, ServiceOpts, DEFAULT_POOL_THREADS};
 use bgpc::graph::{generators::Preset, mtx, Bipartite, InstanceStats, Ordering, PRESETS};
 use bgpc::runtime::Runtime;
 use bgpc::sim::CostModel;
@@ -222,16 +222,23 @@ fn cmd_gen(flags: &HashMap<String, String>) -> ExitCode {
 fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
     let n_jobs: usize = flags.get("jobs").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
     let workers: usize = flags.get("workers").map(|s| s.parse().unwrap_or(2)).unwrap_or(2);
+    let shards: usize = flags.get("shards").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
     let pool: usize = flags
         .get("pool")
         .map(|s| s.parse().unwrap_or(DEFAULT_POOL_THREADS))
         .unwrap_or(DEFAULT_POOL_THREADS);
-    let svc = Service::start_with(workers, pool, Some(Runtime::default_dir()));
+    let svc = Service::start_sharded(ServiceOpts {
+        shards,
+        dispatchers: workers,
+        pool_threads: pool,
+        artifacts: Some(Runtime::default_dir()),
+        ..ServiceOpts::default()
+    });
     println!(
-        "coordinator up: {workers} dispatchers over a {pool}-thread pool, pjrt={}",
+        "coordinator up: {workers} dispatchers over {shards} shard(s) of {pool}-thread pools, pjrt={}",
         svc.has_pjrt()
     );
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..n_jobs {
         let p = PRESETS[i % PRESETS.len()];
         let g = Arc::new(p.bipartite(0.02, i as u64));
@@ -239,7 +246,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         // every fourth job runs on the real shared pool; the rest use
         // the deterministic 16-thread simulator
         let cfg = if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
-        rxs.push(svc.submit(Job {
+        handles.push(svc.submit_async(Job {
             name: format!("{}-{}", p.name, spec.name),
             input: JobInput::Bgpc(g),
             cfg,
@@ -247,8 +254,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         }));
     }
     let mut failures = 0;
-    for rx in rxs {
-        let o = rx.recv().unwrap();
+    for h in handles {
+        let o = h.wait();
         println!(
             "  {:<28} engine={:<6} colors={:>6} iters={} secs={:.4} valid={}",
             o.name, o.engine, o.n_colors, o.iterations, o.seconds, o.valid
@@ -258,6 +265,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         }
     }
     println!("metrics: {}", svc.metrics().summary());
+    let m = svc.metrics();
+    println!(
+        "latency: wait p50={:.3}ms p99={:.3}ms | service p50={:.3}ms p99={:.3}ms",
+        m.queue_wait_quantile(0.50) * 1e3,
+        m.queue_wait_quantile(0.99) * 1e3,
+        m.service_time_quantile(0.50) * 1e3,
+        m.service_time_quantile(0.99) * 1e3,
+    );
     println!("pool: {}", svc.pool_stats().summary());
     svc.shutdown();
     if failures == 0 {

@@ -23,13 +23,15 @@
 //! charges it to virtual clocks, the pool counts it into the per-worker
 //! busy counters.
 
+pub mod mpmc;
 pub mod pool;
 pub mod queue;
 
 use std::sync::atomic::Ordering as AOrd;
 use std::sync::Arc;
 
-pub use pool::{PoolStats, WorkerPool};
+pub use mpmc::{QueueStats, ShardedQueue};
+pub use pool::{PoolSet, PoolStats, WorkerPool};
 pub use queue::SharedQueue;
 
 /// Work performed by one item, reported by region bodies.

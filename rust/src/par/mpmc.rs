@@ -1,0 +1,291 @@
+//! [`ShardedQueue`] — a finely-sharded MPMC job queue for the
+//! coordinator's admission path (DESIGN.md §12).
+//!
+//! The previous admission path funneled every job through one
+//! `mpsc::Sender` and parked dispatchers on an
+//! `Arc<Mutex<mpsc::Receiver>>` — a lock *around* a channel, held while
+//! a worker waited, so admission serialized on a single mutex exactly
+//! the way the paper says coloring itself must not (§I: remove
+//! synchronization from the hot path). This queue shards the storage so
+//! producers and consumers on different shards never contend:
+//!
+//! * **Shards.** `n` independent `Mutex<VecDeque<T>>` rings. A push
+//!   locks only its target shard; a pop scans from the consumer's
+//!   *home* shard and steals round-robin from the others when home is
+//!   empty — Bogle & Slota's (arXiv:2107.00075) bulk-handoff shape:
+//!   affinity first, work conservation second.
+//! * **Parking.** Blocking consumers park on one `Condvar` guarding a
+//!   *tick* counter, never on a shard lock. A producer bumps the tick
+//!   after releasing the shard lock; a waking consumer re-scans all
+//!   shards before re-parking, which closes the lost-wakeup window
+//!   (the tick changed ⇒ something was pushed after our last scan).
+//!   No lock is ever held across a wait except the tick mutex itself,
+//!   which no producer holds while doing work.
+//! * **Close.** `close()` flips a flag and wakes everyone: pushes fail
+//!   (the item is handed back), pops drain whatever is left and then
+//!   return `None` — a drain-then-stop shutdown, so no accepted job is
+//!   dropped.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AOrd};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Poison-tolerant lock (a consumer panicking mid-`pop` must not brick
+/// admission for every later job).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cumulative queue counters (see [`ShardedQueue::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    /// Items accepted by `push`.
+    pub pushed: u64,
+    /// Items handed out by `pop`/`try_pop`.
+    pub popped: u64,
+    /// Pops satisfied from a non-home shard (work stealing).
+    pub stolen: u64,
+}
+
+/// A sharded multi-producer multi-consumer queue (see module docs).
+pub struct ShardedQueue<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    /// Bumped once per successful push; consumers park on changes.
+    tick: Mutex<u64>,
+    cv: Condvar,
+    closed: AtomicBool,
+    pushed: AtomicU64,
+    popped: AtomicU64,
+    stolen: AtomicU64,
+}
+
+impl<T> ShardedQueue<T> {
+    /// A queue with `n` shards (clamped to at least 1).
+    pub fn new(n: usize) -> ShardedQueue<T> {
+        let n = n.max(1);
+        ShardedQueue {
+            shards: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            tick: Mutex::new(0),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            pushed: AtomicU64::new(0),
+            popped: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue `item` on shard `shard % n_shards`. Returns the item
+    /// back when the queue is closed. The shard lock is released
+    /// *before* the wakeup tick is taken — a producer never holds two
+    /// locks, so pushes on distinct shards proceed fully in parallel.
+    pub fn push(&self, shard: usize, item: T) -> Result<(), T> {
+        if self.closed.load(AOrd::SeqCst) {
+            return Err(item);
+        }
+        {
+            let mut q = lock(&self.shards[shard % self.shards.len()]);
+            q.push_back(item);
+        }
+        self.pushed.fetch_add(1, AOrd::Relaxed);
+        {
+            let mut t = lock(&self.tick);
+            *t = t.wrapping_add(1);
+        }
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking dequeue: try `home` first, then steal round-robin
+    /// from the other shards. `None` means every shard was empty at the
+    /// moment it was scanned.
+    pub fn try_pop(&self, home: usize) -> Option<T> {
+        let n = self.shards.len();
+        for k in 0..n {
+            let s = (home + k) % n;
+            let item = lock(&self.shards[s]).pop_front();
+            if let Some(item) = item {
+                if k != 0 {
+                    self.stolen.fetch_add(1, AOrd::Relaxed);
+                }
+                self.popped.fetch_add(1, AOrd::Relaxed);
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Blocking dequeue with stealing: returns `None` only when the
+    /// queue is closed *and* fully drained. Waits on the tick condvar —
+    /// no shard lock is held while parked.
+    pub fn pop(&self, home: usize) -> Option<T> {
+        if let Some(item) = self.try_pop(home) {
+            return Some(item);
+        }
+        let mut t = lock(&self.tick);
+        loop {
+            // Re-scan under the tick lock: a push that completed after
+            // our failed scan has already bumped the tick (or is about
+            // to, blocked on this lock) — either way we cannot sleep
+            // through it.
+            if let Some(item) = self.try_pop(home) {
+                return Some(item);
+            }
+            if self.closed.load(AOrd::SeqCst) {
+                return None;
+            }
+            let cur = *t;
+            while *t == cur && !self.closed.load(AOrd::SeqCst) {
+                t = self.cv.wait(t).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+
+    /// Close the queue: subsequent pushes fail, blocked consumers wake,
+    /// remaining items stay poppable until drained.
+    pub fn close(&self) {
+        self.closed.store(true, AOrd::SeqCst);
+        let _t = lock(&self.tick);
+        self.cv.notify_all();
+    }
+
+    /// Whether `close` has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(AOrd::SeqCst)
+    }
+
+    /// Items currently enqueued across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| lock(s).len()).sum()
+    }
+
+    /// True when every shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| lock(s).is_empty())
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            pushed: self.pushed.load(AOrd::Relaxed),
+            popped: self.popped.load(AOrd::Relaxed),
+            stolen: self.stolen.load(AOrd::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_roundtrip_single_shard() {
+        let q = ShardedQueue::new(1);
+        q.push(0, 1).unwrap();
+        q.push(0, 2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(0), Some(1));
+        assert_eq!(q.pop(0), Some(2));
+        assert!(q.is_empty());
+        assert_eq!(q.try_pop(0), None);
+    }
+
+    #[test]
+    fn stealing_finds_work_on_other_shards() {
+        let q = ShardedQueue::new(4);
+        q.push(2, 42).unwrap();
+        // home shard 0 is empty; the pop must steal from shard 2
+        assert_eq!(q.pop(0), Some(42));
+        let st = q.stats();
+        assert_eq!(st.pushed, 1);
+        assert_eq!(st.popped, 1);
+        assert_eq!(st.stolen, 1);
+    }
+
+    #[test]
+    fn home_shard_preferred_over_steal() {
+        let q = ShardedQueue::new(2);
+        q.push(0, 10).unwrap();
+        q.push(1, 11).unwrap();
+        assert_eq!(q.pop(1), Some(11), "home first");
+        assert_eq!(q.stats().stolen, 0);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = ShardedQueue::new(2);
+        q.push(0, 1).unwrap();
+        q.push(1, 2).unwrap();
+        q.close();
+        assert_eq!(q.push(0, 3), Err(3), "closed queue rejects pushes");
+        let mut got = vec![q.pop(0).unwrap(), q.pop(0).unwrap()];
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "items enqueued before close still drain");
+        assert_eq!(q.pop(0), None, "then the queue reports closed");
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_deliver_everything_exactly_once() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 3;
+        const PER: usize = 500;
+        let q = Arc::new(ShardedQueue::new(4));
+        let seen: Arc<Vec<AtomicU64>> =
+            Arc::new((0..PRODUCERS * PER).map(|_| AtomicU64::new(0)).collect());
+        std::thread::scope(|s| {
+            for c in 0..CONSUMERS {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                s.spawn(move || {
+                    while let Some(i) = q.pop(c) {
+                        seen[i].fetch_add(1, AOrd::Relaxed);
+                    }
+                });
+            }
+            for p in 0..PRODUCERS {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        q.push(p + i, p * PER + i).unwrap();
+                    }
+                });
+            }
+            // producers finish, then close; consumers drain and exit
+            s.spawn({
+                let q = Arc::clone(&q);
+                move || {
+                    while q.stats().pushed < (PRODUCERS * PER) as u64 {
+                        std::thread::yield_now();
+                    }
+                    q.close();
+                }
+            });
+        });
+        assert!(
+            seen.iter().all(|c| c.load(AOrd::Relaxed) == 1),
+            "every item delivered exactly once"
+        );
+        let st = q.stats();
+        assert_eq!(st.pushed, (PRODUCERS * PER) as u64);
+        assert_eq!(st.popped, (PRODUCERS * PER) as u64);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(ShardedQueue::new(2));
+        std::thread::scope(|s| {
+            let h = {
+                let q = Arc::clone(&q);
+                s.spawn(move || q.pop(0))
+            };
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.push(1, 7usize).unwrap();
+            assert_eq!(h.join().unwrap(), Some(7), "parked consumer stole the push");
+        });
+    }
+}

@@ -461,6 +461,58 @@ impl WorkerPool {
     }
 }
 
+/// A fixed set of independent [`WorkerPool`] teams — the execution side
+/// of the coordinator's shard layout (DESIGN.md §12). Sessions and jobs
+/// are pinned to a shard (`id % n_shards`), so two shards never
+/// serialize on one `region_lock`; aggregate accounting still reads as
+/// one pool.
+pub struct PoolSet {
+    pools: Vec<Arc<WorkerPool>>,
+}
+
+impl PoolSet {
+    /// `shards` independent teams of `threads_each` threads (both
+    /// clamped to at least 1).
+    pub fn new(shards: usize, threads_each: usize) -> PoolSet {
+        let shards = shards.max(1);
+        let threads_each = threads_each.max(1);
+        PoolSet {
+            pools: (0..shards).map(|_| Arc::new(WorkerPool::new(threads_each))).collect(),
+        }
+    }
+
+    /// Number of shards (always ≥ 1).
+    pub fn n_shards(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// The pool owning shard `i % n_shards`.
+    pub fn shard(&self, i: usize) -> &Arc<WorkerPool> {
+        &self.pools[i % self.pools.len()]
+    }
+
+    /// Aggregated counters across all shards: threads, regions and
+    /// items sum; the per-worker busy vectors concatenate (shard 0's
+    /// workers first). With one shard this is exactly that pool's
+    /// [`WorkerPool::stats`].
+    pub fn stats(&self) -> PoolStats {
+        let mut agg = PoolStats { threads: 0, regions: 0, items: 0, busy_units: Vec::new() };
+        for p in &self.pools {
+            let s = p.stats();
+            agg.threads += s.threads;
+            agg.regions += s.regions;
+            agg.items += s.items;
+            agg.busy_units.extend_from_slice(&s.busy_units);
+        }
+        agg
+    }
+
+    /// Per-shard counter snapshots, indexed by shard.
+    pub fn shard_stats(&self) -> Vec<PoolStats> {
+        self.pools.iter().map(|p| p.stats()).collect()
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
@@ -583,6 +635,27 @@ mod tests {
             Cost::new(1)
         });
         assert_eq!(count.load(AOrd::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_set_shards_are_independent_and_aggregate() {
+        let set = PoolSet::new(2, 2);
+        assert_eq!(set.n_shards(), 2);
+        let mut states = vec![(); 2];
+        set.shard(0).region(&mut states, 2, 100, 8, |_, _, _, _| Cost::new(1));
+        set.shard(1).region(&mut states, 2, 50, 8, |_, _, _, _| Cost::new(2));
+        // shard(i) wraps modulo n_shards
+        assert!(Arc::ptr_eq(set.shard(0), set.shard(2)));
+        let agg = set.stats();
+        assert_eq!(agg.threads, 4, "2 shards x 2 threads");
+        assert_eq!(agg.regions, 2);
+        assert_eq!(agg.items, 150);
+        assert_eq!(agg.busy_units.len(), 4);
+        assert_eq!(agg.busy_units.iter().sum::<u64>(), 100 + 100);
+        let per = set.shard_stats();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].items, 100);
+        assert_eq!(per[1].items, 50);
     }
 
     #[test]

@@ -284,8 +284,7 @@ fn coordinator_d2gc_session_absorbs_batch_end_to_end() {
             cfg: cfg.clone(),
             engine: EngineSel::Auto,
         })
-        .recv()
-        .unwrap();
+        .wait();
     assert!(o.valid, "{:?}", o.error);
     assert_eq!(o.problem, Some(bgpc::Problem::D2gc));
     assert!(o.batch.is_some());
@@ -301,6 +300,111 @@ fn coordinator_d2gc_session_absorbs_batch_end_to_end() {
     }
     let colors = svc.session_colors(sid).expect("session open");
     assert!(bgpc::coloring::verify::d2gc_valid(mirror.graph(), &colors).is_ok());
+    assert!(svc.close_session(sid));
+    svc.shutdown();
+}
+
+/// Session-lifecycle race: closing a session with updates still queued
+/// must complete every handle — the batches the drain already committed
+/// report contiguous epochs in submit order, everything later fails
+/// with a "closed" error, and no coloring is served afterwards.
+#[test]
+fn close_session_during_inflight_updates_fails_cleanly() {
+    use bgpc::coordinator::{EngineSel, Job, JobInput, Service, ServiceOpts};
+    use std::sync::Arc;
+    let svc = Service::start_sharded(ServiceOpts {
+        dispatchers: 2,
+        fuse_updates: 1,
+        ..ServiceOpts::default()
+    });
+    let g = bgpc::graph::generators::random_bipartite(60, 90, 600, 23);
+    let cfg = Config::sim(schedule::N1_N2, 4);
+    let (sid, init) = svc.open_session("racy", &g, cfg.clone());
+    assert!(init.valid);
+    let mut handles = Vec::new();
+    for k in 0..10u32 {
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push((k % 60, (k * 13) % 90));
+        handles.push(svc.submit_async(Job {
+            name: format!("r{k}"),
+            input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+            cfg: cfg.clone(),
+            engine: EngineSel::Auto,
+        }));
+    }
+    // Race the close against the drain: it blocks on the state lock
+    // until any in-flight batch commits, then fails the leftovers.
+    assert!(svc.close_session(sid));
+    let mut next_epoch = 1u64;
+    for h in handles {
+        let o = h.wait();
+        if o.valid {
+            assert_eq!(
+                o.epoch,
+                Some(next_epoch),
+                "committed batches form an in-order prefix"
+            );
+            next_epoch += 1;
+        } else {
+            let err = o.error.expect("failed updates carry an error");
+            assert!(err.contains("closed"), "unexpected error: {err}");
+        }
+    }
+    assert!(svc.session_colors(sid).is_none(), "closed session serves nothing");
+    assert!(!svc.close_session(sid), "second close is a no-op");
+    svc.shutdown();
+}
+
+/// Out-of-order pickup, in-order apply: three dispatchers over two
+/// shards race to drain the same session, but the pending queue admits
+/// in submit order and the drain applies FIFO — every outcome's commit
+/// epoch equals its submit index + 1, no matter which dispatcher (or
+/// stolen lane) picked it up.
+#[test]
+fn out_of_order_pickup_still_commits_in_submit_order() {
+    use bgpc::coordinator::{EngineSel, Job, JobInput, Service, ServiceOpts};
+    use std::sync::Arc;
+    let svc = Service::start_sharded(ServiceOpts {
+        shards: 2,
+        dispatchers: 3,
+        pool_threads: 1,
+        fuse_updates: 1,
+        artifacts: None,
+    });
+    let g = bgpc::graph::generators::random_bipartite(80, 120, 900, 29);
+    let cfg = Config::sim(schedule::N1_N2, 4);
+    let (sid, init) = svc.open_session("ordered", &g, cfg.clone());
+    assert!(init.valid);
+    let n = 20u32;
+    let mut handles = Vec::new();
+    for k in 0..n {
+        let mut batch = UpdateBatch::default();
+        batch.add_edges.push(((k * 3) % 80, (k * 7) % 120));
+        handles.push(svc.submit_async(Job {
+            name: format!("o{k}"),
+            input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+            cfg: cfg.clone(),
+            engine: EngineSel::Auto,
+        }));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let o = h.wait();
+        assert!(o.valid, "o{i}: {:?}", o.error);
+        assert_eq!(
+            o.epoch,
+            Some(i as u64 + 1),
+            "batch {i} must commit as epoch {}",
+            i + 1
+        );
+    }
+    assert_eq!(svc.session_epoch(sid), Some(n as u64));
+    let colors = svc.session_colors(sid).expect("session open");
+    // cross-check against an independently built post-stream graph
+    let mut mirror = bgpc::dynamic::DeltaBipartite::new(g);
+    for k in 0..n {
+        mirror.add_edge((k * 3) % 80, (k * 7) % 120);
+    }
+    assert!(bgpc::coloring::verify::bgpc_valid(mirror.graph(), &colors).is_ok());
     assert!(svc.close_session(sid));
     svc.shutdown();
 }

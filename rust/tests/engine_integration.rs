@@ -134,7 +134,7 @@ fn service_mixed_workload() {
         }
     }
     for rx in rxs {
-        let o = rx.recv().unwrap();
+        let o = rx.wait();
         assert!(o.valid, "{} failed: {:?}", o.name, o.error);
     }
     assert_eq!(svc.metrics().failures(), 0);

@@ -191,3 +191,57 @@ fn refresh_after_dynamic_repair_equals_full_rebuild() {
         }
     }
 }
+
+/// Session-lifecycle race on the sharded service: a kernel panic
+/// mid-execute must surface as that job's error while leaving the
+/// session, its shard pool, the sibling shard, and the dispatchers all
+/// healthy — updates and executes keep flowing afterwards.
+#[test]
+fn kernel_panic_mid_execute_leaves_shard_healthy() {
+    use bgpc::coordinator::{EngineSel, ExecKernel, Job, JobInput, Service, ServiceOpts};
+    use bgpc::dynamic::UpdateBatch;
+    use bgpc::graph::generators::random_bipartite;
+    let svc = Service::start_sharded(ServiceOpts {
+        shards: 2,
+        dispatchers: 2,
+        pool_threads: 2,
+        fuse_updates: 4,
+        artifacts: None,
+    });
+    // two sessions land on the two distinct shards (id % shards)
+    let ga = random_bipartite(60, 90, 600, 51);
+    let gb = random_bipartite(50, 80, 500, 52);
+    let cfg = Config::sim(schedule::N1_N2, 4);
+    let (sa, ia) = svc.open_session("a", &ga, cfg.clone());
+    let (sb, ib) = svc.open_session("b", &gb, cfg.clone());
+    assert!(ia.valid && ib.valid);
+    let bomb = ExecKernel::new(|item, _color| {
+        assert!(item != 5, "planted kernel failure");
+        Cost::new(1)
+    });
+    let o = svc.execute("boom", sa, 1, bomb).wait();
+    assert!(!o.valid);
+    assert!(o.error.unwrap().contains("kernel panicked"));
+    // the panicking session still serves reads, executes, and updates
+    assert!(svc.session_colors(sa).is_some());
+    let ok = svc.execute("retry", sa, 1, ExecKernel::new(|_, _| Cost::new(1))).wait();
+    assert!(ok.valid, "{:?}", ok.error);
+    let mut batch = UpdateBatch::default();
+    batch.add_edges.push((3, 7));
+    let u = svc
+        .submit_async(Job {
+            name: "after-boom".into(),
+            input: JobInput::Update { session: sa, batch: std::sync::Arc::new(batch) },
+            cfg: cfg.clone(),
+            engine: EngineSel::Auto,
+        })
+        .wait();
+    assert!(u.valid, "{:?}", u.error);
+    assert_eq!(u.epoch, Some(1));
+    // the sibling shard never noticed
+    let other = svc.execute("sibling", sb, 2, ExecKernel::new(|_, _| Cost::new(1))).wait();
+    assert!(other.valid, "{:?}", other.error);
+    assert!(svc.shard_stats().iter().all(|s| s.regions > 0));
+    assert!(svc.close_session(sa) && svc.close_session(sb));
+    svc.shutdown();
+}

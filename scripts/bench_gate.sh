@@ -1,0 +1,97 @@
+#!/usr/bin/env sh
+# Perf-trajectory gate: compare a bench CSV against its committed floor.
+#
+#   scripts/bench_gate.sh                      # gate every BENCH_*.json
+#   scripts/bench_gate.sh service              # gate one bench by name
+#   scripts/bench_gate.sh --update [name...]   # ratchet floors to current
+#
+# Each repo-root BENCH_<name>.json records, one key per line, the floor
+# for one gated metric:
+#
+#   bench      bench target (cargo bench --bench <bench>)
+#   csv        CSV the bench writes under rust/bench_results/
+#   column     CSV column holding the gated metric
+#   value      committed floor (geomean of the column must stay >= this,
+#              within tolerance)
+#   tolerance  allowed relative slack, e.g. 0.25
+#   note       free-text provenance
+#
+# The gate passes when geomean(column) >= value * (1 - tolerance).
+# Run the bench first (`make bench-smoke` or `cargo bench --bench ...`);
+# a missing CSV is a hard failure so CI cannot skip the gate silently.
+set -eu
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+update=0
+names=""
+for arg in "$@"; do
+    case "$arg" in
+        --update) update=1 ;;
+        -*) echo "bench_gate: unknown flag $arg" >&2; exit 2 ;;
+        *) names="$names $arg" ;;
+    esac
+done
+if [ -z "$names" ]; then
+    for f in "$root"/BENCH_*.json; do
+        [ -e "$f" ] || { echo "bench_gate: no BENCH_*.json files at $root" >&2; exit 2; }
+        n=${f##*/BENCH_}
+        names="$names ${n%.json}"
+    done
+fi
+
+# flat one-key-per-line JSON: pull a string/number field by key
+field() {
+    sed -n "s/^[[:space:]]*\"$2\"[[:space:]]*:[[:space:]]*\"\{0,1\}\([^\",]*\)\"\{0,1\},\{0,1\}[[:space:]]*$/\1/p" "$1" | head -n 1
+}
+
+fail=0
+# word-splitting is the point: $names is a space-joined list built above
+# shellcheck disable=SC2086
+set -- $names
+for name in "$@"; do
+    spec="$root/BENCH_$name.json"
+    if [ ! -f "$spec" ]; then
+        echo "bench_gate: $spec not found" >&2
+        fail=1
+        continue
+    fi
+    csv_name=$(field "$spec" csv)
+    column=$(field "$spec" column)
+    floor=$(field "$spec" value)
+    tol=$(field "$spec" tolerance)
+    csv="$root/rust/bench_results/$csv_name"
+    if [ ! -f "$csv" ]; then
+        echo "bench_gate: $name: $csv missing — run the bench first (make bench-smoke)" >&2
+        fail=1
+        continue
+    fi
+    # geomean of the named column, skipping empty/non-positive cells
+    # (the baseline row leaves its speedup cell blank)
+    cur=$(awk -F, -v col="$column" '
+        NR == 1 { for (i = 1; i <= NF; i++) if ($i == col) ix = i; next }
+        ix && $ix + 0 > 0 { s += log($ix); n++ }
+        END {
+            if (!ix) { print "NOCOL"; exit }
+            if (!n) { print "NOVAL"; exit }
+            printf "%.6f", exp(s / n)
+        }' "$csv")
+    case "$cur" in
+        NOCOL) echo "bench_gate: $name: column '$column' not in $csv" >&2; fail=1; continue ;;
+        NOVAL) echo "bench_gate: $name: no positive '$column' values in $csv" >&2; fail=1; continue ;;
+    esac
+    if [ "$update" = 1 ]; then
+        tmp="$spec.tmp"
+        sed "s/^\([[:space:]]*\"value\"[[:space:]]*:[[:space:]]*\)[0-9.]*\(,\{0,1\}\)[[:space:]]*$/\1$cur\2/" "$spec" > "$tmp"
+        mv "$tmp" "$spec"
+        echo "bench_gate: $name: floor ratcheted to $cur (was $floor)"
+        continue
+    fi
+    ok=$(awk -v c="$cur" -v f="$floor" -v t="$tol" 'BEGIN { print (c >= f * (1 - t)) ? 1 : 0 }')
+    if [ "$ok" = 1 ]; then
+        echo "bench_gate: $name: geomean($column) = $cur >= $floor*(1-$tol)  [ok]"
+    else
+        echo "bench_gate: $name: geomean($column) = $cur < $floor*(1-$tol)  [REGRESSION]" >&2
+        fail=1
+    fi
+done
+exit "$fail"

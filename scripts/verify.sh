@@ -75,7 +75,10 @@ cargo run --release --example parallel_sweep >/dev/null
 # Reduced-size gated benches — delegated to `make bench-smoke` so this
 # and the CI bench-smoke job share one command (no drift in the bench
 # list): scheduler (pool >= 2x spawn), dynamic (repair >= 5x recolor),
-# execute (colored exec valid + B1/B2 flatten the critical path).
+# execute (colored exec valid + B1/B2 flatten the critical path),
+# service (sharded submit_async >= 4x the single-mutex baseline).
+# CI then re-checks the emitted CSVs against the committed BENCH_*.json
+# floors via scripts/bench_gate.sh.
 if [ "${BENCH_SMOKE:-0}" = "1" ]; then
     echo "== bench smoke (BENCH_SMOKE=1; make bench-smoke) =="
     (cd .. && make bench-smoke)
