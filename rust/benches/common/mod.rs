@@ -159,3 +159,39 @@ pub fn write_csv(name: &str, header: &str, lines: &[String]) {
 pub fn quick_mode() -> bool {
     std::env::var("BGPC_QUICK").is_ok()
 }
+
+/// Opt-in bench tracing (`BENCH_TRACE=1`): each gated bench emits one
+/// Chrome-trace JSON per preset/segment next to its CSVs. Requires the
+/// crate `trace` feature; without it the helpers warn once and no-op.
+pub fn trace_enabled() -> bool {
+    std::env::var("BENCH_TRACE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Arm the tracer for a traced segment. Drains any stale events left by
+/// a previous segment so each exported file covers exactly one segment.
+pub fn trace_begin() {
+    if !trace_enabled() {
+        return;
+    }
+    if !bgpc::obs::trace::available() {
+        eprintln!("[trace] BENCH_TRACE=1 but the `trace` feature is off; rebuild with --features trace");
+        return;
+    }
+    let _ = bgpc::obs::trace::drain();
+    bgpc::obs::trace::set_enabled(true);
+}
+
+/// Disarm the tracer and export the segment to `bench_results/trace_<name>.json`.
+pub fn trace_end(name: &str) {
+    if !trace_enabled() || !bgpc::obs::trace::available() {
+        return;
+    }
+    bgpc::obs::trace::set_enabled(false);
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("trace_{name}.json"));
+    match bgpc::obs::trace::write_chrome(&path) {
+        Ok(()) => println!("[trace] bench_results/trace_{name}.json"),
+        Err(e) => eprintln!("[trace] failed to write trace_{name}.json: {e}"),
+    }
+}

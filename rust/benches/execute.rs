@@ -73,9 +73,13 @@ fn main() {
         "graph", "bal", "t", "colors", "max_set", "busy_total", "max_col_busy", "crit%", "wall_s"
     );
     let mut csv = Vec::new();
+    // (row index, unbalanced_max / best_balanced_max) for the skewed
+    // presets — patched into the `flatten` CSV column before writing
+    let mut flatten_at: Vec<(usize, f64)> = Vec::new();
     let mut skewed_ratios = Vec::new();
     for p in PRESETS.iter() {
         let g = p.bipartite(common::scale(), common::seed());
+        common::trace_begin(); // BENCH_TRACE=1: one trace per preset
         // sequential reference for one sweep (integer, order-free)
         let mut seq = vec![0u64; g.n_nets()];
         for u in 0..g.n_vertices() {
@@ -87,6 +91,7 @@ fn main() {
 
         // busy profile per balance (deterministic, thread-independent)
         let mut max_busy = [0u64; 3];
+        let mut t0_rows = [0usize; 3];
         let mut uniform_share = 0.0f64;
         for (bi, &(tag, bal)) in balances.iter().enumerate() {
             let r = common::run(&g, schedule::N1_N2, 16, bgpc::graph::Ordering::Natural, bal);
@@ -105,6 +110,7 @@ fn main() {
                 );
                 if t == threads[0] {
                     max_busy[bi] = rep.max_color_busy();
+                    t0_rows[bi] = csv.len(); // the row pushed just below
                     if bal == Balance::None {
                         let nc = rep.per_color_busy.iter().filter(|&&b| b > 0).count().max(1);
                         uniform_share = rep.busy_total() as f64 / nc as f64;
@@ -150,11 +156,18 @@ fn main() {
                 max_busy[0]
             );
             skewed_ratios.push(best.max(1) as f64 / max_busy[0].max(1) as f64);
+            // flatten factor (inverse of the gated ratio) lands on the
+            // best-balanced t=threads[0] row so scripts/bench_gate.sh can
+            // floor exactly what the geomean gate below asserts
+            let bi = if max_busy[1] <= max_busy[2] { 1 } else { 2 };
+            flatten_at
+                .push((t0_rows[bi], max_busy[0].max(1) as f64 / best.max(1) as f64));
         }
         println!(
             "  -> {:<14} skewed={} unbalanced_max={} best_balanced_max={}",
             p.name, skewed, max_busy[0], best
         );
+        common::trace_end(&format!("execute_{}", p.name));
     }
     assert!(
         !skewed_ratios.is_empty(),
@@ -170,9 +183,17 @@ fn main() {
         skewed_ratios.len(),
         geo
     );
+    let csv: Vec<String> = csv
+        .into_iter()
+        .enumerate()
+        .map(|(i, line)| match flatten_at.iter().find(|&&(ix, _)| ix == i) {
+            Some(&(_, f)) => format!("{line},{f:.3}"),
+            None => format!("{line},"),
+        })
+        .collect();
     common::write_csv(
         "execute.csv",
-        "graph,balance,threads,n_colors,max_set,busy_total,max_color_busy,critical_share,wall_secs",
+        "graph,balance,threads,n_colors,max_set,busy_total,max_color_busy,critical_share,wall_secs,flatten",
         &csv,
     );
 

@@ -236,6 +236,10 @@ fn main() {
     base.shutdown();
 
     // ---- sharded: lock-free admission, fused drains, epoch snapshots ----
+    // BENCH_TRACE=1: trace the sharded half end-to-end — session bring-up
+    // (coloring phases), the firehose (dynamic repair + coordinator
+    // dispatch), and executes (pool regions + per-color frontiers)
+    common::trace_begin();
     let svc = Service::start_sharded(ServiceOpts {
         shards: 2,
         dispatchers: 2,
@@ -301,6 +305,7 @@ fn main() {
         m.queue_wait_quantile(0.99) * 1e3
     );
     svc.shutdown();
+    common::trace_end("service_sharded");
 
     let ratio = sh_stats.jps() / base_stats.jps().max(1e-12);
     println!(

@@ -127,10 +127,13 @@ pub fn run_capped<D: Driver>(
         };
 
         // --- coloring phase (Alg. 4 / 6 / 8) ---
-        let cr = if net_color {
-            net::color_phase(g, &colors, d, ts, spec.chunk, spec.net_alg, bal)
-        } else {
-            vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+        let cr = {
+            let _sp = crate::obs::trace::span_n("bgpc.speculate", w.len() as u64);
+            if net_color {
+                net::color_phase(g, &colors, d, ts, spec.chunk, spec.net_alg, bal)
+            } else {
+                vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+            }
         };
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
@@ -138,43 +141,46 @@ pub fn run_capped<D: Driver>(
         is_sim = cr.sim_ns.is_some();
 
         // --- conflict removal phase (Alg. 5 / 7) ---
-        let (rr, w_next) = if net_conflict {
-            let r1 = net::conflict_phase(g, &colors, d, ts, spec.chunk);
-            let r2 = net::rebuild_queue(
-                n,
-                &colors,
-                d,
-                ts,
-                spec.chunk,
-                spec.lazy_queues,
-                &shared,
-            );
-            let wn = collect_next(spec.lazy_queues, ts, &shared);
-            let combined = crate::par::RegionOut {
-                real_secs: r1.real_secs + r2.real_secs,
-                sim_ns: match (r1.sim_ns, r2.sim_ns) {
-                    (Some(a), Some(b)) => Some(a + b),
-                    _ => None,
-                },
-                busy_units: Vec::new(),
-            };
-            work_units += r1.busy_units.iter().sum::<u64>()
-                + r2.busy_units.iter().sum::<u64>();
-            (combined, wn)
-        } else {
-            let r = vertex::conflict_phase(
-                g,
-                &w,
-                &colors,
-                d,
-                ts,
-                spec.chunk,
-                spec.lazy_queues,
-                &shared,
-            );
-            work_units += r.busy_units.iter().sum::<u64>();
-            let wn = collect_next(spec.lazy_queues, ts, &shared);
-            (r, wn)
+        let (rr, w_next) = {
+            let _sp = crate::obs::trace::span_n("bgpc.detect", w.len() as u64);
+            if net_conflict {
+                let r1 = net::conflict_phase(g, &colors, d, ts, spec.chunk);
+                let r2 = net::rebuild_queue(
+                    n,
+                    &colors,
+                    d,
+                    ts,
+                    spec.chunk,
+                    spec.lazy_queues,
+                    &shared,
+                );
+                let wn = collect_next(spec.lazy_queues, ts, &shared);
+                let combined = crate::par::RegionOut {
+                    real_secs: r1.real_secs + r2.real_secs,
+                    sim_ns: match (r1.sim_ns, r2.sim_ns) {
+                        (Some(a), Some(b)) => Some(a + b),
+                        _ => None,
+                    },
+                    busy_units: Vec::new(),
+                };
+                work_units += r1.busy_units.iter().sum::<u64>()
+                    + r2.busy_units.iter().sum::<u64>();
+                (combined, wn)
+            } else {
+                let r = vertex::conflict_phase(
+                    g,
+                    &w,
+                    &colors,
+                    d,
+                    ts,
+                    spec.chunk,
+                    spec.lazy_queues,
+                    &shared,
+                );
+                work_units += r.busy_units.iter().sum::<u64>();
+                let wn = collect_next(spec.lazy_queues, ts, &shared);
+                (r, wn)
+            }
         };
         it.conflict_secs = rr.seconds();
         sim_secs += it.color_secs + it.conflict_secs;
@@ -184,6 +190,7 @@ pub fn run_capped<D: Driver>(
 
     if !w.is_empty() {
         // safety net: finish sequentially (exact greedy over what's left)
+        let _sp = crate::obs::trace::span_n("bgpc.seq_finish", w.len() as u64);
         sequential_finish(g, &w, &colors, &mut ts[0], d.now());
     }
 

@@ -295,45 +295,52 @@ pub fn run_capped<D: Driver>(
             ..Default::default()
         };
 
-        let cr = if net_color {
-            net_color_phase(g, &colors, d, ts, spec.chunk)
-        } else {
-            vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+        let cr = {
+            let _sp = crate::obs::trace::span_n("d2gc.speculate", w.len() as u64);
+            if net_color {
+                net_color_phase(g, &colors, d, ts, spec.chunk)
+            } else {
+                vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+            }
         };
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
         work_units += cr.busy_units.iter().sum::<u64>();
         is_sim = cr.sim_ns.is_some();
 
-        let (rr, w_next) = if net_conflict {
-            let r1 = net_conflict_phase(g, &colors, d, ts, spec.chunk);
-            let r2 = rebuild_queue(g, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
-            let wn = collect_next(spec.lazy_queues, ts, &shared);
-            work_units +=
-                r1.busy_units.iter().sum::<u64>() + r2.busy_units.iter().sum::<u64>();
-            let combined = RegionOut {
-                real_secs: r1.real_secs + r2.real_secs,
-                sim_ns: match (r1.sim_ns, r2.sim_ns) {
-                    (Some(a), Some(b)) => Some(a + b),
-                    _ => None,
-                },
-                busy_units: Vec::new(),
-            };
-            (combined, wn)
-        } else {
-            let r = vertex::conflict_phase(
-                g,
-                &w,
-                &colors,
-                d,
-                ts,
-                spec.chunk,
-                spec.lazy_queues,
-                &shared,
-            );
-            work_units += r.busy_units.iter().sum::<u64>();
-            let wn = collect_next(spec.lazy_queues, ts, &shared);
-            (r, wn)
+        let (rr, w_next) = {
+            let _sp = crate::obs::trace::span_n("d2gc.detect", w.len() as u64);
+            if net_conflict {
+                let r1 = net_conflict_phase(g, &colors, d, ts, spec.chunk);
+                let r2 =
+                    rebuild_queue(g, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
+                let wn = collect_next(spec.lazy_queues, ts, &shared);
+                work_units +=
+                    r1.busy_units.iter().sum::<u64>() + r2.busy_units.iter().sum::<u64>();
+                let combined = RegionOut {
+                    real_secs: r1.real_secs + r2.real_secs,
+                    sim_ns: match (r1.sim_ns, r2.sim_ns) {
+                        (Some(a), Some(b)) => Some(a + b),
+                        _ => None,
+                    },
+                    busy_units: Vec::new(),
+                };
+                (combined, wn)
+            } else {
+                let r = vertex::conflict_phase(
+                    g,
+                    &w,
+                    &colors,
+                    d,
+                    ts,
+                    spec.chunk,
+                    spec.lazy_queues,
+                    &shared,
+                );
+                work_units += r.busy_units.iter().sum::<u64>();
+                let wn = collect_next(spec.lazy_queues, ts, &shared);
+                (r, wn)
+            }
         };
         it.conflict_secs = rr.seconds();
         sim_secs += it.color_secs + it.conflict_secs;
@@ -343,6 +350,7 @@ pub fn run_capped<D: Driver>(
 
     if !w.is_empty() {
         // safety net: finish sequentially (exact greedy over what's left)
+        let _sp = crate::obs::trace::span_n("d2gc.seq_finish", w.len() as u64);
         sequential_finish(g, &w, &colors, &mut ts[0], d.now());
     }
 

@@ -1,98 +1,96 @@
 //! Service metrics: lock-free counters recorded per completed job,
 //! plus log-bucketed latency histograms (queue wait / service time)
 //! feeding the p50/p99 figures the `serve --pool` summary prints.
+//!
+//! Since the `obs` layer landed this is a thin façade: every counter
+//! and histogram lives in the service's [`Registry`] under a
+//! `coord.*` name, so the same cells the methods below read also show
+//! up in [`Registry::exposition`] — the text snapshot the `Stats` job
+//! and `serve --stats-interval` print — next to the pool and queue
+//! gauges. The façade keeps the typed recording API (`record`,
+//! `observe_job`, `add_recolored`) and the summary line stable.
 
-use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coloring::Problem;
+use crate::obs::{Counter, Hist, Registry};
 
-/// Number of log-2 microsecond buckets (bucket `b` holds durations in
-/// `[2^b, 2^(b+1))` µs — 64 buckets cover anything a u64 can express).
-const BUCKETS: usize = 64;
-
-/// A lock-free log-2 latency histogram over microseconds. Observation
-/// is two relaxed atomic adds; quantiles are bucket upper bounds (a
-/// ≤2× overestimate by construction — fine for p50/p99 trend lines and
+/// A lock-free log-2 latency histogram over microseconds: a [`Duration`]
+/// façade over [`obs::Hist`](crate::obs::Hist). Observation is two
+/// relaxed atomic adds; quantiles are bucket upper bounds (a ≤2×
+/// overestimate by construction — fine for p50/p99 trend lines and
 /// regression gates, which compare like against like).
-#[derive(Debug)]
-pub struct Histogram {
-    counts: Vec<AtomicU64>,
-    sum_us: AtomicU64,
-    n: AtomicU64,
-}
+///
+/// Edge cases: a 0µs observation lands in the first bucket and a
+/// `u64::MAX`-µs one in the last (durations past `u64` microseconds
+/// saturate instead of truncating); no path shifts a `u64` by 64.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<Hist>);
 
 impl Default for Histogram {
     fn default() -> Histogram {
-        Histogram {
-            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            sum_us: AtomicU64::new(0),
-            n: AtomicU64::new(0),
-        }
+        Histogram(Arc::new(Hist::default()))
     }
 }
 
 impl Histogram {
+    /// The histogram registered in `reg` under `name` (shared cells:
+    /// the registry exposition renders the same data this reads).
+    fn registered(reg: &Registry, name: &str) -> Histogram {
+        Histogram(reg.hist(name))
+    }
+
     pub fn observe(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        // bucket = floor(log2(us)), with 0µs landing in bucket 0
-        let b = 63 - us.max(1).leading_zeros() as usize;
-        self.counts[b].fetch_add(1, AOrd::Relaxed);
-        self.sum_us.fetch_add(us, AOrd::Relaxed);
-        self.n.fetch_add(1, AOrd::Relaxed);
+        // saturate, don't truncate: a >584-millennium duration is a
+        // bug, but it should land in the last bucket, not a random one
+        let us = u64::try_from(d.as_micros()).unwrap_or(u64::MAX);
+        self.0.record(us);
     }
 
     pub fn count(&self) -> u64 {
-        self.n.load(AOrd::Relaxed)
+        self.0.count()
     }
 
     pub fn mean_secs(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(AOrd::Relaxed) as f64 * 1e-6 / n as f64
+        self.0.mean().map_or(0.0, |us| us * 1e-6)
     }
 
-    /// The `q`-quantile (0 < q <= 1) in seconds: walk the buckets to
-    /// the one holding the ceil(q·n)-th observation and report its
-    /// upper bound. 0.0 when empty.
+    /// The `q`-quantile (0 < q <= 1) in seconds: the holding bucket's
+    /// upper bound. 0.0 when empty ([`Histogram::quantile_secs`]
+    /// distinguishes that case).
     pub fn quantile(&self, q: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
-        let mut seen = 0u64;
-        for (b, c) in self.counts.iter().enumerate() {
-            seen += c.load(AOrd::Relaxed);
-            if seen >= target {
-                return (1u128 << (b + 1)) as f64 * 1e-6;
-            }
-        }
-        (1u128 << BUCKETS) as f64 * 1e-6
+        self.quantile_secs(q).unwrap_or(0.0)
+    }
+
+    /// The `q`-quantile in seconds, `None` when the histogram is empty
+    /// (renderers print `-` rather than a garbage bucket bound).
+    pub fn quantile_secs(&self, q: f64) -> Option<f64> {
+        self.0.quantile(q).map(|us| us * 1e-6)
     }
 }
 
-/// Aggregated job counters.
-#[derive(Debug, Default)]
+/// Aggregated job counters, all living in one [`Registry`] under
+/// `coord.*` names.
+#[derive(Debug)]
 pub struct Metrics {
-    jobs: AtomicU64,
-    failures: AtomicU64,
-    pjrt_jobs: AtomicU64,
-    total_colors: AtomicU64,
+    registry: Arc<Registry>,
+    jobs: Arc<Counter>,
+    failures: Arc<Counter>,
+    pjrt_jobs: Arc<Counter>,
+    total_colors: Arc<Counter>,
     /// Total engine seconds, in microseconds (atomic f64 substitute).
-    total_us: AtomicU64,
+    total_us: Arc<Counter>,
     /// BGPC dynamic-session update batches applied.
-    updates_bgpc: AtomicU64,
+    updates_bgpc: Arc<Counter>,
     /// D2GC dynamic-session update batches applied.
-    updates_d2gc: AtomicU64,
+    updates_d2gc: Arc<Counter>,
     /// Vertices recolored across all update batches.
-    recolored: AtomicU64,
+    recolored: Arc<Counter>,
     /// Colored-execution jobs completed.
-    executes: AtomicU64,
+    executes: Arc<Counter>,
     /// Kernel invocations across all execute jobs.
-    exec_items: AtomicU64,
+    exec_items: Arc<Counter>,
     /// Admission → dispatcher pickup, per job.
     queue_wait: Histogram,
     /// Pickup → outcome, per job (members of a fused group share the
@@ -100,36 +98,74 @@ pub struct Metrics {
     service_time: Histogram,
 }
 
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::with_registry(Arc::new(Registry::new()))
+    }
+}
+
 impl Metrics {
+    /// Metrics recording into `registry` (one registry per service; the
+    /// pool/queue gauges join it at snapshot time, see
+    /// `Service::stats_text`).
+    pub fn with_registry(registry: Arc<Registry>) -> Metrics {
+        Metrics {
+            jobs: registry.counter("coord.jobs"),
+            failures: registry.counter("coord.failures"),
+            pjrt_jobs: registry.counter("coord.pjrt_jobs"),
+            total_colors: registry.counter("coord.total_colors"),
+            total_us: registry.counter("coord.engine_us"),
+            updates_bgpc: registry.counter("coord.updates_bgpc"),
+            updates_d2gc: registry.counter("coord.updates_d2gc"),
+            recolored: registry.counter("coord.recolored"),
+            executes: registry.counter("coord.executes"),
+            exec_items: registry.counter("coord.exec_items"),
+            queue_wait: Histogram::registered(&registry, "coord.queue_wait_us"),
+            service_time: Histogram::registered(&registry, "coord.service_us"),
+            registry,
+        }
+    }
+
+    /// The registry these metrics record into.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Text snapshot of every registered metric (sorted `kind name
+    /// value` lines) — the `Stats` job's payload.
+    pub fn exposition(&self) -> String {
+        self.registry.exposition()
+    }
+
     pub fn record(&self, o: &super::JobOutcome) {
-        self.jobs.fetch_add(1, AOrd::Relaxed);
+        self.jobs.inc();
         if !o.valid {
-            self.failures.fetch_add(1, AOrd::Relaxed);
+            self.failures.inc();
         }
         if o.engine == "pjrt" {
-            self.pjrt_jobs.fetch_add(1, AOrd::Relaxed);
+            self.pjrt_jobs.inc();
         }
         if let Some(b) = &o.batch {
             // updates are counted per problem (BGPC and D2GC sessions
             // share the update path but not the repair engine)
             match o.problem {
-                Some(Problem::D2gc) => self.updates_d2gc.fetch_add(1, AOrd::Relaxed),
-                _ => self.updates_bgpc.fetch_add(1, AOrd::Relaxed),
+                Some(Problem::D2gc) => self.updates_d2gc.inc(),
+                _ => self.updates_bgpc.inc(),
             };
             // A fused group shares one BatchStats: counting it per
             // member would multiply the repair's work by the group
             // size. The drain charges the group once via
             // add_recolored; lone batches (fused <= 1) count here.
             if o.fused <= 1 {
-                self.recolored.fetch_add(b.recolored as u64, AOrd::Relaxed);
+                self.recolored.add(b.recolored as u64);
             }
         }
         if let Some(e) = &o.exec {
-            self.executes.fetch_add(1, AOrd::Relaxed);
-            self.exec_items.fetch_add(e.items, AOrd::Relaxed);
+            self.executes.inc();
+            self.exec_items.add(e.items);
         }
-        self.total_colors.fetch_add(o.n_colors as u64, AOrd::Relaxed);
-        self.total_us.fetch_add((o.seconds * 1e6) as u64, AOrd::Relaxed);
+        self.total_colors.add(o.n_colors as u64);
+        self.total_us.add((o.seconds * 1e6) as u64);
     }
 
     /// Observe one job's queue wait (admission → pickup) and service
@@ -143,19 +179,19 @@ impl Metrics {
     /// Charge a fused group's recolored-vertices total once (see
     /// [`Metrics::record`] for why members must not each add it).
     pub fn add_recolored(&self, n: u64) {
-        self.recolored.fetch_add(n, AOrd::Relaxed);
+        self.recolored.add(n);
     }
 
     pub fn jobs_done(&self) -> u64 {
-        self.jobs.load(AOrd::Relaxed)
+        self.jobs.get()
     }
 
     pub fn failures(&self) -> u64 {
-        self.failures.load(AOrd::Relaxed)
+        self.failures.get()
     }
 
     pub fn pjrt_jobs(&self) -> u64 {
-        self.pjrt_jobs.load(AOrd::Relaxed)
+        self.pjrt_jobs.get()
     }
 
     /// Dynamic-session update batches applied (all problems).
@@ -165,32 +201,32 @@ impl Metrics {
 
     /// BGPC update batches applied.
     pub fn updates_bgpc(&self) -> u64 {
-        self.updates_bgpc.load(AOrd::Relaxed)
+        self.updates_bgpc.get()
     }
 
     /// D2GC update batches applied.
     pub fn updates_d2gc(&self) -> u64 {
-        self.updates_d2gc.load(AOrd::Relaxed)
+        self.updates_d2gc.get()
     }
 
     /// Vertices recolored across all update batches (fused groups
     /// counted once).
     pub fn recolored(&self) -> u64 {
-        self.recolored.load(AOrd::Relaxed)
+        self.recolored.get()
     }
 
     /// Colored-execution jobs completed.
     pub fn executes(&self) -> u64 {
-        self.executes.load(AOrd::Relaxed)
+        self.executes.get()
     }
 
     /// Kernel invocations across all execute jobs.
     pub fn exec_items(&self) -> u64 {
-        self.exec_items.load(AOrd::Relaxed)
+        self.exec_items.get()
     }
 
     pub fn total_seconds(&self) -> f64 {
-        self.total_us.load(AOrd::Relaxed) as f64 * 1e-6
+        self.total_us.get() as f64 * 1e-6
     }
 
     /// The queue-wait histogram (admission → dispatcher pickup).
@@ -213,10 +249,15 @@ impl Metrics {
         self.service_time.quantile(q)
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs. Latency quantiles render `-` until a
+    /// job has actually been observed (an empty histogram has no p50).
     pub fn summary(&self) -> String {
+        let ms = |v: Option<f64>| match v {
+            Some(secs) => format!("{:.3}ms", secs * 1e3),
+            None => "-".to_string(),
+        };
         format!(
-            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3} wait_p50={:.3}ms wait_p99={:.3}ms service_p50={:.3}ms service_p99={:.3}ms",
+            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3} wait_p50={} wait_p99={} service_p50={} service_p99={}",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
@@ -227,10 +268,10 @@ impl Metrics {
             self.executes(),
             self.exec_items(),
             self.total_seconds(),
-            self.queue_wait_quantile(0.50) * 1e3,
-            self.queue_wait_quantile(0.99) * 1e3,
-            self.service_time_quantile(0.50) * 1e3,
-            self.service_time_quantile(0.99) * 1e3,
+            ms(self.queue_wait.quantile_secs(0.50)),
+            ms(self.queue_wait.quantile_secs(0.99)),
+            ms(self.service_time.quantile_secs(0.50)),
+            ms(self.service_time.quantile_secs(0.99)),
         )
     }
 }
@@ -253,6 +294,7 @@ mod tests {
             error: None,
             batch: None,
             exec: None,
+            text: None,
             fused: 0,
             epoch: None,
         };
@@ -264,6 +306,10 @@ mod tests {
         assert_eq!(m.pjrt_jobs(), 1);
         assert!((m.total_seconds() - 0.5).abs() < 1e-3);
         assert!(m.summary().contains("jobs=2"));
+        // the façade shares cells with the registry exposition
+        let text = m.exposition();
+        assert!(text.contains("counter coord.jobs 2"), "exposition: {text}");
+        assert!(text.contains("counter coord.failures 1"));
     }
 
     #[test]
@@ -281,6 +327,7 @@ mod tests {
             error: None,
             batch: Some(stats),
             exec: None,
+            text: None,
             fused: 1,
             epoch: Some(1),
         };
@@ -314,6 +361,7 @@ mod tests {
             error: None,
             batch: Some(stats),
             exec: None,
+            text: None,
             fused: 3,
             epoch: Some(3),
         };
@@ -350,6 +398,7 @@ mod tests {
                 sched_dirty_colors: 0,
                 sched_rebuilt: false,
             }),
+            text: None,
             fused: 0,
             epoch: Some(0),
         };
@@ -365,6 +414,7 @@ mod tests {
     fn histogram_quantiles_walk_log_buckets() {
         let h = Histogram::default();
         assert_eq!(h.quantile(0.99), 0.0, "empty histogram reports 0");
+        assert_eq!(h.quantile_secs(0.99), None, "…and None when asked honestly");
         // 99 fast observations (~100µs) and one slow outlier (~50ms)
         for _ in 0..99 {
             h.observe(Duration::from_micros(100));
@@ -382,11 +432,26 @@ mod tests {
         assert!(h.mean_secs() > 100e-6 && h.mean_secs() < 1e-3);
         // latency histograms feed the summary line
         let m = Metrics::default();
+        assert!(m.summary().contains("wait_p50=-"), "no jobs yet: quantiles are dashes");
         m.observe_job(Duration::from_micros(10), Duration::from_micros(300));
         assert!(m.summary().contains("wait_p50="));
+        assert!(!m.summary().contains("wait_p50=-"));
         assert!(m.queue_wait_quantile(0.5) > 0.0);
         assert!(m.service_time_quantile(0.5) > 0.0);
         assert_eq!(m.queue_wait().count(), 1);
         assert_eq!(m.service_time().count(), 1);
+    }
+
+    #[test]
+    fn histogram_edge_durations_saturate_into_last_bucket() {
+        let h = Histogram::default();
+        h.observe(Duration::ZERO);
+        h.observe(Duration::MAX); // > u64::MAX µs — saturates, no wrap
+        assert_eq!(h.count(), 2);
+        // p100 is the last bucket's upper bound, 2^64 µs, computed in
+        // f64 (no u64 shift overflow)
+        let p100 = h.quantile(1.0);
+        assert!((p100 - 64f64.exp2() * 1e-6).abs() / p100 < 1e-12, "p100={p100}");
+        assert!(h.quantile(0.01) > 0.0, "0µs lands in the first bucket");
     }
 }

@@ -54,6 +54,7 @@ use crate::coloring::{color_bgpc_on, color_d2gc_on, Config, Problem};
 use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
 use crate::exec::{EpochSchedule, Executor};
 use crate::graph::{Bipartite, Csr};
+use crate::obs::trace::{span, span_n};
 use crate::par::pool::panic_message;
 use crate::par::{Cost, PoolSet, PoolStats, QueueStats, ShardedQueue, WorkerPool};
 use crate::runtime::{NetStepOffload, Runtime};
@@ -229,6 +230,13 @@ pub enum JobInput {
     /// (the job's `cfg` is ignored); the session's epoch-keyed schedule
     /// is refreshed — dirty colors only — before the run.
     Execute { session: SessionId, kernel: ExecKernel, rounds: usize },
+    /// Observability snapshot: completes with the service's registry
+    /// exposition (job counters, latency histograms, pool and queue
+    /// gauges) in [`JobOutcome::text`]. Flows through the same
+    /// admission queue as real work, so the snapshot is ordered after
+    /// everything admitted before it on its shard. The job's
+    /// `cfg`/`engine` are ignored.
+    Stats,
 }
 
 impl JobInput {
@@ -241,7 +249,7 @@ impl JobInput {
         match self {
             JobInput::Bgpc(_) => Some(Problem::Bgpc),
             JobInput::D2gc(_) => Some(Problem::D2gc),
-            JobInput::Update { .. } | JobInput::Execute { .. } => None,
+            JobInput::Update { .. } | JobInput::Execute { .. } | JobInput::Stats => None,
         }
     }
 }
@@ -265,6 +273,9 @@ pub struct JobOutcome {
     pub batch: Option<BatchStats>,
     /// Colored-execution metrics (execute jobs only).
     pub exec: Option<ExecStats>,
+    /// Text payload ([`JobInput::Stats`] jobs only): the registry
+    /// exposition snapshot at the moment the job was dispatched.
+    pub text: Option<String>,
     /// Size of the fused drain group this update committed with: 0 for
     /// non-update jobs, 1 when the batch was applied alone, N when N
     /// contiguous batches shared one compact + repair + verify.
@@ -434,9 +445,26 @@ fn fail_outcome(
         error: Some(error),
         batch: None,
         exec: None,
+        text: None,
         fused: 0,
         epoch: None,
     }
+}
+
+/// Refresh the pool/queue gauges in `metrics`' registry from the live
+/// counters, then render the full exposition snapshot — the payload of
+/// a [`JobInput::Stats`] job and of `serve --stats-interval`.
+fn stats_text(metrics: &Metrics, pools: &PoolSet, queue: &QueueStats) -> String {
+    let reg = metrics.registry();
+    let ps = pools.stats();
+    reg.gauge("pool.threads").set(ps.threads as u64);
+    reg.gauge("pool.regions").set(ps.regions);
+    reg.gauge("pool.items").set(ps.items);
+    reg.gauge("pool.utilization_pct").set((ps.utilization() * 100.0) as u64);
+    reg.gauge("queue.pushed").set(queue.pushed);
+    reg.gauge("queue.popped").set(queue.popped);
+    reg.gauge("queue.stolen").set(queue.stolen);
+    metrics.exposition()
 }
 
 /// Run a non-update job on `shard`'s pool. Update jobs never reach
@@ -445,6 +473,8 @@ fn run_stateless(
     job: &Job,
     sessions: &SessionMap,
     pools: &Arc<PoolSet>,
+    metrics: &Metrics,
+    queue: &ShardedQueue<Task>,
     shard: usize,
 ) -> JobOutcome {
     match &job.input {
@@ -462,6 +492,7 @@ fn run_stateless(
                 error: None,
                 batch: None,
                 exec: None,
+                text: None,
                 fused: 0,
                 epoch: None,
             }
@@ -480,6 +511,7 @@ fn run_stateless(
                 error: None,
                 batch: None,
                 exec: None,
+                text: None,
                 fused: 0,
                 epoch: None,
             }
@@ -487,6 +519,21 @@ fn run_stateless(
         JobInput::Execute { session, kernel, rounds } => {
             run_execute(sessions, pools, *session, kernel, *rounds, &job.name)
         }
+        JobInput::Stats => JobOutcome {
+            name: job.name.clone(),
+            engine: "native",
+            problem: None,
+            n_colors: 0,
+            iterations: 0,
+            seconds: 0.0,
+            valid: true,
+            error: None,
+            batch: None,
+            exec: None,
+            text: Some(stats_text(metrics, pools, &queue.stats())),
+            fused: 0,
+            epoch: None,
+        },
         JobInput::Update { .. } => fail_outcome(
             &job.name,
             "native",
@@ -547,6 +594,7 @@ fn drain_session(sessions: &SessionMap, metrics: &Metrics, id: SessionId, fuse: 
         }));
         match applied {
             Ok((stats, valid)) => {
+                let _commit = span_n("coord.commit", group.len() as u64);
                 inner.applied += group.len() as u64;
                 let epoch = inner.applied;
                 // Publish the snapshot BEFORE completing handles: a
@@ -575,6 +623,7 @@ fn drain_session(sessions: &SessionMap, metrics: &Metrics, id: SessionId, fuse: 
                         error: None,
                         batch: Some(stats.clone()),
                         exec: None,
+                        text: None,
                         fused,
                         epoch: Some(epoch),
                     };
@@ -682,6 +731,7 @@ fn run_execute(
         error: None,
         batch: None,
         exec: Some(stats),
+        text: None,
         fused: 0,
         epoch: Some(snap.epoch),
     }
@@ -705,6 +755,7 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                         error: None,
                         batch: None,
                         exec: None,
+                        text: None,
                         fused: 0,
                         epoch: None,
                     }
@@ -715,7 +766,8 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                 },
             }
         }
-        JobInput::D2gc(_) | JobInput::Update { .. } | JobInput::Execute { .. } => fail_outcome(
+        JobInput::D2gc(_) | JobInput::Update { .. } | JobInput::Execute { .. }
+        | JobInput::Stats => fail_outcome(
             &job.name,
             "pjrt",
             job.input.problem(),
@@ -781,11 +833,12 @@ impl Service {
                         while let Some(task) = q.pop(home) {
                             match task {
                                 Task::Run { job, handle, submitted, shard } => {
+                                    let _sp = span("coord.dispatch");
                                     let wait =
                                         Instant::now().saturating_duration_since(submitted);
                                     let t0 = Instant::now();
                                     let o = catch_unwind(AssertUnwindSafe(|| {
-                                        run_stateless(&job, &sess, &pl, shard)
+                                        run_stateless(&job, &sess, &pl, &m, &q, shard)
                                     }))
                                     .unwrap_or_else(|p| {
                                         fail_outcome(
@@ -802,7 +855,10 @@ impl Service {
                                     m.record(&o);
                                     handle.complete(o);
                                 }
-                                Task::Drain(id) => drain_session(&sess, &m, id, fuse),
+                                Task::Drain(id) => {
+                                    let _sp = span("coord.drain");
+                                    drain_session(&sess, &m, id, fuse)
+                                }
                             }
                         }
                     })
@@ -890,6 +946,7 @@ impl Service {
     /// shard lane; everything else is queued as a Run task. No
     /// service-wide lock is taken.
     pub fn submit_async(&self, mut job: Job) -> JobHandle {
+        let _sp = span("coord.admit");
         if job.name.is_empty() {
             job.name = format!("job-{}", self.seq.fetch_add(1, AOrd::Relaxed));
         }
@@ -953,6 +1010,10 @@ impl Service {
                     .get(session)
                     .map(|s| s.shard)
                     .unwrap_or_else(|| self.next_shard());
+                self.push_run(job, &handle, shard);
+            }
+            JobInput::Stats => {
+                let shard = self.next_shard();
                 self.push_run(job, &handle, shard);
             }
             JobInput::Bgpc(_) | JobInput::D2gc(_) => {
@@ -1046,6 +1107,7 @@ impl Service {
             error: None,
             batch: None,
             exec: None,
+            text: None,
             fused: 0,
             epoch: Some(0),
         };
@@ -1153,6 +1215,14 @@ impl Service {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Live observability snapshot: refresh the pool/queue gauges in
+    /// the service registry, then render the sorted exposition text —
+    /// the same payload a [`JobInput::Stats`] job delivers, taken
+    /// directly without going through the admission queue.
+    pub fn stats_text(&self) -> String {
+        stats_text(&self.metrics, &self.pools, &self.queue.stats())
     }
 
     /// Shard 0's region-execution pool (open ad-hoc drivers against it,
@@ -1573,6 +1643,43 @@ mod tests {
         assert_eq!(again.name, "async");
         assert_eq!(again.fused, 0);
         assert_eq!(again.epoch, None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_job_returns_registry_snapshot() {
+        let svc = Service::start(1, None);
+        let g = Arc::new(random_bipartite(40, 60, 300, 5));
+        let o = svc
+            .submit(Job {
+                name: "warm".into(),
+                input: JobInput::Bgpc(g),
+                cfg: Config::sim(schedule::N1_N2, 2),
+                engine: EngineSel::Native,
+            })
+            .wait();
+        assert!(o.valid, "{:?}", o.error);
+        let o = svc
+            .submit(Job {
+                name: "stats".into(),
+                input: JobInput::Stats,
+                cfg: Config::sim(schedule::N1_N2, 1),
+                engine: EngineSel::Auto,
+            })
+            .wait();
+        assert!(o.valid, "{:?}", o.error);
+        assert_eq!(o.engine, "native");
+        assert_eq!(o.problem, None);
+        let text = o.text.expect("stats outcomes carry the exposition");
+        assert!(
+            text.contains("counter coord.jobs 1"),
+            "snapshot is taken before the stats job records itself:\n{text}"
+        );
+        assert!(text.contains("gauge pool.threads"), "pool gauges joined:\n{text}");
+        assert!(text.contains("gauge queue.pushed"), "queue gauges joined:\n{text}");
+        assert!(text.contains("hist coord.queue_wait_us"), "latency hists joined:\n{text}");
+        // the direct convenience renders the same surface
+        assert!(svc.stats_text().contains("counter coord.jobs 2"));
         svc.shutdown();
     }
 

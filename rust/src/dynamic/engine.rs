@@ -122,7 +122,10 @@ pub fn repair<P: Problem, D: Driver>(
     // --- phase 1: dirty-unit conflict detection (Alg. 7 / Alg. 10 on
     // the subset) ---
     let det_chunk = adaptive_chunk(dirty.len(), d.threads(), spec.chunk);
-    let det = g.conflict_phase_on(dirty, &colors, d, ts, det_chunk);
+    let det = {
+        let _sp = crate::obs::trace::span_n("repair.detect_dirty", dirty.len() as u64);
+        g.conflict_phase_on(dirty, &colors, d, ts, det_chunk)
+    };
     let is_sim = det.sim_ns.is_some();
     sim_secs += det.seconds();
     work_units += det.busy_units.iter().sum::<u64>();
@@ -162,10 +165,16 @@ pub fn repair<P: Problem, D: Driver>(
             }
         }
         let chunk = adaptive_chunk(w.len(), d.threads(), spec.chunk);
-        let cr = g.color_phase(&w, &colors, d, ts, chunk, bal);
+        let cr = {
+            let _sp = crate::obs::trace::span_n("repair.speculate", w.len() as u64);
+            g.color_phase(&w, &colors, d, ts, chunk, bal)
+        };
         sim_secs += cr.seconds();
         work_units += cr.busy_units.iter().sum::<u64>();
-        let rr = g.conflict_phase(&w, &colors, d, ts, chunk, spec.lazy_queues, &shared);
+        let rr = {
+            let _sp = crate::obs::trace::span_n("repair.detect", w.len() as u64);
+            g.conflict_phase(&w, &colors, d, ts, chunk, spec.lazy_queues, &shared)
+        };
         sim_secs += rr.seconds();
         work_units += rr.busy_units.iter().sum::<u64>();
         w = collect_next(spec.lazy_queues, ts, &shared);
@@ -179,6 +188,7 @@ pub fn repair<P: Problem, D: Driver>(
                 recolored += 1;
             }
         }
+        let _sp = crate::obs::trace::span_n("repair.seq_finish", w.len() as u64);
         g.sequential_finish(&w, &colors, &mut ts[0], d.now());
     }
 

@@ -188,11 +188,15 @@ impl<P: Problem> DynamicSession<P> {
         // from the repair cost the simulator models. The overlay's
         // lazy threshold matters for clients buffering edits directly.
         let tc = std::time::Instant::now();
-        let g = self.delta.graph();
+        let g = {
+            let _sp = crate::obs::trace::span_n("session.compact", dirty.len() as u64);
+            self.delta.graph()
+        };
         let compact_seconds = tc.elapsed().as_secs_f64();
         // The session's driver persists across batches: in threads mode
         // this parks/wakes the pinned pool team — no spawn anywhere on
         // the repair path.
+        let _sp = crate::obs::trace::span_n("session.repair", dirty.len() as u64);
         let (colors, mut stats) = match &mut self.driver {
             SessionDriver::Threads(d) => engine::repair(
                 g,
@@ -271,6 +275,7 @@ impl<P: Problem> DynamicSession<P> {
     /// Check the current coloring against the current graph with the
     /// problem's ground-truth checker ([`crate::coloring::verify`]).
     pub fn verify(&mut self) -> Result<(), Violation> {
+        let _sp = crate::obs::trace::span("session.verify");
         let g = self.delta.graph();
         Problem::verify(g, &self.colors)
     }

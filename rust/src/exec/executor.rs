@@ -154,9 +154,11 @@ impl Executor {
         let mut per_color_secs = vec![0.0f64; nc];
         let mut worker_busy = vec![0u64; self.team];
         let mut items = 0u64;
+        let _sp = crate::obs::trace::span_n("exec.run", rounds as u64);
         let t0 = Instant::now();
         for _ in 0..rounds {
             for (c, set) in sched.frontiers() {
+                let _sp = crate::obs::trace::span_n("exec.color", c as u64);
                 let chunk = effective_chunk(set.len(), self.team, self.chunk);
                 let out = self.pool.region(
                     &mut self.states,

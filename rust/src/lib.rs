@@ -41,6 +41,12 @@
 //! * [`coordinator`] — a coloring job service: submit graphs + configs,
 //!   route them to engines (sequential / threads / simulator / PJRT),
 //!   open dynamic sessions and stream update batches, collect metrics.
+//! * [`obs`] — unified observability: a registry of named counters /
+//!   gauges / log2 histograms (the coordinator metrics are a façade
+//!   over it) and a per-thread span tracer with Chrome-trace export
+//!   (`--features trace`), instrumenting pool regions, coloring
+//!   phases, dynamic repair, exec frontiers, and coordinator dispatch
+//!   (DESIGN.md §13).
 //! * [`testing`] — in-tree property-testing helpers (no external crates
 //!   are available offline).
 
@@ -56,6 +62,7 @@ pub mod coordinator;
 pub mod dynamic;
 pub mod exec;
 pub mod graph;
+pub mod obs;
 pub mod par;
 pub mod runtime;
 pub mod sim;

@@ -9,6 +9,8 @@
 //!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
 //! bgpc d2color --preset af_shell [--alg V-N2] [--threads 16]
 //! bgpc serve --jobs 32 --workers 2 --pool 4   # coordinator demo loop
+//!           [--trace out.json]                 # Chrome-trace export (needs --features trace)
+//!           [--stats-interval 5]               # periodic registry snapshots
 //! ```
 
 use std::collections::HashMap;
@@ -227,6 +229,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         .get("pool")
         .map(|s| s.parse().unwrap_or(DEFAULT_POOL_THREADS))
         .unwrap_or(DEFAULT_POOL_THREADS);
+    let trace_out = flags.get("trace").cloned();
+    if trace_out.is_some() {
+        if bgpc::obs::trace::available() {
+            bgpc::obs::trace::set_enabled(true);
+        } else {
+            eprintln!("warning: --trace requires the `trace` feature (cargo run --features trace); ignoring");
+        }
+    }
+    let stats_interval: u64 =
+        flags.get("stats-interval").map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
     let svc = Service::start_sharded(ServiceOpts {
         shards,
         dispatchers: workers,
@@ -238,43 +250,87 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         "coordinator up: {workers} dispatchers over {shards} shard(s) of {pool}-thread pools, pjrt={}",
         svc.has_pjrt()
     );
-    let mut handles = Vec::new();
-    for i in 0..n_jobs {
-        let p = PRESETS[i % PRESETS.len()];
-        let g = Arc::new(p.bipartite(0.02, i as u64));
-        let spec = schedule::ALL[i % schedule::ALL.len()];
-        // every fourth job runs on the real shared pool; the rest use
-        // the deterministic 16-thread simulator
-        let cfg = if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
-        handles.push(svc.submit_async(Job {
-            name: format!("{}-{}", p.name, spec.name),
-            input: JobInput::Bgpc(g),
-            cfg,
-            engine: if i % 4 == 0 { EngineSel::Auto } else { EngineSel::Native },
-        }));
-    }
+    // optional periodic registry snapshot printer (satellite: --stats-interval)
+    let stats_stop = std::sync::atomic::AtomicBool::new(false);
     let mut failures = 0;
-    for h in handles {
-        let o = h.wait();
+    std::thread::scope(|scope| {
+        if stats_interval > 0 {
+            let svc = &svc;
+            let stop = &stats_stop;
+            scope.spawn(move || {
+                let period = std::time::Duration::from_secs(stats_interval);
+                let tick = std::time::Duration::from_millis(50);
+                let mut waited = std::time::Duration::ZERO;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    waited += tick;
+                    if waited >= period {
+                        waited = std::time::Duration::ZERO;
+                        println!("--- stats snapshot ---\n{}", svc.stats_text());
+                    }
+                }
+            });
+        }
+        let mut handles = Vec::new();
+        for i in 0..n_jobs {
+            let p = PRESETS[i % PRESETS.len()];
+            let g = Arc::new(p.bipartite(0.02, i as u64));
+            let spec = schedule::ALL[i % schedule::ALL.len()];
+            // every fourth job runs on the real shared pool; the rest use
+            // the deterministic 16-thread simulator
+            let cfg = if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
+            handles.push(svc.submit_async(Job {
+                name: format!("{}-{}", p.name, spec.name),
+                input: JobInput::Bgpc(g),
+                cfg,
+                engine: if i % 4 == 0 { EngineSel::Auto } else { EngineSel::Native },
+            }));
+        }
+        for h in handles {
+            let o = h.wait();
+            println!(
+                "  {:<28} engine={:<6} colors={:>6} iters={} secs={:.4} valid={}",
+                o.name, o.engine, o.n_colors, o.iterations, o.seconds, o.valid
+            );
+            if !o.valid {
+                failures += 1;
+            }
+        }
+        println!("metrics: {}", svc.metrics().summary());
+        let m = svc.metrics();
         println!(
-            "  {:<28} engine={:<6} colors={:>6} iters={} secs={:.4} valid={}",
-            o.name, o.engine, o.n_colors, o.iterations, o.seconds, o.valid
+            "latency: wait p50={:.3}ms p99={:.3}ms | service p50={:.3}ms p99={:.3}ms",
+            m.queue_wait_quantile(0.50) * 1e3,
+            m.queue_wait_quantile(0.99) * 1e3,
+            m.service_time_quantile(0.50) * 1e3,
+            m.service_time_quantile(0.99) * 1e3,
         );
-        if !o.valid {
-            failures += 1;
+        println!("pool: {}", svc.pool_stats().summary());
+        // final registry snapshot via the Stats job kind (flows through the
+        // same admission queue as real work, so it observes committed state)
+        let stats = svc
+            .submit_async(Job {
+                name: "stats".into(),
+                input: JobInput::Stats,
+                cfg: Config::sim(schedule::N1_N2, 1),
+                engine: EngineSel::Native,
+            })
+            .wait();
+        if let Some(text) = stats.text {
+            println!("registry:\n{text}");
+        }
+        stats_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    svc.shutdown();
+    if let Some(path) = trace_out {
+        if bgpc::obs::trace::enabled() {
+            bgpc::obs::trace::set_enabled(false);
+            match bgpc::obs::trace::write_chrome(&path) {
+                Ok(()) => println!("trace written to {path} (open in ui.perfetto.dev)"),
+                Err(e) => eprintln!("error: writing trace {path}: {e}"),
+            }
         }
     }
-    println!("metrics: {}", svc.metrics().summary());
-    let m = svc.metrics();
-    println!(
-        "latency: wait p50={:.3}ms p99={:.3}ms | service p50={:.3}ms p99={:.3}ms",
-        m.queue_wait_quantile(0.50) * 1e3,
-        m.queue_wait_quantile(0.99) * 1e3,
-        m.service_time_quantile(0.50) * 1e3,
-        m.service_time_quantile(0.99) * 1e3,
-    );
-    println!("pool: {}", svc.pool_stats().summary());
-    svc.shutdown();
     if failures == 0 {
         ExitCode::SUCCESS
     } else {

@@ -1,0 +1,31 @@
+//! `obs` — unified observability: a metrics [`Registry`] and a
+//! per-thread span tracer with Chrome-trace export.
+//!
+//! The paper's performance argument is phase-level (speculate vs.
+//! conflict-detect vs. sequential-finish), but wall-clock totals hide
+//! that structure. This module gives every layer one shared surface:
+//!
+//! * [`registry`] — named [`Counter`]s, [`Gauge`]s, and log2
+//!   [`Hist`]ograms behind `Arc` handles; registration takes a lock
+//!   once, recording is a relaxed atomic op. `coordinator::Metrics` is
+//!   a façade over one [`Registry`]; pool and queue stats publish into
+//!   it as gauges at snapshot time ([`Registry::exposition`]).
+//! * [`trace`] — RAII [`span`](trace::span) guards writing complete
+//!   events into per-thread rings, drained on demand and exported as
+//!   Chrome trace-event JSON ([`trace::write_chrome`]) for Perfetto.
+//!   Compiled in by the `trace` cargo feature, armed by
+//!   [`trace::set_enabled`]; free when off.
+//!
+//! Span names are dotted `layer.phase` (`pool.region`,
+//! `bgpc.speculate`, `repair.detect_dirty`, `coord.dispatch`,
+//! `exec.color`, ...) so a Perfetto query can group by layer. See
+//! DESIGN.md §13 for the architecture and the overhead contract.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Hist, Registry, HIST_BUCKETS};
+pub use trace::{
+    available, drain, enabled, export_chrome, instant, set_enabled, span,
+    span_n, write_chrome, Event, Ring, Span, TraceData,
+};

@@ -1,0 +1,365 @@
+//! The unified metrics registry: named counters, gauges, and log₂
+//! histograms behind cheap `Arc` handles.
+//!
+//! Registration (name → handle) takes a short-lived lock on a sorted
+//! map; it happens once per metric, at construction time. *Recording*
+//! is handle-based and lock-free — a relaxed atomic add on the `Arc`'d
+//! cell — so hot paths never touch the map. [`Registry::exposition`]
+//! renders every metric as sorted `kind name value` lines, the text
+//! snapshot the coordinator's `Stats` job and `serve --stats-interval`
+//! print (DESIGN.md §13).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::sync::{Arc, Mutex};
+
+/// Number of log₂ buckets (bucket `b` holds values in `[2^b, 2^(b+1))`,
+/// with 0 landing in bucket 0 — 64 buckets cover the full `u64` range).
+pub const HIST_BUCKETS: usize = 64;
+
+/// A monotonically increasing counter. Recording is one relaxed add.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, AOrd::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(AOrd::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge (pool utilization, queue depth, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Overwrite the gauge.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, AOrd::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(AOrd::Relaxed)
+    }
+}
+
+/// A lock-free log₂ histogram over raw `u64` values (the coordinator
+/// records microseconds into it; the unit is the caller's).
+///
+/// Edge cases are part of the contract: `record(0)` lands in the first
+/// bucket, `record(u64::MAX)` in the last, and neither path shifts by
+/// 64 anywhere (quantile upper bounds are computed in `f64`, where
+/// `2^64` is representable). An empty histogram has no quantiles —
+/// [`Hist::quantile`] returns `None`, and renderers print `-`.
+#[derive(Debug)]
+pub struct Hist {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Hist {
+    /// Record one observation: two relaxed adds plus a leading-zeros.
+    pub fn record(&self, v: u64) {
+        // floor(log2(v)) with 0 clamped into bucket 0; v = u64::MAX has
+        // 0 leading zeros and lands in bucket 63 — no shift by 64 here.
+        let b = (63 - v.max(1).leading_zeros()) as usize;
+        self.counts[b].fetch_add(1, AOrd::Relaxed);
+        self.sum.fetch_add(v, AOrd::Relaxed);
+        self.n.fetch_add(1, AOrd::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.n.load(AOrd::Relaxed)
+    }
+
+    /// Sum of all recorded values (wrapping on overflow, like the adds).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(AOrd::Relaxed)
+    }
+
+    /// Mean recorded value; `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum() as f64 / n as f64)
+    }
+
+    /// The `q`-quantile (0 < q ≤ 1) as the holding bucket's *upper
+    /// bound* `2^(b+1)` — a ≤2× overestimate by construction, fine for
+    /// trend lines and gates that compare like against like. `None`
+    /// when the histogram is empty (there is no garbage midpoint to
+    /// report). Computed in `f64` so the last bucket's bound (`2^64`)
+    /// needs no u64 shift.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c.load(AOrd::Relaxed);
+            if seen >= target {
+                return Some((b as f64 + 1.0).exp2());
+            }
+        }
+        Some((HIST_BUCKETS as f64).exp2())
+    }
+
+    /// Per-bucket counts (bucket `b` = values in `[2^b, 2^(b+1))`).
+    pub fn buckets(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|b| self.counts[b].load(AOrd::Relaxed))
+    }
+}
+
+/// A registered metric (the map's value side).
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+/// A named-metric registry (see module docs). One per
+/// [`crate::coordinator::Service`]; construct more freely — it is just
+/// a sorted map of atomic cells.
+#[derive(Debug, Default)]
+pub struct Registry {
+    map: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The counter registered under `name`, registering it first if
+    /// needed. Clones of the returned handle record into the same cell.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.map.lock().unwrap();
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("obs: metric {name:?} already registered with another kind"),
+        }
+    }
+
+    /// The gauge registered under `name` (see [`Registry::counter`]).
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.map.lock().unwrap();
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("obs: metric {name:?} already registered with another kind"),
+        }
+    }
+
+    /// The histogram registered under `name` (see [`Registry::counter`]).
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut map = self.map.lock().unwrap();
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(Hist::default())))
+        {
+            Metric::Hist(h) => Arc::clone(h),
+            _ => panic!("obs: metric {name:?} already registered with another kind"),
+        }
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Whether nothing is registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Text snapshot: one sorted line per metric.
+    ///
+    /// ```text
+    /// counter coord.jobs 42
+    /// gauge pool.threads 8
+    /// hist coord.queue_wait_us n=12 mean=103.2 p50=128 p99=2048 max=4096
+    /// ```
+    ///
+    /// Empty histograms render `-` for mean and every quantile.
+    pub fn exposition(&self) -> String {
+        let snap: Vec<(String, Metric)> = {
+            let map = self.map.lock().unwrap();
+            map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::new();
+        for (name, m) in snap {
+            match m {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "counter {name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "gauge {name} {}", g.get());
+                }
+                Metric::Hist(h) => {
+                    let disp = |v: Option<f64>| match v {
+                        Some(x) => format!("{x:.1}"),
+                        None => "-".to_string(),
+                    };
+                    let _ = writeln!(
+                        out,
+                        "hist {name} n={} mean={} p50={} p99={} max={}",
+                        h.count(),
+                        disp(h.mean()),
+                        disp(h.quantile(0.50)),
+                        disp(h.quantile(0.99)),
+                        disp(h.quantile(1.0)),
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_and_exposition_sorts() {
+        let r = Registry::new();
+        let a = r.counter("z.last");
+        let b = r.counter("z.last");
+        a.add(2);
+        b.inc();
+        r.gauge("a.first").set(7);
+        r.hist("m.mid").record(100);
+        assert_eq!(r.counter("z.last").get(), 3, "same name, same cell");
+        assert_eq!(r.len(), 3);
+        let text = r.exposition();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "gauge a.first 7");
+        assert!(lines[1].starts_with("hist m.mid n=1"));
+        assert_eq!(lines[2], "counter z.last 3");
+    }
+
+    #[test]
+    #[should_panic(expected = "another kind")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        let _ = r.counter("x");
+        let _ = r.gauge("x");
+    }
+
+    #[test]
+    fn hist_edge_values_land_in_first_and_last_bucket() {
+        let h = Hist::default();
+        h.record(0);
+        h.record(u64::MAX);
+        let b = h.buckets();
+        assert_eq!(b[0], 1, "0 lands in the first bucket");
+        assert_eq!(b[HIST_BUCKETS - 1], 1, "u64::MAX lands in the last bucket");
+        assert_eq!(h.count(), 2);
+        // the last bucket's upper bound is 2^64 — representable in f64,
+        // no u64 shift overflow on the way there
+        let max = h.quantile(1.0).unwrap();
+        assert_eq!(max, 64f64.exp2());
+        assert!(h.mean().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_hist_has_no_quantiles() {
+        let h = Hist::default();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(0.99), None);
+        assert_eq!(h.mean(), None);
+        let r = Registry::new();
+        let _ = r.hist("empty");
+        let text = r.exposition();
+        assert!(
+            text.contains("n=0 mean=- p50=- p99=- max=-"),
+            "empty histogram renders dashes, got: {text}"
+        );
+    }
+
+    #[test]
+    fn hist_quantiles_walk_buckets() {
+        let h = Hist::default();
+        for _ in 0..99 {
+            h.record(100); // bucket [64,128)
+        }
+        h.record(50_000); // bucket [32768,65536)
+        assert_eq!(h.quantile(0.50), Some(128.0));
+        assert_eq!(h.quantile(0.99), Some(128.0));
+        assert_eq!(h.quantile(1.0), Some(65536.0));
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact() {
+        // Satellite contract: counts stay exact under contention — no
+        // lost updates across threads hammering one registry.
+        let r = Arc::new(Registry::new());
+        let c = r.counter("hot.counter");
+        let h = r.hist("hot.hist");
+        const THREADS: usize = 8;
+        const PER: u64 = 10_000;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let c = Arc::clone(&c);
+                let h = Arc::clone(&h);
+                let r = Arc::clone(&r);
+                s.spawn(move || {
+                    // half the threads fetch their own handles mid-storm
+                    let c = if t % 2 == 0 { c } else { r.counter("hot.counter") };
+                    for i in 0..PER {
+                        c.inc();
+                        h.record(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), THREADS as u64 * PER);
+        assert_eq!(h.count(), THREADS as u64 * PER);
+        let total: u64 = h.buckets().iter().sum();
+        assert_eq!(total, THREADS as u64 * PER, "every observation in exactly one bucket");
+    }
+}

@@ -1,0 +1,493 @@
+//! Per-thread span/event tracer with Chrome trace-event export.
+//!
+//! Recording is two-tier "free when off": the `trace` cargo feature
+//! compiles the recording path in at all ([`available`]), and a runtime
+//! flag ([`set_enabled`]) arms it. With the feature off, [`span`]
+//! returns an inert guard and the whole thing folds away; with the
+//! feature on but recording disabled, a span costs one relaxed atomic
+//! load — `benches/scheduler.rs` gates that marginal cost at ≤2% of a
+//! small pool-region dispatch.
+//!
+//! Each recording thread owns a fixed-capacity [`Ring`] (oldest events
+//! are dropped on wraparound, never the newest) behind a mutex that
+//! only the owner and a drain ever touch — recording never contends
+//! with other recorders. Spans are RAII guards ([`Span`]) that record
+//! one *complete* event at drop, so per-thread events nest strictly by
+//! construction (guards drop LIFO) and a wrapped ring drops children
+//! before their parents. [`drain`] collects every thread's events;
+//! [`export_chrome`] renders them as Chrome trace-event JSON that
+//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) load
+//! directly (see README "Observability").
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AOrd};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity: at ~40 B/event this bounds tracing memory
+/// to ~0.7 MB per recording thread.
+pub const RING_CAP: usize = 1 << 14;
+
+/// One completed span (or instant event, when `start_ns == end_ns`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Phase name (`"pool.region"`, `"repair.speculate"`, ...).
+    pub name: &'static str,
+    /// Registration-order thread id (stable across drains).
+    pub tid: u64,
+    /// Nanoseconds since the tracer epoch (first arm/record).
+    pub start_ns: u64,
+    /// End of the span; equal to `start_ns` for instant events.
+    pub end_ns: u64,
+    /// Optional payload (region items, queue length, color index, ...),
+    /// exported as `args.n`.
+    pub arg: Option<u64>,
+}
+
+/// A fixed-capacity event ring: pushing into a full ring drops the
+/// *oldest* event — the tail of a long run stays inspectable even when
+/// the buffer wraps.
+#[derive(Debug)]
+pub struct Ring {
+    cap: usize,
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    /// An empty ring holding at most `cap` events (min 1).
+    pub fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: VecDeque::new(), dropped: 0 }
+    }
+
+    /// Append `ev`, dropping the oldest event when full.
+    pub fn push(&mut self, ev: Event) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    /// Take every buffered event (oldest first), leaving the ring empty.
+    pub fn drain(&mut self) -> Vec<Event> {
+        self.buf.drain(..).collect()
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether the ring holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events lost to wraparound since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// One registered recording thread: its stable id, name, and ring. The
+/// global registry keeps an `Arc` so events survive thread exit.
+struct ThreadRing {
+    tid: u64,
+    name: String,
+    ring: Mutex<Ring>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static THREADS: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static RING: Arc<ThreadRing> = {
+        let tid = NEXT_TID.fetch_add(1, AOrd::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        let tr = Arc::new(ThreadRing { tid, name, ring: Mutex::new(Ring::new(RING_CAP)) });
+        THREADS.lock().unwrap().push(Arc::clone(&tr));
+        tr
+    };
+}
+
+/// Whether the recording path is compiled in (`--features trace`).
+pub fn available() -> bool {
+    cfg!(feature = "trace")
+}
+
+/// Arm or disarm recording. Returns the effective state: always `false`
+/// when the `trace` feature is compiled out (the flag is then inert).
+pub fn set_enabled(on: bool) -> bool {
+    if !available() {
+        return false;
+    }
+    if on {
+        // pin the epoch before the first span so all threads share it
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, AOrd::Relaxed);
+    on
+}
+
+/// Whether recording is currently armed (feature on + runtime flag).
+pub fn enabled() -> bool {
+    available() && ENABLED.load(AOrd::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// An RAII phase guard: created by [`span`], records one complete
+/// [`Event`] into the calling thread's ring when dropped. Inert (a
+/// stack struct and a branch) unless recording was armed at creation.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    name: &'static str,
+    start_ns: u64,
+    arg: Option<u64>,
+    live: bool,
+}
+
+impl Span {
+    /// Attach a numeric payload (exported as `args.n`).
+    pub fn with_arg(mut self, n: u64) -> Span {
+        if self.live {
+            self.arg = Some(n);
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live {
+            let end_ns = now_ns();
+            record(Event {
+                name: self.name,
+                tid: 0, // filled from the thread ring
+                start_ns: self.start_ns,
+                end_ns,
+                arg: self.arg,
+            });
+        }
+    }
+}
+
+/// Open a phase span. With the `trace` feature off, or recording
+/// disarmed, this is an inert guard (no clock read, no allocation).
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    #[cfg(feature = "trace")]
+    if ENABLED.load(AOrd::Relaxed) {
+        return Span { name, start_ns: now_ns(), arg: None, live: true };
+    }
+    Span { name, start_ns: 0, arg: None, live: false }
+}
+
+/// [`span`] with a numeric payload attached (items, queue length, ...).
+#[inline]
+pub fn span_n(name: &'static str, n: u64) -> Span {
+    span(name).with_arg(n)
+}
+
+/// Record a zero-duration instant event (visible as a tick mark).
+#[inline]
+pub fn instant(name: &'static str) {
+    #[cfg(feature = "trace")]
+    if ENABLED.load(AOrd::Relaxed) {
+        let t = now_ns();
+        record(Event { name, tid: 0, start_ns: t, end_ns: t, arg: None });
+    }
+    #[cfg(not(feature = "trace"))]
+    let _ = name;
+}
+
+fn record(mut ev: Event) {
+    // try_with: a span dropped during thread teardown has no ring left;
+    // losing that one event beats aborting the process.
+    let _ = RING.try_with(|tr| {
+        ev.tid = tr.tid;
+        tr.ring.lock().unwrap().push(ev);
+    });
+}
+
+/// Everything [`drain`] collected: the events, the thread-name table,
+/// and how many events were lost to ring wraparound.
+#[derive(Debug, Default)]
+pub struct TraceData {
+    /// All drained events, sorted by start time (parents before
+    /// children on ties).
+    pub events: Vec<Event>,
+    /// `(tid, thread name)` for every thread that ever recorded.
+    pub threads: Vec<(u64, String)>,
+    /// Events dropped to wraparound across all rings (lifetime total).
+    pub dropped: u64,
+}
+
+/// Drain every thread's ring (leaving them empty) and return the
+/// collected events. Cheap when nothing recorded. Threads keep
+/// recording while a drain runs; such racing events land in the next
+/// drain.
+pub fn drain() -> TraceData {
+    let threads: Vec<Arc<ThreadRing>> =
+        THREADS.lock().unwrap().iter().map(Arc::clone).collect();
+    let mut data = TraceData::default();
+    for tr in threads {
+        let mut ring = tr.ring.lock().unwrap();
+        data.dropped += ring.dropped();
+        let events = ring.drain();
+        drop(ring);
+        if !events.is_empty() {
+            data.threads.push((tr.tid, tr.name.clone()));
+            data.events.extend(events);
+        }
+    }
+    // parents start no later than their children and end no earlier:
+    // sort start-ascending, end-descending, so export order nests.
+    data.events.sort_by(|a, b| {
+        a.start_ns.cmp(&b.start_ns).then(b.end_ns.cmp(&a.end_ns))
+    });
+    data.threads.sort();
+    data
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render drained trace data as Chrome trace-event JSON (the
+/// `traceEvents` array format) — loadable by `chrome://tracing` and
+/// Perfetto. Spans become complete (`"ph":"X"`) events with µs
+/// timestamps; instants become `"ph":"i"`; thread names become
+/// metadata events.
+pub fn export_chrome(data: &TraceData) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |line: String, out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&line);
+    };
+    for (tid, name) in &data.threads {
+        push(
+            format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(name)
+            ),
+            &mut out,
+            &mut first,
+        );
+    }
+    for e in &data.events {
+        let ts = e.start_ns as f64 / 1e3;
+        let name = json_escape(e.name);
+        let args = match e.arg {
+            Some(n) => format!(",\"args\":{{\"n\":{n}}}"),
+            None => String::new(),
+        };
+        let line = if e.end_ns == e.start_ns {
+            format!(
+                "{{\"ph\":\"i\",\"pid\":1,\"tid\":{},\"name\":\"{name}\",\"s\":\"t\",\"ts\":{ts:.3}{args}}}",
+                e.tid
+            )
+        } else {
+            let dur = (e.end_ns - e.start_ns) as f64 / 1e3;
+            format!(
+                "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{name}\",\"cat\":\"bgpc\",\"ts\":{ts:.3},\"dur\":{dur:.3}{args}}}",
+                e.tid
+            )
+        };
+        push(line, &mut out, &mut first);
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Drain all rings and write the Chrome trace JSON to `path`.
+pub fn write_chrome(path: impl AsRef<Path>) -> std::io::Result<()> {
+    let data = drain();
+    std::fs::write(path, export_chrome(&data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, tid: u64, start: u64, end: u64) -> Event {
+        Event { name, tid, start_ns: start, end_ns: end, arg: None }
+    }
+
+    #[test]
+    fn ring_wraparound_drops_oldest_not_newest() {
+        let mut r = Ring::new(3);
+        for i in 0..5u64 {
+            r.push(ev("e", 0, i, i + 1));
+        }
+        assert_eq!(r.dropped(), 2);
+        let out = r.drain();
+        let starts: Vec<u64> = out.iter().map(|e| e.start_ns).collect();
+        assert_eq!(starts, vec![2, 3, 4], "oldest two dropped, newest kept");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn export_is_valid_json_shape_and_escapes() {
+        let data = TraceData {
+            events: vec![
+                ev("outer", 7, 1_000, 9_000),
+                Event { arg: Some(42), ..ev("inner", 7, 2_000, 4_000) },
+                ev("tick", 7, 3_000, 3_000),
+            ],
+            threads: vec![(7, "bgpc-pool-\"0\"".to_string())],
+            dropped: 0,
+        };
+        let json = export_chrome(&data);
+        // structural sanity a JSON parser would enforce (the repo has no
+        // serde; scripts/check_trace.py does the full parse in CI)
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("}"));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"i\"").count(), 1);
+        assert_eq!(json.matches("\"ph\":\"M\"").count(), 1);
+        assert!(json.contains("\\\"0\\\""), "quotes in thread names are escaped");
+        assert!(json.contains("\"args\":{\"n\":42}"));
+        assert!(json.contains("\"ts\":1.000"), "ns are exported as µs");
+        assert!(json.contains("\"dur\":8.000"));
+        assert!(!json.contains(",\n,"), "no empty elements");
+    }
+
+    #[cfg(not(feature = "trace"))]
+    #[test]
+    fn disabled_feature_records_nothing_and_costs_no_clock() {
+        assert!(!available());
+        assert!(!set_enabled(true), "arming without the feature is inert");
+        {
+            let _s = span_n("never", 9);
+            instant("never-either");
+        }
+        assert!(!enabled());
+        let data = drain();
+        assert!(data.events.is_empty(), "feature off: nothing recorded");
+    }
+
+    // The recording-path tests need the feature compiled in; CI runs
+    // them via `cargo test --features trace --lib` (scripts/verify.sh).
+    #[cfg(feature = "trace")]
+    mod recording {
+        use super::super::*;
+
+        /// Global recording state is process-wide; serialize the tests
+        /// that toggle it.
+        fn locked() -> std::sync::MutexGuard<'static, ()> {
+            static GATE: Mutex<()> = Mutex::new(());
+            GATE.lock().unwrap_or_else(|e| e.into_inner())
+        }
+
+        #[test]
+        fn disarmed_records_nothing() {
+            let _g = locked();
+            set_enabled(false);
+            let _ = drain();
+            {
+                let _s = span_n("quiet", 1);
+                instant("quiet-tick");
+            }
+            assert!(drain().events.is_empty());
+        }
+
+        #[test]
+        fn spans_nest_strictly_per_thread_and_export_parses() {
+            let _g = locked();
+            set_enabled(false);
+            let _ = drain(); // discard other tests' leftovers
+            set_enabled(true);
+            {
+                let _outer = span("outer");
+                {
+                    let _inner = span_n("inner", 3);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                instant("tick");
+            }
+            std::thread::spawn(|| {
+                let _s = span("other-thread");
+            })
+            .join()
+            .unwrap();
+            set_enabled(false);
+            let data = drain();
+            // other tests run concurrently and may record through the
+            // instrumented hot paths while we are armed — count only the
+            // spans this test created
+            let ours: Vec<&Event> = data
+                .events
+                .iter()
+                .filter(|e| matches!(e.name, "outer" | "inner" | "tick" | "other-thread"))
+                .collect();
+            assert_eq!(ours.len(), 4);
+            let tids: std::collections::HashSet<u64> = ours.iter().map(|e| e.tid).collect();
+            assert_eq!(tids.len(), 2, "two recording threads");
+            // strict nesting on this thread: guards drop LIFO, so for
+            // any two spans on one tid: disjoint or contained.
+            let spans: Vec<&Event> = data
+                .events
+                .iter()
+                .filter(|e| e.end_ns > e.start_ns)
+                .collect();
+            for a in &spans {
+                for b in &spans {
+                    if a.tid != b.tid || std::ptr::eq(*a, *b) {
+                        continue;
+                    }
+                    let disjoint = a.end_ns <= b.start_ns || b.end_ns <= a.start_ns;
+                    let a_in_b = a.start_ns >= b.start_ns && a.end_ns <= b.end_ns;
+                    let b_in_a = b.start_ns >= a.start_ns && b.end_ns <= a.end_ns;
+                    assert!(
+                        disjoint || a_in_b || b_in_a,
+                        "spans overlap without nesting: {a:?} vs {b:?}"
+                    );
+                }
+            }
+            let outer = data.events.iter().find(|e| e.name == "outer").unwrap();
+            let inner = data.events.iter().find(|e| e.name == "inner").unwrap();
+            assert_eq!(inner.arg, Some(3));
+            assert!(outer.start_ns <= inner.start_ns && inner.end_ns <= outer.end_ns);
+            let json = export_chrome(&data);
+            assert!(json.contains("\"name\":\"outer\""));
+            assert!(json.contains("\"name\":\"other-thread\""));
+        }
+
+        #[test]
+        fn drain_leaves_rings_empty() {
+            let _g = locked();
+            set_enabled(true);
+            {
+                let _s = span("once");
+            }
+            set_enabled(false);
+            assert_eq!(drain().events.iter().filter(|e| e.name == "once").count(), 1);
+            assert_eq!(drain().events.iter().filter(|e| e.name == "once").count(), 0);
+        }
+    }
+}

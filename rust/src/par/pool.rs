@@ -376,6 +376,9 @@ impl WorkerPool {
             "worker pool: {} scratch states for a team of {team} (one per thread required)",
             states.len()
         );
+        // one span per region, covering both the inline and the
+        // dispatch path — the pool-layer phase in the Chrome trace
+        let _sp = crate::obs::trace::span_n("pool.region", n_items as u64);
         let t0 = std::time::Instant::now();
         self.regions.fetch_add(1, AOrd::Relaxed);
 

@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Validate Chrome-trace JSON emitted by the obs tracer (DESIGN.md §13).
+
+Checks, per file:
+  1. the file parses as JSON and has a non-empty ``traceEvents`` array;
+  2. every required phase name appears in at least one complete ("X")
+     event across the checked files (default set covers all four
+     instrumented layers: pool, coloring engine, dynamic repair,
+     coordinator);
+  3. within each (pid, tid), complete events nest strictly — two spans
+     on one thread either are disjoint or one contains the other (a
+     small epsilon absorbs the exporter's microsecond rounding).
+
+Usage:
+  scripts/check_trace.py trace_a.json [trace_b.json ...]
+  scripts/check_trace.py --require pool.region --require exec.color t.json
+
+Exit code 0 on success, 1 with a diagnostic on the first failure.
+"""
+
+import argparse
+import json
+import sys
+
+# one span name per instrumented layer — the acceptance surface
+DEFAULT_REQUIRED = [
+    "pool.region",      # par::pool region dispatch
+    "bgpc.speculate",   # coloring engine phase
+    "repair.detect_dirty",  # dynamic repair
+    "coord.dispatch",   # coordinator
+    "exec.color",       # color-parallel execution frontier
+]
+
+# exporter rounds ts/dur to 3 decimal places of a microsecond
+EPS_US = 0.0011
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_events(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: not readable JSON: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: missing or empty traceEvents array")
+    return events
+
+
+def check_nesting(path, events):
+    """Complete events on one thread must be disjoint or contained."""
+    by_tid = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        ts, dur = float(ev["ts"]), float(ev["dur"])
+        key = (ev.get("pid", 0), ev.get("tid", 0))
+        by_tid.setdefault(key, []).append((ts, ts + dur, ev.get("name", "?")))
+    for key, spans in by_tid.items():
+        # sort by start asc, end desc: a parent sorts before its children
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack = []
+        for start, end, name in spans:
+            while stack and start >= stack[-1][1] - EPS_US:
+                stack.pop()
+            if stack and end > stack[-1][1] + EPS_US:
+                fail(
+                    f"{path}: tid {key[1]}: span {name!r} [{start:.3f}, {end:.3f}] "
+                    f"overlaps {stack[-1][2]!r} [{stack[-1][0]:.3f}, {stack[-1][1]:.3f}] "
+                    "without nesting"
+                )
+            stack.append((start, end, name))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="+", help="Chrome-trace JSON files")
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=None,
+        metavar="NAME",
+        help="span name that must appear in some X event "
+        "(repeatable; replaces the default layer set)",
+    )
+    opts = ap.parse_args()
+    required = opts.require if opts.require else DEFAULT_REQUIRED
+
+    seen = set()
+    total_x = 0
+    for path in opts.files:
+        events = load_events(path)
+        n_x = sum(1 for ev in events if ev.get("ph") == "X")
+        if n_x == 0:
+            fail(f"{path}: no complete ('X') events")
+        total_x += n_x
+        for ev in events:
+            if ev.get("ph") == "X":
+                seen.add(ev.get("name"))
+        check_nesting(path, events)
+        print(f"check_trace: {path}: {len(events)} events, {n_x} spans, nesting ok")
+
+    missing = [name for name in required if name not in seen]
+    if missing:
+        fail(
+            f"missing required span name(s) {missing} across {len(opts.files)} "
+            f"file(s); saw: {sorted(seen)}"
+        )
+    print(
+        f"check_trace: OK — {total_x} spans across {len(opts.files)} file(s), "
+        f"all {len(required)} required phases present"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -52,10 +52,17 @@ case "${TEST_SHARD:-all}" in
         echo "== cargo test -q (shard: sim) =="
         # shellcheck disable=SC2046  # intentional word splitting of --test flags
         cargo test -q --lib --bins $(shard_args "$SIM_SHARD")
+        # the obs tracer's recording tests are compiled out by default;
+        # a --features trace lib pass keeps them (and the feature-on
+        # build) green without touching the shard lists
+        echo "== cargo test -q --features trace --lib (obs recording) =="
+        cargo test -q --features trace --lib
         ;;
     all)
         echo "== cargo test -q =="
         cargo test -q
+        echo "== cargo test -q --features trace --lib (obs recording) =="
+        cargo test -q --features trace --lib
         ;;
     *)
         echo "verify: unknown TEST_SHARD '${TEST_SHARD}' (use threads|sim|all)" >&2
