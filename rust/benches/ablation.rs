@@ -19,6 +19,7 @@ fn run_with(g: &bgpc::graph::Bipartite, spec: AlgSpec, model: CostModel) -> (f64
         threads: 16,
         mode: ExecMode::Sim(model),
         ordering: Ordering::Natural,
+        post_pass: bgpc::coloring::PostPass::None,
     };
     let r = color_bgpc(g, &cfg);
     (r.seconds * 1e3, r.n_colors, r.iterations)

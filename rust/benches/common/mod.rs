@@ -59,6 +59,7 @@ pub fn run(g: &Bipartite, spec: AlgSpec, t: usize, ord: Ordering, bal: Balance) 
         threads: t,
         mode: ExecMode::Sim(model()),
         ordering: ord,
+        post_pass: bgpc::coloring::PostPass::None,
     };
     let r = color_bgpc(g, &cfg);
     assert!(

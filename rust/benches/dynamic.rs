@@ -34,6 +34,7 @@ fn main() {
         threads: 16,
         mode: ExecMode::Sim(common::model()),
         ordering: bgpc::graph::Ordering::Natural,
+        post_pass: bgpc::coloring::PostPass::None,
     };
 
     println!("=== dynamic: incremental repair vs full recolor (sim, t=16, N1-N2) ===");

@@ -209,6 +209,7 @@ fn main() {
         threads: 16,
         mode: ExecMode::Sim(common::model()),
         ordering: bgpc::graph::Ordering::Natural,
+        post_pass: bgpc::coloring::PostPass::None,
     };
     let r = color_d2gc(&m, &cfg);
     assert!(bgpc::coloring::verify::d2gc_valid(&m, &r.colors).is_ok());

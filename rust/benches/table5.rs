@@ -34,6 +34,7 @@ fn main() {
             threads: t,
             mode: ExecMode::Sim(model),
             ordering: Ordering::Natural,
+            post_pass: bgpc::coloring::PostPass::None,
         };
         let r = color_d2gc(m, &cfg);
         assert!(bgpc::coloring::verify::d2gc_valid(m, &r.colors).is_ok());

@@ -108,6 +108,7 @@ fn main() {
                 threads: 8,
                 mode: ExecMode::Sim(CostModel::default()),
                 ordering: Ordering::Natural,
+                post_pass: bgpc::coloring::PostPass::None,
             },
             engine: if svc.has_pjrt() && i % 2 == 0 { EngineSel::Pjrt } else { EngineSel::Native },
         }));

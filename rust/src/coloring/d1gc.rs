@@ -1,10 +1,20 @@
-//! Distance-1 greedy coloring — the survey baseline (§VII). Included for
-//! library completeness: sequential greedy plus the standard optimistic
-//! parallel variant (speculate / detect / repeat over adjacency).
+//! Distance-1 greedy coloring — the survey baseline (§VII), promoted to
+//! engine parity with BGPC/D2GC: the same speculate → detect → repeat
+//! loop ([`run`] / [`run_capped`]), the dirty-frontier detection pass
+//! the dynamic subsystem needs ([`conflict_phase_on`]), and the exact
+//! sequential safety net ([`sequential_finish`]). The neighborhood is
+//! the plain adjacency row — every phase is the D2GC one with the
+//! distance-2 inner loop removed — so D1GC rides the problem-generic
+//! repair engine and the coordinator unchanged (DESIGN.md §14).
 
+use crate::coloring::balance::{select_color, Balance};
+use crate::coloring::bgpc::MAX_ITERS;
 use crate::coloring::forbidden::{StampSet, ThreadState};
+use crate::coloring::schedule::AlgSpec;
+use crate::coloring::ColoringResult;
 use crate::graph::Csr;
-use crate::par::{ColorStore, Cost, Driver, SharedQueue};
+use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+use crate::sim::trace::{IterTrace, RunTrace};
 
 /// Sequential greedy D1GC in `order`. Returns `(colors, work_units)`.
 pub fn seq_greedy(g: &Csr, order: &[u32]) -> (Vec<i32>, u64) {
@@ -28,77 +38,251 @@ pub fn seq_greedy(g: &Csr, order: &[u32]) -> (Vec<i32>, u64) {
     (colors, units)
 }
 
-/// Parallel optimistic D1GC (speculative color + conflict removal loop).
-pub fn parallel<D: Driver>(g: &Csr, d: &mut D, chunk: usize) -> (Vec<i32>, usize) {
-    let n = g.n_rows;
-    let colors = d.new_colors(n);
-    let mut ts = ThreadState::bank(d.threads(), g.max_deg() + 2);
-    let shared = SharedQueue::with_capacity(n);
-    let mut w: Vec<u32> = (0..n as u32).collect();
-    let mut iters = 0usize;
-    while !w.is_empty() && iters < 100 {
-        iters += 1;
-        d.region(&mut ts, w.len(), chunk, |_tid, s, i, now| {
-            let wv = w[i] as usize;
-            let mut units = 0u64;
-            s.forbidden.next_gen();
-            for &u in g.row(wv) {
-                units += 1;
-                let u = u as usize;
-                if u != wv {
-                    let c = colors.read(u, now + units);
-                    if c >= 0 {
-                        s.forbidden.insert(c);
-                    }
-                }
+/// Upper bound on any color the D1GC engine can produce (forbidden-array
+/// sizing): first-fit never exceeds the degree. Public because the
+/// dynamic subsystem sizes persistent [`ThreadState`] banks with it.
+pub fn color_cap(g: &Csr) -> usize {
+    g.max_deg() + 4
+}
+
+/// Optimistic vertex-based D1GC coloring of the work queue `w` — the
+/// D2GC speculate phase without the distance-2 inner loop.
+pub fn color_phase<D: Driver>(
+    g: &Csr,
+    w: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    bal: Balance,
+) -> RegionOut {
+    d.region(ts, w.len(), chunk, |_tid, s, i, now| {
+        let wv = w[i] as usize;
+        let mut units = 0u64;
+        s.forbidden.next_gen();
+        for &u in g.row(wv) {
+            units += 1;
+            let u = u as usize;
+            if u != wv {
+                // branch-free: -1 lands in the trash slot (§Perf)
+                s.forbidden.mark(colors.read(u, now + units));
             }
-            let (c, probes) = s.forbidden.first_fit();
-            units += probes;
-            colors.write(wv, c, now + units);
-            Cost::new(units)
-        });
-        d.region(&mut ts, w.len(), chunk, |_tid, _s, i, now| {
-            let wv = w[i] as usize;
-            let cw = colors.read(wv, now);
-            let mut units = 1u64;
-            for &u in g.row(wv) {
-                units += 1;
-                let u = u as usize;
-                if u != wv && wv > u && colors.read(u, now + units) == cw {
-                    shared.push(wv as u32);
-                    return Cost { units, atomics: 1 };
-                }
-            }
-            Cost::new(units)
-        });
-        w = shared.drain();
-    }
-    // safety net
-    if !w.is_empty() {
-        let mut f = StampSet::new(g.max_deg() + 2);
-        let now = d.now();
-        for &wv in &w {
-            let wv = wv as usize;
-            f.next_gen();
-            for &u in g.row(wv) {
-                let u = u as usize;
-                if u != wv {
-                    let c = colors.read(u, now);
-                    if c >= 0 {
-                        f.insert(c);
-                    }
-                }
-            }
-            let (c, _) = f.first_fit();
-            colors.write(wv, c, now);
         }
+        let col = select_color(bal, s, wv, &mut units);
+        colors.write(wv, col, now + units);
+        Cost { units, atomics: 0 }
+    })
+}
+
+/// Vertex-based D1GC conflict detection with the `w > u` tie-break:
+/// the larger id of each clash is requeued, its color kept until it is
+/// recolored next iteration.
+pub fn conflict_phase<D: Driver>(
+    g: &Csr,
+    w: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+    lazy: bool,
+    shared: &SharedQueue,
+) -> RegionOut {
+    d.region(ts, w.len(), chunk, |_tid, s, i, now| {
+        let wv = w[i] as usize;
+        let cw = colors.read(wv, now);
+        let mut units = 1u64;
+        let mut atomics = 0u32;
+        for &u in g.row(wv) {
+            units += 1;
+            let u = u as usize;
+            if u != wv && wv > u && colors.read(u, now + units) == cw {
+                if lazy {
+                    s.next_local.push(wv as u32);
+                } else {
+                    shared.push(wv as u32);
+                    atomics += 1;
+                }
+                break;
+            }
+        }
+        Cost { units, atomics }
+    })
+}
+
+/// Conflict removal restricted to an explicit row subset — the dynamic
+/// subsystem's dirty-frontier detection. Every new distance-1 clash
+/// runs through an inserted edge `(a, b)` and both endpoints are
+/// insertion-dirty, so scanning each dirty row `v` and uncoloring
+/// same-colored neighbors removes every clash the batch could have
+/// created at the cost of the batch's footprint (DESIGN.md §14).
+pub fn conflict_phase_on<D: Driver>(
+    g: &Csr,
+    rows: &[u32],
+    colors: &D::Colors,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    chunk: usize,
+) -> RegionOut {
+    d.region(ts, rows.len(), chunk, |_tid, _s, i, now| {
+        let v = rows[i] as usize;
+        let mut units = 1u64;
+        let cv = colors.read(v, now);
+        if cv >= 0 {
+            for &u in g.row(v) {
+                let u = u as usize;
+                if u == v {
+                    continue;
+                }
+                units += 1;
+                if colors.read(u, now + units) == cv {
+                    // the visited row's color is kept; the neighbor loses
+                    colors.write(u, -1, now + units);
+                }
+            }
+        }
+        Cost::new(units)
+    })
+}
+
+/// The `MAX_ITERS` safety net: exact sequential greedy over the
+/// remaining queue, reading and writing through the color store at time
+/// `now`. With the whole queue this is the `cap = 0` baseline that must
+/// reproduce [`seq_greedy`] bit-for-bit.
+pub fn sequential_finish<C: ColorStore>(
+    g: &Csr,
+    w: &[u32],
+    colors: &C,
+    ts0: &mut ThreadState,
+    now: u64,
+) {
+    for &wv in w {
+        let wv = wv as usize;
+        ts0.forbidden.next_gen();
+        for &u in g.row(wv) {
+            let u = u as usize;
+            if u != wv {
+                let c = colors.read(u, now);
+                if c >= 0 {
+                    ts0.forbidden.insert(c);
+                }
+            }
+        }
+        let (c, _) = ts0.forbidden.first_fit();
+        colors.write(wv, c, now);
     }
-    (colors.to_vec(), iters)
+}
+
+/// Run a full D1GC coloring with driver `d` (same loop as BGPC/D2GC).
+pub fn run<D: Driver>(
+    g: &Csr,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+) -> ColoringResult {
+    let mut ts = ThreadState::bank(d.threads(), color_cap(g));
+    run_capped(g, order, spec, bal, d, &mut ts, MAX_ITERS)
+}
+
+/// [`run`] with an explicit iteration cap and a caller-owned
+/// [`ThreadState`] bank — the D1GC mirror of
+/// [`crate::coloring::bgpc::run_capped`]. D1GC has no net-based phase
+/// (its "net" *is* the adjacency row), so every iteration runs the
+/// vertex phases; the schedule still supplies chunking and the
+/// lazy-queue option.
+pub fn run_capped<D: Driver>(
+    g: &Csr,
+    order: &[u32],
+    spec: &AlgSpec,
+    bal: Balance,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    max_iters: usize,
+) -> ColoringResult {
+    let n = g.n_rows;
+    let t0 = std::time::Instant::now();
+    let colors = d.new_colors(n);
+    let cap = color_cap(g);
+    for s in ts.iter_mut() {
+        s.forbidden.ensure(cap);
+    }
+    let shared = SharedQueue::with_capacity(n);
+    let mut w: Vec<u32> = order.to_vec();
+    let mut trace = RunTrace::default();
+    let mut sim_secs = 0.0f64;
+    let mut work_units = 0u64;
+    let mut iterations = 0usize;
+    let mut is_sim = false;
+
+    while !w.is_empty() && iterations < max_iters {
+        iterations += 1;
+        let mut it = IterTrace {
+            queue_len: w.len(),
+            color_kind: 'V',
+            conflict_kind: 'V',
+            ..Default::default()
+        };
+
+        let cr = {
+            let _sp = crate::obs::trace::span_n("d1gc.speculate", w.len() as u64);
+            color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+        };
+        it.color_secs = cr.seconds();
+        it.color_busy = cr.busy_units.clone();
+        work_units += cr.busy_units.iter().sum::<u64>();
+        is_sim = cr.sim_ns.is_some();
+
+        let (rr, w_next) = {
+            let _sp = crate::obs::trace::span_n("d1gc.detect", w.len() as u64);
+            let r = conflict_phase(g, &w, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
+            work_units += r.busy_units.iter().sum::<u64>();
+            let wn = crate::coloring::bgpc::collect_next(spec.lazy_queues, ts, &shared);
+            (r, wn)
+        };
+        it.conflict_secs = rr.seconds();
+        sim_secs += it.color_secs + it.conflict_secs;
+        trace.iters.push(it);
+        w = w_next;
+    }
+
+    if !w.is_empty() {
+        // safety net: finish sequentially (exact greedy over what's left)
+        let _sp = crate::obs::trace::span_n("d1gc.seq_finish", w.len() as u64);
+        sequential_finish(g, &w, &colors, &mut ts[0], d.now());
+    }
+
+    let colors_vec = colors.to_vec();
+    let n_colors = crate::coloring::stats::distinct_colors(&colors_vec);
+    ColoringResult {
+        colors: colors_vec,
+        n_colors,
+        iterations,
+        seconds: if is_sim { sim_secs } else { t0.elapsed().as_secs_f64() },
+        trace,
+        work_units,
+    }
+}
+
+/// Parallel optimistic D1GC in natural order (back-compat shim over
+/// [`run`]). Returns `(colors, iterations)`.
+pub fn parallel<D: Driver>(g: &Csr, d: &mut D, chunk: usize) -> (Vec<i32>, usize) {
+    let order: Vec<u32> = (0..g.n_rows as u32).collect();
+    let spec = AlgSpec {
+        name: "V-V",
+        net_color_iters: 0,
+        net_conflict_iters: 0,
+        chunk,
+        lazy_queues: false,
+        net_alg: crate::coloring::schedule::NetColorAlg::TwoPass,
+    };
+    let r = run(g, &order, &spec, Balance::None, d);
+    (r.colors, r.iterations)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coloring::schedule;
     use crate::coloring::verify::d1gc_valid;
     use crate::graph::generators::random_symmetric;
     use crate::par::ThreadsDriver;
@@ -121,5 +305,60 @@ mod tests {
         assert!(d1gc_valid(&g, &c).is_ok());
         let (c, _) = parallel(&g, &mut SimDriver::new(8, CostModel::default()), 64);
         assert!(d1gc_valid(&g, &c).is_ok());
+    }
+
+    #[test]
+    fn run_capped_valid_across_schedules() {
+        let g = random_symmetric(250, 1200, 9);
+        let order: Vec<u32> = (0..250u32).collect();
+        for spec in [schedule::V_V, schedule::V_V_64, schedule::V_V_64D] {
+            let mut d = ThreadsDriver::new(4);
+            let r = run(&g, &order, &spec, Balance::None, &mut d);
+            assert!(d1gc_valid(&g, &r.colors).is_ok(), "{} threads", spec.name);
+            let mut d = SimDriver::new(8, CostModel::default());
+            let r = run(&g, &order, &spec, Balance::None, &mut d);
+            assert!(d1gc_valid(&g, &r.colors).is_ok(), "{} sim", spec.name);
+        }
+    }
+
+    #[test]
+    fn max_iters_zero_fallback_is_exact_sequential_greedy() {
+        // cap = 0 routes the whole queue through sequential_finish, which
+        // must reproduce seq_greedy bit-for-bit (the invariant BGPC and
+        // D2GC also hold — the dynamic engine's last line of defense).
+        let g = random_symmetric(200, 900, 13);
+        let order: Vec<u32> = (0..200u32).collect();
+        let (seq, _) = seq_greedy(&g, &order);
+        let mut d = ThreadsDriver::new(1);
+        let mut ts = ThreadState::bank(1, color_cap(&g));
+        let r = run_capped(&g, &order, &schedule::V_V, Balance::None, &mut d, &mut ts, 0);
+        assert_eq!(r.colors, seq);
+    }
+
+    #[test]
+    fn conflict_phase_on_uncolors_planted_clash() {
+        // edge 0-1 with equal colors: scanning dirty row 0 keeps 0's
+        // color and uncolors 1
+        let g = crate::graph::Csr::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 1)]);
+        let mut d = ThreadsDriver::new(1);
+        let colors = d.new_colors(3);
+        colors.write(0, 0, 0);
+        colors.write(1, 0, 0); // clash with 0
+        colors.write(2, 1, 0);
+        let mut ts = ThreadState::bank(1, 8);
+        conflict_phase_on(&g, &[0], &colors, &mut d, &mut ts, 64);
+        let c = colors.to_vec();
+        assert_eq!(c, vec![0, -1, 1], "neighbor loses, visited row keeps");
+    }
+
+    #[test]
+    fn deterministic_sim() {
+        let g = random_symmetric(150, 700, 21);
+        let order: Vec<u32> = (0..150u32).collect();
+        let once = || {
+            let mut d = SimDriver::new(4, CostModel::default());
+            run(&g, &order, &schedule::V_V_64D, Balance::None, &mut d)
+        };
+        assert_eq!(once().colors, once().colors);
     }
 }

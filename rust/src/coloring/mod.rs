@@ -11,7 +11,9 @@
 //! * D2GC analogues (Alg. 9–10) — [`d2gc`];
 //! * the hybrid schedules `V-V` … `N2-N2` — [`schedule`];
 //! * balancing heuristics B1/B2 (Alg. 11–12) — [`balance`];
-//! * D1GC (for completeness) — [`d1gc`].
+//! * D1GC at full engine parity — [`d1gc`];
+//! * the strategy seam (orderings × color-and-fix post pass) —
+//!   [`strategy`] (DESIGN.md §14).
 
 pub mod balance;
 pub mod bgpc;
@@ -20,12 +22,14 @@ pub mod d2gc;
 pub mod forbidden;
 pub mod schedule;
 pub mod stats;
+pub mod strategy;
 pub mod verify;
 
 pub use balance::Balance;
 pub use forbidden::{StampSet, ThreadState};
 pub use schedule::{AlgSpec, NetColorAlg, Schedule};
 pub use stats::ColorStats;
+pub use strategy::{PostPass, Strategy};
 
 use std::sync::Arc;
 
@@ -64,6 +68,8 @@ pub struct Config {
     pub threads: usize,
     pub mode: ExecMode,
     pub ordering: Ordering,
+    /// Post-coloring improvement pass (DESIGN.md §14).
+    pub post_pass: PostPass,
 }
 
 impl Config {
@@ -75,6 +81,7 @@ impl Config {
             threads,
             mode: ExecMode::Sim(CostModel::default()),
             ordering: Ordering::Natural,
+            post_pass: PostPass::None,
         }
     }
 
@@ -86,6 +93,7 @@ impl Config {
             threads,
             mode: ExecMode::Threads,
             ordering: Ordering::Natural,
+            post_pass: PostPass::None,
         }
     }
 
@@ -96,6 +104,18 @@ impl Config {
 
     pub fn with_ordering(mut self, o: Ordering) -> Config {
         self.ordering = o;
+        self
+    }
+
+    pub fn with_post_pass(mut self, p: PostPass) -> Config {
+        self.post_pass = p;
+        self
+    }
+
+    /// Apply both halves of a [`Strategy`] at once.
+    pub fn with_strategy(mut self, s: Strategy) -> Config {
+        self.ordering = s.ordering;
+        self.post_pass = s.post_pass;
         self
     }
 }
@@ -135,11 +155,15 @@ pub fn color_bgpc(g: &Bipartite, cfg: &Config) -> ColoringResult {
     match cfg.mode {
         ExecMode::Threads => {
             let mut d = ThreadsDriver::new(cfg.threads);
-            bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d)
+            let mut r = bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(g, cfg, &mut d, &mut r);
+            r
         }
         ExecMode::Sim(model) => {
             let mut d = SimDriver::new(cfg.threads, model);
-            bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d)
+            let mut r = bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(g, cfg, &mut d, &mut r);
+            r
         }
     }
 }
@@ -156,10 +180,55 @@ pub fn color_bgpc_on(g: &Bipartite, cfg: &Config, pool: &Arc<WorkerPool>) -> Col
             let mut d = ThreadsDriver::on_team(pool, cfg.threads);
             let t = d.threads();
             with_pool_bank(pool, t, bgpc::color_cap(g), |bank| {
-                bgpc::run_capped(g, &order, &cfg.spec, cfg.balance, &mut d, bank, bgpc::MAX_ITERS)
+                let mut r = bgpc::run_capped(
+                    g,
+                    &order,
+                    &cfg.spec,
+                    cfg.balance,
+                    &mut d,
+                    bank,
+                    bgpc::MAX_ITERS,
+                );
+                post_pass_on_bank(g, cfg, &mut d, bank, &mut r);
+                r
             })
         }
         ExecMode::Sim(_) => color_bgpc(g, cfg),
+    }
+}
+
+/// Run the configured [`PostPass`] (if any) against `r`, with a private
+/// per-run [`ThreadState`] bank — the helper the one-shot entry points
+/// share. `P` is the [`crate::dynamic::Problem`] view of the graph, so
+/// one generic fix pass serves BGPC, D2GC, and D1GC (DESIGN.md §14).
+fn post_pass_owned<P: crate::dynamic::Problem, D: crate::par::Driver>(
+    g: &P,
+    cfg: &Config,
+    d: &mut D,
+    r: &mut ColoringResult,
+) {
+    if matches!(cfg.post_pass, PostPass::ColorAndFix(_)) {
+        let mut bank = ThreadState::bank(d.threads(), g.color_cap());
+        post_pass_on_bank(g, cfg, d, &mut bank, r);
+    }
+}
+
+/// [`post_pass_owned`] with a caller-owned bank (the `_on` entry points
+/// reuse the pool-resident one).
+fn post_pass_on_bank<P: crate::dynamic::Problem, D: crate::par::Driver>(
+    g: &P,
+    cfg: &Config,
+    d: &mut D,
+    ts: &mut [ThreadState],
+    r: &mut ColoringResult,
+) {
+    if let PostPass::ColorAndFix(rounds) = cfg.post_pass {
+        let base = std::mem::take(&mut r.colors);
+        let (colors, secs) =
+            strategy::color_and_fix(g, base, rounds, cfg.spec.chunk, d, ts);
+        r.colors = colors;
+        r.n_colors = stats::distinct_colors(&r.colors);
+        r.seconds += secs;
     }
 }
 
@@ -192,11 +261,15 @@ pub fn color_d2gc(g: &Csr, cfg: &Config) -> ColoringResult {
     match cfg.mode {
         ExecMode::Threads => {
             let mut d = ThreadsDriver::new(cfg.threads);
-            d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d)
+            let mut r = d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(g, cfg, &mut d, &mut r);
+            r
         }
         ExecMode::Sim(model) => {
             let mut d = SimDriver::new(cfg.threads, model);
-            d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d)
+            let mut r = d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(g, cfg, &mut d, &mut r);
+            r
         }
     }
 }
@@ -211,10 +284,71 @@ pub fn color_d2gc_on(g: &Csr, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringR
             let mut d = ThreadsDriver::on_team(pool, cfg.threads);
             let t = d.threads();
             with_pool_bank(pool, t, d2gc::color_cap(g), |bank| {
-                d2gc::run_capped(g, &order, &cfg.spec, cfg.balance, &mut d, bank, bgpc::MAX_ITERS)
+                let mut r = d2gc::run_capped(
+                    g,
+                    &order,
+                    &cfg.spec,
+                    cfg.balance,
+                    &mut d,
+                    bank,
+                    bgpc::MAX_ITERS,
+                );
+                post_pass_on_bank(g, cfg, &mut d, bank, &mut r);
+                r
             })
         }
         ExecMode::Sim(_) => color_d2gc(g, cfg),
+    }
+}
+
+/// Color a D1GC instance (square, structurally symmetric graph) with
+/// the given configuration — the distance-1 sibling of [`color_d2gc`],
+/// running the same engine loop over the plain adjacency (§VII).
+pub fn color_d1gc(g: &Csr, cfg: &Config) -> ColoringResult {
+    assert_eq!(g.n_rows, g.n_cols, "D1GC needs a square graph");
+    let order = d2gc_order(g, cfg);
+    let gp = crate::dynamic::D1Graph::from_ref(g);
+    match cfg.mode {
+        ExecMode::Threads => {
+            let mut d = ThreadsDriver::new(cfg.threads);
+            let mut r = d1gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(gp, cfg, &mut d, &mut r);
+            r
+        }
+        ExecMode::Sim(model) => {
+            let mut d = SimDriver::new(cfg.threads, model);
+            let mut r = d1gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
+            post_pass_owned(gp, cfg, &mut d, &mut r);
+            r
+        }
+    }
+}
+
+/// [`color_d1gc`] on a shared [`WorkerPool`] (threads mode only; sim
+/// configs delegate) — the coordinator's stateless D1GC path.
+pub fn color_d1gc_on(g: &Csr, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
+    match cfg.mode {
+        ExecMode::Threads => {
+            assert_eq!(g.n_rows, g.n_cols, "D1GC needs a square graph");
+            let order = d2gc_order(g, cfg);
+            let gp = crate::dynamic::D1Graph::from_ref(g);
+            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
+            let t = d.threads();
+            with_pool_bank(pool, t, d1gc::color_cap(g), |bank| {
+                let mut r = d1gc::run_capped(
+                    g,
+                    &order,
+                    &cfg.spec,
+                    cfg.balance,
+                    &mut d,
+                    bank,
+                    bgpc::MAX_ITERS,
+                );
+                post_pass_on_bank(gp, cfg, &mut d, bank, &mut r);
+                r
+            })
+        }
+        ExecMode::Sim(_) => color_d1gc(g, cfg),
     }
 }
 

@@ -1,0 +1,242 @@
+//! The strategy seam: visit orderings × post-coloring improvement.
+//!
+//! The paper's speculate → detect loop is ordering- and post-pass-
+//! agnostic: Çatalyürek et al. (PAPERS.md, 1205.3809) show ordering
+//! choice (LDF / smallest-last) materially shifts the colors-vs-time
+//! Pareto, and Rokos et al. (PAPERS.md, 1505.04086) show an iterative
+//! detect-and-recolor improvement pass is nearly free on top of
+//! speculation. A [`Strategy`] bundles both knobs; the engines consume
+//! the ordering as their initial work queue and [`color_and_fix`] runs
+//! the improvement pass over any [`Problem`] (DESIGN.md §14).
+//!
+//! The fix pass recolors the *highest color class* each round. That
+//! class is an independent set at the problem's distance (it shared a
+//! color in a valid coloring), so uncoloring and first-fit-recoloring
+//! its members in parallel cannot create conflicts: no member reads
+//! another member through its neighborhood, every neighbor keeps its
+//! color, and `cmax` itself never appears in a member's forbidden set —
+//! each member lands at a color ≤ its old one. Color count is therefore
+//! monotone non-increasing round over round; a defensive revert keeps
+//! the previous coloring whenever a round fails to improve, and stops.
+
+use crate::coloring::balance::Balance;
+use crate::coloring::forbidden::ThreadState;
+use crate::coloring::stats::distinct_colors;
+use crate::dynamic::Problem;
+use crate::graph::Ordering;
+use crate::par::{ColorStore, Driver};
+
+/// Post-coloring improvement pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PostPass {
+    /// Keep the engine's coloring as-is.
+    None,
+    /// Up to this many reduce-and-repair rounds of [`color_and_fix`].
+    ColorAndFix(usize),
+}
+
+/// Rounds used by the `+fix` shorthand (each round retires at most one
+/// color class; diminishing returns set in quickly).
+pub const DEFAULT_FIX_ROUNDS: usize = 4;
+
+/// A complete strategy: visit ordering + post pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Strategy {
+    pub ordering: Ordering,
+    pub post_pass: PostPass,
+}
+
+impl Strategy {
+    /// The engines' default: natural order, no post pass.
+    pub fn natural() -> Strategy {
+        Strategy { ordering: Ordering::Natural, post_pass: PostPass::None }
+    }
+
+    /// Parse CLI text: an ordering name (`natural`, `random`, `ldf` /
+    /// `lf` / `largest-first`, `sl` / `smallest-last`) with an optional
+    /// `+fix` or `+fixN` suffix, e.g. `ldf+fix`, `sl+fix8`, `natural`.
+    pub fn parse(s: &str) -> Option<Strategy> {
+        let lower = s.to_ascii_lowercase();
+        let (ord_s, fix_s) = match lower.split_once('+') {
+            Some((o, f)) => (o, Some(f)),
+            None => (lower.as_str(), None),
+        };
+        let ordering = match ord_s {
+            // `ldf` (largest-degree-first) is the literature's name for
+            // what `Ordering` calls largest-first
+            "ldf" => Ordering::LargestFirst,
+            other => Ordering::parse(other)?,
+        };
+        let post_pass = match fix_s {
+            None => PostPass::None,
+            Some("fix") => PostPass::ColorAndFix(DEFAULT_FIX_ROUNDS),
+            Some(f) => {
+                let rounds: usize = f.strip_prefix("fix")?.parse().ok()?;
+                if rounds == 0 {
+                    return None;
+                }
+                PostPass::ColorAndFix(rounds)
+            }
+        };
+        Some(Strategy { ordering, post_pass })
+    }
+
+    /// Stable display label (bench CSVs, `serve` job names).
+    pub fn label(&self) -> String {
+        let ord = match self.ordering {
+            Ordering::Natural => "natural".to_string(),
+            Ordering::Random(seed) => format!("random{seed:x}"),
+            Ordering::LargestFirst => "ldf".to_string(),
+            Ordering::SmallestLast => "sl".to_string(),
+        };
+        match self.post_pass {
+            PostPass::None => ord,
+            PostPass::ColorAndFix(r) => format!("{ord}+fix{r}"),
+        }
+    }
+}
+
+/// Iterative reduce-and-repair: up to `rounds` rounds, each uncoloring
+/// the highest color class and first-fit-recoloring it through the
+/// problem's own speculate phase (see the module docs for why this is
+/// conflict-free and monotone). Returns the improved coloring and the
+/// pass's seconds (simulated under a sim driver, wall-clock otherwise).
+///
+/// Balancing is forced to first-fit inside the pass: B1/B2 deliberately
+/// spread mass *upward*, which fights the reduction.
+pub fn color_and_fix<P: Problem, D: Driver>(
+    g: &P,
+    base: Vec<i32>,
+    rounds: usize,
+    chunk: usize,
+    d: &mut D,
+    ts: &mut [ThreadState],
+) -> (Vec<i32>, f64) {
+    let mut colors = base;
+    let mut best = distinct_colors(&colors);
+    let mut secs = 0.0f64;
+    let cap = g.color_cap();
+    for s in ts.iter_mut() {
+        s.forbidden.ensure(cap);
+    }
+    for _ in 0..rounds {
+        let cmax = colors.iter().copied().max().unwrap_or(-1);
+        if cmax <= 0 {
+            break; // one color (or nothing colored): nothing to reduce
+        }
+        let w: Vec<u32> = colors
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c == cmax)
+            .map(|(u, _)| u as u32)
+            .collect();
+        // seed a fresh store with everything but the class
+        let store = d.new_colors(colors.len());
+        for (u, &c) in colors.iter().enumerate() {
+            if c >= 0 && c != cmax {
+                store.write(u, c, 0);
+            }
+        }
+        let r = {
+            let _sp = crate::obs::trace::span_n("strategy.fix", w.len() as u64);
+            g.color_phase(&w, &store, d, ts, chunk, Balance::None)
+        };
+        secs += r.seconds();
+        let cand = store.to_vec();
+        let n2 = distinct_colors(&cand);
+        if n2 < best {
+            colors = cand;
+            best = n2;
+        } else {
+            break; // no improvement: keep the previous coloring, stop
+        }
+    }
+    (colors, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::bgpc;
+    use crate::coloring::schedule;
+    use crate::graph::generators::{random_bipartite, random_symmetric};
+    use crate::par::ThreadsDriver;
+
+    #[test]
+    fn parse_accepts_the_full_grammar() {
+        assert_eq!(
+            Strategy::parse("natural"),
+            Some(Strategy { ordering: Ordering::Natural, post_pass: PostPass::None })
+        );
+        assert_eq!(
+            Strategy::parse("ldf+fix"),
+            Some(Strategy {
+                ordering: Ordering::LargestFirst,
+                post_pass: PostPass::ColorAndFix(DEFAULT_FIX_ROUNDS),
+            })
+        );
+        assert_eq!(
+            Strategy::parse("SL+FIX8"),
+            Some(Strategy {
+                ordering: Ordering::SmallestLast,
+                post_pass: PostPass::ColorAndFix(8),
+            })
+        );
+        assert_eq!(
+            Strategy::parse("lf"),
+            Some(Strategy { ordering: Ordering::LargestFirst, post_pass: PostPass::None })
+        );
+        assert!(Strategy::parse("random+fix").is_some());
+        assert!(Strategy::parse("ldf+fix0").is_none(), "zero rounds is a typo");
+        assert!(Strategy::parse("ldf+repair").is_none());
+        assert!(Strategy::parse("junk").is_none());
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for s in ["natural", "ldf+fix4", "sl", "sl+fix8"] {
+            let st = Strategy::parse(s).unwrap();
+            assert_eq!(Strategy::parse(&st.label()), Some(st), "{s}");
+        }
+    }
+
+    #[test]
+    fn fix_is_valid_and_monotone_bgpc() {
+        let g = random_bipartite(80, 120, 900, 17);
+        let order: Vec<u32> = (0..120u32).collect();
+        let mut d = ThreadsDriver::new(4);
+        let mut ts = ThreadState::bank(4, bgpc::color_cap(&g));
+        let r = bgpc::run(&g, &order, &schedule::V_V_64D, Balance::None, &mut d);
+        let before = distinct_colors(&r.colors);
+        let (fixed, _) = color_and_fix(&g, r.colors, 8, 64, &mut d, &mut ts);
+        assert!(crate::coloring::verify::bgpc_valid(&g, &fixed).is_ok());
+        assert!(distinct_colors(&fixed) <= before, "fix must never add colors");
+    }
+
+    #[test]
+    fn fix_is_valid_and_monotone_d2gc() {
+        let g = random_symmetric(120, 500, 23);
+        let order: Vec<u32> = (0..120u32).collect();
+        let mut d = ThreadsDriver::new(4);
+        let mut ts = ThreadState::bank(4, crate::coloring::d2gc::color_cap(&g));
+        let r = crate::coloring::d2gc::run(&g, &order, &schedule::V_V_64D, Balance::None, &mut d);
+        let before = distinct_colors(&r.colors);
+        let (fixed, _) = color_and_fix(&g, r.colors, 8, 64, &mut d, &mut ts);
+        assert!(crate::coloring::verify::d2gc_valid(&g, &fixed).is_ok());
+        assert!(distinct_colors(&fixed) <= before);
+    }
+
+    #[test]
+    fn fix_reduces_a_planted_wasteful_class() {
+        // a 4-vertex independent set (no shared net) colored 0,0,0,9:
+        // one round must retire color 9 without touching anyone else
+        let m = crate::graph::Csr::from_edges(2, 4, &[(0, 0), (0, 1), (1, 2), (1, 3)]);
+        let g = crate::graph::Bipartite::from_net_incidence(m);
+        let base = vec![0, 1, 0, 9];
+        let mut d = ThreadsDriver::new(2);
+        let mut ts = ThreadState::bank(2, 16);
+        let (fixed, _) = color_and_fix(&g, base, 4, 64, &mut d, &mut ts);
+        assert!(crate::coloring::verify::bgpc_valid(&g, &fixed).is_ok());
+        assert_eq!(distinct_colors(&fixed), 2, "color 9 retired: {fixed:?}");
+    }
+}

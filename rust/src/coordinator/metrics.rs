@@ -85,6 +85,8 @@ pub struct Metrics {
     updates_bgpc: Arc<Counter>,
     /// D2GC dynamic-session update batches applied.
     updates_d2gc: Arc<Counter>,
+    /// D1GC dynamic-session update batches applied.
+    updates_d1gc: Arc<Counter>,
     /// Vertices recolored across all update batches.
     recolored: Arc<Counter>,
     /// Colored-execution jobs completed.
@@ -117,6 +119,7 @@ impl Metrics {
             total_us: registry.counter("coord.engine_us"),
             updates_bgpc: registry.counter("coord.updates_bgpc"),
             updates_d2gc: registry.counter("coord.updates_d2gc"),
+            updates_d1gc: registry.counter("coord.updates_d1gc"),
             recolored: registry.counter("coord.recolored"),
             executes: registry.counter("coord.executes"),
             exec_items: registry.counter("coord.exec_items"),
@@ -146,10 +149,11 @@ impl Metrics {
             self.pjrt_jobs.inc();
         }
         if let Some(b) = &o.batch {
-            // updates are counted per problem (BGPC and D2GC sessions
-            // share the update path but not the repair engine)
+            // updates are counted per problem (every session kind
+            // shares the update path but not the repair engine)
             match o.problem {
                 Some(Problem::D2gc) => self.updates_d2gc.inc(),
+                Some(Problem::D1gc) => self.updates_d1gc.inc(),
                 _ => self.updates_bgpc.inc(),
             };
             // A fused group shares one BatchStats: counting it per
@@ -196,7 +200,7 @@ impl Metrics {
 
     /// Dynamic-session update batches applied (all problems).
     pub fn updates(&self) -> u64 {
-        self.updates_bgpc() + self.updates_d2gc()
+        self.updates_bgpc() + self.updates_d2gc() + self.updates_d1gc()
     }
 
     /// BGPC update batches applied.
@@ -207,6 +211,11 @@ impl Metrics {
     /// D2GC update batches applied.
     pub fn updates_d2gc(&self) -> u64 {
         self.updates_d2gc.get()
+    }
+
+    /// D1GC update batches applied.
+    pub fn updates_d1gc(&self) -> u64 {
+        self.updates_d1gc.get()
     }
 
     /// Vertices recolored across all update batches (fused groups
@@ -257,13 +266,14 @@ impl Metrics {
             None => "-".to_string(),
         };
         format!(
-            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={}) recolored={} executes={} exec_items={} engine_secs={:.3} wait_p50={} wait_p99={} service_p50={} service_p99={}",
+            "jobs={} failures={} pjrt={} updates={} (bgpc={} d2gc={} d1gc={}) recolored={} executes={} exec_items={} engine_secs={:.3} wait_p50={} wait_p99={} service_p50={} service_p99={}",
             self.jobs_done(),
             self.failures(),
             self.pjrt_jobs(),
             self.updates(),
             self.updates_bgpc(),
             self.updates_d2gc(),
+            self.updates_d1gc(),
             self.recolored(),
             self.executes(),
             self.exec_items(),
@@ -335,15 +345,26 @@ mod tests {
             problem: Some(Problem::D2gc),
             ..upd.clone()
         };
+        let upd1 = crate::coordinator::JobOutcome {
+            problem: Some(Problem::D1gc),
+            ..upd.clone()
+        };
         m.record(&upd);
         m.record(&upd);
         m.record(&upd2);
-        assert_eq!(m.updates(), 3);
-        assert_eq!(m.updates_bgpc(), 2);
+        m.record(&upd1);
+        assert_eq!(m.updates(), 4);
+        assert_eq!(m.updates_bgpc(), 2, "D1GC must not fold into the BGPC count");
         assert_eq!(m.updates_d2gc(), 1);
-        assert_eq!(m.recolored(), 21);
-        assert!(m.summary().contains("updates=3"));
+        assert_eq!(m.updates_d1gc(), 1);
+        assert_eq!(m.recolored(), 28);
+        assert!(m.summary().contains("updates=4"));
         assert!(m.summary().contains("d2gc=1"));
+        assert!(m.summary().contains("d1gc=1"));
+        // D1GC updates are their own kind in the registry exposition
+        let text = m.exposition();
+        assert!(text.contains("counter coord.updates_d1gc 1"), "exposition: {text}");
+        assert!(text.contains("counter coord.updates_bgpc 2"), "exposition: {text}");
     }
 
     #[test]

@@ -50,8 +50,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::coloring::{color_bgpc_on, color_d2gc_on, Config, Problem};
-use crate::dynamic::{BatchStats, BgpcSession, D2gcSession, UpdateBatch};
+use crate::coloring::{color_bgpc_on, color_d1gc_on, color_d2gc_on, Config, Problem};
+use crate::dynamic::{BatchStats, BgpcSession, D1Graph, D1gcSession, D2gcSession, UpdateBatch};
 use crate::exec::{EpochSchedule, Executor};
 use crate::graph::{Bipartite, Csr};
 use crate::obs::trace::{span, span_n};
@@ -65,17 +65,18 @@ pub use metrics::Metrics;
 /// [`ServiceOpts::pool_threads`] to pick another).
 pub const DEFAULT_POOL_THREADS: usize = 4;
 
-/// Identifier of an open dynamic session (see [`Service::open_session`]
-/// and [`Service::open_session_d2gc`]).
+/// Identifier of an open dynamic session (see [`Service::open_session`],
+/// [`Service::open_session_d2gc`], and [`Service::open_session_d1gc`]).
 pub type SessionId = u64;
 
-/// A problem-tagged dynamic session as the service stores it. The two
+/// A problem-tagged dynamic session as the service stores it. The
 /// instantiations of [`crate::dynamic::DynamicSession`] share one
 /// update path; this enum is the runtime dispatch point that routes a
 /// fused batch group to the right repair engine.
 enum AnySession {
     Bgpc(BgpcSession),
     D2gc(D2gcSession),
+    D1gc(D1gcSession),
 }
 
 impl AnySession {
@@ -83,6 +84,7 @@ impl AnySession {
         match self {
             AnySession::Bgpc(_) => Problem::Bgpc,
             AnySession::D2gc(_) => Problem::D2gc,
+            AnySession::D1gc(_) => Problem::D1gc,
         }
     }
 
@@ -93,6 +95,7 @@ impl AnySession {
         match self {
             AnySession::Bgpc(s) => s.apply_many(batches),
             AnySession::D2gc(s) => s.apply_many(batches),
+            AnySession::D1gc(s) => s.apply_many(batches),
         }
     }
 
@@ -100,6 +103,7 @@ impl AnySession {
         match self {
             AnySession::Bgpc(s) => s.verify().is_ok(),
             AnySession::D2gc(s) => s.verify().is_ok(),
+            AnySession::D1gc(s) => s.verify().is_ok(),
         }
     }
 
@@ -109,6 +113,7 @@ impl AnySession {
         match self {
             AnySession::Bgpc(s) => s.colors_arc(),
             AnySession::D2gc(s) => s.colors_arc(),
+            AnySession::D1gc(s) => s.colors_arc(),
         }
     }
 }
@@ -218,6 +223,9 @@ pub struct Job {
 pub enum JobInput {
     Bgpc(Arc<Bipartite>),
     D2gc(Arc<Csr>),
+    /// Distance-1 coloring of a square, structurally symmetric graph
+    /// (the survey baseline at full engine parity — DESIGN.md §14).
+    D1gc(Arc<Csr>),
     /// Incremental update batch against an open dynamic session. Always
     /// runs on the session's shard pool (the job's `cfg`/`engine` are
     /// ignored — the session carries its own [`Config`]); applied
@@ -249,6 +257,7 @@ impl JobInput {
         match self {
             JobInput::Bgpc(_) => Some(Problem::Bgpc),
             JobInput::D2gc(_) => Some(Problem::D2gc),
+            JobInput::D1gc(_) => Some(Problem::D1gc),
             JobInput::Update { .. } | JobInput::Execute { .. } | JobInput::Stats => None,
         }
     }
@@ -516,6 +525,25 @@ fn run_stateless(
                 epoch: None,
             }
         }
+        JobInput::D1gc(g) => {
+            let r = color_d1gc_on(g, &job.cfg, pools.shard(shard));
+            let valid = crate::coloring::verify::d1gc_valid(g, &r.colors).is_ok();
+            JobOutcome {
+                name: job.name.clone(),
+                engine: "native",
+                problem: Some(Problem::D1gc),
+                n_colors: r.n_colors,
+                iterations: r.iterations,
+                seconds: r.seconds,
+                valid,
+                error: None,
+                batch: None,
+                exec: None,
+                text: None,
+                fused: 0,
+                epoch: None,
+            }
+        }
         JobInput::Execute { session, kernel, rounds } => {
             run_execute(sessions, pools, *session, kernel, *rounds, &job.name)
         }
@@ -766,8 +794,8 @@ fn run_pjrt(rt: &Runtime, job: &Job) -> JobOutcome {
                 },
             }
         }
-        JobInput::D2gc(_) | JobInput::Update { .. } | JobInput::Execute { .. }
-        | JobInput::Stats => fail_outcome(
+        JobInput::D2gc(_) | JobInput::D1gc(_) | JobInput::Update { .. }
+        | JobInput::Execute { .. } | JobInput::Stats => fail_outcome(
             &job.name,
             "pjrt",
             job.input.problem(),
@@ -1016,7 +1044,7 @@ impl Service {
                 let shard = self.next_shard();
                 self.push_run(job, &handle, shard);
             }
-            JobInput::Bgpc(_) | JobInput::D2gc(_) => {
+            JobInput::Bgpc(_) | JobInput::D2gc(_) | JobInput::D1gc(_) => {
                 let use_pjrt = match job.engine {
                     EngineSel::Pjrt => true,
                     EngineSel::Native => false,
@@ -1081,6 +1109,25 @@ impl Service {
             crate::dynamic::DynamicSession::start_on(g.clone(), cfg, self.pools.shard(shard));
         let valid = session.verify().is_ok();
         self.install_session(id, shard, name, AnySession::D2gc(session), &init, valid)
+    }
+
+    /// Open a D1GC dynamic session over a square, structurally
+    /// symmetric graph: same contract as [`Service::open_session_d2gc`],
+    /// but clashes are repaired at distance 1 (the survey baseline,
+    /// DESIGN.md §14).
+    ///
+    /// # Panics
+    /// If `g` is not square and structurally symmetric.
+    pub fn open_session_d1gc(&self, name: &str, g: &Csr, cfg: Config) -> (SessionId, JobOutcome) {
+        let id = self.session_seq.fetch_add(1, AOrd::Relaxed) + 1;
+        let shard = id as usize % self.pools.n_shards();
+        let (mut session, init) = crate::dynamic::DynamicSession::start_on(
+            D1Graph::new(g.clone()),
+            cfg,
+            self.pools.shard(shard),
+        );
+        let valid = session.verify().is_ok();
+        self.install_session(id, shard, name, AnySession::D1gc(session), &init, valid)
     }
 
     /// Shared tail of the `open_session*` pair: record the bring-up

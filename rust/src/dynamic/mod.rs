@@ -32,7 +32,9 @@
 //!   state; one [`DynamicSession::apply`] per batch, returning
 //!   [`BatchStats`]. The B1/B2 balancing trackers live in the session,
 //!   so color-set balance survives the stream. [`BgpcSession`] and
-//!   [`D2gcSession`] are the two instantiations.
+//!   [`D2gcSession`] and [`D1gcSession`] are the instantiations
+//!   ([`D1Graph`] wraps the square adjacency so the distance-1 phases
+//!   dispatch instead of D2GC's).
 //! * The coordinator exposes sessions as a service:
 //!   [`crate::coordinator::Service::open_session`] /
 //!   [`crate::coordinator::Service::open_session_d2gc`] plus the
@@ -59,8 +61,8 @@ pub mod session;
 
 pub use delta::{DeltaBipartite, DeltaSymmetric};
 pub use engine::repair;
-pub use problem::{DeltaOps, Problem};
-pub use session::{BgpcSession, D2gcSession, DynamicSession};
+pub use problem::{D1Graph, DeltaD1, DeltaOps, Problem};
+pub use session::{BgpcSession, D1gcSession, D2gcSession, DynamicSession};
 
 /// One batch of graph edits, applied atomically by
 /// [`DynamicSession::apply`]. Edit pairs are *problem-shaped*: for a

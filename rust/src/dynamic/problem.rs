@@ -33,7 +33,7 @@ use crate::coloring::balance::Balance;
 use crate::coloring::forbidden::ThreadState;
 use crate::coloring::schedule::AlgSpec;
 use crate::coloring::verify::Violation;
-use crate::coloring::{bgpc, d2gc, ColoringResult, Problem as ProblemKind};
+use crate::coloring::{bgpc, d1gc, d2gc, ColoringResult, Problem as ProblemKind};
 use crate::graph::{Bipartite, Csr, Ordering};
 use crate::par::{ColorStore, Driver, RegionOut, SharedQueue};
 
@@ -373,6 +373,140 @@ impl Problem for Csr {
     }
 }
 
+/// The distance-1 problem's graph type: a square structurally symmetric
+/// [`Csr`] adjacency, wrapped so `Problem` can dispatch to the D1GC
+/// phases (the bare `Csr` already means D2GC). `repr(transparent)`
+/// guarantees the same layout as `Csr`, which [`D1Graph::from_ref`]
+/// relies on to view a borrowed adjacency as a borrowed problem without
+/// cloning (the post-pass helpers in `coloring::mod` use this).
+#[derive(Clone, Debug)]
+#[repr(transparent)]
+pub struct D1Graph(pub Csr);
+
+impl D1Graph {
+    /// Wrap an owned adjacency.
+    pub fn new(g: Csr) -> D1Graph {
+        D1Graph(g)
+    }
+
+    /// View a borrowed adjacency as a borrowed problem. Sound because
+    /// `D1Graph` is `repr(transparent)` over `Csr`.
+    pub fn from_ref(g: &Csr) -> &D1Graph {
+        unsafe { &*(g as *const Csr as *const D1Graph) }
+    }
+
+    /// The underlying adjacency.
+    pub fn as_csr(&self) -> &Csr {
+        &self.0
+    }
+}
+
+/// The D1GC overlay: the symmetric overlay with the frozen view
+/// re-wrapped as [`D1Graph`] — distance-1 coloring shares D2GC's
+/// structural invariant (square, mirrored edges), only the coloring
+/// distance differs.
+pub struct DeltaD1(DeltaSymmetric);
+
+impl Problem for D1Graph {
+    type Delta = DeltaD1;
+    const KIND: ProblemKind = ProblemKind::D1gc;
+
+    fn validate_input(&self) {
+        assert!(
+            self.0.is_structurally_symmetric(),
+            "D1GC requires a square, structurally symmetric graph"
+        );
+    }
+
+    fn n_vertices(&self) -> usize {
+        self.0.n_rows
+    }
+
+    fn color_cap(&self) -> usize {
+        d1gc::color_cap(&self.0)
+    }
+
+    fn into_delta(self) -> DeltaD1 {
+        DeltaD1(DeltaSymmetric::new(self.0))
+    }
+
+    fn order(&self, ordering: &Ordering) -> Vec<u32> {
+        // same bipartite-view reuse as the D2GC impl
+        Problem::order(&self.0, ordering)
+    }
+
+    fn conflict_phase_on<D: Driver>(
+        &self,
+        dirty: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+    ) -> RegionOut {
+        d1gc::conflict_phase_on(&self.0, dirty, colors, d, ts, chunk)
+    }
+
+    fn extend_frontier(&self, dirty: &[u32], out: &mut Vec<u32>) {
+        // the closed distance-1 neighborhood, like D2GC: detection may
+        // have uncolored any neighbor of a dirty row
+        for &v in dirty {
+            out.push(v);
+            out.extend_from_slice(self.0.row(v as usize));
+        }
+    }
+
+    fn color_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        bal: Balance,
+    ) -> RegionOut {
+        d1gc::color_phase(&self.0, w, colors, d, ts, chunk, bal)
+    }
+
+    fn conflict_phase<D: Driver>(
+        &self,
+        w: &[u32],
+        colors: &D::Colors,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        chunk: usize,
+        lazy: bool,
+        shared: &SharedQueue,
+    ) -> RegionOut {
+        d1gc::conflict_phase(&self.0, w, colors, d, ts, chunk, lazy, shared)
+    }
+
+    fn sequential_finish<C: ColorStore>(
+        &self,
+        w: &[u32],
+        colors: &C,
+        ts0: &mut ThreadState,
+        now: u64,
+    ) {
+        d1gc::sequential_finish(&self.0, w, colors, ts0, now)
+    }
+
+    fn run_capped<D: Driver>(
+        &self,
+        order: &[u32],
+        spec: &AlgSpec,
+        bal: Balance,
+        d: &mut D,
+        ts: &mut [ThreadState],
+        max_iters: usize,
+    ) -> ColoringResult {
+        d1gc::run_capped(&self.0, order, spec, bal, d, ts, max_iters)
+    }
+
+    fn verify(&self, colors: &[i32]) -> Result<(), Violation> {
+        crate::coloring::verify::d1gc_valid(&self.0, colors)
+    }
+}
+
 impl DeltaOps for DeltaBipartite {
     type Graph = Bipartite;
 
@@ -429,6 +563,34 @@ impl DeltaOps for DeltaSymmetric {
     }
 }
 
+impl DeltaOps for DeltaD1 {
+    type Graph = D1Graph;
+
+    fn add_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaSymmetric::add_edge(&mut self.0, a, b)
+    }
+
+    fn remove_edge(&mut self, a: u32, b: u32) -> bool {
+        DeltaSymmetric::remove_edge(&mut self.0, a, b)
+    }
+
+    fn add_net(&mut self, members: &[u32]) -> usize {
+        DeltaSymmetric::add_vertex_counted(&mut self.0, members).1
+    }
+
+    fn nnz(&self) -> usize {
+        DeltaSymmetric::nnz(&self.0)
+    }
+
+    fn graph(&mut self) -> &D1Graph {
+        D1Graph::from_ref(DeltaSymmetric::graph(&mut self.0))
+    }
+
+    fn take_dirty(&mut self) -> (Vec<u32>, Vec<u32>) {
+        DeltaSymmetric::take_dirty(&mut self.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +631,26 @@ mod tests {
         // mirrored pairs and the diagonal count as part of the row
         assert_eq!(DeltaOps::add_net(&mut s, &[0, 0, 2]), 2);
         assert_eq!(DeltaOps::add_net(&mut s, &[]), 0, "bare row: no member edits");
+    }
+
+    #[test]
+    fn d1_graph_mirrors_the_csr_problem_shape() {
+        let s = random_symmetric(15, 40, 2);
+        let g = D1Graph::new(s.clone());
+        assert_eq!(<D1Graph as Problem>::KIND, ProblemKind::D1gc);
+        assert_eq!(Problem::color_cap(&g), d1gc::color_cap(&s));
+        assert_eq!(Problem::n_vertices(&g), 15);
+        // from_ref is a view, not a copy
+        assert!(std::ptr::eq(D1Graph::from_ref(&s).as_csr(), &s));
+        // frontier: closed distance-1 neighborhood, like D2GC
+        let mut f = Vec::new();
+        Problem::extend_frontier(&g, &[3], &mut f);
+        assert_eq!(f[0], 3);
+        assert_eq!(&f[1..], s.row(3));
+        // the overlay streams symmetric edits and re-wraps the view
+        let mut dl = Problem::into_delta(g);
+        assert!(DeltaOps::add_edge(&mut dl, 0, 14));
+        assert!(DeltaOps::graph(&mut dl).as_csr().row(0).contains(&14));
     }
 
     #[test]

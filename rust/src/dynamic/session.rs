@@ -71,6 +71,11 @@ pub type BgpcSession = DynamicSession<Bipartite>;
 /// symmetric pattern — Hessians, evolving meshes and social graphs).
 pub type D2gcSession = DynamicSession<Csr>;
 
+/// A D1GC streaming session (distance-1 coloring of a drifting square
+/// symmetric pattern — the survey baseline at full engine parity,
+/// DESIGN.md §14).
+pub type D1gcSession = DynamicSession<super::problem::D1Graph>;
+
 impl<P: Problem> DynamicSession<P> {
     /// Color `g` from scratch under `cfg` and open the session around
     /// the result. Returns the session and the initial full-run result.
@@ -115,7 +120,7 @@ impl<P: Problem> DynamicSession<P> {
         };
         let mut ts = ThreadState::bank(t, g.color_cap());
         let order = g.order(&cfg.ordering);
-        let r = match &mut driver {
+        let mut r = match &mut driver {
             SessionDriver::Threads(d) => {
                 g.run_capped(&order, &cfg.spec, cfg.balance, d, &mut ts, MAX_ITERS)
             }
@@ -124,6 +129,36 @@ impl<P: Problem> DynamicSession<P> {
                 g.run_capped(&order, &cfg.spec, cfg.balance, &mut d, &mut ts, MAX_ITERS)
             }
         };
+        // Strategy post pass at bring-up only: batches repair, they do
+        // not re-reduce — the improved coloring is the session baseline
+        // (DESIGN.md §14).
+        if let crate::coloring::PostPass::ColorAndFix(rounds) = cfg.post_pass {
+            let base = std::mem::take(&mut r.colors);
+            let (colors, secs) = match &mut driver {
+                SessionDriver::Threads(d) => crate::coloring::strategy::color_and_fix(
+                    &g,
+                    base,
+                    rounds,
+                    cfg.spec.chunk,
+                    d,
+                    &mut ts,
+                ),
+                SessionDriver::Sim(model) => {
+                    let mut d = SimDriver::new(cfg.threads, *model);
+                    crate::coloring::strategy::color_and_fix(
+                        &g,
+                        base,
+                        rounds,
+                        cfg.spec.chunk,
+                        &mut d,
+                        &mut ts,
+                    )
+                }
+            };
+            r.colors = colors;
+            r.n_colors = crate::coloring::stats::distinct_colors(&r.colors);
+            r.seconds += secs;
+        }
         let colors = Arc::new(r.colors.clone());
         let session =
             DynamicSession { delta: g.into_delta(), colors, ts, cfg, driver, batches: 0 };

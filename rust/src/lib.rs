@@ -23,7 +23,7 @@
 //!   (`V-V` … `N1-N2`), the balancing heuristics B1/B2 (Algorithms
 //!   11–12), plus D1GC, verification and color statistics.
 //! * [`dynamic`] — incremental coloring for streaming graph updates,
-//!   generic over the problem (BGPC and D2GC): mutable delta overlays
+//!   generic over the problem (BGPC, D2GC, and D1GC): mutable delta overlays
 //!   over the frozen CSR (the D2GC one keeps the square pattern
 //!   structurally symmetric), dirty-frontier repair that reuses the
 //!   optimistic phase machinery through the [`dynamic::Problem`] seam,
@@ -69,7 +69,9 @@ pub mod sim;
 pub mod testing;
 pub mod util;
 
-pub use coloring::{ColoringResult, Problem, Schedule};
-pub use dynamic::{BatchStats, BgpcSession, D2gcSession, DynamicSession, UpdateBatch};
+pub use coloring::{ColoringResult, Problem, Schedule, Strategy};
+pub use dynamic::{
+    BatchStats, BgpcSession, D1Graph, D1gcSession, D2gcSession, DynamicSession, UpdateBatch,
+};
 pub use exec::{ColorSchedule, ExecReport, Executor, SharedBuf};
 pub use graph::{Bipartite, Csr};

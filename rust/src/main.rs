@@ -7,8 +7,10 @@
 //! bgpc gen --preset coPapersDBLP --scale 0.1 --out g.mtx
 //! bgpc color --preset bone010 [--mtx file] [--alg N1-N2] [--threads 16]
 //!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
+//!            [--strategy ldf+fix]               # ordering + post pass in one knob
 //! bgpc d2color --preset af_shell [--alg V-N2] [--threads 16]
 //! bgpc serve --jobs 32 --workers 2 --pool 4   # coordinator demo loop
+//!           [--strategy sl+fix]                 # strategy applied to every job
 //!           [--trace out.json]                 # Chrome-trace export (needs --features trace)
 //!           [--stats-interval 5]               # periodic registry snapshots
 //! ```
@@ -75,7 +77,21 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
         .map(|s| Ordering::parse(s).ok_or(format!("unknown ordering {s}")))
         .transpose()?
         .unwrap_or(Ordering::Natural);
-    Ok(Config { spec, balance, threads, mode, ordering })
+    let mut cfg = Config {
+        spec,
+        balance,
+        threads,
+        mode,
+        ordering,
+        post_pass: coloring::PostPass::None,
+    };
+    // --strategy bundles ordering + post pass; it wins over --order
+    if let Some(s) = flags.get("strategy") {
+        let st = coloring::Strategy::parse(s)
+            .ok_or(format!("unknown strategy {s} (e.g. natural, ldf, sl+fix, random+fix8)"))?;
+        cfg = cfg.with_strategy(st);
+    }
+    Ok(cfg)
 }
 
 fn cmd_info() -> ExitCode {
@@ -239,6 +255,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
     }
     let stats_interval: u64 =
         flags.get("stats-interval").map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
+    let strategy = match flags.get("strategy") {
+        Some(s) => match coloring::Strategy::parse(s) {
+            Some(st) => Some(st),
+            None => {
+                eprintln!("error: unknown strategy {s} (e.g. natural, ldf, sl+fix, random+fix8)");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
     let svc = Service::start_sharded(ServiceOpts {
         shards,
         dispatchers: workers,
@@ -278,7 +304,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
             let spec = schedule::ALL[i % schedule::ALL.len()];
             // every fourth job runs on the real shared pool; the rest use
             // the deterministic 16-thread simulator
-            let cfg = if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
+            let mut cfg =
+                if i % 4 == 1 { Config::threads(spec, pool) } else { Config::sim(spec, 16) };
+            if let Some(st) = strategy {
+                cfg = cfg.with_strategy(st);
+            }
             handles.push(svc.submit_async(Job {
                 name: format!("{}-{}", p.name, spec.name),
                 input: JobInput::Bgpc(g),

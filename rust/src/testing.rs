@@ -208,6 +208,34 @@ pub fn random_symmetric_update_batch(g: &Csr, edits: usize, rng: &mut Rng) -> Up
     b
 }
 
+/// A degree-skewed bipartite instance: Chung–Lu sampling with
+/// power-law-ish weights on both sides (the generator behind the
+/// skewed presets), so a handful of hub nets dominates the degree mass.
+/// This is the shape ordering strategies have something to win on —
+/// first-fit in natural order meets the hubs late and pays in colors,
+/// degree-aware orders claim them first (`tests/strategy_properties.rs`,
+/// `benches/strategy.rs`). Deterministic in `seed`.
+pub fn skewed_bipartite(n_nets: usize, n_vtxs: usize, nnz: usize, seed: u64) -> Bipartite {
+    let m = crate::graph::generators::chung_lu_bipartite(
+        n_nets,
+        n_vtxs,
+        nnz,
+        2.0,
+        2.2,
+        (n_vtxs / 2).max(4),
+        (n_nets / 2).max(4),
+        seed,
+    );
+    Bipartite::from_net_incidence(m)
+}
+
+/// The square symmetric analogue of [`skewed_bipartite`] (D1GC / D2GC
+/// cases): Chung–Lu adjacency with power-law-ish degrees, hub degrees
+/// capped at `n / 3`. Deterministic in `seed`.
+pub fn skewed_symmetric(n: usize, m: usize, seed: u64) -> Csr {
+    crate::graph::generators::chung_lu_symmetric(n, m, 2.4, (n / 3).max(4), seed)
+}
+
 /// A random partial coloring (mix of -1 and small colors) for fuzzing
 /// repair/verify paths.
 pub fn random_partial_colors(n: usize, max_color: i32, seed: u64) -> Vec<i32> {
@@ -257,6 +285,26 @@ mod tests {
             g.validate().unwrap();
         });
         assert!(saw_single_net.get() && saw_single_vtx.get());
+    }
+
+    #[test]
+    fn skewed_generators_actually_skew() {
+        // the point of these helpers: the degree distribution must have
+        // hubs far above the mean, or ordering strategies have nothing
+        // to win on
+        let g = skewed_bipartite(300, 400, 4000, 9);
+        g.validate().unwrap();
+        let stats = crate::graph::InstanceStats::compute(&g);
+        assert!(
+            (stats.max_net_deg as f64) > 4.0 * stats.avg_net_deg,
+            "max={} avg={}",
+            stats.max_net_deg,
+            stats.avg_net_deg
+        );
+        let s = skewed_symmetric(300, 2400, 9);
+        assert!(s.is_structurally_symmetric());
+        let avg = s.nnz() as f64 / s.n_rows as f64;
+        assert!((s.max_deg() as f64) > 3.0 * avg, "max={} avg={avg}", s.max_deg());
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! D1GC through the coordinator, end-to-end (ISSUE 8): the
+//! distance-1 problem is a full session citizen. A session opens over a
+//! symmetric graph, absorbs a 0.1% update batch with a cheap repair
+//! (≤ 10% of vertices recolored), serves epoch-snapshot reads that stay
+//! `d1gc_valid` against an independently maintained graph of record,
+//! and drives colored execution that matches a sequential sweep
+//! bit-for-bit — before and after a dynamic repair.
+
+use std::sync::Arc;
+
+use bgpc::coloring::verify::d1gc_valid;
+use bgpc::coloring::{schedule, Config};
+use bgpc::coordinator::{EngineSel, ExecKernel, Job, JobInput, Service};
+use bgpc::exec::SharedBuf;
+use bgpc::par::Cost;
+use bgpc::testing::{random_symmetric_update_batch, skewed_symmetric};
+use bgpc::util::prng::Rng;
+
+/// Acceptance end-to-end: a coordinator D1GC session absorbs a 0.1%
+/// edge batch via `JobInput::Update`; the repair touches ≤ 10% of the
+/// vertices, the outcome reports the D1GC problem, the metrics count it
+/// under its own kind, and the epoch snapshot stays valid against a
+/// `DeltaSymmetric` mirror of the same edits.
+#[test]
+fn coordinator_d1gc_session_absorbs_batch_end_to_end() {
+    let m = skewed_symmetric(2500, 20000, 7);
+    let n = m.n_rows;
+    let cfg = Config::sim(schedule::N1_N2, 16);
+    let svc = Service::start(2, None);
+    let (sid, init) = svc.open_session_d1gc("d1gc-e2e", &m, cfg.clone());
+    assert!(init.valid, "{:?}", init.error);
+    assert_eq!(init.problem, Some(bgpc::Problem::D1gc));
+    let bring_up = svc.session_colors(sid).expect("session open");
+    assert!(d1gc_valid(&m, &bring_up).is_ok(), "bring-up coloring invalid");
+
+    let mut rng = Rng::new(99);
+    let batch = random_symmetric_update_batch(&m, (m.nnz() / 2000).max(16), &mut rng);
+    let o = svc
+        .submit(Job {
+            name: "upd".into(),
+            input: JobInput::Update { session: sid, batch: Arc::new(batch.clone()) },
+            cfg: cfg.clone(),
+            engine: EngineSel::Auto,
+        })
+        .wait();
+    assert!(o.valid, "{:?}", o.error);
+    assert_eq!(o.problem, Some(bgpc::Problem::D1gc));
+    let st = o.batch.expect("update outcome must carry batch stats");
+    assert!(
+        st.recolored * 10 <= n,
+        "0.1% batch repaired {} of {n} vertices (> 10%)",
+        st.recolored
+    );
+    assert_eq!(svc.metrics().updates_d1gc(), 1);
+    assert_eq!(svc.metrics().updates_d2gc(), 0, "D1GC must not count as D2GC");
+    assert_eq!(svc.metrics().updates_bgpc(), 0, "D1GC must not count as BGPC");
+
+    // cross-check against an independently built post-batch graph
+    let mut mirror = bgpc::dynamic::DeltaSymmetric::new(m);
+    for &(a, b) in &batch.add_edges {
+        mirror.add_edge(a, b);
+    }
+    for &(a, b) in &batch.remove_edges {
+        mirror.remove_edge(a, b);
+    }
+    let colors = svc.session_colors(sid).expect("session open");
+    assert!(d1gc_valid(mirror.graph(), &colors).is_ok(), "epoch snapshot invalid");
+    assert!(svc.close_session(sid));
+    svc.shutdown();
+}
+
+/// Colored execution over a D1GC session equals the sequential sweep
+/// bit-for-bit: each item scatters into its own slot (disjoint by
+/// construction; the schedule partitions the items), so any divergence
+/// is a lost or doubled item in the color schedule / executor path.
+/// Checked before and after a dynamic repair, so the incremental
+/// schedule refresh is covered too.
+#[test]
+fn d1gc_colored_execute_matches_sequential_bit_for_bit() {
+    let m = skewed_symmetric(400, 2600, 3);
+    let n = m.n_rows;
+    let cfg = Config::sim(schedule::V_N2, 8);
+    let svc = Service::start(2, None);
+    let (sid, init) = svc.open_session_d1gc("d1gc-exec", &m, cfg.clone());
+    assert!(init.valid, "{:?}", init.error);
+
+    let run_and_check = |rounds: usize, tag: &str| {
+        let colors = svc.session_colors(sid).expect("session open");
+        let want: Vec<u64> = (0..n)
+            .map(|u| rounds as u64 * (u as u64 + 1) * (colors[u] as u64 + 1))
+            .collect();
+        let acc = Arc::new(SharedBuf::new(vec![0u64; n]));
+        let acc_k = acc.clone();
+        let kernel = ExecKernel::new(move |item, color| {
+            // SAFETY: the schedule partitions items, so slot `item` is
+            // touched by exactly one kernel invocation per round.
+            unsafe {
+                *acc_k.slot(item) += (item as u64 + 1) * (color as u64 + 1);
+            }
+            Cost::new(1)
+        });
+        let o = svc.execute(tag, sid, rounds, kernel).wait();
+        assert!(o.valid, "{tag}: {:?}", o.error);
+        // SAFETY: the job completed; no kernel is writing any more.
+        let got: Vec<u64> = (0..n).map(|i| unsafe { *acc.peek(i) }).collect();
+        assert_eq!(got, want, "{tag}: colored execute diverged from sequential");
+    };
+
+    run_and_check(1, "fresh-r1");
+    run_and_check(3, "fresh-r3");
+
+    // perturb the graph, then the refreshed schedule must still agree
+    let mut rng = Rng::new(17);
+    let batch = random_symmetric_update_batch(&m, 24, &mut rng);
+    let o = svc
+        .submit(Job {
+            name: "perturb".into(),
+            input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+            cfg: cfg.clone(),
+            engine: EngineSel::Auto,
+        })
+        .wait();
+    assert!(o.valid, "{:?}", o.error);
+    run_and_check(2, "post-repair-r2");
+
+    assert!(svc.close_session(sid));
+    svc.shutdown();
+}
+
+/// The strategy seam reaches the coordinator: a D1GC session opened
+/// with `ldf+fix` brings up a valid coloring no worse than the
+/// default's, and stateless D1GC jobs route through the native engine
+/// under `EngineSel::Auto`.
+#[test]
+fn d1gc_sessions_and_stateless_jobs_accept_strategies() {
+    let m = skewed_symmetric(600, 4200, 11);
+    let svc = Service::start(2, None);
+    let plain = Config::sim(schedule::N1_N2, 8)
+        .with_strategy(bgpc::Strategy::parse("ldf").unwrap());
+    let fixed = Config::sim(schedule::N1_N2, 8)
+        .with_strategy(bgpc::Strategy::parse("ldf+fix").unwrap());
+    let (sa, ia) = svc.open_session_d1gc("plain-ldf", &m, plain.clone());
+    let (sb, ib) = svc.open_session_d1gc("ldf-fixed", &m, fixed.clone());
+    assert!(ia.valid && ib.valid);
+    let fixed_colors = svc.session_colors(sb).expect("session open");
+    assert!(d1gc_valid(&m, &fixed_colors).is_ok());
+    assert!(
+        ib.n_colors <= ia.n_colors,
+        "ldf+fix used more colors than plain ldf: {} vs {}",
+        ib.n_colors,
+        ia.n_colors
+    );
+    let o = svc
+        .submit(Job {
+            name: "stateless-d1".into(),
+            input: JobInput::D1gc(Arc::new(m.clone())),
+            cfg: fixed,
+            engine: EngineSel::Auto,
+        })
+        .wait();
+    // run_stateless verifies with d1gc_valid before reporting valid
+    assert!(o.valid, "{:?}", o.error);
+    assert_eq!(o.problem, Some(bgpc::Problem::D1gc));
+    assert!(o.n_colors > 0);
+    assert!(svc.close_session(sa) && svc.close_session(sb));
+    svc.shutdown();
+}

@@ -104,6 +104,7 @@ fn exec_mode_threads_stress_race_correctness() {
         threads: 8,
         mode: ExecMode::Threads,
         ordering: Ordering::Natural,
+        post_pass: bgpc::coloring::PostPass::None,
     };
     for _ in 0..3 {
         let r = color_bgpc(&g, &cfg);
@@ -154,6 +155,7 @@ fn cost_model_sim_time_scales_down_with_threads() {
             threads: t,
             mode: ExecMode::Sim(model),
             ordering: Ordering::Natural,
+            post_pass: bgpc::coloring::PostPass::None,
         };
         color_bgpc(&g, &cfg).seconds
     };

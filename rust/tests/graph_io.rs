@@ -98,3 +98,22 @@ fn random_bipartite_deterministic_and_in_range() {
     assert!(a.n_nets() == 50 && a.n_vertices() == 70);
     assert!(a.nnz() <= 400, "dedup can only shrink");
 }
+
+#[test]
+fn skewed_generators_deterministic_per_seed() {
+    // the degree-skewed helpers behind the strategy sweep must be pure
+    // functions of their seed, like every other generator here
+    let a = bgpc::testing::skewed_bipartite(120, 160, 1500, 42);
+    let b = bgpc::testing::skewed_bipartite(120, 160, 1500, 42);
+    assert_eq!(a.net_vtxs, b.net_vtxs, "skewed_bipartite is not deterministic");
+    a.validate().unwrap();
+    let c = bgpc::testing::skewed_bipartite(120, 160, 1500, 43);
+    assert_ne!(a.net_vtxs, c.net_vtxs, "skewed_bipartite ignores its seed");
+
+    let sa = bgpc::testing::skewed_symmetric(150, 1200, 42);
+    let sb = bgpc::testing::skewed_symmetric(150, 1200, 42);
+    assert_eq!(sa, sb, "skewed_symmetric is not deterministic");
+    assert!(sa.is_structurally_symmetric());
+    let sc = bgpc::testing::skewed_symmetric(150, 1200, 43);
+    assert_ne!(sa, sc, "skewed_symmetric ignores its seed");
+}

@@ -1,0 +1,166 @@
+//! Cross-strategy property harness (ISSUE 8): every parseable
+//! [`bgpc::Strategy`] — ordering × post-pass — must compose with every
+//! problem (BGPC, D2GC, D1GC) under both execution drivers without
+//! bending any invariant:
+//!
+//! 1. the coloring stays valid for the problem's conflict definition,
+//! 2. every color stays below the problem's `color_cap`,
+//! 3. `t = 1` runs are bit-for-bit deterministic per seed,
+//! 4. `ColorAndFix` never *increases* the color count vs `PostPass::None`,
+//! 5. the strategy seam threads through dynamic sessions (post-pass at
+//!    bring-up, plain repair for batches) without invalidating repairs.
+
+use bgpc::coloring::verify::{bgpc_valid, d1gc_valid, d2gc_valid};
+use bgpc::coloring::{
+    bgpc as bgpc_alg, color_bgpc, color_d1gc, color_d2gc, d1gc, d2gc, schedule, Config, PostPass,
+};
+use bgpc::dynamic::DynamicSession;
+use bgpc::testing::{random_symmetric_update_batch, skewed_bipartite, skewed_symmetric};
+use bgpc::util::prng::Rng;
+use bgpc::Strategy;
+
+/// Every spelling the CLI grammar accepts, covering all four orderings
+/// with and without the fix pass (including explicit round counts).
+const STRATEGIES: &[&str] = &[
+    "natural",
+    "random",
+    "ldf",
+    "sl",
+    "natural+fix",
+    "random+fix2",
+    "ldf+fix",
+    "sl+fix8",
+];
+
+fn strategies() -> Vec<Strategy> {
+    STRATEGIES
+        .iter()
+        .map(|s| Strategy::parse(s).unwrap_or_else(|| panic!("grammar rejected {s}")))
+        .collect()
+}
+
+#[test]
+fn every_strategy_valid_and_capped_on_every_problem_under_both_drivers() {
+    let g = skewed_bipartite(160, 220, 1800, 21);
+    let m = skewed_symmetric(200, 1300, 21);
+    for st in strategies() {
+        for (driver, cfg) in [
+            ("sim", Config::sim(schedule::N1_N2, 16)),
+            ("threads", Config::threads(schedule::N1_N2, 4)),
+        ] {
+            let cfg = cfg.with_strategy(st);
+            let ctx = format!("{} under {driver}", st.label());
+
+            let r = color_bgpc(&g, &cfg);
+            assert!(bgpc_valid(&g, &r.colors).is_ok(), "{ctx}: BGPC invalid");
+            let cap = bgpc_alg::color_cap(&g) as i32;
+            assert!(
+                r.colors.iter().all(|&c| c >= 0 && c < cap),
+                "{ctx}: BGPC color out of cap {cap}"
+            );
+
+            let r = color_d2gc(&m, &cfg);
+            assert!(d2gc_valid(&m, &r.colors).is_ok(), "{ctx}: D2GC invalid");
+            let cap = d2gc::color_cap(&m) as i32;
+            assert!(
+                r.colors.iter().all(|&c| c >= 0 && c < cap),
+                "{ctx}: D2GC color out of cap {cap}"
+            );
+
+            let r = color_d1gc(&m, &cfg);
+            assert!(d1gc_valid(&m, &r.colors).is_ok(), "{ctx}: D1GC invalid");
+            let cap = d1gc::color_cap(&m) as i32;
+            assert!(
+                r.colors.iter().all(|&c| c >= 0 && c < cap),
+                "{ctx}: D1GC color out of cap {cap}"
+            );
+        }
+    }
+}
+
+#[test]
+fn t1_runs_are_bit_for_bit_deterministic_per_seed() {
+    // One worker means no racing writers anywhere in the pipeline —
+    // ordering, optimistic rounds, and the fix pass must all replay
+    // exactly, under the real-thread driver and the simulator alike.
+    let g = skewed_bipartite(140, 180, 1500, 33);
+    let m = skewed_symmetric(170, 1000, 33);
+    for st in strategies() {
+        for (driver, cfg) in [
+            ("sim", Config::sim(schedule::V_N2, 1)),
+            ("threads", Config::threads(schedule::V_N2, 1)),
+        ] {
+            let cfg = cfg.with_strategy(st);
+            let ctx = format!("{} under {driver}", st.label());
+            let (a, b) = (color_bgpc(&g, &cfg), color_bgpc(&g, &cfg));
+            assert_eq!(a.colors, b.colors, "{ctx}: BGPC t=1 nondeterministic");
+            let (a, b) = (color_d2gc(&m, &cfg), color_d2gc(&m, &cfg));
+            assert_eq!(a.colors, b.colors, "{ctx}: D2GC t=1 nondeterministic");
+            let (a, b) = (color_d1gc(&m, &cfg), color_d1gc(&m, &cfg));
+            assert_eq!(a.colors, b.colors, "{ctx}: D1GC t=1 nondeterministic");
+        }
+    }
+}
+
+#[test]
+fn color_and_fix_never_increases_the_color_count() {
+    // The fix pass only keeps a recoloring round when the distinct
+    // count strictly drops, so for every ordering and every problem the
+    // fixed run is at most the unfixed run.
+    let g = skewed_bipartite(180, 240, 2200, 5);
+    let m = skewed_symmetric(220, 1500, 5);
+    for base in ["natural", "random", "ldf", "sl"] {
+        let plain = Config::sim(schedule::N1_N2, 8)
+            .with_strategy(Strategy::parse(base).unwrap());
+        let fixed = Config::sim(schedule::N1_N2, 8)
+            .with_strategy(Strategy::parse(&format!("{base}+fix")).unwrap());
+        let (p, f) = (color_bgpc(&g, &plain), color_bgpc(&g, &fixed));
+        assert!(bgpc_valid(&g, &f.colors).is_ok(), "{base}+fix: BGPC invalid");
+        assert!(f.n_colors <= p.n_colors, "{base}: BGPC fix grew {} -> {}", p.n_colors, f.n_colors);
+        let (p, f) = (color_d2gc(&m, &plain), color_d2gc(&m, &fixed));
+        assert!(d2gc_valid(&m, &f.colors).is_ok(), "{base}+fix: D2GC invalid");
+        assert!(f.n_colors <= p.n_colors, "{base}: D2GC fix grew {} -> {}", p.n_colors, f.n_colors);
+        let (p, f) = (color_d1gc(&m, &plain), color_d1gc(&m, &fixed));
+        assert!(d1gc_valid(&m, &f.colors).is_ok(), "{base}+fix: D1GC invalid");
+        assert!(f.n_colors <= p.n_colors, "{base}: D1GC fix grew {} -> {}", p.n_colors, f.n_colors);
+    }
+}
+
+#[test]
+fn sessions_apply_the_strategy_at_bring_up_and_stay_valid_over_batches() {
+    // The session path: post-pass runs once at start (DESIGN.md §14),
+    // batches go through plain repair. The coloring must stay valid
+    // throughout, for both symmetric session problems.
+    let m = skewed_symmetric(240, 1600, 13);
+    let st = Strategy::parse("ldf+fix").unwrap();
+    for cfg in [Config::sim(schedule::N1_N2, 8), Config::threads(schedule::N1_N2, 2)] {
+        let cfg = cfg.with_strategy(st);
+        let (mut s2, init) =
+            DynamicSession::<bgpc::graph::Csr>::start(m.clone(), cfg.clone());
+        assert!(d2gc_valid(s2.graph(), &init.colors).is_ok(), "D2GC bring-up invalid");
+        let (mut s1, init) =
+            DynamicSession::<bgpc::D1Graph>::start(bgpc::D1Graph::new(m.clone()), cfg.clone());
+        assert!(d1gc_valid(s1.graph().as_csr(), &init.colors).is_ok(), "D1GC bring-up invalid");
+        let mut rng = Rng::new(77);
+        for round in 0..3 {
+            let batch = random_symmetric_update_batch(s2.graph(), 40, &mut rng);
+            s2.apply(&batch);
+            assert!(s2.verify().is_ok(), "D2GC round {round} invalid after batch");
+            let batch = random_symmetric_update_batch(s1.graph().as_csr(), 40, &mut rng);
+            s1.apply(&batch);
+            assert!(s1.verify().is_ok(), "D1GC round {round} invalid after batch");
+        }
+    }
+}
+
+#[test]
+fn parse_label_roundtrip_and_default_post_pass() {
+    for s in STRATEGIES {
+        let st = Strategy::parse(s).unwrap();
+        let relabeled = Strategy::parse(&st.label()).unwrap();
+        assert_eq!(st, relabeled, "label {} does not roundtrip", st.label());
+    }
+    // bare orderings carry no post-pass; Config::sim defaults match
+    assert_eq!(Strategy::parse("ldf").unwrap().post_pass, PostPass::None);
+    assert_eq!(Config::sim(schedule::N1_N2, 4).post_pass, PostPass::None);
+}
