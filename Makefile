@@ -6,9 +6,10 @@
 #   make test            cargo test (artifacts built first when possible)
 #   make test-artifacts  like test, but PJRT roundtrip skips become errors
 #   make bench           all hand-rolled bench harnesses (release)
-#   make bench-smoke     the gated benches (scheduler/dynamic/execute/service) in
-#                        BENCH_SMOKE=1 reduced-size mode — what the CI
-#                        bench-smoke job runs and uploads CSVs from
+#   make bench-smoke     the gated benches (scheduler/dynamic/execute/
+#                        service/strategy/microbench) in BENCH_SMOKE=1
+#                        reduced-size mode — what the CI bench-smoke job
+#                        runs and uploads CSVs from
 #   make fmt             rustfmt the crate (the verify/CI gate checks it)
 #   make clean
 
@@ -43,14 +44,15 @@ bench:
 # execute (colored execution valid + B1/B2 flatten the max-color-set
 # busy time), strategy (the best non-default strategy at >= 4x speedup
 # loses <= 5% colors per preset and beats first-fit by >= 5% in geomean
-# over the skewed presets).
+# over the skewed presets), microbench (packed scans >= 2x scalar +
+# auto chunk within 10% of the best fixed chunk).
 # CSVs land in rust/bench_results/ — CI uploads them as
 # workflow artifacts. The trailing trace pass re-runs scheduler with the
 # `trace` feature compiled in (recording off — the 2% gate must hold
 # feature-on too) and service with BENCH_TRACE=1, then validates the
 # exported Chrome-trace JSON spans all four instrumented layers.
 bench-smoke:
-	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute --bench service --bench strategy
+	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute --bench service --bench strategy --bench microbench
 	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --features trace --bench scheduler
 	cd $(CARGO_DIR) && BENCH_SMOKE=1 BENCH_TRACE=1 cargo bench --features trace --bench service
 	$(PYTHON) scripts/check_trace.py $(CARGO_DIR)/bench_results/trace_service_*.json

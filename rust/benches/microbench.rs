@@ -1,15 +1,37 @@
 //! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf): real
 //! wall-clock of the native hot paths on this host, plus the PJRT kernel
-//! latency per bucket. These are *measured* (not simulated) numbers.
+//! latency per bucket. These are *measured* (not simulated) numbers,
+//! except the auto-chunk sweep, which runs on the deterministic
+//! simulator (a 16-thread schedule cannot be timed on a one-core host).
+//!
+//! Gated segments (enforced inline and via `BENCH_microbench.json` /
+//! `BENCH_microchunk.json` + `scripts/bench_gate.sh`):
+//!
+//! * packed vs scalar forbidden-set scans on skewed instances — the
+//!   word-mask tier must be ≥ 2× the retained scalar reference on the
+//!   long saturated scans the speculation loop produces;
+//! * `Chunk::Auto` vs the best fixed chunk {1, 64, static} over the
+//!   1e2..1e6 region sweep — the tuner must land within 10% of the best
+//!   fixed choice (geomean ≥ 0.9) after its warm-up epochs.
+//!
+//!   cargo bench --bench microbench
+//!
+//! CSV artifacts: `microbench.csv`, `microbench_chunk.csv`.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use bgpc::coloring::forbidden::StampSet;
 use bgpc::coloring::{color_bgpc, schedule, Config};
 use bgpc::graph::generators::Preset;
+use bgpc::par::{autosite, Chunk, Cost, Driver};
 use bgpc::runtime::{offload, Runtime};
+use bgpc::sim::{CostModel, SimDriver};
+use bgpc::testing::skewed_bipartite;
+use bgpc::util::geomean;
 use bgpc::util::prng::Rng;
 use bgpc::util::timer::time_min;
+use std::hint::black_box;
 
 fn main() {
     let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.25, common::seed());
@@ -81,4 +103,200 @@ fn main() {
         }
         Err(e) => println!("pjrt: skipped ({e})"),
     }
+
+    packed_scan_segment();
+    auto_chunk_segment();
+    println!("ok");
+}
+
+/// Gated segment: the word-packed `StampSet` scans vs the retained
+/// scalar references, on the populations the speculation loop actually
+/// builds. For a vertex `w`, the distance-2 forbidden set holds the
+/// colors of every vertex sharing a net with `w`; under first-fit greedy
+/// that population is saturated up to `colors[w]` (greedy chose the
+/// first gap), so the highest-colored vertices of a skewed instance own
+/// the longest scans — the scalar path loads ~`colors[w]` stamps where
+/// the packed path touches ~`colors[w]/64` words. Acceptance: packed
+/// ≥ 2× scalar per instance (the floor file then gates the geomean).
+fn packed_scan_segment() {
+    println!("--- packed vs scalar forbidden-set scans (gated: >= 2x) ---");
+    // (n_nets, n_vtxs, nnz, seed): hub nets force dense populations — a
+    // net of degree d needs d distinct colors among its vertices
+    let insts: &[(usize, usize, usize, u64)] = if common::smoke() {
+        &[(400, 800, 20_000, 3)]
+    } else {
+        &[(400, 800, 20_000, 3), (600, 1200, 40_000, 11), (300, 2000, 36_000, 29)]
+    };
+    let mut csv = Vec::new();
+    for &(n_nets, n_vtxs, nnz, seed) in insts {
+        let g = skewed_bipartite(n_nets, n_vtxs, nnz, seed);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (colors, _) = bgpc::coloring::bgpc::seq::greedy(&g, &order);
+        // the highest-colored vertices own the longest first-fit scans
+        let mut by_color: Vec<usize> = (0..g.n_vertices()).collect();
+        by_color.sort_by_key(|&w| std::cmp::Reverse(colors[w]));
+        by_color.truncate(64);
+        let cap = bgpc::coloring::bgpc::color_cap(&g);
+        let sets: Vec<(StampSet, i32)> = by_color
+            .iter()
+            .map(|&w| {
+                let mut f = StampSet::new(cap);
+                f.next_gen();
+                for &v in g.nets(w) {
+                    for &u in g.vtxs(v as usize) {
+                        let u = u as usize;
+                        if u != w && colors[u] >= 0 {
+                            f.insert(colors[u]);
+                        }
+                    }
+                }
+                (f, colors[w])
+            })
+            .collect();
+        let n_sets = sets.len().max(1) as f64;
+        let mean_color = sets.iter().map(|&(_, c)| c as f64).sum::<f64>() / n_sets;
+
+        // one sweep = the three scan shapes the engines use, per set;
+        // scans only — populations are prebuilt, both tiers paid insert
+        let sweep_packed = || {
+            let mut acc = 0i64;
+            for (f, cw) in &sets {
+                let cw = *cw;
+                acc += f.first_fit().0 as i64;
+                acc += f.first_fit_from(cw / 2).0 as i64;
+                acc += f.reverse_fit(cw - 1).0.map_or(-1, i64::from);
+            }
+            acc
+        };
+        let sweep_scalar = || {
+            let mut acc = 0i64;
+            for (f, cw) in &sets {
+                let cw = *cw;
+                acc += f.first_fit_scalar().0 as i64;
+                acc += f.first_fit_from_scalar(cw / 2).0 as i64;
+                acc += f.reverse_fit_scalar(cw - 1).0.map_or(-1, i64::from);
+            }
+            acc
+        };
+        // the differential contract, re-checked on the bench populations
+        assert_eq!(sweep_packed(), sweep_scalar(), "packed and scalar scans disagree");
+
+        const ROUNDS: usize = 64;
+        let packed_s = time_min(9, || {
+            let mut a = 0i64;
+            for _ in 0..ROUNDS {
+                a ^= black_box(sweep_packed());
+            }
+            a
+        });
+        let scalar_s = time_min(9, || {
+            let mut a = 0i64;
+            for _ in 0..ROUNDS {
+                a ^= black_box(sweep_scalar());
+            }
+            a
+        });
+        let n_scans = (sets.len() * 3 * ROUNDS) as f64;
+        let packed_ns = packed_s * 1e9 / n_scans;
+        let scalar_ns = scalar_s * 1e9 / n_scans;
+        let speedup = scalar_s / packed_s.max(1e-12);
+        println!(
+            "{n_nets}x{n_vtxs} nnz={nnz}: mean color {mean_color:.0}, \
+             packed {packed_ns:.1} ns/scan vs scalar {scalar_ns:.1} ns/scan ({speedup:.1}x)"
+        );
+        csv.push(format!(
+            "{n_nets}x{n_vtxs},{nnz},{mean_color:.1},{packed_ns:.2},{scalar_ns:.2},{speedup:.2}"
+        ));
+        assert!(
+            speedup >= 2.0,
+            "packed scan only {speedup:.2}x scalar on {n_nets}x{n_vtxs} (limit 2.0)"
+        );
+    }
+    common::write_csv(
+        "microbench.csv",
+        "instance,nnz,mean_color,packed_ns,scalar_ns,packed_speedup",
+        &csv,
+    );
+}
+
+/// Gated segment: `Chunk::Auto` vs the best fixed chunk {1, 64, static}
+/// over the 1e2..1e6 region sweep of `benches/scheduler.rs`, on the
+/// deterministic simulator at t = 16 (this host has one core; `sim_ns`
+/// is exact and bit-reproducible where a real-thread sweep would time
+/// noise). Per-item costs are skewed — hash-spread light items plus an
+/// 8× heavy front, the degree-sorted-frontier shape where hubs cluster
+/// at low indices — so no fixed chunk is free: chunk 1 pays the
+/// contended cursor, large chunks swallow the heavy front whole, static
+/// hands it all to thread 0. The tuner adapts over untimed warm-up
+/// epochs (its feedback is `RegionOut::busy_units` from prior
+/// dispatches), then the measured epochs must land within 10% of the
+/// best fixed chunk (geomean ratio ≥ 0.9).
+fn auto_chunk_segment() {
+    println!("--- auto vs best fixed chunk (sim t=16; gated: geomean >= 0.9) ---");
+    const T: usize = 16;
+    const WARMUP: usize = 12;
+    const MEASURE: usize = 6;
+    let sizes: &[usize] = if common::smoke() {
+        &[100, 1_000, 10_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000, 1_000_000]
+    };
+    let fixed: [(usize, &str); 3] = [
+        (Chunk::Fixed(1).encode(), "1"),
+        (Chunk::Fixed(64).encode(), "64"),
+        (Chunk::Static.encode(), "static"),
+    ];
+    // total measured sim_ns for one (size, chunk) cell; a fresh driver
+    // per cell so tuner state never leaks across the sweep
+    let run = |n: usize, chunk: usize| -> f64 {
+        let mut d = SimDriver::new(T, CostModel::default());
+        let mut states = vec![(); T];
+        let mut measured = 0.0;
+        for epoch in 0..WARMUP + MEASURE {
+            let out = d.region(&mut states, n, chunk, |_tid, _ts, item, _now| {
+                // deterministic skew: hash-spread light items, plus an 8x
+                // heavy front (items below n/16) — the hub cluster of a
+                // degree-sorted frontier
+                let h = (item as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33;
+                let base = 50 + h % 101;
+                Cost::new(if item < n / 16 { base * 8 } else { base })
+            });
+            if epoch >= WARMUP {
+                measured += out.sim_ns.unwrap_or(0.0);
+            }
+        }
+        measured
+    };
+    let mut csv = Vec::new();
+    let mut ratios = Vec::new();
+    for &n in sizes {
+        let auto_ns = run(n, Chunk::Auto(autosite::GENERIC).encode());
+        let (mut best_ns, mut best_label) = (f64::INFINITY, "");
+        for &(c, label) in &fixed {
+            let ns = run(n, c);
+            if ns < best_ns {
+                best_ns = ns;
+                best_label = label;
+            }
+        }
+        let ratio = best_ns / auto_ns.max(1e-9);
+        println!(
+            "{n:>9} | auto {:>11.0} ns vs best fixed ({best_label:>6}) {:>11.0} ns | {ratio:.3}",
+            auto_ns, best_ns
+        );
+        csv.push(format!("{n},{auto_ns:.0},{best_label},{best_ns:.0},{ratio:.4}"));
+        ratios.push(ratio);
+        assert!(
+            ratio >= 0.7,
+            "auto chunk at {ratio:.3}x of best fixed ({best_label}) at n={n} (sanity floor 0.7)"
+        );
+    }
+    let geo = geomean(&ratios);
+    println!("auto-chunk geomean ratio: {geo:.3}");
+    common::write_csv(
+        "microbench_chunk.csv",
+        "n_items,auto_sim_ns,best_fixed,best_fixed_sim_ns,auto_ratio",
+        &csv,
+    );
+    assert!(geo >= 0.9, "auto chunk geomean {geo:.3} < 0.9 of best fixed");
 }

@@ -10,7 +10,7 @@ use crate::coloring::forbidden::ThreadState;
 use crate::coloring::schedule::AlgSpec;
 use crate::coloring::ColoringResult;
 use crate::graph::Bipartite;
-use crate::par::{ColorStore, Driver, SharedQueue};
+use crate::par::{autosite, Chunk, ColorStore, Driver, SharedQueue};
 use crate::sim::trace::{IterTrace, RunTrace};
 
 /// Iteration-count safety net: beyond this the remaining vertices are
@@ -108,6 +108,10 @@ pub fn run_capped<D: Driver>(
         s.forbidden.ensure(cap);
     }
     let shared = SharedQueue::with_capacity(n);
+    // Re-aim a generic Auto chunk per phase: speculation and detection
+    // have very different per-item costs, so they tune independently.
+    let color_chunk = Chunk::resite(spec.chunk, autosite::SPECULATE);
+    let detect_chunk = Chunk::resite(spec.chunk, autosite::DETECT);
     let mut w: Vec<u32> = order.to_vec();
     let mut trace = RunTrace::default();
     let mut sim_secs = 0.0f64;
@@ -130,9 +134,9 @@ pub fn run_capped<D: Driver>(
         let cr = {
             let _sp = crate::obs::trace::span_n("bgpc.speculate", w.len() as u64);
             if net_color {
-                net::color_phase(g, &colors, d, ts, spec.chunk, spec.net_alg, bal)
+                net::color_phase(g, &colors, d, ts, color_chunk, spec.net_alg, bal)
             } else {
-                vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+                vertex::color_phase(g, &w, &colors, d, ts, color_chunk, bal)
             }
         };
         it.color_secs = cr.seconds();
@@ -144,13 +148,13 @@ pub fn run_capped<D: Driver>(
         let (rr, w_next) = {
             let _sp = crate::obs::trace::span_n("bgpc.detect", w.len() as u64);
             if net_conflict {
-                let r1 = net::conflict_phase(g, &colors, d, ts, spec.chunk);
+                let r1 = net::conflict_phase(g, &colors, d, ts, detect_chunk);
                 let r2 = net::rebuild_queue(
                     n,
                     &colors,
                     d,
                     ts,
-                    spec.chunk,
+                    detect_chunk,
                     spec.lazy_queues,
                     &shared,
                 );
@@ -173,7 +177,7 @@ pub fn run_capped<D: Driver>(
                     &colors,
                     d,
                     ts,
-                    spec.chunk,
+                    detect_chunk,
                     spec.lazy_queues,
                     &shared,
                 );

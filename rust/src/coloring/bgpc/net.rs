@@ -20,6 +20,7 @@ use crate::coloring::forbidden::ThreadState;
 use crate::coloring::schedule::NetColorAlg;
 use crate::graph::Bipartite;
 use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+use crate::util::arch::PREFETCH_DIST;
 
 /// Net-based coloring phase over all nets.
 pub fn color_phase<D: Driver>(
@@ -54,7 +55,10 @@ fn two_pass_phase<D: Driver>(
         s.forbidden.next_gen();
         s.wlocal.clear();
         // pass 1: mark forbidden colors, queue the rest (Alg. 8 lines 4-8)
-        for &u in vt {
+        for (j, &u) in vt.iter().enumerate() {
+            if let Some(&fu) = vt.get(j + PREFETCH_DIST) {
+                colors.prefetch(fu as usize);
+            }
             units += 1;
             let c = colors.read(u as usize, now + units);
             if c >= 0 && !s.forbidden.contains(c) {

@@ -11,6 +11,7 @@ use crate::coloring::balance::{select_color, Balance};
 use crate::coloring::forbidden::ThreadState;
 use crate::graph::Bipartite;
 use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+use crate::util::arch::PREFETCH_DIST;
 
 /// Algorithm 4: optimistic vertex-based coloring of the work queue `w`.
 pub fn color_phase<D: Driver>(
@@ -26,8 +27,17 @@ pub fn color_phase<D: Driver>(
         let wv = w[i] as usize;
         let mut units = 0u64;
         s.forbidden.next_gen();
-        for &v in g.nets(wv) {
-            for &u in g.vtxs(v as usize) {
+        let ns = g.nets(wv);
+        for (k, &v) in ns.iter().enumerate() {
+            if let Some(&nv) = ns.get(k + 1) {
+                // start the next net's gather before this one finishes
+                g.prefetch_vtxs(nv as usize);
+            }
+            let vt = g.vtxs(v as usize);
+            for (j, &u) in vt.iter().enumerate() {
+                if let Some(&fu) = vt.get(j + PREFETCH_DIST) {
+                    colors.prefetch(fu as usize);
+                }
                 units += 1;
                 let u = u as usize;
                 if u != wv {

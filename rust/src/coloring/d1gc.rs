@@ -15,6 +15,7 @@ use crate::coloring::ColoringResult;
 use crate::graph::Csr;
 use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
 use crate::sim::trace::{IterTrace, RunTrace};
+use crate::util::arch::PREFETCH_DIST;
 
 /// Sequential greedy D1GC in `order`. Returns `(colors, work_units)`.
 pub fn seq_greedy(g: &Csr, order: &[u32]) -> (Vec<i32>, u64) {
@@ -60,7 +61,11 @@ pub fn color_phase<D: Driver>(
         let wv = w[i] as usize;
         let mut units = 0u64;
         s.forbidden.next_gen();
-        for &u in g.row(wv) {
+        let row = g.row(wv);
+        for (j, &u) in row.iter().enumerate() {
+            if let Some(&fu) = row.get(j + PREFETCH_DIST) {
+                colors.prefetch(fu as usize);
+            }
             units += 1;
             let u = u as usize;
             if u != wv {
@@ -207,6 +212,10 @@ pub fn run_capped<D: Driver>(
         s.forbidden.ensure(cap);
     }
     let shared = SharedQueue::with_capacity(n);
+    // Auto chunks tune per phase (see bgpc::run_capped); fixed/static
+    // specs pass through untouched.
+    let color_chunk = crate::par::Chunk::resite(spec.chunk, crate::par::autosite::SPECULATE);
+    let detect_chunk = crate::par::Chunk::resite(spec.chunk, crate::par::autosite::DETECT);
     let mut w: Vec<u32> = order.to_vec();
     let mut trace = RunTrace::default();
     let mut sim_secs = 0.0f64;
@@ -225,7 +234,7 @@ pub fn run_capped<D: Driver>(
 
         let cr = {
             let _sp = crate::obs::trace::span_n("d1gc.speculate", w.len() as u64);
-            color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+            color_phase(g, &w, &colors, d, ts, color_chunk, bal)
         };
         it.color_secs = cr.seconds();
         it.color_busy = cr.busy_units.clone();
@@ -234,7 +243,7 @@ pub fn run_capped<D: Driver>(
 
         let (rr, w_next) = {
             let _sp = crate::obs::trace::span_n("d1gc.detect", w.len() as u64);
-            let r = conflict_phase(g, &w, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
+            let r = conflict_phase(g, &w, &colors, d, ts, detect_chunk, spec.lazy_queues, &shared);
             work_units += r.busy_units.iter().sum::<u64>();
             let wn = crate::coloring::bgpc::collect_next(spec.lazy_queues, ts, &shared);
             (r, wn)

@@ -277,6 +277,10 @@ pub fn run_capped<D: Driver>(
         s.forbidden.ensure(cap);
     }
     let shared = SharedQueue::with_capacity(n);
+    // Auto chunks tune per phase (see bgpc::run_capped); fixed/static
+    // specs pass through untouched.
+    let color_chunk = crate::par::Chunk::resite(spec.chunk, crate::par::autosite::SPECULATE);
+    let detect_chunk = crate::par::Chunk::resite(spec.chunk, crate::par::autosite::DETECT);
     let mut w: Vec<u32> = order.to_vec();
     let mut trace = RunTrace::default();
     let mut sim_secs = 0.0f64;
@@ -298,9 +302,9 @@ pub fn run_capped<D: Driver>(
         let cr = {
             let _sp = crate::obs::trace::span_n("d2gc.speculate", w.len() as u64);
             if net_color {
-                net_color_phase(g, &colors, d, ts, spec.chunk)
+                net_color_phase(g, &colors, d, ts, color_chunk)
             } else {
-                vertex::color_phase(g, &w, &colors, d, ts, spec.chunk, bal)
+                vertex::color_phase(g, &w, &colors, d, ts, color_chunk, bal)
             }
         };
         it.color_secs = cr.seconds();
@@ -311,9 +315,9 @@ pub fn run_capped<D: Driver>(
         let (rr, w_next) = {
             let _sp = crate::obs::trace::span_n("d2gc.detect", w.len() as u64);
             if net_conflict {
-                let r1 = net_conflict_phase(g, &colors, d, ts, spec.chunk);
+                let r1 = net_conflict_phase(g, &colors, d, ts, detect_chunk);
                 let r2 =
-                    rebuild_queue(g, &colors, d, ts, spec.chunk, spec.lazy_queues, &shared);
+                    rebuild_queue(g, &colors, d, ts, detect_chunk, spec.lazy_queues, &shared);
                 let wn = collect_next(spec.lazy_queues, ts, &shared);
                 work_units +=
                     r1.busy_units.iter().sum::<u64>() + r2.busy_units.iter().sum::<u64>();
@@ -333,7 +337,7 @@ pub fn run_capped<D: Driver>(
                     &colors,
                     d,
                     ts,
-                    spec.chunk,
+                    detect_chunk,
                     spec.lazy_queues,
                     &shared,
                 );

@@ -7,6 +7,7 @@ use crate::coloring::balance::{select_color, Balance};
 use crate::coloring::forbidden::ThreadState;
 use crate::graph::Csr;
 use crate::par::{ColorStore, Cost, Driver, RegionOut, SharedQueue};
+use crate::util::arch::PREFETCH_DIST;
 
 /// Vertex-based D2GC coloring: forbid the colors of all distance-1 and
 /// distance-2 neighbors, then pick by the configured policy.
@@ -23,14 +24,24 @@ pub fn color_phase<D: Driver>(
         let wv = w[i] as usize;
         let mut units = 0u64;
         s.forbidden.next_gen();
-        for &u in g.row(wv) {
+        let row = g.row(wv);
+        for (k, &u) in row.iter().enumerate() {
             let u = u as usize;
             if u == wv {
                 continue;
             }
+            if let Some(&nu) = row.get(k + 1) {
+                // next distance-1 neighbor: its color and its row head
+                colors.prefetch(nu as usize);
+                g.prefetch_row(nu as usize);
+            }
             units += 1;
             s.forbidden.mark(colors.read(u, now + units));
-            for &x in g.row(u) {
+            let r2 = g.row(u);
+            for (j, &x) in r2.iter().enumerate() {
+                if let Some(&fx) = r2.get(j + PREFETCH_DIST) {
+                    colors.prefetch(fx as usize);
+                }
                 let x = x as usize;
                 units += 1;
                 if x != wv {

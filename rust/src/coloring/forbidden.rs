@@ -12,20 +12,57 @@
 
 /// Marker-stamped integer set over a dense color domain (no clears).
 ///
-/// Layout note (§Perf): slots are offset by one — color `c` lives at
-/// `stamp[c + 1]` — so the hot gather loops can mark *any* value
+/// Layout note (DESIGN.md §Perf): slots are offset by one — color `c`
+/// lives at slot `c + 1` — so the hot gather loops can mark *any* value
 /// `c >= -1` without first branching on "is it colored" ([`Self::mark`]);
 /// the uncolored sentinel `-1` lands in the trash slot 0.
+///
+/// Two tiers share the generation clock:
+///
+/// * `stamp` — one `u32` marker per slot; `stamp[i] == cur` means slot
+///   `i` is in the current set. This is the membership tier
+///   ([`Self::contains`]) and the reference for the differential tests.
+/// * `words`/`word_gen` — a packed mirror, one bit per slot in `u64`
+///   words plus one generation marker per *word*. A word's bits are
+///   only meaningful when `word_gen[w] == cur`; otherwise the word
+///   reads as empty, so `next_gen` stays O(1) for both tiers. The scan
+///   family ([`Self::first_fit`], [`Self::first_fit_from`],
+///   [`Self::reverse_fit`]) walks inverted words with
+///   `trailing_zeros`/`leading_zeros` instead of probing one color per
+///   iteration, and the returned probe cost counts *words touched*.
+///
+/// Bits at slots `>= domain` are never set (every write path sizes the
+/// domain first), so a packed scan that runs past the sized domain finds
+/// a free bit exactly where the scalar scan's bounds check would stop —
+/// the two tiers return bit-for-bit identical colors
+/// (`*_scalar` are kept as the reference implementations).
 #[derive(Clone, Debug)]
 pub struct StampSet {
     stamp: Vec<u32>,
+    words: Vec<u64>,
+    word_gen: Vec<u32>,
     cur: u32,
+}
+
+#[inline]
+fn n_words(slots: usize) -> usize {
+    slots.div_ceil(64)
 }
 
 impl StampSet {
     /// `cap` is the initial color-domain size; the set grows on demand.
+    ///
+    /// Generation 0 is reserved as the never-current stamp (a fresh or
+    /// grown slot reads as absent), so `cur` starts at 1 and the wrap
+    /// hard-reset returns to 1.
     pub fn new(cap: usize) -> StampSet {
-        StampSet { stamp: vec![0u32; cap.max(8) + 1], cur: 0 }
+        let slots = cap.max(8) + 1;
+        StampSet {
+            stamp: vec![0u32; slots],
+            words: vec![0u64; n_words(slots)],
+            word_gen: vec![0u32; n_words(slots)],
+            cur: 1,
+        }
     }
 
     /// Start a new logical set (O(1); the paper's "different markers").
@@ -33,9 +70,23 @@ impl StampSet {
     pub fn next_gen(&mut self) {
         self.cur = self.cur.wrapping_add(1);
         if self.cur == 0 {
-            // u32 wrapped (once every 4B generations): hard reset.
+            // u32 wrapped (once every 4B generations): hard reset both
+            // tiers so stale stamps can never collide with a reused
+            // generation value.
             self.stamp.fill(0);
+            self.word_gen.fill(0);
             self.cur = 1;
+        }
+    }
+
+    /// Grow the packed mirror to cover `self.stamp` (new words read
+    /// empty: generation 0 is never current).
+    #[inline]
+    fn grow_words(&mut self) {
+        let nw = n_words(self.stamp.len());
+        if self.words.len() < nw {
+            self.words.resize(nw, 0);
+            self.word_gen.resize(nw, 0);
         }
     }
 
@@ -46,8 +97,12 @@ impl StampSet {
         let i = c as usize + 1;
         if i >= self.stamp.len() {
             self.stamp.resize((i + 1).next_power_of_two(), 0);
+            self.grow_words();
         }
         self.stamp[i] = self.cur;
+        let (w, bit) = (i >> 6, 1u64 << (i & 63));
+        self.words[w] = if self.word_gen[w] == self.cur { self.words[w] | bit } else { bit };
+        self.word_gen[w] = self.cur;
     }
 
     /// Branch-free insert for the hot gather loops: accepts any `c >= -1`
@@ -56,8 +111,24 @@ impl StampSet {
     #[inline(always)]
     pub fn mark(&mut self, c: i32) {
         let i = (c + 1) as usize;
-        debug_assert!(c >= -1 && i < self.stamp.len());
-        unsafe { *self.stamp.get_unchecked_mut(i) = self.cur };
+        debug_assert!(
+            c >= -1 && i < self.stamp.len(),
+            "StampSet::mark({c}) outside the sized domain ({} slots): hot-loop callers \
+             must StampSet::ensure(color_cap) before the marking loop (see the \
+             run_capped/repair preludes); release builds would write out of bounds here",
+            self.stamp.len()
+        );
+        // SAFETY: the caller contract above guarantees `i < stamp.len()`,
+        // and `words`/`word_gen` always cover `stamp` (every resize of
+        // `stamp` calls `grow_words`), so `i >> 6 < words.len()`.
+        unsafe {
+            *self.stamp.get_unchecked_mut(i) = self.cur;
+            let (w, bit) = (i >> 6, 1u64 << (i & 63));
+            let gen = self.word_gen.get_unchecked_mut(w);
+            let word = self.words.get_unchecked_mut(w);
+            *word = if *gen == self.cur { *word | bit } else { bit };
+            *gen = self.cur;
+        }
     }
 
     /// Membership test.
@@ -74,13 +145,104 @@ impl StampSet {
     pub fn ensure(&mut self, max_color: usize) {
         if self.stamp.len() < max_color + 2 {
             self.stamp.resize(max_color + 2, 0);
+            self.grow_words();
+        }
+    }
+
+    /// Current-generation view of packed word `w` (stale words are empty).
+    #[inline(always)]
+    fn word(&self, w: usize) -> u64 {
+        if self.word_gen[w] == self.cur {
+            self.words[w]
+        } else {
+            0
         }
     }
 
     /// First-fit: smallest non-negative color not in the set.
-    /// Returns (color, scan cost in probes).
+    /// Returns (color, scan cost in words touched).
     #[inline]
     pub fn first_fit(&self) -> (i32, u64) {
+        let nw = self.words.len();
+        let mut probes = 0u64;
+        for w in 0..nw {
+            probes += 1;
+            let mut free = !self.word(w);
+            if w == 0 {
+                free &= !1; // slot 0 is the -1 trash slot, never a color
+            }
+            if free != 0 {
+                let i = (w << 6) + free.trailing_zeros() as usize;
+                return ((i - 1) as i32, probes);
+            }
+        }
+        // Every packed slot is stamped; the first free slot is one past
+        // the domain — exactly where the scalar bounds check stops.
+        (((nw << 6) - 1) as i32, probes.max(1))
+    }
+
+    /// Reverse first-fit from `start` downward: largest color `<= start`
+    /// not in the set, or `None` if the whole range is forbidden.
+    #[inline]
+    pub fn reverse_fit(&self, start: i32) -> (Option<i32>, u64) {
+        if start < 0 {
+            return (None, 1);
+        }
+        let i0 = (start + 1) as usize;
+        let nw = self.words.len();
+        if i0 >= nw << 6 {
+            return (Some(start), 1); // past the sized domain: trivially free
+        }
+        let w0 = i0 >> 6;
+        let mut probes = 0u64;
+        for w in (0..=w0).rev() {
+            probes += 1;
+            let mut free = !self.word(w);
+            if w == w0 && (i0 & 63) != 63 {
+                free &= (1u64 << ((i0 & 63) + 1)) - 1; // keep bits <= i0
+            }
+            if w == 0 {
+                free &= !1;
+            }
+            if free != 0 {
+                let i = (w << 6) + (63 - free.leading_zeros() as usize);
+                return (Some((i - 1) as i32), probes);
+            }
+        }
+        (None, probes.max(1))
+    }
+
+    /// First-fit starting at `start` upward.
+    #[inline]
+    pub fn first_fit_from(&self, start: i32) -> (i32, u64) {
+        let i0 = (start.max(0) + 1) as usize;
+        let nw = self.words.len();
+        if i0 >= nw << 6 {
+            return (i0 as i32 - 1, 1); // past the sized domain: trivially free
+        }
+        let w0 = i0 >> 6;
+        let mut probes = 0u64;
+        for w in w0..nw {
+            probes += 1;
+            let mut free = !self.word(w);
+            if w == w0 {
+                free &= !0u64 << (i0 & 63); // keep bits >= i0
+            }
+            if free != 0 {
+                let i = (w << 6) + free.trailing_zeros() as usize;
+                return ((i - 1) as i32, probes);
+            }
+        }
+        (((nw << 6) - 1) as i32, probes.max(1))
+    }
+
+    /// Reference scalar first-fit (one membership probe per color).
+    ///
+    /// Kept verbatim for the differential property tests and the
+    /// packed-vs-scalar microbench; the public [`Self::first_fit`] is
+    /// the packed-word scan.
+    #[inline]
+    pub fn first_fit_scalar(&self) -> (i32, u64) {
         let mut col = 0i32;
         let mut probes = 1u64;
         while self.contains(col) {
@@ -90,10 +252,9 @@ impl StampSet {
         (col, probes)
     }
 
-    /// Reverse first-fit from `start` downward: largest color `<= start`
-    /// not in the set, or `None` if the whole range is forbidden.
+    /// Reference scalar reverse-fit (see [`Self::first_fit_scalar`]).
     #[inline]
-    pub fn reverse_fit(&self, start: i32) -> (Option<i32>, u64) {
+    pub fn reverse_fit_scalar(&self, start: i32) -> (Option<i32>, u64) {
         let mut col = start;
         let mut probes = 1u64;
         while col >= 0 && self.contains(col) {
@@ -103,9 +264,9 @@ impl StampSet {
         (if col >= 0 { Some(col) } else { None }, probes)
     }
 
-    /// First-fit starting at `start` upward.
+    /// Reference scalar first-fit-from (see [`Self::first_fit_scalar`]).
     #[inline]
-    pub fn first_fit_from(&self, start: i32) -> (i32, u64) {
+    pub fn first_fit_from_scalar(&self, start: i32) -> (i32, u64) {
         let mut col = start.max(0);
         let mut probes = 1u64;
         while self.contains(col) {
@@ -163,6 +324,7 @@ impl ThreadState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn generations_isolate_without_reset() {
@@ -195,7 +357,10 @@ mod tests {
         f.insert(3);
         let (c, probes) = f.first_fit();
         assert_eq!(c, 2);
-        assert_eq!(probes, 3);
+        assert_eq!(probes, 1, "packed scan resolves a one-word domain in one probe");
+        let (c_ref, probes_ref) = f.first_fit_scalar();
+        assert_eq!(c_ref, 2);
+        assert_eq!(probes_ref, 3, "scalar reference still counts per-color probes");
     }
 
     #[test]
@@ -218,6 +383,86 @@ mod tests {
         f.insert(4);
         assert_eq!(f.first_fit_from(4).0, 5);
         assert_eq!(f.first_fit_from(2).0, 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "StampSet::ensure")]
+    fn mark_panics_in_debug_when_domain_not_ensured() {
+        let mut f = StampSet::new(8); // 9 slots: colors 0..=7
+        f.next_gen();
+        f.mark(42); // caller forgot ensure(42) — must panic, not scribble
+    }
+
+    /// The packed scans must agree with the scalar reference on *colors*
+    /// for every mixture of generations, growth and start points
+    /// (probes differ by design: words touched vs colors probed).
+    fn assert_all_scans_match(f: &StampSet, ctx: &str) {
+        assert_eq!(f.first_fit().0, f.first_fit_scalar().0, "first_fit {ctx}");
+        for start in [-3, -1, 0, 1, 62, 63, 64, 65, 126, 127, 128, 129, 500, 5000] {
+            assert_eq!(
+                f.reverse_fit(start).0,
+                f.reverse_fit_scalar(start).0,
+                "reverse_fit({start}) {ctx}"
+            );
+            assert_eq!(
+                f.first_fit_from(start).0,
+                f.first_fit_from_scalar(start).0,
+                "first_fit_from({start}) {ctx}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matches_scalar_randomized() {
+        let mut rng = Rng::new(0x9e3779b9);
+        for case in 0..200u32 {
+            let cap = [4usize, 48, 63, 64, 65, 120, 127, 128, 129, 300][rng.range(0, 10)];
+            let mut f = StampSet::new(cap);
+            for gen in 0..4 {
+                f.next_gen();
+                let dense = rng.range(0, 3) == 0;
+                let n = if dense { rng.range(cap, 4 * cap + 2) } else { rng.range(0, cap + 1) };
+                for _ in 0..n {
+                    // occasionally grow far past the initial domain
+                    let hi = if rng.range(0, 8) == 0 { 4 * cap + 64 } else { cap };
+                    f.insert(rng.range(0, hi + 1) as i32);
+                }
+                assert_all_scans_match(&f, &format!("case {case} gen {gen}"));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_scalar_at_word_boundaries_and_exhaustion() {
+        // Saturate domains that end exactly on / just around a word edge,
+        // so the fall-through (“every slot stamped”) paths are exercised.
+        for cap in [61usize, 62, 63, 64, 65, 126, 127, 128] {
+            let mut f = StampSet::new(cap);
+            f.next_gen();
+            for c in 0..(cap as i32 + 8) {
+                f.insert(c);
+                assert_all_scans_match(&f, &format!("cap {cap} after insert({c})"));
+            }
+        }
+    }
+
+    #[test]
+    fn mark_through_ensure_matches_insert_semantics() {
+        let mut a = StampSet::new(4);
+        let mut b = StampSet::new(4);
+        a.ensure(200);
+        b.ensure(200);
+        a.next_gen();
+        b.next_gen();
+        for c in [-1, 0, 63, 64, 127, 199, 5, -1] {
+            a.mark(c);
+            if c >= 0 {
+                b.insert(c);
+            }
+            assert_eq!(a.first_fit().0, b.first_fit().0);
+            assert_all_scans_match(&a, &format!("mark({c})"));
+        }
     }
 
     #[test]
@@ -245,9 +490,12 @@ mod tests {
         f.next_gen();
         f.insert(1);
         assert!(f.contains(1));
+        assert_all_scans_match(&f, "pre-wrap");
         f.next_gen(); // wraps to 0 -> hard reset to 1
         assert!(!f.contains(1));
+        assert_all_scans_match(&f, "post-wrap empty");
         f.insert(2);
         assert!(f.contains(2));
+        assert_all_scans_match(&f, "post-wrap reinsert");
     }
 }

@@ -68,9 +68,13 @@ impl AlgSpec {
         self
     }
 
-    /// Look up by the paper's name (`"N1-N2"`, `"V-V-64D"`, ...).
+    /// Look up by the paper's name (`"N1-N2"`, `"V-V-64D"`, ...), plus
+    /// the repo's `"V-V-AUTO"` extension.
     pub fn by_name(name: &str) -> Option<AlgSpec> {
         let needle = name.to_ascii_uppercase().replace("INF", "∞");
+        if V_V_AUTO.name.eq_ignore_ascii_case(&needle) {
+            return Some(V_V_AUTO);
+        }
         ALL.iter().find(|s| s.name.eq_ignore_ascii_case(&needle)).copied()
     }
 }
@@ -93,6 +97,18 @@ pub const V_N2: AlgSpec = AlgSpec::new("V-N2", 0, 2, 64, true);
 pub const N1_N2: AlgSpec = AlgSpec::new("N1-N2", 1, 2, 64, true);
 /// `N2-N2`: net coloring and conflict removal in the first two iterations.
 pub const N2_N2: AlgSpec = AlgSpec::new("N2-N2", 2, 2, 64, true);
+/// `V-V-AUTO`: vertex phases with the self-tuning dynamic chunk
+/// ([`crate::par::Chunk::Auto`]); the engines re-aim the generic site
+/// per phase. Not one of the paper's eight schedules — the repo's
+/// architecture-aware extension (DESIGN.md §Perf) — so it is not part
+/// of [`ALL`] and the paper tables never run it implicitly.
+pub const V_V_AUTO: AlgSpec = AlgSpec::new(
+    "V-V-AUTO",
+    0,
+    0,
+    crate::par::Chunk::Auto(crate::par::autosite::GENERIC).encode(),
+    true,
+);
 
 /// All eight schedules, in the paper's table order.
 pub const ALL: [AlgSpec; 8] =
@@ -135,5 +151,14 @@ mod tests {
         assert!(!V_V_64.lazy_queues);
         assert!(V_V_64D.lazy_queues);
         assert!(ALL.iter().skip(3).all(|s| s.lazy_queues));
+    }
+
+    #[test]
+    fn auto_schedule_is_an_extension_not_a_paper_row() {
+        use crate::par::{autosite, Chunk};
+        assert!(matches!(Chunk::decode(V_V_AUTO.chunk), Chunk::Auto(s) if s == autosite::GENERIC));
+        assert!(V_V_AUTO.lazy_queues);
+        assert!(!ALL.iter().any(|s| s.name == V_V_AUTO.name), "paper tables must not run it");
+        assert_eq!(AlgSpec::by_name("v-v-auto"), Some(V_V_AUTO));
     }
 }

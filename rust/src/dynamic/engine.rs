@@ -44,7 +44,7 @@ use crate::coloring::balance::Balance;
 use crate::coloring::bgpc::{collect_next, MAX_ITERS};
 use crate::coloring::forbidden::ThreadState;
 use crate::coloring::schedule::AlgSpec;
-use crate::par::{ColorStore, Driver, SharedQueue};
+use crate::par::{autosite, Chunk, ColorStore, Driver, SharedQueue};
 
 use super::problem::Problem;
 use super::BatchStats;
@@ -52,13 +52,16 @@ use super::BatchStats;
 /// Dirty sets are usually far smaller than one chunk per thread; the
 /// paper's chunk-64 exists to amortize cursor contention on big queues,
 /// but on a tiny queue it serializes the whole repair onto one thread.
-/// Drop to chunk 1 when the queue cannot feed every thread a chunk
-/// (static scheduling, chunk 0, is kept as-is).
-fn adaptive_chunk(n_items: usize, threads: usize, spec_chunk: usize) -> usize {
-    if spec_chunk == 0 || n_items >= spec_chunk * threads {
-        spec_chunk
-    } else {
-        1
+/// Fixed spec chunks are therefore routed through the self-tuning
+/// [`Chunk::Auto`] repair sites, whose per-dispatch clamp
+/// ([`crate::par::auto_effective`]) drops a tiny queue to chunk 1 —
+/// what the old size-threshold fallback did by hand — while large
+/// frontiers keep a chunk adapted from the observed imbalance of
+/// earlier batches. Static scheduling (chunk 0) is kept as-is.
+fn repair_chunk(spec_chunk: usize, site: usize) -> usize {
+    match Chunk::decode(spec_chunk) {
+        Chunk::Static => 0,
+        _ => Chunk::Auto(site).encode(),
     }
 }
 
@@ -121,7 +124,7 @@ pub fn repair<P: Problem, D: Driver>(
 
     // --- phase 1: dirty-unit conflict detection (Alg. 7 / Alg. 10 on
     // the subset) ---
-    let det_chunk = adaptive_chunk(dirty.len(), d.threads(), spec.chunk);
+    let det_chunk = repair_chunk(spec.chunk, autosite::REPAIR_DETECT);
     let det = {
         let _sp = crate::obs::trace::span_n("repair.detect_dirty", dirty.len() as u64);
         g.conflict_phase_on(dirty, &colors, d, ts, det_chunk)
@@ -151,6 +154,7 @@ pub fn repair<P: Problem, D: Driver>(
     let conflicts = w.len();
 
     // --- phase 2: vertex-based speculate/detect over the remainder ---
+    let color_chunk = repair_chunk(spec.chunk, autosite::REPAIR_SPECULATE);
     let shared = SharedQueue::with_capacity(n);
     let mut recolored_mark = vec![false; n];
     let mut recolored = 0usize;
@@ -164,16 +168,15 @@ pub fn repair<P: Problem, D: Driver>(
                 recolored += 1;
             }
         }
-        let chunk = adaptive_chunk(w.len(), d.threads(), spec.chunk);
         let cr = {
             let _sp = crate::obs::trace::span_n("repair.speculate", w.len() as u64);
-            g.color_phase(&w, &colors, d, ts, chunk, bal)
+            g.color_phase(&w, &colors, d, ts, color_chunk, bal)
         };
         sim_secs += cr.seconds();
         work_units += cr.busy_units.iter().sum::<u64>();
         let rr = {
             let _sp = crate::obs::trace::span_n("repair.detect", w.len() as u64);
-            g.conflict_phase(&w, &colors, d, ts, chunk, spec.lazy_queues, &shared)
+            g.conflict_phase(&w, &colors, d, ts, det_chunk, spec.lazy_queues, &shared)
         };
         sim_secs += rr.seconds();
         work_units += rr.busy_units.iter().sum::<u64>();

@@ -54,6 +54,13 @@ impl Bipartite {
         self.net_vtxs.row(v)
     }
 
+    /// Best-effort prefetch of the head of `vtxs(v)` (see
+    /// [`Csr::prefetch_row`]).
+    #[inline(always)]
+    pub fn prefetch_vtxs(&self, v: usize) {
+        self.net_vtxs.prefetch_row(v);
+    }
+
     /// Upper bound on the distance-2 degree of vertex `u`:
     /// `Σ_{v ∈ nets(u)} (|vtxs(v)| − 1)`. Also the paper's lower-bound
     /// argument for reverse first-fit never running negative.

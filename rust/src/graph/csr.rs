@@ -70,6 +70,17 @@ impl Csr {
         &self.adj[self.ptr[r]..self.ptr[r + 1]]
     }
 
+    /// Best-effort prefetch of the head of row `r`'s adjacency — a pure
+    /// hint (no-op out of range or off x86_64). The marking loops run
+    /// one net/row ahead so the next gather's dependent loads are in
+    /// flight before the scan arrives (DESIGN.md §Perf).
+    #[inline(always)]
+    pub fn prefetch_row(&self, r: usize) {
+        if r < self.n_rows {
+            crate::util::arch::prefetch_slice(&self.adj, self.ptr[r]);
+        }
+    }
+
     /// Degree of row `r`.
     #[inline]
     pub fn deg(&self, r: usize) -> usize {

@@ -8,6 +8,8 @@
 //! bgpc color --preset bone010 [--mtx file] [--alg N1-N2] [--threads 16]
 //!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
 //!            [--strategy ldf+fix]               # ordering + post pass in one knob
+//!            [--chunk N|static|auto]            # override the schedule's chunk
+//!                                               # (auto = self-tuning, DESIGN.md §Perf)
 //! bgpc d2color --preset af_shell [--alg V-N2] [--threads 16]
 //! bgpc serve --jobs 32 --workers 2 --pool 4   # coordinator demo loop
 //!           [--strategy sl+fix]                 # strategy applied to every job
@@ -59,7 +61,20 @@ fn load_instance(flags: &HashMap<String, String>) -> Result<(String, Bipartite),
 
 fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
     let alg = flags.get("alg").cloned().unwrap_or_else(|| "N1-N2".into());
-    let spec = schedule::AlgSpec::by_name(&alg).ok_or(format!("unknown algorithm {alg}"))?;
+    let mut spec = schedule::AlgSpec::by_name(&alg).ok_or(format!("unknown algorithm {alg}"))?;
+    // --chunk overrides the schedule's chunk: N (fixed), static, or auto
+    // (the self-tuning Chunk::Auto sentinel; engines re-aim it per phase)
+    if let Some(c) = flags.get("chunk") {
+        spec.chunk = match c.as_str() {
+            "static" => 0,
+            "auto" => bgpc::par::Chunk::Auto(bgpc::par::autosite::GENERIC).encode(),
+            n => n
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or(format!("unknown chunk {c} (N >= 1 | static | auto)"))?,
+        };
+    }
     let threads: usize =
         flags.get("threads").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
     let mode = match flags.get("engine").map(|s| s.as_str()).unwrap_or("sim") {

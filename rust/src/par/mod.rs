@@ -31,7 +31,10 @@ use std::sync::atomic::Ordering as AOrd;
 use std::sync::Arc;
 
 pub use mpmc::{QueueStats, ShardedQueue};
-pub use pool::{PoolSet, PoolStats, WorkerPool};
+pub use pool::{
+    auto_adapt, auto_effective, auto_seed, autosite, utilization_of, AUTO_SITES, Chunk, PoolSet,
+    PoolStats, WorkerPool,
+};
 pub use queue::SharedQueue;
 
 /// Work performed by one item, reported by region bodies.
@@ -89,6 +92,15 @@ pub trait ColorStore: Sync {
     fn write(&self, u: usize, val: i32, commit: u64);
     /// Read the fully-committed value (between regions / at the end).
     fn committed(&self, u: usize) -> i32;
+    /// Best-effort prefetch of the cell backing `u` — a pure hint with
+    /// no observable effect. The atomic store pulls the cache line
+    /// early for the gather loops; the simulator keeps this default
+    /// no-op so modeled costs and colorings are byte-identical with or
+    /// without prefetching (DESIGN.md §Perf).
+    #[inline]
+    fn prefetch(&self, u: usize) {
+        let _ = u;
+    }
     /// Snapshot all committed values.
     fn to_vec(&self) -> Vec<i32> {
         (0..self.n()).map(|u| self.committed(u)).collect()
@@ -127,6 +139,10 @@ impl ColorStore for AtomicColors {
     fn committed(&self, u: usize) -> i32 {
         self.cells[u].load(AOrd::Relaxed)
     }
+    #[inline]
+    fn prefetch(&self, u: usize) {
+        crate::util::arch::prefetch_slice(&self.cells, u);
+    }
     fn fill(&self, val: i32) {
         for c in &self.cells {
             c.store(val, AOrd::Relaxed);
@@ -154,6 +170,9 @@ pub trait Driver {
     /// `chunk == 0` means OpenMP `schedule(static)` (contiguous blocks,
     /// ColPack's plain `parallel for` — the paper's `V-V` baseline);
     /// `chunk >= 1` means `schedule(dynamic, chunk)` via a shared cursor.
+    /// A [`Chunk::Auto`] sentinel (see [`Chunk::encode`]) selects a
+    /// self-tuning dynamic chunk; every driver decodes it before any
+    /// cursor arithmetic.
     fn region<TS, F>(&mut self, states: &mut [TS], n_items: usize, chunk: usize, body: F) -> RegionOut
     where
         TS: Send,

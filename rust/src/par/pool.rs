@@ -24,7 +24,10 @@
 //! * **Scheduling.** `chunk >= 1` claims chunks from a shared atomic
 //!   cursor (`schedule(dynamic, chunk)`); `chunk == 0` splits the
 //!   index space contiguously (`schedule(static)`), exactly as the
-//!   simulator models them.
+//!   simulator models them. A [`Chunk::Auto`] sentinel selects a
+//!   self-tuning dynamic chunk: seeded from item count and team size,
+//!   then adapted per tuner *site* from the observed busy-unit
+//!   imbalance of previous regions (DESIGN.md §Perf).
 //! * **Scratch residency.** The pool carries one type-erased scratch
 //!   slot ([`WorkerPool::with_scratch`]) so callers that run many
 //!   independent jobs (the coordinator) can keep a `ThreadState` bank —
@@ -65,6 +68,132 @@ use super::{Cost, RegionOut};
 /// must not brick the pool for every later job.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Number of distinct [`Chunk::Auto`] tuner sites a pool tracks. Each
+/// site owns an independent feedback loop, so the engine's speculate and
+/// detect regions (very different item costs) never fight over one
+/// chunk estimate.
+pub const AUTO_SITES: usize = 8;
+
+/// Raw `usize` values `>= AUTO_MIN_RAW` encode `Chunk::Auto(site)` —
+/// far above any meaningful fixed chunk, so the existing `chunk: usize`
+/// plumbing (driver trait, schedules, phase signatures) carries the
+/// sentinel unchanged.
+const AUTO_MIN_RAW: usize = usize::MAX - (AUTO_SITES - 1);
+
+/// Well-known tuner sites (see [`Chunk::Auto`]). `GENERIC` is what the
+/// CLI's `--chunk auto` selects; the engines re-aim it per phase via
+/// [`Chunk::resite`] so speculation and detection tune independently.
+pub mod autosite {
+    /// Unsited auto (CLI/default before an engine re-aims it).
+    pub const GENERIC: usize = 0;
+    /// Full-run speculate (color) regions.
+    pub const SPECULATE: usize = 1;
+    /// Full-run detect (conflict/rebuild) regions.
+    pub const DETECT: usize = 2;
+    /// Dynamic-repair speculate regions (dirty frontiers).
+    pub const REPAIR_SPECULATE: usize = 3;
+    /// Dynamic-repair detect regions.
+    pub const REPAIR_DETECT: usize = 4;
+}
+
+/// Chunk-size selection for a parallel region.
+///
+/// The [`crate::par::Driver`] trait (and every schedule/phase signature
+/// above it) threads a plain `usize`; this enum is the typed view with a
+/// reversible encoding: `0` = `Static`, `1..` = `Fixed(n)`, and a high
+/// sentinel range for `Auto(site)`. The pool, the simulator and the
+/// reference spawn driver all [`Chunk::decode`] before scheduling, so an
+/// `Auto` sentinel can never reach a cursor `fetch_add`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chunk {
+    /// `schedule(static)`: contiguous per-thread blocks.
+    Static,
+    /// `schedule(dynamic, n)` with a fixed chunk (`n >= 1`).
+    Fixed(usize),
+    /// Self-tuning dynamic chunk, tracked per tuner site (`site <
+    /// AUTO_SITES`): seeded by [`auto_seed`], clamped per dispatch by
+    /// [`auto_effective`], adapted across epochs by [`auto_adapt`] from
+    /// the region's [`RegionOut::busy_units`] imbalance.
+    Auto(usize),
+}
+
+impl Chunk {
+    /// Encode into the raw `usize` the driver plumbing carries.
+    /// `Fixed(n)` requires `1 <= n < AUTO_MIN_RAW` (any practical chunk).
+    pub const fn encode(self) -> usize {
+        match self {
+            Chunk::Static => 0,
+            Chunk::Fixed(n) => n,
+            Chunk::Auto(site) => usize::MAX - (site % AUTO_SITES),
+        }
+    }
+
+    /// Decode a raw `usize` chunk (inverse of [`Chunk::encode`]).
+    pub const fn decode(raw: usize) -> Chunk {
+        if raw == 0 {
+            Chunk::Static
+        } else if raw >= AUTO_MIN_RAW {
+            Chunk::Auto(usize::MAX - raw)
+        } else {
+            Chunk::Fixed(raw)
+        }
+    }
+
+    /// Re-aim a raw chunk at tuner `site` when it is `Auto`; static and
+    /// fixed values pass through untouched. The engines call this so one
+    /// `--chunk auto` spec feeds per-phase tuner sites.
+    pub const fn resite(raw: usize, site: usize) -> usize {
+        match Chunk::decode(raw) {
+            Chunk::Auto(_) => Chunk::Auto(site).encode(),
+            _ => raw,
+        }
+    }
+}
+
+/// Mean-over-max busy fraction of one region (1.0 = perfectly balanced,
+/// `1/len` = one participant did everything; 1.0 when nobody recorded
+/// busy units — an idle region is not "imbalanced"). Shared by
+/// [`PoolStats::utilization`] and the [`Chunk::Auto`] feedback loop.
+pub fn utilization_of(busy_units: &[u64]) -> f64 {
+    let max = busy_units.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return 1.0;
+    }
+    let sum: u64 = busy_units.iter().sum();
+    sum as f64 / (max as f64 * busy_units.len() as f64)
+}
+
+/// Seed chunk for a fresh [`Chunk::Auto`] site: aim for ~8 chunks per
+/// participant (enough granularity to rebalance, few enough cursor
+/// grabs to stay cheap), clamped to `[1, 1024]`.
+pub fn auto_seed(n_items: usize, team: usize) -> usize {
+    (n_items / (team.max(1) * 8)).clamp(1, 1024)
+}
+
+/// Clamp a tuned chunk for one dispatch: never larger than a `1/team`
+/// share of the region (that would serialize it), never below 1.
+pub fn auto_effective(tuned: usize, n_items: usize, team: usize) -> usize {
+    let cap = (n_items / team.max(1)).max(1);
+    tuned.clamp(1, cap)
+}
+
+/// One feedback step for a [`Chunk::Auto`] site: low utilization means
+/// the tail was stuck behind a big chunk — halve; near-perfect balance
+/// means cursor traffic is the only remaining cost — double. The
+/// half/double step converges in O(log) epochs from any seed and the
+/// same pure function drives the pool and the simulator, so sim runs
+/// stay deterministic.
+pub fn auto_adapt(cur: usize, busy_units: &[u64]) -> usize {
+    let util = utilization_of(busy_units);
+    if util < 0.80 {
+        (cur / 2).max(1)
+    } else if util > 0.95 {
+        (cur * 2).min(65_536)
+    } else {
+        cur
+    }
 }
 
 /// Best-effort human-readable panic payload (panics carry `&str` or
@@ -225,14 +354,11 @@ pub struct PoolStats {
 
 impl PoolStats {
     /// Mean-over-max busy fraction across workers: 1.0 = perfectly
-    /// balanced, `1/threads` = one worker did everything.
+    /// balanced, `1/threads` = one worker did everything, 1.0 when no
+    /// busy units were recorded at all (never NaN — see
+    /// [`utilization_of`]).
     pub fn utilization(&self) -> f64 {
-        let max = self.busy_units.iter().copied().max().unwrap_or(0);
-        if max == 0 {
-            return 1.0;
-        }
-        let sum: u64 = self.busy_units.iter().sum();
-        sum as f64 / (max as f64 * self.busy_units.len() as f64)
+        utilization_of(&self.busy_units)
     }
 
     /// One-line summary for logs.
@@ -264,6 +390,10 @@ pub struct WorkerPool {
     /// dispatches (exclusive via `region_lock`) — tiny regions pay no
     /// allocation for their counters.
     region_busy: Vec<AtomicU64>,
+    /// Per-site [`Chunk::Auto`] state: the last adapted chunk (0 =
+    /// unseeded). Relaxed atomics — a lost update just replays one
+    /// feedback step.
+    tuners: Vec<AtomicUsize>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -302,8 +432,15 @@ impl WorkerPool {
             items: AtomicU64::new(0),
             busy: (0..t).map(|_| AtomicU64::new(0)).collect(),
             region_busy: (0..t).map(|_| AtomicU64::new(0)).collect(),
+            tuners: (0..AUTO_SITES).map(|_| AtomicUsize::new(0)).collect(),
             handles,
         }
+    }
+
+    /// The current tuned chunk of auto site `site` (0 = not yet seeded).
+    /// Diagnostic/test hook for the [`Chunk::Auto`] feedback loop.
+    pub fn tuned_chunk(&self, site: usize) -> usize {
+        self.tuners[site % AUTO_SITES].load(AOrd::Relaxed)
     }
 
     /// Team size (caller + parked workers).
@@ -351,8 +488,11 @@ impl WorkerPool {
     /// Execute one parallel region over `0..n_items` with `team`
     /// threads (clamped to the pool size), one scratch state per
     /// participant. `chunk == 0` is `schedule(static)`, `chunk >= 1`
-    /// is `schedule(dynamic, chunk)`. The returned
-    /// [`RegionOut::busy_units`] holds per-participant work units.
+    /// is `schedule(dynamic, chunk)`, and a [`Chunk::Auto`] sentinel
+    /// (see [`Chunk::encode`]) resolves through the pool's per-site
+    /// tuner before dispatch and feeds the observed imbalance back
+    /// afterwards. The returned [`RegionOut::busy_units`] holds
+    /// per-participant work units.
     ///
     /// # Panics
     /// If `states` holds fewer than `team` entries (a driver contract
@@ -376,6 +516,16 @@ impl WorkerPool {
             "worker pool: {} scratch states for a team of {team} (one per thread required)",
             states.len()
         );
+        // Resolve a Chunk::Auto sentinel before it can reach the cursor.
+        let (chunk, auto_site) = match Chunk::decode(chunk) {
+            Chunk::Auto(site) => {
+                let site = site % AUTO_SITES;
+                let tuned = self.tuners[site].load(AOrd::Relaxed);
+                let base = if tuned == 0 { auto_seed(n_items, team) } else { tuned };
+                (auto_effective(base, n_items, team), Some(site))
+            }
+            _ => (chunk, None),
+        };
         // one span per region, covering both the inline and the
         // dispatch path — the pool-layer phase in the Chrome trace
         let _sp = crate::obs::trace::span_n("pool.region", n_items as u64);
@@ -456,6 +606,10 @@ impl WorkerPool {
             slot.fetch_add(b, AOrd::Relaxed);
         }
         self.items.fetch_add(n_items as u64, AOrd::Relaxed);
+        if let Some(site) = auto_site {
+            // feedback: next dispatch at this site starts from here
+            self.tuners[site].store(auto_adapt(chunk, &busy_units), AOrd::Relaxed);
+        }
         RegionOut {
             real_secs: t0.elapsed().as_secs_f64(),
             sim_ns: None,
@@ -670,5 +824,83 @@ mod tests {
         let idle = PoolStats { threads: 2, regions: 0, items: 0, busy_units: vec![0, 0] };
         assert_eq!(idle.utilization(), 1.0);
         assert!(idle.summary().contains("regions=0"));
+        // degenerate inputs stay finite
+        assert_eq!(utilization_of(&[]), 1.0);
+        assert_eq!(utilization_of(&[0]), 1.0);
+    }
+
+    #[test]
+    fn chunk_encoding_roundtrips_and_resites() {
+        assert_eq!(Chunk::Static.encode(), 0);
+        assert_eq!(Chunk::Fixed(64).encode(), 64);
+        assert!(matches!(Chunk::decode(0), Chunk::Static));
+        assert!(matches!(Chunk::decode(64), Chunk::Fixed(64)));
+        for site in 0..AUTO_SITES {
+            let raw = Chunk::Auto(site).encode();
+            assert!(raw >= AUTO_MIN_RAW, "sentinel range");
+            assert!(matches!(Chunk::decode(raw), Chunk::Auto(s) if s == site));
+        }
+        // site index wraps into range instead of escaping the sentinel band
+        assert!(matches!(Chunk::decode(Chunk::Auto(AUTO_SITES + 1).encode()), Chunk::Auto(1)));
+        // resite re-aims Auto and leaves Static/Fixed untouched
+        let generic = Chunk::Auto(autosite::GENERIC).encode();
+        assert_eq!(
+            Chunk::resite(generic, autosite::DETECT),
+            Chunk::Auto(autosite::DETECT).encode()
+        );
+        assert_eq!(Chunk::resite(0, autosite::DETECT), 0);
+        assert_eq!(Chunk::resite(64, autosite::DETECT), 64);
+    }
+
+    #[test]
+    fn auto_tuner_seeds_and_adapts() {
+        // seed: ~8 chunks per worker, clamped to [1, 1024]
+        assert_eq!(auto_seed(0, 4), 1);
+        assert_eq!(auto_seed(6400, 4), 200);
+        assert_eq!(auto_seed(10_000_000, 1), 1024);
+        // effective: never larger than one team-share of the items
+        assert_eq!(auto_effective(1024, 8, 4), 2);
+        assert_eq!(auto_effective(16, 6400, 4), 16);
+        assert_eq!(auto_effective(16, 0, 4), 1);
+        // adapt: shrink on imbalance, grow when fully balanced, hold between
+        assert_eq!(auto_adapt(64, &[100, 10]), 32);
+        assert_eq!(auto_adapt(1, &[100, 0]), 1);
+        assert_eq!(auto_adapt(64, &[100, 100]), 128);
+        assert_eq!(auto_adapt(65_536, &[100, 100]), 65_536);
+        assert_eq!(auto_adapt(64, &[100, 85]), 64);
+    }
+
+    #[test]
+    fn auto_chunk_region_covers_items_and_feeds_the_tuner() {
+        let pool = WorkerPool::new(4);
+        let raw = Chunk::Auto(autosite::GENERIC).encode();
+        let hits: Vec<AtomicU64> = (0..2000).map(|_| AtomicU64::new(0)).collect();
+        let mut states = vec![(); 4];
+        for _ in 0..3 {
+            let out = pool.region(&mut states, 4, 2000, raw, |_tid, _ts, item, _now| {
+                hits[item].fetch_add(1, AOrd::Relaxed);
+                Cost::new(1)
+            });
+            assert_eq!(out.busy_units.iter().sum::<u64>(), 2000);
+        }
+        assert!(hits.iter().all(|h| h.load(AOrd::Relaxed) == 3), "every item exactly once per epoch");
+        let tuned = pool.tuned_chunk(autosite::GENERIC);
+        assert!(tuned >= 1, "the dispatch feedback must seed the tuner");
+        // other sites stay untouched
+        assert_eq!(pool.tuned_chunk(autosite::DETECT), 0);
+    }
+
+    #[test]
+    fn auto_chunk_single_thread_team_takes_the_inline_path() {
+        let pool = WorkerPool::new(2);
+        let raw = Chunk::Auto(autosite::SPECULATE).encode();
+        let mut states = vec![(); 1];
+        let order = Mutex::new(Vec::new());
+        let out = pool.region(&mut states, 1, 10, raw, |_tid, _ts, item, _now| {
+            lock(&order).push(item);
+            Cost::new(1)
+        });
+        assert_eq!(*lock(&order), (0..10).collect::<Vec<_>>(), "inline = sequential order");
+        assert_eq!(out.busy_units, vec![10]);
     }
 }

@@ -28,7 +28,9 @@ pub mod trace;
 
 use std::cell::UnsafeCell;
 
-use crate::par::{ColorStore, Cost, Driver, RegionOut};
+use crate::par::{
+    auto_adapt, auto_effective, auto_seed, AUTO_SITES, Chunk, ColorStore, Cost, Driver, RegionOut,
+};
 
 /// Cost-model constants. `ns_per_unit` is calibrated against a real
 /// sequential run on the host (see [`CostModel::calibrate`]); everything
@@ -188,12 +190,22 @@ pub struct SimDriver {
     barrier: u64,
     /// Per-region trace (busy units per thread), kept for diagnostics.
     pub last_busy: Vec<u64>,
+    /// Per-site [`Chunk::Auto`] state (0 = unseeded) — the simulated
+    /// twin of the pool's tuners, driven by the same pure feedback
+    /// functions so simulated runs stay deterministic.
+    auto_chunks: [usize; AUTO_SITES],
 }
 
 impl SimDriver {
     pub fn new(t: usize, model: CostModel) -> SimDriver {
         assert!(t >= 1);
-        SimDriver { t, model, barrier: 1, last_busy: Vec::new() }
+        SimDriver {
+            t,
+            model,
+            barrier: 1,
+            last_busy: Vec::new(),
+            auto_chunks: [0; AUTO_SITES],
+        }
     }
 
     /// Current barrier time (units).
@@ -223,8 +235,18 @@ impl Driver for SimDriver {
         F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
     {
         assert!(states.len() >= self.t);
-        let static_sched = chunk == 0;
-        let chunk = chunk.max(1);
+        // Resolve the chunk before any cursor arithmetic (an Auto
+        // sentinel is numerically near usize::MAX).
+        let (static_sched, chunk, auto_site) = match Chunk::decode(chunk) {
+            Chunk::Static => (true, 1, None),
+            Chunk::Fixed(n) => (false, n.max(1), None),
+            Chunk::Auto(site) => {
+                let site = site % AUTO_SITES;
+                let tuned = self.auto_chunks[site];
+                let base = if tuned == 0 { auto_seed(n_items, self.t) } else { tuned };
+                (false, auto_effective(base, n_items, self.t), Some(site))
+            }
+        };
         let t = self.t;
         let atomic_units = self.model.atomic_units(t);
         let item_base = self.model.item_base;
@@ -278,6 +300,9 @@ impl Driver for SimDriver {
         let max_clock = clocks.iter().copied().max().unwrap_or(self.barrier);
         let busy: Vec<u64> = clocks.iter().map(|&c| c - self.barrier).collect();
         let span = max_clock - self.barrier;
+        if let Some(site) = auto_site {
+            self.auto_chunks[site] = auto_adapt(chunk, &busy);
+        }
         self.last_busy = busy.clone();
         // next region starts strictly after everything committed here
         self.barrier = max_clock + 1;
@@ -361,6 +386,33 @@ mod tests {
             d.region(&mut s, 50_000, chunk, |_, _, _, _| Cost::new(5)).sim_ns.unwrap()
         };
         assert!(run(1) > run(64) * 1.3, "chunk-1 should be clearly slower");
+    }
+
+    #[test]
+    fn auto_chunk_is_deterministic_and_adapts_across_regions() {
+        let run = || {
+            let mut d = SimDriver::new(4, CostModel::default());
+            let raw = Chunk::Auto(crate::par::autosite::GENERIC).encode();
+            let mut states: Vec<Vec<usize>> = vec![Vec::new(); 4];
+            for _ in 0..4 {
+                for s in &mut states {
+                    s.clear();
+                }
+                d.region(&mut states, 1000, raw, |_tid, ts, item, _now| {
+                    ts.push(item);
+                    Cost::new(3)
+                });
+                let mut all: Vec<usize> = states.iter().flatten().copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..1000).collect::<Vec<_>>(), "every item exactly once");
+            }
+            (states, d.auto_chunks)
+        };
+        let (a, chunks_a) = run();
+        let (b, chunks_b) = run();
+        assert_eq!(a, b, "virtual scheduling must not depend on host state");
+        assert_eq!(chunks_a, chunks_b);
+        assert!(chunks_a[crate::par::autosite::GENERIC] >= 1, "tuner seeded by the feedback loop");
     }
 
     #[test]

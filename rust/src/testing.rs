@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
 use crate::dynamic::UpdateBatch;
 use crate::graph::generators::{random_bipartite, random_symmetric};
 use crate::graph::{Bipartite, Csr};
-use crate::par::{AtomicColors, Cost, Driver, RegionOut};
+use crate::par::{auto_effective, auto_seed, AtomicColors, Chunk, Cost, Driver, RegionOut};
 use crate::util::prng::Rng;
 
 /// The pre-pool `ThreadsDriver`: `std::thread::scope` workers per
@@ -44,6 +44,13 @@ impl Driver for SpawnDriver {
         F: Fn(usize, &mut TS, usize, u64) -> Cost + Sync,
     {
         assert!(states.len() >= self.t, "one scratch state per thread required");
+        // Resolve a Chunk::Auto sentinel statelessly (always the seed
+        // chunk): the reference driver has no cross-region tuner, it
+        // only needs a valid dynamic chunk for this dispatch.
+        let chunk = match Chunk::decode(chunk) {
+            Chunk::Auto(_) => auto_effective(auto_seed(n_items, self.t), n_items, self.t),
+            _ => chunk,
+        };
         let t0 = std::time::Instant::now();
         if self.t == 1 {
             let ts = &mut states[0];

@@ -1,0 +1,66 @@
+//! Architecture-specific hot-path helpers: best-effort software prefetch
+//! behind a portable no-op fallback.
+//!
+//! The speculate/detect inner loops are gather-bound: `colors[adj[i]]`
+//! is a dependent load whose address is only known after the adjacency
+//! entry arrives, so the out-of-order window stalls on two chained cache
+//! misses per entry on large graphs (Çatalyürek et al., PAPERS.md
+//! 1205.3809, measure exactly this). Running [`PREFETCH_DIST`] entries
+//! ahead overlaps those misses. Everything here is a *hint*: on
+//! non-x86_64 targets (and under `miri`-style interpreters) the helpers
+//! compile to nothing, and the simulator's MVCC store keeps the default
+//! no-op [`crate::par::ColorStore::prefetch`], so modeled costs and
+//! colorings are byte-identical with or without prefetching
+//! (DESIGN.md §Perf).
+
+/// How many adjacency entries the marking loops run ahead of themselves.
+///
+/// Rationale: one entry costs a handful of cycles of real work while a
+/// DRAM miss is ~100ns ≈ 60–80 entries of slack; 8 is far enough to
+/// cover an L2 miss without thrashing the L1 fill buffers on short rows
+/// (most rows in the skewed presets are < 32 entries, so a larger
+/// distance would mostly prefetch past the row's end).
+pub const PREFETCH_DIST: usize = 8;
+
+/// Best-effort read prefetch of the cache line holding `*p`.
+#[inline(always)]
+pub fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: PREFETCHT0 is architecturally a hint — it never faults,
+    // even on unmapped addresses — and requires only baseline SSE,
+    // which every x86_64 target has.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = p;
+    }
+}
+
+/// Prefetch element `i` of `slice` when it exists (bounds-safe: the
+/// marking loops call this with `i + PREFETCH_DIST`, which runs past the
+/// end on the last entries).
+#[inline(always)]
+pub fn prefetch_slice<T>(slice: &[T], i: usize) {
+    if let Some(x) = slice.get(i) {
+        prefetch_read(x as *const T);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_is_a_pure_hint() {
+        // No observable effect, in or out of bounds.
+        let v = vec![1u32, 2, 3];
+        prefetch_slice(&v, 0);
+        prefetch_slice(&v, 2);
+        prefetch_slice(&v, 3); // past the end: must be a no-op
+        prefetch_slice::<u32>(&[], 0);
+        prefetch_read(v.as_ptr());
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+}

@@ -3,6 +3,7 @@
 //! The offline registry provides no `rand`; the paper's experiments only
 //! need reproducible streams, so we ship splitmix64 + xoshiro256**.
 
+pub mod arch;
 pub mod error;
 pub mod prng;
 pub mod stats;

@@ -26,8 +26,10 @@ fn bgpc_pool_spawn_and_sequential_agree_on_every_preset() {
     for p in PRESETS.iter() {
         let g = p.bipartite(SCALE, SEED);
         let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
-        for spec in [schedule::V_V, schedule::V_V_64D, schedule::N1_N2] {
+        for spec in [schedule::V_V, schedule::V_V_64D, schedule::V_V_AUTO, schedule::N1_N2] {
             // t = 1: all backends are deterministic and must agree bit-for-bit
+            // (including the Chunk::Auto schedule — chunking is irrelevant
+            // on a one-thread team, so Auto must change nothing at t=1)
             let r_pool = bg::run(&g, &order, &spec, Balance::None, &mut ThreadsDriver::new(1));
             let r_spawn = bg::run(&g, &order, &spec, Balance::None, &mut SpawnDriver { t: 1 });
             assert!(bgpc_valid(&g, &r_pool.colors).is_ok(), "{} {} pool", p.name, spec.name);
@@ -54,7 +56,7 @@ fn d2gc_pool_spawn_and_sequential_agree_on_symmetric_presets() {
     for p in PRESETS.iter().filter(|p| p.symmetric) {
         let m = p.net_incidence(SCALE, SEED);
         let order: Vec<u32> = (0..m.n_rows as u32).collect();
-        for spec in [schedule::V_V_64D, schedule::N1_N2] {
+        for spec in [schedule::V_V_64D, schedule::V_V_AUTO, schedule::N1_N2] {
             let r_pool = d2::run(&m, &order, &spec, Balance::None, &mut ThreadsDriver::new(1));
             let r_spawn = d2::run(&m, &order, &spec, Balance::None, &mut SpawnDriver { t: 1 });
             assert!(d2gc_valid(&m, &r_pool.colors).is_ok(), "{} {} pool", p.name, spec.name);

@@ -1,0 +1,97 @@
+//! Engine-level equivalence of the word-packed forbidden-set scans
+//! (`StampSet::first_fit` / `reverse_fit` / `first_fit_from`) against
+//! the retained scalar reference scans (`*_scalar`).
+//!
+//! The unit tests in `coloring/forbidden.rs` fuzz the scans over
+//! randomized sets; this suite closes the loop at engine scale: the
+//! forbidden populations here come from *real greedy colorings* of the
+//! preset and skewed instances — dense hub nets, saturated low ranges,
+//! generation reuse across thousands of vertices — exactly the
+//! distributions the hot loops feed the packed tier. Colors must match
+//! bit-for-bit; probe counts are intentionally different units (words
+//! vs slots) and are not compared.
+
+use bgpc::coloring::bgpc as bg;
+use bgpc::coloring::forbidden::StampSet;
+use bgpc::graph::{Bipartite, PRESETS};
+use bgpc::testing::skewed_bipartite;
+
+/// The sequential BGPC greedy with every color chosen by the *scalar*
+/// first-fit — the pre-packed reference implementation of
+/// [`bg::seq::greedy`]'s selection step.
+fn scalar_greedy(g: &Bipartite, order: &[u32]) -> Vec<i32> {
+    let mut colors = vec![-1i32; g.n_vertices()];
+    let mut f = StampSet::new(1024);
+    for &w in order {
+        let w = w as usize;
+        f.next_gen();
+        for &v in g.nets(w) {
+            for &u in g.vtxs(v as usize) {
+                let u = u as usize;
+                if u != w && colors[u] >= 0 {
+                    f.insert(colors[u]);
+                }
+            }
+        }
+        let (c, _) = f.first_fit_scalar();
+        colors[w] = c;
+    }
+    colors
+}
+
+#[test]
+fn packed_first_fit_reproduces_scalar_greedy_on_every_preset() {
+    for p in PRESETS.iter() {
+        let g = p.bipartite(0.02, 7);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (packed, _) = bg::seq::greedy(&g, &order);
+        assert_eq!(packed, scalar_greedy(&g, &order), "{}: packed vs scalar first-fit", p.name);
+    }
+}
+
+#[test]
+fn packed_first_fit_reproduces_scalar_greedy_on_skewed_instances() {
+    for seed in [3u64, 11, 29] {
+        let g = skewed_bipartite(400, 600, 8000, seed);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (packed, _) = bg::seq::greedy(&g, &order);
+        assert_eq!(packed, scalar_greedy(&g, &order), "seed {seed}: packed vs scalar first-fit");
+    }
+}
+
+#[test]
+fn packed_directional_scans_match_scalar_on_engine_populations() {
+    // Rebuild each net's forbidden population from a finished greedy
+    // coloring — the exact state Algorithm 8's pass 2 sees — and compare
+    // the reverse/forward scans at the starts the engine actually uses
+    // (|net| - 1 downward, |net| + 1 upward) plus word-boundary probes.
+    for seed in [5u64, 17] {
+        let g = skewed_bipartite(300, 500, 6000, seed);
+        let order: Vec<u32> = (0..g.n_vertices() as u32).collect();
+        let (colors, _) = bg::seq::greedy(&g, &order);
+        let mut f = StampSet::new(bg::color_cap(&g));
+        for v in 0..g.n_nets() {
+            f.next_gen();
+            for &u in g.vtxs(v) {
+                let c = colors[u as usize];
+                if c >= 0 {
+                    f.insert(c);
+                }
+            }
+            let deg = g.vtxs(v).len() as i32;
+            for start in [-1, 0, deg - 1, deg, deg + 1, 62, 63, 64, 65, 127, 128] {
+                assert_eq!(
+                    f.reverse_fit(start).0,
+                    f.reverse_fit_scalar(start).0,
+                    "seed {seed} net {v} reverse from {start}"
+                );
+                assert_eq!(
+                    f.first_fit_from(start).0,
+                    f.first_fit_from_scalar(start).0,
+                    "seed {seed} net {v} forward from {start}"
+                );
+            }
+            assert_eq!(f.first_fit().0, f.first_fit_scalar().0, "seed {seed} net {v} first-fit");
+        }
+    }
+}

@@ -26,7 +26,7 @@ export BGPC_ARTIFACTS
 # loudly when a new tests/*.rs file is in neither shard — otherwise a
 # green matrix could silently skip it forever.
 THREADS_SHARD="driver_equivalence exec_properties dynamic_integration d1gc_integration"
-SIM_SHARD="paper_properties engine_integration graph_io pjrt_roundtrip strategy_properties"
+SIM_SHARD="paper_properties engine_integration graph_io pjrt_roundtrip strategy_properties packed_scan_properties"
 for f in tests/*.rs; do
     t="$(basename "$f" .rs)"
     case " $THREADS_SHARD $SIM_SHARD " in
@@ -83,7 +83,9 @@ cargo run --release --example parallel_sweep >/dev/null
 # and the CI bench-smoke job share one command (no drift in the bench
 # list): scheduler (pool >= 2x spawn), dynamic (repair >= 5x recolor),
 # execute (colored exec valid + B1/B2 flatten the critical path),
-# service (sharded submit_async >= 4x the single-mutex baseline).
+# service (sharded submit_async >= 4x the single-mutex baseline),
+# microbench (packed scans >= 2x scalar + auto chunk within 10% of the
+# best fixed chunk).
 # CI then re-checks the emitted CSVs against the committed BENCH_*.json
 # floors via scripts/bench_gate.sh.
 if [ "${BENCH_SMOKE:-0}" = "1" ]; then
