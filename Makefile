@@ -7,9 +7,11 @@
 #   make test-artifacts  like test, but PJRT roundtrip skips become errors
 #   make bench           all hand-rolled bench harnesses (release)
 #   make bench-smoke     the gated benches (scheduler/dynamic/execute/
-#                        service/strategy/microbench) in BENCH_SMOKE=1
-#                        reduced-size mode — what the CI bench-smoke job
-#                        runs and uploads CSVs from
+#                        service/strategy/microbench/ingest) in
+#                        BENCH_SMOKE=1 reduced-size mode — what the CI
+#                        bench-smoke job runs and uploads CSVs from
+#   make corpus          fetch + verify the pinned SuiteSparse ingest
+#                        corpus (network; see scripts/fetch_corpus.sh)
 #   make fmt             rustfmt the crate (the verify/CI gate checks it)
 #   make clean
 
@@ -17,7 +19,7 @@ CARGO_DIR := rust
 ARTIFACTS := artifacts
 PYTHON    ?= python3
 
-.PHONY: verify artifacts test test-artifacts bench bench-smoke fmt clean
+.PHONY: verify artifacts test test-artifacts bench bench-smoke corpus fmt clean
 
 verify:
 	cd $(CARGO_DIR) && cargo build --release && BGPC_ARTIFACTS=../$(ARTIFACTS) cargo test -q
@@ -45,17 +47,24 @@ bench:
 # busy time), strategy (the best non-default strategy at >= 4x speedup
 # loses <= 5% colors per preset and beats first-fit by >= 5% in geomean
 # over the skewed presets), microbench (packed scans >= 2x scalar +
-# auto chunk within 10% of the best fixed chunk).
+# auto chunk within 10% of the best fixed chunk), ingest (streamed
+# parse ≡ in-memory, mmap store bit-exact, coordinator e2e valid —
+# gate_speedup is 1.0 only when every inline check held).
 # CSVs land in rust/bench_results/ — CI uploads them as
 # workflow artifacts. The trailing trace pass re-runs scheduler with the
 # `trace` feature compiled in (recording off — the 2% gate must hold
 # feature-on too) and service with BENCH_TRACE=1, then validates the
 # exported Chrome-trace JSON spans all four instrumented layers.
 bench-smoke:
-	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute --bench service --bench strategy --bench microbench
+	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --bench scheduler --bench dynamic --bench execute --bench service --bench strategy --bench microbench --bench ingest
 	cd $(CARGO_DIR) && BENCH_SMOKE=1 cargo bench --features trace --bench scheduler
 	cd $(CARGO_DIR) && BENCH_SMOKE=1 BENCH_TRACE=1 cargo bench --features trace --bench service
 	$(PYTHON) scripts/check_trace.py $(CARGO_DIR)/bench_results/trace_service_*.json
+
+# Download the out-of-core corpus (checksums are trust-on-first-use —
+# run `scripts/fetch_corpus.sh --pin` once on a trusted machine).
+corpus:
+	scripts/fetch_corpus.sh
 
 # Apply the formatting the verify.sh / CI `cargo fmt --check` gate
 # enforces (SKIP_FMT=1 skips the gate where rustfmt is unavailable).

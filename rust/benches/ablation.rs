@@ -8,7 +8,7 @@
 mod common;
 
 use bgpc::coloring::schedule::{AlgSpec, N1_N2, V_V_64D};
-use bgpc::coloring::{color_bgpc, Balance, Config, ExecMode};
+use bgpc::coloring::{color, Balance, Config, ExecMode};
 use bgpc::graph::{generators::Preset, Ordering};
 use bgpc::sim::CostModel;
 
@@ -21,7 +21,7 @@ fn run_with(g: &bgpc::graph::Bipartite, spec: AlgSpec, model: CostModel) -> (f64
         ordering: Ordering::Natural,
         post_pass: bgpc::coloring::PostPass::None,
     };
-    let r = color_bgpc(g, &cfg);
+    let r = color(g, &cfg);
     (r.seconds * 1e3, r.n_colors, r.iterations)
 }
 

@@ -11,8 +11,8 @@
 
 #![allow(dead_code)]
 
-use bgpc::coloring::{color_bgpc, schedule::AlgSpec, Balance, ColoringResult, Config, ExecMode};
-use bgpc::graph::{generators::Preset, Bipartite, Ordering, PRESETS};
+use bgpc::coloring::{color, schedule::AlgSpec, Balance, ColoringResult, Config, ExecMode};
+use bgpc::graph::{generators::Preset, Bipartite, GraphSource, Ordering, PRESETS};
 use bgpc::sim::CostModel;
 use bgpc::util::geomean;
 
@@ -44,6 +44,15 @@ pub fn all_instances() -> Vec<(&'static Preset, Bipartite)> {
     PRESETS.iter().map(|p| (p, p.bipartite(scale(), seed()))).collect()
 }
 
+/// Load a [`GraphSource`] spec from an environment variable, falling
+/// back to `default` — the one instance-selection knob the graph-shaped
+/// benches share (e.g. `BGPC_INGEST_GRAPH=mtx:big.mtx`).
+pub fn source_from_env(var: &str, default: &str) -> GraphSource {
+    let spec = std::env::var(var).unwrap_or_else(|_| default.to_string());
+    GraphSource::parse(&spec)
+        .unwrap_or_else(|| panic!("{var}={spec:?} is not a valid graph source"))
+}
+
 /// Sequential V-V baseline: (colors, #colors, simulated seconds).
 pub fn seq_baseline(g: &Bipartite, order: &[u32]) -> (Vec<i32>, usize, f64) {
     let (colors, units) = bgpc::coloring::bgpc::seq::greedy(g, order);
@@ -61,7 +70,7 @@ pub fn run(g: &Bipartite, spec: AlgSpec, t: usize, ord: Ordering, bal: Balance) 
         ordering: ord,
         post_pass: bgpc::coloring::PostPass::None,
     };
-    let r = color_bgpc(g, &cfg);
+    let r = color(g, &cfg);
     assert!(
         bgpc::coloring::verify::bgpc_valid(g, &r.colors).is_ok(),
         "{} produced an invalid coloring",

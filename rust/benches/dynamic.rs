@@ -18,7 +18,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Config, ExecMode};
+use bgpc::coloring::{color, schedule, Config, ExecMode};
 use bgpc::dynamic::DynamicSession;
 use bgpc::graph::PRESETS;
 // One batch-distribution definition shared with tests/dynamic_integration.rs,
@@ -58,7 +58,7 @@ fn main() {
             assert!(session.verify().is_ok(), "{}: repair left an invalid coloring", p.name);
 
             // baseline: recolor the *updated* graph from scratch
-            let full = color_bgpc(session.graph(), &cfg);
+            let full = color(session.graph(), &cfg);
             let speedup = full.seconds / stats.seconds.max(1e-12);
             println!(
                 "{:<16} {:>8.3} | {:>7} {:>8} {:>9} {:>9} | {:>10.3e} {:>10.3e} | {:>8.1}",
@@ -146,7 +146,7 @@ fn main() {
             );
 
             // baseline: recolor the *updated* graph from scratch
-            let full = color_d2gc(session.graph(), &cfg);
+            let full = color(session.graph(), &cfg);
             let speedup = full.seconds / stats.seconds.max(1e-12);
             println!(
                 "{:<16} {:>8.3} | {:>7} {:>8} {:>9} {:>9} | {:>10.3e} {:>10.3e} | {:>8.1}",

@@ -37,7 +37,7 @@ mod common;
 
 use std::sync::Arc;
 
-use bgpc::coloring::{color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::coloring::{color, schedule, Balance, Config, ExecMode};
 use bgpc::exec::{ColorSchedule, Executor, SharedBuf};
 use bgpc::graph::{Bipartite, PRESETS};
 use bgpc::par::{Cost, WorkerPool};
@@ -211,7 +211,7 @@ fn main() {
         ordering: bgpc::graph::Ordering::Natural,
         post_pass: bgpc::coloring::PostPass::None,
     };
-    let r = color_d2gc(&m, &cfg);
+    let r = color(&m, &cfg);
     assert!(bgpc::coloring::verify::d2gc_valid(&m, &r.colors).is_ok());
     let sched = ColorSchedule::from_colors(&r.colors);
     // color-order sequential reference

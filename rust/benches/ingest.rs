@@ -1,0 +1,204 @@
+//! Out-of-core ingestion tier, end to end (ISSUE 10 / DESIGN.md §15):
+//! stream-parse a `.mtx` an order of magnitude beyond the in-memory
+//! presets, land it in a mmap-backed `.csrb` store, and drive the mapped
+//! graph through the coordinator — static coloring, a dynamic repair
+//! batch, and a colored execute — reporting time-to-first-color and
+//! peak RSS.
+//!
+//! The instance defaults to a generated uk-2002-family matrix written to
+//! a temp `.mtx` (scale 10× the preset base for the full run, 0.5 under
+//! `BENCH_SMOKE=1`); point `BGPC_INGEST_GRAPH` at any
+//! [`GraphSource`] spec — e.g. `mtx:$(scripts/fetch_corpus.sh --print-path
+//! <name>)` after fetching the pinned corpus — to ingest a real
+//! SuiteSparse download instead.
+//!
+//! The gated CSV column is correctness-only (`gate_speedup` = 1.0 when
+//! every inline check held): streamed parse ≡ in-memory parse, the mmap
+//! round trip is bit-exact, and every coordinator stage returns valid.
+//! Timings are environment-dependent and recorded unfloored.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bgpc::coloring::{schedule, Config};
+use bgpc::coordinator::{EngineSel, ExecKernel, Job, JobInput, Service, ServiceOpts};
+use bgpc::dynamic::UpdateBatch;
+use bgpc::graph::{mtx, storage, Bipartite, GraphSource, Preset};
+use bgpc::par::{Cost, WorkerPool};
+use bgpc::util::mem;
+use bgpc::util::prng::Rng;
+
+/// Pool width for the parse + coordinator stages.
+const POOL_THREADS: usize = 4;
+
+fn workdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bgpc_ingest_{}", std::process::id()));
+    std::fs::create_dir_all(&d).expect("create ingest workdir");
+    d
+}
+
+/// Resolve the instance: `BGPC_INGEST_GRAPH` (any [`GraphSource`]) or a
+/// generated uk-2002-family `.mtx` well beyond the preset scales.
+/// Returns the source plus whether this bench owns (and deletes) the
+/// backing file.
+fn resolve_source(dir: &Path) -> (GraphSource, bool) {
+    if let Ok(spec) = std::env::var("BGPC_INGEST_GRAPH") {
+        let src = GraphSource::parse(&spec)
+            .unwrap_or_else(|| panic!("BGPC_INGEST_GRAPH={spec:?} is not a valid graph source"));
+        return (src, false);
+    }
+    // 10x the calibrated uk-2002 base (~37M placements) for the full
+    // run; CI smoke keeps the same path at a fraction of the size.
+    let scale = if common::smoke() { 0.5 } else { 10.0 };
+    let seed = common::seed();
+    let path = dir.join(format!("uk-2002_x{scale}.mtx"));
+    println!("[gen] uk-2002 @ scale {scale} -> {}", path.display());
+    let m = Preset::by_name("uk-2002").unwrap().net_incidence(scale, seed);
+    mtx::write_mtx(&m, &path).expect("write generated mtx");
+    drop(m); // the point is to re-ingest from disk with bounded memory
+    (GraphSource::Mtx(path), true)
+}
+
+fn main() {
+    let dir = workdir();
+    let (src, owned) = resolve_source(&dir);
+    let GraphSource::Mtx(mtx_path) = &src else {
+        panic!("ingest bench needs a .mtx source, got {}", src.label());
+    };
+    let mtx_mb = std::fs::metadata(mtx_path).expect("stat mtx").len() as f64 / (1024.0 * 1024.0);
+    let store = dir.join("ingest.csrb");
+    let pool = Arc::new(WorkerPool::new(POOL_THREADS));
+    let mut ok = true;
+
+    // --- ingest: streamed parse to the mmap store, then map it back ---
+    let rss_reset = mem::reset_peak_rss();
+    let t0 = Instant::now();
+    let info = mtx::stream_mtx_to_file(mtx_path, &store, &pool).expect("streamed parse");
+    let parse_secs = t0.elapsed().as_secs_f64();
+    let m = storage::open_csr(&store).expect("mmap the csrb store");
+    println!(
+        "[ingest] {} rows x {} cols, {} nnz ({} index) parsed in {parse_secs:.2}s from {mtx_mb:.1} MiB",
+        info.n_rows, info.n_cols, info.nnz, info.width.bytes() * 8
+    );
+
+    // correctness: the streamed+mapped pattern must equal the streamed
+    // in-memory parse bit for bit
+    let reference = mtx::stream_mtx_to_csr(mtx_path, &pool).expect("in-memory streamed parse");
+    if m != reference {
+        eprintln!("[FAIL] mmap-backed CSR differs from the in-memory parse");
+        ok = false;
+    }
+    drop(reference);
+
+    // --- coordinator end-to-end on the mapped graph ---
+    let g = Arc::new(Bipartite::from_net_incidence(m));
+    let cfg = Config::threads(schedule::N1_N2, POOL_THREADS);
+    let svc = Service::start_sharded(ServiceOpts {
+        shards: 1,
+        dispatchers: 1,
+        pool_threads: POOL_THREADS,
+        artifacts: None,
+        ..ServiceOpts::default()
+    });
+
+    // static coloring: time-to-first-color = parse + map + transpose +
+    // the job's trip through the admission queue
+    let job = svc.submit_async(Job {
+        name: "ingest-static".into(),
+        input: JobInput::Bgpc(Arc::clone(&g)),
+        cfg: cfg.clone(),
+        engine: EngineSel::Native,
+    });
+    let o = job.wait();
+    let ttfc_secs = t0.elapsed().as_secs_f64();
+    if !o.valid {
+        eprintln!("[FAIL] static coloring invalid: {:?}", o.error);
+        ok = false;
+    }
+    println!(
+        "[color] {} colors in {} iterations — time to first color {ttfc_secs:.2}s",
+        o.n_colors, o.iterations
+    );
+
+    // dynamic repair: open a session, push one update batch
+    let (sid, init) = svc.open_session("ingest-session", &g, cfg.clone());
+    if !init.valid {
+        eprintln!("[FAIL] session bring-up invalid: {:?}", init.error);
+        ok = false;
+    }
+    let mut rng = Rng::new(common::seed() ^ 0x1067);
+    let mut batch = UpdateBatch::default();
+    let edits = (g.nnz() / 10_000).max(64);
+    for _ in 0..edits {
+        let net = rng.range(0, g.n_nets()) as u32;
+        let vtx = rng.range(0, g.n_vertices()) as u32;
+        batch.add_edges.push((net, vtx));
+    }
+    let t1 = Instant::now();
+    let repair = svc.submit_async(Job {
+        name: "ingest-repair".into(),
+        input: JobInput::Update { session: sid, batch: Arc::new(batch) },
+        cfg: cfg.clone(),
+        engine: EngineSel::Native,
+    });
+    let upd = repair.wait();
+    let repair_secs = t1.elapsed().as_secs_f64();
+    if !upd.valid {
+        eprintln!("[FAIL] repair batch invalid: {:?}", upd.error);
+        ok = false;
+    }
+    println!("[repair] {edits} edits repaired in {repair_secs:.3}s");
+
+    // colored execute over the committed epoch
+    let t2 = Instant::now();
+    let exec = svc.execute("ingest-exec", sid, 1, ExecKernel::new(|_, _| Cost::new(1))).wait();
+    let exec_secs = t2.elapsed().as_secs_f64();
+    if !exec.valid {
+        eprintln!("[FAIL] colored execute invalid: {:?}", exec.error);
+        ok = false;
+    }
+    println!("[exec] one colored sweep in {exec_secs:.3}s");
+
+    svc.close_session(sid);
+    svc.shutdown();
+
+    let peak_mb = match (rss_reset, mem::peak_rss_bytes()) {
+        (true, Some(b)) => mem::mib(b),
+        _ => 0.0, // probe unavailable (non-Linux / sandboxed /proc)
+    };
+    if peak_mb > 0.0 {
+        println!("[rss] peak {peak_mb:.1} MiB over the ingest run");
+    }
+
+    let gate = if ok { 1.0 } else { 0.0 };
+    common::write_csv(
+        "ingest.csv",
+        "instance,n_nets,n_vtxs,nnz,mtx_mb,path,parse_secs,ttfc_secs,peak_rss_mb,repair_secs,exec_secs,gate_speedup",
+        &[format!(
+            "{},{},{},{},{:.1},{},{:.3},{:.3},{:.1},{:.4},{:.4},{:.2}",
+            src.name(),
+            g.n_nets(),
+            g.n_vertices(),
+            g.nnz(),
+            mtx_mb,
+            src.label(),
+            parse_secs,
+            ttfc_secs,
+            peak_mb,
+            repair_secs,
+            exec_secs,
+            gate
+        )],
+    );
+
+    let _ = std::fs::remove_file(&store);
+    if owned {
+        let _ = std::fs::remove_file(mtx_path);
+    }
+    assert!(ok, "ingest pipeline failed one or more inline gates");
+    println!("ok");
+}

@@ -22,7 +22,7 @@
 mod common;
 
 use bgpc::coloring::forbidden::StampSet;
-use bgpc::coloring::{color_bgpc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
 use bgpc::graph::generators::Preset;
 use bgpc::par::{autosite, Chunk, Cost, Driver};
 use bgpc::runtime::{offload, Runtime};
@@ -50,12 +50,12 @@ fn main() {
     );
 
     // engine end-to-end (1 real thread) — native-path overhead vs seq
-    let secs = time_min(3, || color_bgpc(&g, &Config::threads(schedule::N1_N2, 1)));
+    let secs = time_min(3, || color(&g, &Config::threads(schedule::N1_N2, 1)));
     println!("engine N1-N2 threads=1: {:.1} ms", secs * 1e3);
 
     // simulator overhead factor: sim-run wall-clock vs its simulated time
     let t0 = std::time::Instant::now();
-    let r = color_bgpc(&g, &Config::sim(schedule::N1_N2, 16));
+    let r = color(&g, &Config::sim(schedule::N1_N2, 16));
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "sim N1-N2 t=16: simulated {:.2} ms, driver wall {:.1} ms ({:.1}x overhead)",

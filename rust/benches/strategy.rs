@@ -39,7 +39,8 @@
 mod common;
 
 use bgpc::coloring::verify::{bgpc_valid, d1gc_valid, d2gc_valid};
-use bgpc::coloring::{color_bgpc, color_d1gc, color_d2gc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
+use bgpc::dynamic::D1Graph;
 use bgpc::graph::generators::Preset;
 use bgpc::graph::Ordering;
 use bgpc::Strategy;
@@ -69,7 +70,7 @@ fn main() {
         for s in STRATEGIES {
             let st = Strategy::parse(s).unwrap();
             let cfg = Config::sim(schedule::N1_N2, 16).with_strategy(st);
-            let r = color_bgpc(&g, &cfg);
+            let r = color(&g, &cfg);
             assert!(
                 bgpc_valid(&g, &r.colors).is_ok(),
                 "{name}: strategy {s} produced an invalid coloring"
@@ -127,9 +128,9 @@ fn main() {
     for s in STRATEGIES {
         let st = Strategy::parse(s).unwrap();
         let cfg = Config::sim(schedule::N1_N2, 16).with_strategy(st);
-        let r2 = color_d2gc(&m, &cfg);
+        let r2 = color(&m, &cfg);
         assert!(d2gc_valid(&m, &r2.colors).is_ok(), "D2GC {s} invalid");
-        let r1 = color_d1gc(&m, &cfg);
+        let r1 = color(D1Graph::from_ref(&m), &cfg);
         assert!(d1gc_valid(&m, &r1.colors).is_ok(), "D1GC {s} invalid");
         println!("{:<12} d2gc={:>4} d1gc={:>4}", s, r2.n_colors, r1.n_colors);
         csv.push(format!("coPapersDBLP-sym,{s},{},{},,,", r2.n_colors, r1.n_colors));

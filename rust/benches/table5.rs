@@ -8,7 +8,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use bgpc::coloring::{color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::coloring::{color, schedule, Balance, Config, ExecMode};
 use bgpc::graph::{generators::Preset, Ordering};
 use bgpc::util::geomean;
 
@@ -36,7 +36,7 @@ fn main() {
             ordering: Ordering::Natural,
             post_pass: bgpc::coloring::PostPass::None,
         };
-        let r = color_d2gc(m, &cfg);
+        let r = color(m, &cfg);
         assert!(bgpc::coloring::verify::d2gc_valid(m, &r.colors).is_ok());
         r
     };

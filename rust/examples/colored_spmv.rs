@@ -48,7 +48,7 @@ fn main() {
     let pool = Arc::new(WorkerPool::new(4));
     for (tag, bal) in [("unbalanced", Balance::None), ("B2", Balance::B2)] {
         let cfg = Config::sim(schedule::N1_N2, 16).with_balance(bal);
-        let r = bgpc::coloring::color_bgpc(&g, &cfg);
+        let r = bgpc::coloring::color(&g, &cfg);
         bgpc::coloring::verify::bgpc_valid(&g, &r.colors).unwrap();
 
         let acc = SharedBuf::new(vec![0u64; g.n_nets()]);

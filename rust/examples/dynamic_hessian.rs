@@ -23,7 +23,7 @@
 
 use std::sync::Arc;
 
-use bgpc::coloring::{color_d2gc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
 use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
 use bgpc::dynamic::{DeltaSymmetric, UpdateBatch};
 use bgpc::graph::generators;
@@ -105,7 +105,7 @@ fn main() {
         assert_eq!(o.problem, Some(Problem::D2gc));
         let b = o.batch.expect("update outcomes carry batch stats");
 
-        let full = color_d2gc(mirror.graph(), &cfg);
+        let full = color(mirror.graph(), &cfg);
         println!(
             "{:>5} {:>6} {:>7} {:>9} {:>7} | {:>11.3e} {:>11.3e} {:>6.0}x",
             it,

@@ -26,7 +26,7 @@
 
 use std::sync::Arc;
 
-use bgpc::coloring::{color_bgpc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
 use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
 use bgpc::dynamic::{DeltaBipartite, UpdateBatch};
 use bgpc::graph::{generators, Bipartite};
@@ -101,7 +101,7 @@ fn main() {
         assert!(o.valid, "iter {it}: {:?}", o.error);
         let b = o.batch.expect("update outcomes carry batch stats");
 
-        let full = color_bgpc(mirror.graph(), &cfg);
+        let full = color(mirror.graph(), &cfg);
         println!(
             "{:>5} {:>6} {:>7} {:>9} {:>7} | {:>11.3e} {:>11.3e} {:>6.0}x",
             it,

@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU32, Ordering as AOrd};
 
-use bgpc::coloring::{color_bgpc, schedule, Balance, Config};
+use bgpc::coloring::{color, schedule, Balance, Config};
 use bgpc::graph::generators::Preset;
 use bgpc::par::{Cost, Driver, ThreadsDriver};
 
@@ -32,7 +32,7 @@ fn main() {
 
     for (tag, bal) in [("unbalanced", Balance::None), ("B2", Balance::B2)] {
         let cfg = Config::sim(schedule::V_N2, 16).with_balance(bal);
-        let r = color_bgpc(&g, &cfg);
+        let r = color(&g, &cfg);
         bgpc::coloring::verify::bgpc_valid(&g, &r.colors).unwrap();
         let st = r.stats();
 

@@ -5,12 +5,17 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use bgpc::coloring::{color_bgpc, schedule, Config};
-use bgpc::graph::generators::Preset;
+use bgpc::coloring::{color, schedule, Config};
+use bgpc::graph::GraphSource;
 
 fn main() {
     // A scaled-down bone010 (Table II row 3): ~12k columns, FEM pattern.
-    let g = Preset::by_name("bone010").unwrap().bipartite(0.25, 42);
+    // Any GraphSource spec works here — e.g. "mtx:path/to/matrix.mtx"
+    // to stream-parse a real SuiteSparse download instead.
+    let spec = std::env::args().nth(1).unwrap_or_else(|| "preset:bone010@0.25@42".into());
+    let src = GraphSource::parse(&spec).expect("valid graph source");
+    let g = src.load().expect("loadable graph source");
+    println!("source: {}", src.label());
     println!(
         "instance: {} vertices (columns), {} nets (rows), {} nonzeros",
         g.n_vertices(),
@@ -22,7 +27,7 @@ fn main() {
     // conflict removal for the first two, then the vertex-based engine.
     // Simulated 16-thread execution (deterministic).
     let cfg = Config::sim(schedule::N1_N2, 16);
-    let r = color_bgpc(&g, &cfg);
+    let r = color(&g, &cfg);
 
     println!(
         "colored with {} colors in {} iterations ({:.2} ms simulated on 16 threads)",

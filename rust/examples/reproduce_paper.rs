@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use bgpc::coloring::{color_bgpc, schedule, Balance, Config, ExecMode};
+use bgpc::coloring::{color, schedule, Balance, Config, ExecMode};
 use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
 use bgpc::graph::{Ordering, PRESETS};
 use bgpc::runtime::Runtime;
@@ -56,7 +56,7 @@ fn main() {
             let seq_secs = CostModel::default().units_to_ns(units, 1) * 1e-9;
             let seq_colors = bgpc::coloring::stats::distinct_colors(&colors_seq);
             for (t, acc) in [(4usize, &mut s4), (16usize, &mut s16)] {
-                let r = color_bgpc(g, &Config::sim(spec, t));
+                let r = color(g, &Config::sim(spec, t));
                 bgpc::coloring::verify::bgpc_valid(g, &r.colors).unwrap();
                 acc.push(seq_secs / r.seconds);
                 if t == 16 {
@@ -85,8 +85,8 @@ fn main() {
         let mut dev = Vec::new();
         let mut sets = Vec::new();
         for (_p, g) in &instances {
-            let u = color_bgpc(g, &Config::sim(schedule::V_N2, 16));
-            let b = color_bgpc(g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
+            let u = color(g, &Config::sim(schedule::V_N2, 16));
+            let b = color(g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
             dev.push(b.stats().stddev_cardinality / u.stats().stddev_cardinality);
             sets.push(b.n_colors as f64 / u.n_colors as f64);
         }

@@ -13,7 +13,7 @@
 //! cargo run --release --example sparse_jacobian
 //! ```
 
-use bgpc::coloring::{color_bgpc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
 use bgpc::graph::{generators, Bipartite};
 use bgpc::util::prng::Rng;
 
@@ -65,7 +65,7 @@ fn main() {
     };
 
     // 1. color the columns (BGPC: columns sharing a row get different colors)
-    let r = color_bgpc(&g, &Config::sim(schedule::N1_N2, 16));
+    let r = color(&g, &Config::sim(schedule::N1_N2, 16));
     bgpc::coloring::verify::bgpc_valid(&g, &r.colors).unwrap();
     println!(
         "pattern {rows}x{cols}, {} nonzeros -> {} colors (vs {} columns: {:.1}x fewer evaluations)",

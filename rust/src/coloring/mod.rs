@@ -14,6 +14,13 @@
 //! * D1GC at full engine parity — [`d1gc`];
 //! * the strategy seam (orderings × color-and-fix post pass) —
 //!   [`strategy`] (DESIGN.md §14).
+//!
+//! All of it is driven through one problem-generic front door:
+//! [`color`] for one-shot runs, [`Colorer`] to route a run onto a shared
+//! [`WorkerPool`]. The graph type picks the problem (BGPC on
+//! [`Bipartite`], D2GC on [`Csr`], D1GC on [`crate::dynamic::D1Graph`]);
+//! the old per-problem `color_*` functions survive as deprecated
+//! aliases.
 
 pub mod balance;
 pub mod bgpc;
@@ -145,56 +152,101 @@ impl ColoringResult {
     }
 }
 
-/// Color a BGPC instance with the given configuration. Threads mode
-/// builds a private [`WorkerPool`] for the run; long-lived callers
-/// (the coordinator, sessions) should prefer [`color_bgpc_on`] /
+/// Color any coloring problem with the given configuration — the one
+/// generic entry point (BGPC on [`Bipartite`], D2GC on [`Csr`], D1GC on
+/// [`crate::dynamic::D1Graph`]; the problem is selected by the graph
+/// type through the [`crate::dynamic::Problem`] seam). Threads mode
+/// builds a private [`WorkerPool`] for the run; long-lived callers (the
+/// coordinator, sessions) should prefer [`Colorer::on`] /
 /// [`crate::dynamic::DynamicSession::start_on`], which reuse a shared
 /// team and its resident scratch.
-pub fn color_bgpc(g: &Bipartite, cfg: &Config) -> ColoringResult {
-    let order = cfg.ordering.compute(g);
-    match cfg.mode {
-        ExecMode::Threads => {
-            let mut d = ThreadsDriver::new(cfg.threads);
-            let mut r = bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(g, cfg, &mut d, &mut r);
-            r
-        }
-        ExecMode::Sim(model) => {
-            let mut d = SimDriver::new(cfg.threads, model);
-            let mut r = bgpc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(g, cfg, &mut d, &mut r);
-            r
+pub fn color<P: crate::dynamic::Problem>(g: &P, cfg: &Config) -> ColoringResult {
+    Colorer::new(cfg).color(g)
+}
+
+/// Builder form of [`color`]: bind a [`Config`], optionally route the
+/// run onto a shared [`WorkerPool`] with [`Colorer::on`], then color any
+/// number of graphs.
+///
+/// ```no_run
+/// # use bgpc::coloring::{AlgSpec, Colorer, Config};
+/// # use bgpc::graph::Preset;
+/// # use bgpc::par::WorkerPool;
+/// # use std::sync::Arc;
+/// let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.05, 1);
+/// let cfg = Config::threads(AlgSpec::by_name("N1-N2").unwrap(), 4);
+/// let pool = Arc::new(WorkerPool::new(4));
+/// let r = Colorer::new(&cfg).on(&pool).color(&g);
+/// assert!(r.n_colors > 0);
+/// ```
+pub struct Colorer<'a> {
+    cfg: &'a Config,
+    pool: Option<&'a Arc<WorkerPool>>,
+}
+
+impl<'a> Colorer<'a> {
+    /// A colorer with a private driver per run (no shared pool).
+    pub fn new(cfg: &'a Config) -> Colorer<'a> {
+        Colorer { cfg, pool: None }
+    }
+
+    /// Route threads-mode runs onto `pool` (sim configs ignore it). The
+    /// run borrows the pool's team — clamped to its size, never a
+    /// spawn — and the pool-resident [`ThreadState`] bank, so forbidden
+    /// arrays are allocated once across *jobs*, not just across the
+    /// iterations of one run (DESIGN.md §10).
+    pub fn on(mut self, pool: &'a Arc<WorkerPool>) -> Colorer<'a> {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Color `g` under the bound configuration.
+    pub fn color<P: crate::dynamic::Problem>(&self, g: &P) -> ColoringResult {
+        let cfg = self.cfg;
+        g.check_colorable();
+        let order = g.order(&cfg.ordering);
+        match (self.pool, cfg.mode) {
+            (Some(pool), ExecMode::Threads) => {
+                let mut d = ThreadsDriver::on_team(pool, cfg.threads);
+                let t = d.threads();
+                with_pool_bank(pool, t, g.color_cap(), |bank| {
+                    let mut r = g.run_capped(
+                        &order,
+                        &cfg.spec,
+                        cfg.balance,
+                        &mut d,
+                        bank,
+                        bgpc::MAX_ITERS,
+                    );
+                    post_pass_on_bank(g, cfg, &mut d, bank, &mut r);
+                    r
+                })
+            }
+            (None, ExecMode::Threads) => {
+                let mut d = ThreadsDriver::new(cfg.threads);
+                run_owned(g, &order, cfg, &mut d)
+            }
+            (_, ExecMode::Sim(model)) => {
+                let mut d = SimDriver::new(cfg.threads, model);
+                run_owned(g, &order, cfg, &mut d)
+            }
         }
     }
 }
 
-/// [`color_bgpc`] on a shared [`WorkerPool`] (threads mode only; sim
-/// configs delegate unchanged). The run borrows the pool's team —
-/// clamped to its size, never a spawn — and the pool-resident
-/// [`ThreadState`] bank, so forbidden arrays are allocated once across
-/// *jobs*, not just across the iterations of one run (DESIGN.md §10).
-pub fn color_bgpc_on(g: &Bipartite, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
-    match cfg.mode {
-        ExecMode::Threads => {
-            let order = cfg.ordering.compute(g);
-            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
-            let t = d.threads();
-            with_pool_bank(pool, t, bgpc::color_cap(g), |bank| {
-                let mut r = bgpc::run_capped(
-                    g,
-                    &order,
-                    &cfg.spec,
-                    cfg.balance,
-                    &mut d,
-                    bank,
-                    bgpc::MAX_ITERS,
-                );
-                post_pass_on_bank(g, cfg, &mut d, bank, &mut r);
-                r
-            })
-        }
-        ExecMode::Sim(_) => color_bgpc(g, cfg),
-    }
+/// Owned-driver run: a fresh per-run [`ThreadState`] bank for the engine
+/// loop, and (matching the historical one-shot entry points bit for bit)
+/// a second fresh bank inside [`post_pass_owned`] for the fix pass.
+fn run_owned<P: crate::dynamic::Problem, D: crate::par::Driver>(
+    g: &P,
+    order: &[u32],
+    cfg: &Config,
+    d: &mut D,
+) -> ColoringResult {
+    let mut bank = ThreadState::bank(d.threads(), g.color_cap());
+    let mut r = g.run_capped(order, &cfg.spec, cfg.balance, d, &mut bank, bgpc::MAX_ITERS);
+    post_pass_owned(g, cfg, d, &mut r);
+    r
 }
 
 /// Run the configured [`PostPass`] (if any) against `r`, with a private
@@ -235,8 +287,8 @@ fn post_pass_on_bank<P: crate::dynamic::Problem, D: crate::par::Driver>(
 /// Borrow the pool-resident [`ThreadState`] bank for one job: grow it
 /// to the team size if needed, reset the per-run state of the slots the
 /// team will use (allocations survive — DESIGN.md §10), and hand the
-/// team-sized slice to `f`. Shared by [`color_bgpc_on`] and
-/// [`color_d2gc_on`] so the reuse protocol cannot diverge per problem.
+/// team-sized slice to `f`. All pool-routed runs go through here, so
+/// the reuse protocol cannot diverge per problem.
 fn with_pool_bank<R>(
     pool: &Arc<WorkerPool>,
     t: usize,
@@ -254,110 +306,63 @@ fn with_pool_bank<R>(
     })
 }
 
-/// Color a D2GC instance (square graph) with the given configuration.
+// ---------------------------------------------------------------------------
+// Deprecated per-problem aliases. The six-way `color_{bgpc,d2gc,d1gc}` /
+// `*_on` surface predates the generic entry point; each alias forwards
+// to [`color`] / [`Colorer`] unchanged (bit-for-bit identical results)
+// and will be removed once out-of-tree callers migrate.
+// ---------------------------------------------------------------------------
+
+/// Color a BGPC instance.
+#[deprecated(
+    since = "0.1.0",
+    note = "use the problem-generic `coloring::color(g, cfg)` instead"
+)]
+pub fn color_bgpc(g: &Bipartite, cfg: &Config) -> ColoringResult {
+    color(g, cfg)
+}
+
+/// Color a BGPC instance on a shared pool.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `coloring::Colorer::new(cfg).on(pool).color(g)` instead"
+)]
+pub fn color_bgpc_on(g: &Bipartite, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
+    Colorer::new(cfg).on(pool).color(g)
+}
+
+/// Color a D2GC instance (square graph).
+#[deprecated(
+    since = "0.1.0",
+    note = "use the problem-generic `coloring::color(g, cfg)` instead"
+)]
 pub fn color_d2gc(g: &Csr, cfg: &Config) -> ColoringResult {
-    assert_eq!(g.n_rows, g.n_cols, "D2GC needs a square graph");
-    let order = d2gc_order(g, cfg);
-    match cfg.mode {
-        ExecMode::Threads => {
-            let mut d = ThreadsDriver::new(cfg.threads);
-            let mut r = d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(g, cfg, &mut d, &mut r);
-            r
-        }
-        ExecMode::Sim(model) => {
-            let mut d = SimDriver::new(cfg.threads, model);
-            let mut r = d2gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(g, cfg, &mut d, &mut r);
-            r
-        }
-    }
+    color(g, cfg)
 }
 
-/// [`color_d2gc`] on a shared [`WorkerPool`] — the D2GC mirror of
-/// [`color_bgpc_on`] (threads mode only; sim configs delegate).
+/// Color a D2GC instance on a shared pool.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `coloring::Colorer::new(cfg).on(pool).color(g)` instead"
+)]
 pub fn color_d2gc_on(g: &Csr, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
-    match cfg.mode {
-        ExecMode::Threads => {
-            assert_eq!(g.n_rows, g.n_cols, "D2GC needs a square graph");
-            let order = d2gc_order(g, cfg);
-            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
-            let t = d.threads();
-            with_pool_bank(pool, t, d2gc::color_cap(g), |bank| {
-                let mut r = d2gc::run_capped(
-                    g,
-                    &order,
-                    &cfg.spec,
-                    cfg.balance,
-                    &mut d,
-                    bank,
-                    bgpc::MAX_ITERS,
-                );
-                post_pass_on_bank(g, cfg, &mut d, bank, &mut r);
-                r
-            })
-        }
-        ExecMode::Sim(_) => color_d2gc(g, cfg),
-    }
+    Colorer::new(cfg).on(pool).color(g)
 }
 
-/// Color a D1GC instance (square, structurally symmetric graph) with
-/// the given configuration — the distance-1 sibling of [`color_d2gc`],
-/// running the same engine loop over the plain adjacency (§VII).
+/// Color a D1GC instance (square graph).
+#[deprecated(
+    since = "0.1.0",
+    note = "use `coloring::color(D1Graph::from_ref(g), cfg)` instead"
+)]
 pub fn color_d1gc(g: &Csr, cfg: &Config) -> ColoringResult {
-    assert_eq!(g.n_rows, g.n_cols, "D1GC needs a square graph");
-    let order = d2gc_order(g, cfg);
-    let gp = crate::dynamic::D1Graph::from_ref(g);
-    match cfg.mode {
-        ExecMode::Threads => {
-            let mut d = ThreadsDriver::new(cfg.threads);
-            let mut r = d1gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(gp, cfg, &mut d, &mut r);
-            r
-        }
-        ExecMode::Sim(model) => {
-            let mut d = SimDriver::new(cfg.threads, model);
-            let mut r = d1gc::run(g, &order, &cfg.spec, cfg.balance, &mut d);
-            post_pass_owned(gp, cfg, &mut d, &mut r);
-            r
-        }
-    }
+    color(crate::dynamic::D1Graph::from_ref(g), cfg)
 }
 
-/// [`color_d1gc`] on a shared [`WorkerPool`] (threads mode only; sim
-/// configs delegate) — the coordinator's stateless D1GC path.
+/// Color a D1GC instance on a shared pool.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `coloring::Colorer::new(cfg).on(pool).color(D1Graph::from_ref(g))` instead"
+)]
 pub fn color_d1gc_on(g: &Csr, cfg: &Config, pool: &Arc<WorkerPool>) -> ColoringResult {
-    match cfg.mode {
-        ExecMode::Threads => {
-            assert_eq!(g.n_rows, g.n_cols, "D1GC needs a square graph");
-            let order = d2gc_order(g, cfg);
-            let gp = crate::dynamic::D1Graph::from_ref(g);
-            let mut d = ThreadsDriver::on_team(pool, cfg.threads);
-            let t = d.threads();
-            with_pool_bank(pool, t, d1gc::color_cap(g), |bank| {
-                let mut r = d1gc::run_capped(
-                    g,
-                    &order,
-                    &cfg.spec,
-                    cfg.balance,
-                    &mut d,
-                    bank,
-                    bgpc::MAX_ITERS,
-                );
-                post_pass_on_bank(gp, cfg, &mut d, bank, &mut r);
-                r
-            })
-        }
-        ExecMode::Sim(_) => color_d1gc(g, cfg),
-    }
-}
-
-/// The D2GC visit order for `cfg.ordering`: natural is the identity;
-/// other orderings are defined on the bipartite view, so reuse them by
-/// treating rows as nets over the same vertex set.
-fn d2gc_order(g: &Csr, cfg: &Config) -> Vec<u32> {
-    match cfg.ordering {
-        Ordering::Natural => (0..g.n_rows as u32).collect(),
-        o => o.compute(&Bipartite::from_net_incidence(g.clone())),
-    }
+    Colorer::new(cfg).on(pool).color(crate::dynamic::D1Graph::from_ref(g))
 }

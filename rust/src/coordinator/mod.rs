@@ -50,7 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::coloring::{color_bgpc_on, color_d1gc_on, color_d2gc_on, Config, Problem};
+use crate::coloring::{Colorer, Config, Problem};
 use crate::dynamic::{BatchStats, BgpcSession, D1Graph, D1gcSession, D2gcSession, UpdateBatch};
 use crate::exec::{EpochSchedule, Executor};
 use crate::graph::{Bipartite, Csr};
@@ -488,7 +488,7 @@ fn run_stateless(
 ) -> JobOutcome {
     match &job.input {
         JobInput::Bgpc(g) => {
-            let r = color_bgpc_on(g, &job.cfg, pools.shard(shard));
+            let r = Colorer::new(&job.cfg).on(pools.shard(shard)).color(g);
             let valid = crate::coloring::verify::bgpc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -507,7 +507,7 @@ fn run_stateless(
             }
         }
         JobInput::D2gc(g) => {
-            let r = color_d2gc_on(g, &job.cfg, pools.shard(shard));
+            let r = Colorer::new(&job.cfg).on(pools.shard(shard)).color(g);
             let valid = crate::coloring::verify::d2gc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),
@@ -526,7 +526,9 @@ fn run_stateless(
             }
         }
         JobInput::D1gc(g) => {
-            let r = color_d1gc_on(g, &job.cfg, pools.shard(shard));
+            let r = Colorer::new(&job.cfg)
+                .on(pools.shard(shard))
+                .color(crate::dynamic::D1Graph::from_ref(g));
             let valid = crate::coloring::verify::d1gc_valid(g, &r.colors).is_ok();
             JobOutcome {
                 name: job.name.clone(),

@@ -97,6 +97,18 @@ pub trait Problem: Clone + Send + Sync + Sized + 'static {
     /// (D2GC: square and structurally symmetric).
     fn validate_input(&self) {}
 
+    /// The *stateless-run* precondition — the strictly weaker check the
+    /// one-shot [`crate::coloring::color`] entry point applies before a
+    /// full run. Sessions use [`Problem::validate_input`] (which may be
+    /// O(nnz), e.g. the structural-symmetry scan); a plain capped run
+    /// historically only asserted shape, and keeping that split
+    /// preserves both the old costs and the old panic messages.
+    ///
+    /// # Panics
+    /// When the graph cannot be colored at all under this problem
+    /// (D2GC/D1GC: a non-square adjacency).
+    fn check_colorable(&self) {}
+
     /// Number of vertices to color.
     fn n_vertices(&self) -> usize;
 
@@ -280,6 +292,10 @@ impl Problem for Csr {
         );
     }
 
+    fn check_colorable(&self) {
+        assert_eq!(self.n_rows, self.n_cols, "D2GC needs a square graph");
+    }
+
     fn n_vertices(&self) -> usize {
         self.n_rows
     }
@@ -297,7 +313,7 @@ impl Problem for Csr {
             Ordering::Natural => (0..self.n_rows as u32).collect(),
             // Orderings beyond natural are defined on the bipartite
             // view: reuse them by treating rows as nets over the same
-            // vertex set (mirrors `color_d2gc`).
+            // vertex set (mirrors the one-shot D2GC entry point).
             ref o => o.compute(&Bipartite::from_net_incidence(self.clone())),
         }
     }
@@ -416,6 +432,10 @@ impl Problem for D1Graph {
             self.0.is_structurally_symmetric(),
             "D1GC requires a square, structurally symmetric graph"
         );
+    }
+
+    fn check_colorable(&self) {
+        assert_eq!(self.0.n_rows, self.0.n_cols, "D1GC needs a square graph");
     }
 
     fn n_vertices(&self) -> usize {

@@ -2,15 +2,23 @@
 //!
 //! Matches the paper's data layout ("all the algorithms are implemented
 //! ... using the same data structures"): a `ptr` offset array plus a flat
-//! `adj` id array, ids are `u32` (every test graph is far below 4B ids).
+//! `adj` id array, ids are `u32` (the in-memory kernels are u32-wide; the
+//! on-disk tier in [`storage`](super::storage) carries a u64 width and
+//! checks every conversion back down). Both arrays live behind
+//! [`Buf`] — heap-owned by default, or a read-only file mapping when the
+//! CSR was opened from a `.csrb` store; kernels read either identically
+//! through `Deref`, and the first mutation of a mapped buffer promotes it
+//! to a private heap copy.
+
+use super::storage::Buf;
 
 /// CSR adjacency from `n_rows` entities into an id space of `n_cols`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Csr {
     pub n_rows: usize,
     pub n_cols: usize,
-    pub ptr: Vec<usize>,
-    pub adj: Vec<u32>,
+    pub ptr: Buf<usize>,
+    pub adj: Buf<u32>,
 }
 
 impl Csr {
@@ -30,7 +38,7 @@ impl Csr {
             adj[cursor[r as usize]] = c;
             cursor[r as usize] += 1;
         }
-        let mut csr = Csr { n_rows, n_cols, ptr, adj };
+        let mut csr = Csr { n_rows, n_cols, ptr: ptr.into(), adj: adj.into() };
         csr.sort_dedup_rows();
         csr
     }
@@ -55,7 +63,7 @@ impl Csr {
             out_ptr.push(w);
         }
         self.adj.truncate(w);
-        self.ptr = out_ptr;
+        self.ptr = out_ptr.into();
     }
 
     /// Number of stored edges.
@@ -95,7 +103,7 @@ impl Csr {
     /// Transpose (counting sort; output rows are sorted by construction).
     pub fn transpose(&self) -> Csr {
         let mut deg = vec![0usize; self.n_cols];
-        for &c in &self.adj {
+        for &c in self.adj.iter() {
             deg[c as usize] += 1;
         }
         let mut ptr = vec![0usize; self.n_cols + 1];
@@ -110,7 +118,7 @@ impl Csr {
                 cursor[c as usize] += 1;
             }
         }
-        Csr { n_rows: self.n_cols, n_cols: self.n_rows, ptr, adj }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, ptr: ptr.into(), adj: adj.into() }
     }
 
     /// Apply a permutation to the *column id space*: new id of old column
@@ -136,7 +144,7 @@ impl Csr {
             adj.extend_from_slice(self.row(old as usize));
             ptr.push(adj.len());
         }
-        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, adj }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr: ptr.into(), adj: adj.into() }
     }
 
     /// Splice-rebuild: a new CSR that keeps every row verbatim except
@@ -164,7 +172,7 @@ impl Csr {
             }
             ptr.push(adj.len());
         }
-        Csr { n_rows, n_cols, ptr, adj }
+        Csr { n_rows, n_cols, ptr: ptr.into(), adj: adj.into() }
     }
 
     /// True if the matrix is square and its pattern is symmetric.

@@ -6,10 +6,14 @@ pub mod csr;
 pub mod generators;
 pub mod mtx;
 pub mod ordering;
+pub mod source;
 pub mod stats;
+pub mod storage;
 
 pub use bipartite::Bipartite;
 pub use csr::Csr;
 pub use generators::{Preset, PRESETS};
 pub use ordering::Ordering;
+pub use source::GraphSource;
 pub use stats::InstanceStats;
+pub use storage::{open_csr, write_csr, Buf, IndexWidth};

@@ -1,18 +1,157 @@
 //! Matrix Market (`.mtx`) I/O.
 //!
 //! The paper's matrices come from the UFL/SuiteSparse collection in this
-//! format; the reader accepts `coordinate` `pattern|real|integer` with
-//! `general|symmetric` storage (values are ignored — coloring only needs
-//! the pattern). The writer emits `pattern general`, good enough to
-//! round-trip instances between tools.
+//! format; the reader accepts `coordinate` `pattern|real|integer|complex`
+//! with `general|symmetric|skew-symmetric|hermitian` storage (values are
+//! ignored — coloring only needs the pattern). Two reading tiers share
+//! one header parser:
+//!
+//! * [`read_mtx`] / [`read_mtx_from`] — the in-memory reference path:
+//!   collect an edge list, build through [`Csr::from_edges`]. Simple,
+//!   and the ground truth the streaming tier is property-tested against.
+//! * [`stream_mtx_to_csr`] / [`stream_mtx_to_file`] — the out-of-core
+//!   path (DESIGN.md §15): a chunked **two-pass** scan of the data
+//!   section, each pass parsing coordinate lines **in parallel** on the
+//!   [`WorkerPool`] (no `lines().collect()`, no materialised edge list).
+//!   Pass 1 counts row degrees into an atomic array; pass 2 re-parses
+//!   and places ids through per-row atomic cursors straight into the
+//!   final adjacency (heap, or the writable `.csrb` mapping); a
+//!   sequential sort+dedup compaction then makes the result bit-for-bit
+//!   identical to the reference path. Transient memory is
+//!   `O(n_rows + chunk)`, not `O(nnz)`.
+//!
+//! Index handling is checked end-to-end: ids and dimensions are parsed
+//! as `u64`, validated against the header, and only narrowed through
+//! [`checked_u32`] / [`checked_usize`] — an overflowing value is a
+//! contextual error, never a silent `as` wrap.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AOrd};
+use std::sync::Mutex;
 
 use crate::bail;
-use crate::util::error::{Context, Result};
+use crate::par::{Cost, WorkerPool};
+use crate::util::error::{Context, Error, Result};
 
 use super::csr::Csr;
+use super::storage::{
+    checked_u32, checked_usize, csr_file_info, CsrFileInfo, CsrWriter, IndexWidth, SharedSlots,
+};
+
+// ---------------------------------------------------------------------------
+// Header.
+// ---------------------------------------------------------------------------
+
+/// Parsed `.mtx` banner + size line.
+#[derive(Clone, Copy, Debug)]
+pub struct MtxHeader {
+    /// Declared row count.
+    pub n_rows: u64,
+    /// Declared column count.
+    pub n_cols: u64,
+    /// Declared entry count (lower-triangle count for symmetric files);
+    /// a capacity hint only — the readers trust the actual data lines.
+    pub declared_nnz: u64,
+    /// True for `symmetric` / `skew-symmetric` / `hermitian` storage:
+    /// every off-diagonal entry is mirrored.
+    pub symmetric: bool,
+    /// Byte offset of the first line after the size line — where the
+    /// streaming passes start.
+    pub data_start: u64,
+}
+
+/// Parse the banner and size line, counting consumed bytes so streaming
+/// callers know where the data section starts. Tolerated edge cases: a
+/// UTF-8 BOM, blank lines before the banner, CRLF endings, and comment /
+/// blank lines between banner and size line.
+fn parse_header(r: &mut impl BufRead) -> Result<MtxHeader> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut consumed: u64 = 0;
+    let banner = loop {
+        line.clear();
+        let n = r.read_until(b'\n', &mut line).context("read mtx banner")?;
+        if n == 0 {
+            bail!("empty mtx file");
+        }
+        consumed += n as u64;
+        let mut t: &[u8] = &line;
+        if consumed == n as u64 && t.starts_with(&[0xEF, 0xBB, 0xBF]) {
+            t = &t[3..]; // UTF-8 BOM on the very first line
+        }
+        let s = std::str::from_utf8(t)
+            .map_err(|_| Error::msg("mtx banner is not valid UTF-8"))?
+            .trim();
+        if !s.is_empty() {
+            break s.to_string();
+        }
+    };
+    let h: Vec<String> = banner.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        bail!("not a MatrixMarket header: {banner}");
+    }
+    if h[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", h[2]);
+    }
+    let field = h[3].as_str();
+    if !matches!(field, "pattern" | "real" | "integer" | "complex") {
+        bail!("unsupported field {field}");
+    }
+    let symmetric = match h.get(4).map(|s| s.as_str()) {
+        None | Some("general") => false,
+        Some("symmetric") | Some("skew-symmetric") | Some("hermitian") => true,
+        Some(other) => bail!("unsupported symmetry {other}"),
+    };
+
+    let size_line = loop {
+        line.clear();
+        let n = r.read_until(b'\n', &mut line).context("read mtx size line")?;
+        if n == 0 {
+            bail!("missing size line");
+        }
+        consumed += n as u64;
+        let s = std::str::from_utf8(&line)
+            .map_err(|_| Error::msg("mtx size line is not valid UTF-8"))?
+            .trim();
+        if s.is_empty() || s.starts_with('%') {
+            continue;
+        }
+        break s.to_string();
+    };
+    let dims: Vec<u64> = size_line
+        .split_whitespace()
+        .take(3)
+        .map(|t| t.parse::<u64>().with_context(|| format!("size line token {t:?}")))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("bad size line: {size_line}");
+    }
+    Ok(MtxHeader {
+        n_rows: dims[0],
+        n_cols: dims[1],
+        declared_nnz: dims[2],
+        symmetric,
+        data_start: consumed,
+    })
+}
+
+/// Read just the banner + size line of `path` (no data lines touched).
+pub fn read_mtx_header(path: impl AsRef<Path>) -> Result<MtxHeader> {
+    let f = File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?;
+    parse_header(&mut BufReader::new(f))
+}
+
+fn check_bounds(r: u64, c: u64, n_rows: u64, n_cols: u64) -> Result<()> {
+    if r == 0 || c == 0 || r > n_rows || c > n_cols {
+        bail!("index out of range: {r} {c} (1-based, {n_rows}x{n_cols})");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// In-memory reference path.
+// ---------------------------------------------------------------------------
 
 /// Read a Matrix-Market coordinate file into a CSR pattern
 /// (rows = nets when used for BGPC column coloring).
@@ -22,65 +161,26 @@ pub fn read_mtx(path: impl AsRef<Path>) -> Result<Csr> {
     read_mtx_from(BufReader::new(f))
 }
 
-/// Reader-based variant (unit tests use in-memory buffers).
-pub fn read_mtx_from(r: impl BufRead) -> Result<Csr> {
-    let mut lines = r.lines();
-    let header = loop {
-        match lines.next() {
-            Some(l) => {
-                let l = l?;
-                if !l.trim().is_empty() {
-                    break l;
-                }
-            }
-            None => bail!("empty mtx file"),
+/// Reader-based variant (unit tests use in-memory buffers). Ids are
+/// checked against the u32 kernel id space — a 5-billion-row header is a
+/// contextual error here, not a wrapped id (use the streaming tier +
+/// `.csrb` storage for wide graphs).
+pub fn read_mtx_from(mut r: impl BufRead) -> Result<Csr> {
+    let h = parse_header(&mut r)?;
+    checked_u32(h.n_rows, "n_rows")?;
+    checked_u32(h.n_cols, "n_cols")?;
+    let cap = checked_usize(h.declared_nnz, "declared nnz")?;
+    let cap = if h.symmetric { cap.saturating_mul(2) } else { cap };
+    // Capacity is a hint from the header; cap it so a malformed header
+    // cannot force an absurd allocation before the first data line.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(cap.min(1 << 24));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line).context("read mtx entry")? == 0 {
+            break;
         }
-    };
-    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
-    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
-        bail!("not a MatrixMarket header: {header}");
-    }
-    if h[2] != "coordinate" {
-        bail!("only coordinate format supported, got {}", h[2]);
-    }
-    let field = h[3].as_str();
-    if !matches!(field, "pattern" | "real" | "integer" | "complex") {
-        bail!("unsupported field {field}");
-    }
-    let sym = match h.get(4).map(|s| s.as_str()) {
-        None | Some("general") => false,
-        Some("symmetric") | Some("skew-symmetric") | Some("hermitian") => true,
-        Some(other) => bail!("unsupported symmetry {other}"),
-    };
-
-    // size line (skipping comments)
-    let size_line = loop {
-        match lines.next() {
-            Some(l) => {
-                let l = l?;
-                let t = l.trim();
-                if t.is_empty() || t.starts_with('%') {
-                    continue;
-                }
-                break l;
-            }
-            None => bail!("missing size line"),
-        }
-    };
-    let dims: Vec<usize> = size_line
-        .split_whitespace()
-        .take(3)
-        .map(|t| t.parse().context("size line"))
-        .collect::<Result<_>>()?;
-    if dims.len() != 3 {
-        bail!("bad size line: {size_line}");
-    }
-    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
-
-    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(if sym { 2 * nnz } else { nnz });
-    for l in lines {
-        let l = l?;
-        let t = l.trim();
+        let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
@@ -88,19 +188,458 @@ pub fn read_mtx_from(r: impl BufRead) -> Result<Csr> {
         let (Some(rs), Some(cs)) = (it.next(), it.next()) else {
             bail!("bad entry line: {t}");
         };
-        let r: usize = rs.parse().context("row index")?;
-        let c: usize = cs.parse().context("col index")?;
-        if r == 0 || c == 0 || r > n_rows || c > n_cols {
-            bail!("index out of range: {r} {c} (1-based, {n_rows}x{n_cols})");
-        }
-        let (r, c) = (r as u32 - 1, c as u32 - 1);
-        edges.push((r, c));
-        if sym && r != c {
-            edges.push((c, r));
+        let row: u64 = rs.parse().with_context(|| format!("row index {rs:?}"))?;
+        let col: u64 = cs.parse().with_context(|| format!("col index {cs:?}"))?;
+        check_bounds(row, col, h.n_rows, h.n_cols)?;
+        // In range ⇒ fits u32 (dims were checked above).
+        let (ri, ci) = ((row - 1) as u32, (col - 1) as u32);
+        edges.push((ri, ci));
+        if h.symmetric && ri != ci {
+            edges.push((ci, ri));
         }
     }
-    Ok(Csr::from_edges(n_rows, n_cols, &edges))
+    Ok(Csr::from_edges(h.n_rows as usize, h.n_cols as usize, &edges))
 }
+
+// ---------------------------------------------------------------------------
+// Streaming path.
+// ---------------------------------------------------------------------------
+
+/// Default bytes of data section handed to one parallel parse item.
+const STREAM_CHUNK: u64 = 4 << 20;
+/// Maximum supported data-line length (chunks read this much past their
+/// end to finish a straddling line).
+const LINE_OVERHANG: u64 = 64 << 10;
+
+#[derive(Clone, Copy)]
+struct Span {
+    start: u64,
+    end: u64,
+    data_start: u64,
+    file_len: u64,
+}
+
+fn span_of(data_start: u64, file_len: u64, chunk_bytes: u64, item: usize) -> Span {
+    let start = data_start + item as u64 * chunk_bytes;
+    Span { start, end: (start + chunk_bytes).min(file_len), data_start, file_len }
+}
+
+/// Per-worker streaming state: an independent file handle (seek cursors
+/// must not be shared across the team) plus a reusable chunk buffer.
+struct ChunkState {
+    file: File,
+    buf: Vec<u8>,
+}
+
+fn chunk_states(path: &Path, team: usize) -> Result<Vec<ChunkState>> {
+    (0..team)
+        .map(|_| {
+            Ok(ChunkState {
+                file: File::open(path).with_context(|| format!("open {path:?}"))?,
+                buf: Vec::new(),
+            })
+        })
+        .collect()
+}
+
+/// First error wins; later chunks bail out early once one is recorded.
+#[derive(Default)]
+struct ParseErrs {
+    flag: AtomicBool,
+    first: Mutex<Option<Error>>,
+}
+
+impl ParseErrs {
+    fn seen(&self) -> bool {
+        self.flag.load(AOrd::Relaxed)
+    }
+    fn record(&self, e: Error) {
+        self.flag.store(true, AOrd::Relaxed);
+        let mut g = self.first.lock().unwrap();
+        if g.is_none() {
+            *g = Some(e);
+        }
+    }
+    fn take(&self) -> Result<()> {
+        match self.first.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Iterate the data lines *owned* by `span`: lines whose first byte lies
+/// in `[span.start, span.end)`. The chunk reads one byte early (except at
+/// the data start) to tell whether `span.start` begins a line, and
+/// [`LINE_OVERHANG`] bytes past its end to finish a straddling last line.
+fn for_each_owned_line(
+    st: &mut ChunkState,
+    span: Span,
+    mut f: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    let lead: u64 = if span.start > span.data_start { 1 } else { 0 };
+    let read_from = span.start - lead;
+    let read_to = (span.end + LINE_OVERHANG).min(span.file_len);
+    let want = (read_to - read_from) as usize;
+    st.buf.clear();
+    st.buf.reserve(want);
+    st.file.seek(SeekFrom::Start(read_from)).context("seek mtx chunk")?;
+    let got =
+        (&mut st.file).take(want as u64).read_to_end(&mut st.buf).context("read mtx chunk")?;
+    if got < (span.end - read_from) as usize {
+        bail!("mtx file shrank during streaming parse");
+    }
+    let buf = &st.buf[..got];
+    let mut pos = if lead == 1 {
+        if buf[0] == b'\n' {
+            1 // the previous byte ends a line: span.start begins one
+        } else {
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => i + 1,
+                // The line straddling span.start runs past this whole
+                // read window; it belongs to the chunk it started in.
+                None => return Ok(()),
+            }
+        }
+    } else {
+        0
+    };
+    let own_end = (span.end - read_from) as usize;
+    while pos < own_end {
+        match buf[pos..].iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                f(&buf[pos..pos + i])?;
+                pos += i + 1;
+            }
+            None => {
+                if read_to < span.file_len {
+                    bail!(
+                        "mtx data line at byte {} exceeds the {} byte limit",
+                        read_from + pos as u64,
+                        LINE_OVERHANG
+                    );
+                }
+                f(&buf[pos..])?; // final line without trailing newline
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_ascii_u64(s: &[u8]) -> Option<u64> {
+    let s = if s.first() == Some(&b'+') { &s[1..] } else { s };
+    if s.is_empty() {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &b in s {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v.checked_mul(10)?.checked_add((b - b'0') as u64)?;
+    }
+    Some(v)
+}
+
+/// Parse one data line to 1-based `(row, col)`; `None` for blank/comment.
+fn parse_coord_bytes(line: &[u8]) -> Result<Option<(u64, u64)>> {
+    let t = line.trim_ascii();
+    if t.is_empty() || t[0] == b'%' {
+        return Ok(None);
+    }
+    let mut it = t.split(|b| b.is_ascii_whitespace()).filter(|s| !s.is_empty());
+    let (Some(rs), Some(cs)) = (it.next(), it.next()) else {
+        bail!("bad entry line: {}", String::from_utf8_lossy(t));
+    };
+    let (Some(r), Some(c)) = (parse_ascii_u64(rs), parse_ascii_u64(cs)) else {
+        bail!("bad coordinate in entry line: {}", String::from_utf8_lossy(t));
+    };
+    Ok(Some((r, c)))
+}
+
+/// Pass 1: count per-row placement degrees (mirrored entries included)
+/// into an atomic array, parsing chunks in parallel.
+fn degree_pass(
+    pool: &WorkerPool,
+    states: &mut [ChunkState],
+    n_chunks: usize,
+    h: MtxHeader,
+    file_len: u64,
+    chunk_bytes: u64,
+    deg: &[AtomicU64],
+) -> Result<()> {
+    let errs = ParseErrs::default();
+    let team = states.len();
+    let _ = pool.region(states, team, n_chunks, 1, |_w, st, item, _now| {
+        if errs.seen() {
+            return Cost::new(0);
+        }
+        let mut lines = 0u64;
+        let span = span_of(h.data_start, file_len, chunk_bytes, item);
+        let res = for_each_owned_line(st, span, |line| {
+            let Some((r, c)) = parse_coord_bytes(line)? else {
+                return Ok(());
+            };
+            check_bounds(r, c, h.n_rows, h.n_cols)?;
+            lines += 1;
+            deg[(r - 1) as usize].fetch_add(1, AOrd::Relaxed);
+            if h.symmetric && r != c {
+                deg[(c - 1) as usize].fetch_add(1, AOrd::Relaxed);
+            }
+            Ok(())
+        });
+        if let Err(e) = res {
+            errs.record(e);
+        }
+        Cost::new(lines.max(1))
+    });
+    errs.take()
+}
+
+/// Pass 2: re-parse the same chunks and place ids through the per-row
+/// atomic cursors into disjoint adjacency slots.
+fn place_pass<T: Copy + Send + Sync + 'static>(
+    pool: &WorkerPool,
+    states: &mut [ChunkState],
+    n_chunks: usize,
+    h: MtxHeader,
+    file_len: u64,
+    chunk_bytes: u64,
+    cursors: &[AtomicU64],
+    slots: &SharedSlots<T>,
+    conv: impl Fn(u64) -> T + Sync,
+) -> Result<()> {
+    let errs = ParseErrs::default();
+    let team = states.len();
+    let _ = pool.region(states, team, n_chunks, 1, |_w, st, item, _now| {
+        if errs.seen() {
+            return Cost::new(0);
+        }
+        let mut lines = 0u64;
+        let span = span_of(h.data_start, file_len, chunk_bytes, item);
+        let res = for_each_owned_line(st, span, |line| {
+            let Some((r, c)) = parse_coord_bytes(line)? else {
+                return Ok(());
+            };
+            check_bounds(r, c, h.n_rows, h.n_cols)?;
+            lines += 1;
+            let slot = cursors[(r - 1) as usize].fetch_add(1, AOrd::Relaxed) as usize;
+            // SAFETY: the cursor hands every placement a distinct slot
+            // (pass 1 sized the regions from the same file bytes);
+            // `write` still bounds-checks against the total.
+            unsafe { slots.write(slot, conv(c - 1)) };
+            if h.symmetric && r != c {
+                let slot = cursors[(c - 1) as usize].fetch_add(1, AOrd::Relaxed) as usize;
+                // SAFETY: as above.
+                unsafe { slots.write(slot, conv(r - 1)) };
+            }
+            Ok(())
+        });
+        if let Err(e) = res {
+            errs.record(e);
+        }
+        Cost::new(lines.max(1))
+    });
+    errs.take()
+}
+
+/// Sort each row and drop duplicates in place (same pass as
+/// [`Csr::sort_dedup_rows`], so streamed results are bit-for-bit equal
+/// to the reference path); returns the compacted row pointers and the
+/// final nnz.
+fn sort_dedup_compact<T: Copy + Ord>(ptr_in: &[u64], adj: &mut [T]) -> (Vec<u64>, usize) {
+    let n_rows = ptr_in.len() - 1;
+    let mut out_ptr = Vec::with_capacity(n_rows + 1);
+    out_ptr.push(0u64);
+    let mut w = 0usize;
+    for r in 0..n_rows {
+        let (s, e) = (ptr_in[r] as usize, ptr_in[r + 1] as usize);
+        adj[s..e].sort_unstable();
+        let mut prev: Option<T> = None;
+        for i in s..e {
+            let v = adj[i];
+            if prev != Some(v) {
+                adj[w] = v;
+                w += 1;
+                prev = Some(v);
+            }
+        }
+        out_ptr.push(w as u64);
+    }
+    (out_ptr, w)
+}
+
+struct StreamPrep {
+    h: MtxHeader,
+    file_len: u64,
+    n_chunks: usize,
+    states: Vec<ChunkState>,
+    /// Degrees after pass 1 (reused as placement cursors in pass 2).
+    deg: Vec<AtomicU64>,
+    /// Pre-dedup row pointers (placement regions).
+    raw_ptr: Vec<u64>,
+    /// Total placements (pre-dedup nnz, mirrors included).
+    total: u64,
+}
+
+/// Shared front half of both streaming paths: header, chunk layout,
+/// degree pass, prefix sum, cursor reset.
+fn stream_prep(path: &Path, pool: &WorkerPool, chunk_bytes: u64) -> Result<StreamPrep> {
+    let chunk_bytes = chunk_bytes.max(1);
+    let h = read_mtx_header(path)?;
+    let n_rows = checked_usize(h.n_rows, "n_rows")?;
+    let file_len = std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len();
+    if file_len < h.data_start {
+        bail!("{path:?} shorter than its own header");
+    }
+    let data_len = file_len - h.data_start;
+    let n_chunks = checked_usize(data_len.div_ceil(chunk_bytes), "chunk count")?;
+    let team = pool.threads().max(1);
+    let mut states = chunk_states(path, team)?;
+
+    let mut deg: Vec<AtomicU64> = Vec::with_capacity(n_rows);
+    deg.resize_with(n_rows, || AtomicU64::new(0));
+    degree_pass(pool, &mut states, n_chunks, h, file_len, chunk_bytes, &deg)?;
+
+    let mut raw_ptr = Vec::with_capacity(n_rows + 1);
+    raw_ptr.push(0u64);
+    let mut acc = 0u64;
+    for d in deg.iter() {
+        acc = acc
+            .checked_add(d.load(AOrd::Relaxed))
+            .context("placement count overflows u64")?;
+        raw_ptr.push(acc);
+    }
+    // Reuse the degree array as placement cursors: row r starts writing
+    // at raw_ptr[r].
+    for (r, d) in deg.iter().enumerate() {
+        d.store(raw_ptr[r], AOrd::Relaxed);
+    }
+    Ok(StreamPrep { h, file_len, n_chunks, states, deg, raw_ptr, total: acc })
+}
+
+/// Stream-parse `path` into an in-memory [`Csr`] with the default chunk
+/// size. Transient memory is `O(n_rows + chunk)` on top of the output
+/// CSR itself — the edge list is never materialised.
+pub fn stream_mtx_to_csr(path: impl AsRef<Path>, pool: &WorkerPool) -> Result<Csr> {
+    stream_mtx_to_csr_chunked(path, pool, STREAM_CHUNK)
+}
+
+/// [`stream_mtx_to_csr`] with an explicit chunk size (exposed so tests
+/// can force many-chunk layouts on small files).
+pub fn stream_mtx_to_csr_chunked(
+    path: impl AsRef<Path>,
+    pool: &WorkerPool,
+    chunk_bytes: u64,
+) -> Result<Csr> {
+    let path = path.as_ref();
+    // The in-memory kernels are u32-wide; reject oversized dims *before*
+    // stream_prep sizes its O(n_rows) degree array off the header.
+    let h0 = read_mtx_header(path)?;
+    checked_u32(h0.n_rows, "n_rows")?;
+    checked_u32(h0.n_cols, "n_cols")?;
+    let mut prep = stream_prep(path, pool, chunk_bytes)?;
+    let h = prep.h;
+    let total = checked_usize(prep.total, "pre-dedup nnz")?;
+    let mut adj: Vec<u32> = vec![0u32; total];
+    let slots = SharedSlots::from_mut_slice(&mut adj);
+    place_pass(
+        pool,
+        &mut prep.states,
+        prep.n_chunks,
+        h,
+        prep.file_len,
+        chunk_bytes.max(1),
+        &prep.deg,
+        &slots,
+        |id| id as u32, // in range: ids were bounds-checked against u32 dims
+    )?;
+    let (out_ptr, w) = sort_dedup_compact(&prep.raw_ptr, &mut adj);
+    adj.truncate(w);
+    let ptr: Vec<usize> = out_ptr.iter().map(|&x| x as usize).collect();
+    Ok(Csr {
+        n_rows: h.n_rows as usize,
+        n_cols: h.n_cols as usize,
+        ptr: ptr.into(),
+        adj: adj.into(),
+    })
+}
+
+/// Stream-parse `path` into an on-disk `.csrb` store at `out` with the
+/// default chunk size: placement writes go straight into the writable
+/// file mapping, so peak transient memory stays `O(n_rows + chunk)` even
+/// when the graph itself dwarfs RAM. The index width is chosen from the
+/// header dims ([`IndexWidth::for_dims`]); open the result with
+/// [`super::storage::open_csr`].
+pub fn stream_mtx_to_file(
+    path: impl AsRef<Path>,
+    out: impl AsRef<Path>,
+    pool: &WorkerPool,
+) -> Result<CsrFileInfo> {
+    stream_mtx_to_file_chunked(path, out, pool, STREAM_CHUNK)
+}
+
+/// [`stream_mtx_to_file`] with an explicit chunk size (for tests).
+pub fn stream_mtx_to_file_chunked(
+    path: impl AsRef<Path>,
+    out: impl AsRef<Path>,
+    pool: &WorkerPool,
+    chunk_bytes: u64,
+) -> Result<CsrFileInfo> {
+    let path = path.as_ref();
+    let out = out.as_ref();
+    let mut prep = stream_prep(path, pool, chunk_bytes)?;
+    let h = prep.h;
+    let width = IndexWidth::for_dims(h.n_rows, h.n_cols);
+    let mut w = CsrWriter::create(out, h.n_rows, h.n_cols, prep.total, width)?;
+    {
+        let ptr = w.ptr_mut();
+        ptr.copy_from_slice(&prep.raw_ptr);
+    }
+    let final_nnz = match width {
+        IndexWidth::U32 => {
+            let slots = w.adj_slots_u32();
+            place_pass(
+                pool,
+                &mut prep.states,
+                prep.n_chunks,
+                h,
+                prep.file_len,
+                chunk_bytes.max(1),
+                &prep.deg,
+                &slots,
+                |id| id as u32, // in range: U32 width ⇒ dims fit u32
+            )?;
+            let (out_ptr, nnz) = sort_dedup_compact(&prep.raw_ptr, w.adj_mut_u32());
+            w.ptr_mut().copy_from_slice(&out_ptr);
+            nnz
+        }
+        IndexWidth::U64 => {
+            let slots = w.adj_slots_u64();
+            place_pass(
+                pool,
+                &mut prep.states,
+                prep.n_chunks,
+                h,
+                prep.file_len,
+                chunk_bytes.max(1),
+                &prep.deg,
+                &slots,
+                |id| id,
+            )?;
+            let (out_ptr, nnz) = sort_dedup_compact(&prep.raw_ptr, w.adj_mut_u64());
+            w.ptr_mut().copy_from_slice(&out_ptr);
+            nnz
+        }
+    };
+    w.finish(final_nnz as u64)?;
+    csr_file_info(out)
+}
+
+// ---------------------------------------------------------------------------
+// Writing.
+// ---------------------------------------------------------------------------
 
 /// Write a CSR pattern as `coordinate pattern general`.
 pub fn write_mtx(csr: &Csr, path: impl AsRef<Path>) -> Result<()> {
@@ -122,6 +661,13 @@ pub fn write_mtx(csr: &Csr, path: impl AsRef<Path>) -> Result<()> {
 mod tests {
     use super::*;
     use std::io::Cursor;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bgpc_mtx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
 
     #[test]
     fn parse_general_pattern() {
@@ -142,6 +688,17 @@ mod tests {
     }
 
     #[test]
+    fn banner_and_comment_edge_cases() {
+        // BOM + CRLF + blank line before the banner + comments/blank
+        // lines between banner and size line + '+'-prefixed indices.
+        let txt = "\u{feff}\r\n%%MatrixMarket MATRIX Coordinate Pattern General\r\n\r\n% c1\r\n% c2\r\n2 2 2\r\n+1 2\r\n2 1\r\n";
+        let m = read_mtx_from(Cursor::new(txt)).unwrap();
+        assert_eq!(m.n_rows, 2);
+        assert_eq!(m.row(0), &[1]);
+        assert_eq!(m.row(1), &[0]);
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(read_mtx_from(Cursor::new("hello\n1 1 1\n")).is_err());
         assert!(read_mtx_from(Cursor::new("%%MatrixMarket matrix array real general\n2 2\n")).is_err());
@@ -150,13 +707,115 @@ mod tests {
     }
 
     #[test]
+    fn rejects_malformed_headers_with_context() {
+        let cases: &[(&str, &str)] = &[
+            ("", "empty mtx file"),
+            ("%%MatrixMarket matrix coordinate pattern general\n", "missing size line"),
+            ("%%MatrixMarket matrix coordinate pattern general\n3 4\n", "bad size line"),
+            ("%%MatrixMarket matrix coordinate pattern general\n3 x 4\n", "size line"),
+            ("%%MatrixMarket matrix coordinate quaternion general\n1 1 1\n", "unsupported field"),
+            ("%%MatrixMarket matrix coordinate real sideways\n1 1 1\n", "unsupported symmetry"),
+            ("%%MatrixMarket tensor coordinate real general\n1 1 1\n", "MatrixMarket header"),
+            ("%%MatrixMarket matrix array real general\n2 2\n", "coordinate"),
+        ];
+        for (txt, needle) in cases {
+            let err = read_mtx_from(Cursor::new(*txt)).unwrap_err().to_string();
+            assert!(err.contains(needle), "input {txt:?}: error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_entries() {
+        let one_token = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1\n";
+        let err = read_mtx_from(Cursor::new(one_token)).unwrap_err().to_string();
+        assert!(err.contains("bad entry"), "{err}");
+        let zero_based = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n0 1\n";
+        let err = read_mtx_from(Cursor::new(zero_based)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn oversized_dims_error_not_wrap() {
+        // 2^32 rows: the old reader wrapped ids with `as u32`; now the
+        // header is rejected with a contextual overflow error.
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n4294967296 2 1\n1 1\n";
+        let err = read_mtx_from(Cursor::new(txt)).unwrap_err().to_string();
+        assert!(err.contains("overflows the u32"), "got: {err}");
+        assert!(err.contains("n_rows"), "got: {err}");
+    }
+
+    #[test]
     fn write_read_roundtrip() {
         let m = Csr::from_edges(3, 3, &[(0, 1), (1, 2), (2, 0), (0, 0)]);
-        let dir = std::env::temp_dir().join("bgpc_mtx_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("rt.mtx");
+        let p = tmp("rt.mtx");
         write_mtx(&m, &p).unwrap();
         let back = read_mtx(&p).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn streamed_equals_reference_across_chunk_sizes() {
+        // An asymmetric pattern with duplicates and a trailing
+        // comment, streamed at pathological chunk sizes so chunk
+        // boundaries fall mid-line.
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n5 7 9\n1 1\n1 7\n2 3\n5 1\n5 1\n% mid comment\n3 4\n4 2\n1 7\n5 6\n";
+        let p = tmp("chunks.mtx");
+        std::fs::write(&p, txt).unwrap();
+        let reference = read_mtx(&p).unwrap();
+        let pool = WorkerPool::new(3);
+        for chunk in [1u64, 2, 3, 5, 16, 1 << 20] {
+            let streamed = stream_mtx_to_csr_chunked(&p, &pool, chunk).unwrap();
+            assert_eq!(streamed, reference, "chunk_bytes = {chunk}");
+        }
+    }
+
+    #[test]
+    fn streamed_symmetric_equals_reference() {
+        let txt = "%%MatrixMarket matrix coordinate real symmetric\n4 4 5\n1 1 0.5\n2 1 1.0\n3 2 2.0\n4 4 1\n4 1 9\n";
+        let p = tmp("sym.mtx");
+        std::fs::write(&p, txt).unwrap();
+        let reference = read_mtx(&p).unwrap();
+        let pool = WorkerPool::new(2);
+        for chunk in [4u64, 1 << 20] {
+            let streamed = stream_mtx_to_csr_chunked(&p, &pool, chunk).unwrap();
+            assert_eq!(streamed, reference, "chunk_bytes = {chunk}");
+        }
+    }
+
+    #[test]
+    fn streamed_to_file_roundtrips() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n4 5 6\n1 2\n1 5\n2 1\n3 3\n4 4\n4 1\n";
+        let p = tmp("tofile.mtx");
+        std::fs::write(&p, txt).unwrap();
+        let reference = read_mtx(&p).unwrap();
+        let pool = WorkerPool::new(2);
+        let out = tmp("tofile.csrb");
+        let info = stream_mtx_to_file_chunked(&p, &out, &pool, 7).unwrap();
+        assert_eq!(info.nnz, reference.nnz() as u64);
+        assert_eq!(info.width, IndexWidth::U32);
+        let opened = crate::graph::storage::open_csr(&out).unwrap();
+        assert_eq!(opened, reference);
+    }
+
+    #[test]
+    fn streaming_rejects_bad_data() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n9 1\n";
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, txt).unwrap();
+        let pool = WorkerPool::new(2);
+        let err = stream_mtx_to_csr(&p, &pool).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+    }
+
+    #[test]
+    fn header_reports_data_start() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n% c\n3 3 1\n1 1\n";
+        let p = tmp("hdr.mtx");
+        std::fs::write(&p, txt).unwrap();
+        let h = read_mtx_header(&p).unwrap();
+        assert_eq!(h.n_rows, 3);
+        assert_eq!(h.declared_nnz, 1);
+        assert!(!h.symmetric);
+        assert_eq!(&txt[h.data_start as usize..], "1 1\n");
     }
 }

@@ -1,0 +1,265 @@
+//! One front door for "where does the graph come from" — the
+//! [`GraphSource`] spec shared by the CLI's `--graph` flag, the bench
+//! harness, and the examples (DESIGN.md §15).
+//!
+//! A source is CLI text with a [`GraphSource::parse`] /
+//! [`GraphSource::label`] round trip, mirroring
+//! [`Strategy`](crate::coloring::Strategy):
+//!
+//! ```text
+//! preset:coPapersDBLP@0.1@1    calibrated synthetic preset (scale, seed)
+//! coPapersDBLP                 bare preset name (default scale/seed)
+//! mtx:matrices/bone010.mtx     .mtx file, streamed parse (bounded memory)
+//! mtxmem:small.mtx             .mtx file, in-memory reference parser
+//! csrb:big.csrb                prebuilt CSR store, opened via mmap
+//! random:500x800x4000@7        uniform random bipartite (nets x vtxs x nnz)
+//! ```
+//!
+//! Bare paths ending in `.mtx` / `.csrb` are accepted too (they label
+//! back in prefixed form). Loading returns the net-side incidence
+//! [`Csr`] or its [`Bipartite`] view; `*_on` variants route the
+//! streaming parser onto a caller's [`WorkerPool`] instead of a
+//! transient one.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::par::WorkerPool;
+use crate::util::error::Result;
+
+use super::csr::Csr;
+use super::generators::{random_bipartite, Preset};
+use super::{mtx, storage, Bipartite};
+
+/// Default preset scale when a bare preset name is given.
+pub const DEFAULT_SCALE: f64 = 0.1;
+/// Default seed for presets and random instances.
+pub const DEFAULT_SEED: u64 = 1;
+
+/// A parsed graph-source spec — see the module docs for the grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphSource {
+    /// Calibrated synthetic preset (Table II test-bed) at a scale.
+    Preset { name: String, scale: f64, seed: u64 },
+    /// Matrix-Market file, parsed by the streaming tier.
+    Mtx(PathBuf),
+    /// Matrix-Market file, parsed by the in-memory reference reader.
+    MtxMem(PathBuf),
+    /// Prebuilt `.csrb` store, opened read-only via mmap.
+    CsrBin(PathBuf),
+    /// Uniform random bipartite instance (tests, smoke benches).
+    Random { n_nets: usize, n_vtxs: usize, nnz: usize, seed: u64 },
+}
+
+impl GraphSource {
+    /// Parse CLI text; `None` if the spec (or bare preset name) is
+    /// unknown. Inverse of [`GraphSource::label`].
+    pub fn parse(s: &str) -> Option<GraphSource> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("preset:") {
+            let mut it = rest.split('@');
+            let name = it.next()?.to_string();
+            Preset::by_name(&name)?;
+            let scale = match it.next() {
+                Some(t) => t.parse::<f64>().ok().filter(|x| *x > 0.0)?,
+                None => DEFAULT_SCALE,
+            };
+            let seed = match it.next() {
+                Some(t) => t.parse::<u64>().ok()?,
+                None => DEFAULT_SEED,
+            };
+            if it.next().is_some() {
+                return None;
+            }
+            return Some(GraphSource::Preset { name, scale, seed });
+        }
+        if let Some(rest) = s.strip_prefix("mtx:") {
+            return Some(GraphSource::Mtx(PathBuf::from(rest)));
+        }
+        if let Some(rest) = s.strip_prefix("mtxmem:") {
+            return Some(GraphSource::MtxMem(PathBuf::from(rest)));
+        }
+        if let Some(rest) = s.strip_prefix("csrb:") {
+            return Some(GraphSource::CsrBin(PathBuf::from(rest)));
+        }
+        if let Some(rest) = s.strip_prefix("random:") {
+            let (dims, seed) = match rest.split_once('@') {
+                Some((d, t)) => (d, t.parse::<u64>().ok()?),
+                None => (rest, DEFAULT_SEED),
+            };
+            let mut it = dims.split('x');
+            let n_nets = it.next()?.parse::<usize>().ok()?;
+            let n_vtxs = it.next()?.parse::<usize>().ok()?;
+            let nnz = it.next()?.parse::<usize>().ok()?;
+            if it.next().is_some() || n_nets == 0 || n_vtxs == 0 {
+                return None;
+            }
+            return Some(GraphSource::Random { n_nets, n_vtxs, nnz, seed });
+        }
+        if s.ends_with(".mtx") {
+            return Some(GraphSource::Mtx(PathBuf::from(s)));
+        }
+        if s.ends_with(".csrb") {
+            return Some(GraphSource::CsrBin(PathBuf::from(s)));
+        }
+        Preset::by_name(s).map(|p| GraphSource::Preset {
+            name: p.name.to_string(),
+            scale: DEFAULT_SCALE,
+            seed: DEFAULT_SEED,
+        })
+    }
+
+    /// Stable display label (job names, bench CSVs); parses back to
+    /// `self` — the same contract as
+    /// [`Strategy::label`](crate::coloring::Strategy::label).
+    pub fn label(&self) -> String {
+        match self {
+            GraphSource::Preset { name, scale, seed } => format!("preset:{name}@{scale}@{seed}"),
+            GraphSource::Mtx(p) => format!("mtx:{}", p.display()),
+            GraphSource::MtxMem(p) => format!("mtxmem:{}", p.display()),
+            GraphSource::CsrBin(p) => format!("csrb:{}", p.display()),
+            GraphSource::Random { n_nets, n_vtxs, nnz, seed } => {
+                format!("random:{n_nets}x{n_vtxs}x{nnz}@{seed}")
+            }
+        }
+    }
+
+    /// Load the net-side incidence pattern, running any streamed parse
+    /// on `pool`.
+    pub fn load_csr_on(&self, pool: &WorkerPool) -> Result<Csr> {
+        match self {
+            GraphSource::Mtx(p) => mtx::stream_mtx_to_csr(p, pool),
+            _ => self.load_poolless(),
+        }
+    }
+
+    /// [`GraphSource::load_csr_on`] with a transient pool for the
+    /// streamed-`.mtx` case (other sources never need one).
+    pub fn load_csr(&self) -> Result<Csr> {
+        match self {
+            GraphSource::Mtx(p) => {
+                let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+                mtx::stream_mtx_to_csr(p, &WorkerPool::new(t.min(8)))
+            }
+            _ => self.load_poolless(),
+        }
+    }
+
+    /// Every source except the streamed `.mtx` path (which wants a
+    /// worker team).
+    fn load_poolless(&self) -> Result<Csr> {
+        match self {
+            GraphSource::Preset { name, scale, seed } => {
+                // parse() validated the name; re-validate for hand-built values
+                let p = Preset::by_name(name).ok_or_else(|| {
+                    crate::util::error::Error::msg(format!("unknown preset {name}"))
+                })?;
+                Ok(p.net_incidence(*scale, *seed))
+            }
+            GraphSource::Mtx(p) | GraphSource::MtxMem(p) => mtx::read_mtx(p),
+            GraphSource::CsrBin(p) => storage::open_csr(p),
+            GraphSource::Random { n_nets, n_vtxs, nnz, seed } => {
+                Ok(random_bipartite(*n_nets, *n_vtxs, *nnz, *seed).net_vtxs)
+            }
+        }
+    }
+
+    /// Load as a bipartite BGPC instance (both incidence directions).
+    pub fn load(&self) -> Result<Bipartite> {
+        Ok(Bipartite::from_net_incidence(self.load_csr()?))
+    }
+
+    /// [`GraphSource::load`] with streamed parses routed onto `pool`.
+    pub fn load_on(&self, pool: &Arc<WorkerPool>) -> Result<Bipartite> {
+        Ok(Bipartite::from_net_incidence(self.load_csr_on(pool)?))
+    }
+
+    /// Short instance name for tables: the preset name, file stem, or
+    /// the full label for random specs.
+    pub fn name(&self) -> String {
+        match self {
+            GraphSource::Preset { name, .. } => name.clone(),
+            GraphSource::Mtx(p) | GraphSource::MtxMem(p) | GraphSource::CsrBin(p) => p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.display().to_string()),
+            GraphSource::Random { .. } => self.label(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_round_trip() {
+        for s in [
+            "preset:coPapersDBLP@0.1@1",
+            "preset:uk-2002@0.05@9",
+            "mtx:dir/a.mtx",
+            "mtxmem:b.mtx",
+            "csrb:store.csrb",
+            "random:10x20x55@3",
+        ] {
+            let src = GraphSource::parse(s).unwrap_or_else(|| panic!("parse {s}"));
+            assert_eq!(src.label(), s);
+            assert_eq!(GraphSource::parse(&src.label()), Some(src), "round trip {s}");
+        }
+    }
+
+    #[test]
+    fn bare_forms_normalise() {
+        assert_eq!(
+            GraphSource::parse("coPapersDBLP"),
+            Some(GraphSource::Preset {
+                name: "coPapersDBLP".into(),
+                scale: DEFAULT_SCALE,
+                seed: DEFAULT_SEED
+            })
+        );
+        assert_eq!(GraphSource::parse("x/y.mtx"), Some(GraphSource::Mtx("x/y.mtx".into())));
+        assert_eq!(GraphSource::parse("z.csrb"), Some(GraphSource::CsrBin("z.csrb".into())));
+        assert_eq!(GraphSource::parse("random:4x5x9"), GraphSource::parse("random:4x5x9@1"));
+    }
+
+    #[test]
+    fn rejects_unknown_specs() {
+        for s in ["preset:not-a-preset", "random:0x5x9", "random:4x5", "nosuchpreset", ""] {
+            assert_eq!(GraphSource::parse(s), None, "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn random_loads_deterministically() {
+        let src = GraphSource::parse("random:8x12x30@5").unwrap();
+        let a = src.load().unwrap();
+        let b = src.load().unwrap();
+        assert_eq!(a.net_vtxs, b.net_vtxs);
+        assert_eq!(a.vtx_nets.n_rows, 12);
+    }
+
+    #[test]
+    fn preset_load_matches_generator() {
+        let src = GraphSource::parse("preset:coPapersDBLP@0.02@3").unwrap();
+        let direct = Preset::by_name("coPapersDBLP").unwrap().net_incidence(0.02, 3);
+        assert_eq!(src.load_csr().unwrap(), direct);
+        assert_eq!(src.name(), "coPapersDBLP");
+    }
+
+    #[test]
+    fn mtx_sources_agree() {
+        let dir = std::env::temp_dir().join(format!("bgpc_source_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("src.mtx");
+        let g = random_bipartite(6, 9, 25, 2).net_vtxs;
+        mtx::write_mtx(&g, &p).unwrap();
+        let streamed = GraphSource::Mtx(p.clone()).load_csr().unwrap();
+        let memory = GraphSource::MtxMem(p.clone()).load_csr().unwrap();
+        assert_eq!(streamed, g);
+        assert_eq!(memory, g);
+        let store = dir.join("src.csrb");
+        storage::write_csr(&g, &store).unwrap();
+        assert_eq!(GraphSource::CsrBin(store).load_csr().unwrap(), g);
+    }
+}

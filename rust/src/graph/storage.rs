@@ -1,0 +1,906 @@
+//! Out-of-core CSR backing store: build-to-disk, then `mmap` read-only.
+//!
+//! The ingestion tier (DESIGN.md §15) decouples *where a CSR lives* from
+//! *how the kernels read it*:
+//!
+//! * [`Buf`] — the heap-or-mapped backing behind [`Csr::ptr`] /
+//!   [`Csr::adj`]. It derefs to a slice, so every kernel reads it exactly
+//!   like the `Vec` it replaced; the first mutation of a mapped buffer
+//!   materialises a private heap copy (copy-on-write at buffer
+//!   granularity).
+//! * [`IndexWidth`] — the explicit u32-or-u64 seam. On-disk files carry
+//!   their width; conversions back into the u32 kernel id space are
+//!   *checked* ([`checked_u32`] / [`checked_usize`]) and fail with a
+//!   contextual error instead of silently truncating.
+//! * `.csrb` files — a flat native-endian container (header, `u64` row
+//!   pointers, u32-or-u64 adjacency) written by [`CsrWriter`] and opened
+//!   by [`open_csr`]. On 64-bit unix targets `open_csr` maps the file and
+//!   the returned [`Csr`] reads straight from the page cache; elsewhere
+//!   it falls back to a checked heap copy.
+//!
+//! [`Csr::ptr`]: super::csr::Csr
+//! [`Csr::adj`]: super::csr::Csr
+
+use std::fs::{File, OpenOptions};
+use std::io::Read;
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+use super::csr::Csr;
+
+// ---------------------------------------------------------------------------
+// Checked index conversions — the u64 story.
+// ---------------------------------------------------------------------------
+
+/// Convert a file-width id to the `u32` kernel id space, or fail with a
+/// contextual error naming the offending value (never a silent `as` wrap).
+#[inline]
+pub fn checked_u32(v: u64, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| {
+        crate::util::error::Error::msg(format!(
+            "{what} {v} overflows the u32 kernel id space (max {})",
+            u32::MAX
+        ))
+    })
+}
+
+/// Convert a file offset/count to `usize`, or fail with a contextual error
+/// (relevant on 32-bit hosts opening u64-scale files).
+#[inline]
+pub fn checked_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| {
+        crate::util::error::Error::msg(format!(
+            "{what} {v} overflows usize on this host (max {})",
+            usize::MAX
+        ))
+    })
+}
+
+/// Width of the adjacency ids in an on-disk CSR (the `ptr` array is always
+/// stored as `u64`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexWidth {
+    /// 4-byte ids — everything the in-memory kernels can color.
+    U32,
+    /// 8-byte ids — storable and stream-parsable; converting into the
+    /// kernel [`Csr`] checks every id (errors on overflow, never wraps).
+    U64,
+}
+
+impl IndexWidth {
+    /// Bytes per adjacency id.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            IndexWidth::U32 => 4,
+            IndexWidth::U64 => 8,
+        }
+    }
+
+    /// Smallest width that can hold ids below `n_rows`/`n_cols`.
+    pub fn for_dims(n_rows: u64, n_cols: u64) -> IndexWidth {
+        if n_rows <= u32::MAX as u64 && n_cols <= u32::MAX as u64 {
+            IndexWidth::U32
+        } else {
+            IndexWidth::U64
+        }
+    }
+
+    fn code(self) -> u32 {
+        match self {
+            IndexWidth::U32 => 4,
+            IndexWidth::U64 => 8,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<IndexWidth> {
+        match c {
+            4 => Ok(IndexWidth::U32),
+            8 => Ok(IndexWidth::U64),
+            other => bail!("bad index width code {other} (expect 4 or 8)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mapping — a read-only or read-write byte mapping of a whole file.
+//
+// On 64-bit unix this is real mmap via the libc already linked by std (no
+// external crates); elsewhere it degrades to an owned in-memory copy with
+// the same API, so every caller is portable and only the *residency*
+// differs.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// Whole-file byte mapping (see module docs for the fallback story).
+pub struct Mapping {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    ptr: *mut u8,
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    buf: Vec<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is either private heap memory or a file mapping whose
+// lifetime we own; `&Mapping` only hands out shared reads, and the one
+// mutable accessor takes `&mut self`.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `len` bytes of `file` (shared, optionally writable).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map(file: &File, len: usize, writable: bool) -> Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Mapping { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let prot = if writable { sys::PROT_READ | sys::PROT_WRITE } else { sys::PROT_READ };
+        // SAFETY: fd is a valid open file descriptor for the duration of
+        // the call; we map the whole file shared at offset 0 and check the
+        // MAP_FAILED sentinel before use.
+        let p = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, prot, sys::MAP_SHARED, file.as_raw_fd(), 0)
+        };
+        if p as isize == -1 {
+            bail!("mmap of {len} bytes failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr: p as *mut u8, len })
+    }
+
+    /// Fallback: read `len` bytes of `file` into an owned buffer.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map(file: &File, len: usize, _writable: bool) -> Result<Mapping> {
+        let mut buf = vec![0u8; len];
+        let mut f = file;
+        use std::io::Seek;
+        f.seek(std::io::SeekFrom::Start(0)).context("seek for fallback mapping")?;
+        f.read_exact(&mut buf).context("read for fallback mapping")?;
+        Ok(Mapping { buf, len })
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is mapped.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[inline]
+    fn base(&self) -> *const u8 {
+        self.ptr
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    #[inline]
+    fn base(&self) -> *const u8 {
+        self.buf.as_ptr()
+    }
+
+    /// The whole mapping as bytes.
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: base()..base()+len is the live mapping (or owned buffer).
+        unsafe { std::slice::from_raw_parts(self.base(), self.len) }
+    }
+
+    /// Typed view of `count` elements of `T` at byte offset `off`.
+    /// Panics (debug) / errors on misalignment or out-of-range.
+    fn typed<T: Copy>(&self, off: usize, count: usize) -> Result<&[T]> {
+        let bytes = count
+            .checked_mul(std::mem::size_of::<T>())
+            .and_then(|b| b.checked_add(off))
+            .context("typed view overflows")?;
+        if bytes > self.len {
+            bail!("typed view [{off}; {count}] past end of {}-byte mapping", self.len);
+        }
+        let p = if self.len == 0 {
+            std::ptr::NonNull::<T>::dangling().as_ptr() as *const T
+        } else {
+            unsafe { self.base().add(off) as *const T }
+        };
+        if (p as usize) % std::mem::align_of::<T>() != 0 {
+            bail!("typed view at offset {off} misaligned for {}", std::any::type_name::<T>());
+        }
+        // SAFETY: range-checked above; T: Copy with no invalid bit patterns
+        // at the call sites (u32/u64/usize).
+        Ok(unsafe { std::slice::from_raw_parts(p, count) })
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            // SAFETY: ptr/len are the live mapping created in `map`.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping({} bytes)", self.len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buf — heap-or-mapped backing with copy-on-write promotion.
+// ---------------------------------------------------------------------------
+
+struct MapSlice {
+    map: Arc<Mapping>,
+    byte_off: usize,
+    len: usize,
+}
+
+impl Clone for MapSlice {
+    fn clone(&self) -> MapSlice {
+        MapSlice { map: Arc::clone(&self.map), byte_off: self.byte_off, len: self.len }
+    }
+}
+
+/// A `Vec<T>`-shaped buffer that may be backed by a shared read-only file
+/// mapping instead of the heap. Reads go through `Deref<Target = [T]>`
+/// either way; the first mutable access of a mapped buffer copies it to
+/// the heap ([`Buf::make_mut`]), so mutation keeps `Vec` semantics.
+pub struct Buf<T: Copy + 'static> {
+    vec: Vec<T>,
+    map: Option<MapSlice>,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Copy + 'static> Buf<T> {
+    /// An owned (heap) buffer.
+    pub fn owned(vec: Vec<T>) -> Buf<T> {
+        Buf { vec, map: None, _marker: PhantomData }
+    }
+
+    /// A buffer viewing `len` elements at `byte_off` inside `map`.
+    pub(crate) fn mapped(map: Arc<Mapping>, byte_off: usize, len: usize) -> Result<Buf<T>> {
+        // Validate once at construction so Deref can be unchecked.
+        map.typed::<T>(byte_off, len)?;
+        Ok(Buf {
+            vec: Vec::new(),
+            map: Some(MapSlice { map, byte_off, len }),
+            _marker: PhantomData,
+        })
+    }
+
+    /// True when the data lives in a file mapping (not the heap).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// The elements as a slice (heap or mapped).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match &self.map {
+            Some(s) => {
+                if s.len == 0 {
+                    return &[];
+                }
+                // SAFETY: validated at construction (range + alignment);
+                // the Arc keeps the mapping alive for &self's lifetime.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        s.map.base().add(s.byte_off) as *const T,
+                        s.len,
+                    )
+                }
+            }
+            None => &self.vec,
+        }
+    }
+
+    /// Promote to an owned heap vector (no-op when already owned) and
+    /// return it mutably — the copy-on-write point.
+    pub fn make_mut(&mut self) -> &mut Vec<T> {
+        if self.map.is_some() {
+            let copied = self.as_slice().to_vec();
+            self.vec = copied;
+            self.map = None;
+        }
+        &mut self.vec
+    }
+
+    /// Shorten to `len` elements (promotes a mapped buffer first).
+    pub fn truncate(&mut self, len: usize) {
+        self.make_mut().truncate(len);
+    }
+}
+
+impl<T: Copy + 'static> Deref for Buf<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy + 'static> DerefMut for Buf<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.make_mut().as_mut_slice()
+    }
+}
+
+impl<T: Copy + 'static> From<Vec<T>> for Buf<T> {
+    fn from(vec: Vec<T>) -> Buf<T> {
+        Buf::owned(vec)
+    }
+}
+
+impl<T: Copy + 'static> Clone for Buf<T> {
+    fn clone(&self) -> Buf<T> {
+        match &self.map {
+            Some(s) => Buf { vec: Vec::new(), map: Some(s.clone()), _marker: PhantomData },
+            None => Buf::owned(self.vec.clone()),
+        }
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq for Buf<T> {
+    fn eq(&self, other: &Buf<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + Eq + 'static> Eq for Buf<T> {}
+
+impl<T: Copy + std::fmt::Debug + 'static> std::fmt::Debug for Buf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl<T: Copy + 'static> Default for Buf<T> {
+    fn default() -> Buf<T> {
+        Buf::owned(Vec::new())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The .csrb on-disk format.
+//
+//   offset  size  field
+//   0       8     magic  "BGPCCSR1"
+//   8       4     endianness marker 0x01020304 (native-endian files only)
+//   12      4     adjacency id width in bytes (4 | 8)
+//   16      8     n_rows  (u64)
+//   24      8     n_cols  (u64)
+//   32      8     nnz     (u64)
+//   40      8*(n_rows+1)        row pointers (u64)
+//   ...     nnz*width           adjacency ids (u32 | u64)
+//
+// Everything is naturally aligned because the header is 40 bytes and the
+// ptr region is 8-byte elements.
+// ---------------------------------------------------------------------------
+
+const MAGIC: [u8; 8] = *b"BGPCCSR1";
+const ENDIAN_MARK: u32 = 0x0102_0304;
+const HEADER_LEN: usize = 40;
+
+#[derive(Clone, Copy, Debug)]
+struct Header {
+    width: IndexWidth,
+    n_rows: u64,
+    n_cols: u64,
+    nnz: u64,
+}
+
+impl Header {
+    fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(&MAGIC);
+        h[8..12].copy_from_slice(&ENDIAN_MARK.to_ne_bytes());
+        h[12..16].copy_from_slice(&self.width.code().to_ne_bytes());
+        h[16..24].copy_from_slice(&self.n_rows.to_ne_bytes());
+        h[24..32].copy_from_slice(&self.n_cols.to_ne_bytes());
+        h[32..40].copy_from_slice(&self.nnz.to_ne_bytes());
+        h
+    }
+
+    fn decode(h: &[u8]) -> Result<Header> {
+        if h.len() < HEADER_LEN {
+            bail!("csrb file shorter than its {HEADER_LEN}-byte header");
+        }
+        if h[0..8] != MAGIC {
+            bail!("not a bgpc csrb file (bad magic)");
+        }
+        let mark = u32::from_ne_bytes(h[8..12].try_into().unwrap());
+        if mark != ENDIAN_MARK {
+            bail!("csrb file written on a foreign-endian host (marker {mark:#010x})");
+        }
+        let width = IndexWidth::from_code(u32::from_ne_bytes(h[12..16].try_into().unwrap()))?;
+        Ok(Header {
+            width,
+            n_rows: u64::from_ne_bytes(h[16..24].try_into().unwrap()),
+            n_cols: u64::from_ne_bytes(h[24..32].try_into().unwrap()),
+            nnz: u64::from_ne_bytes(h[32..40].try_into().unwrap()),
+        })
+    }
+
+    fn ptr_off(&self) -> usize {
+        HEADER_LEN
+    }
+
+    fn adj_off(&self) -> Result<usize> {
+        let rows = checked_usize(self.n_rows, "n_rows")?;
+        Ok(HEADER_LEN + 8 * (rows + 1))
+    }
+
+    fn file_len(&self) -> Result<usize> {
+        let adj = checked_usize(self.nnz, "nnz")?
+            .checked_mul(self.width.bytes())
+            .context("adjacency byte size overflows")?;
+        self.adj_off()?.checked_add(adj).context("csrb file size overflows")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CsrWriter — build a .csrb on disk with direct (optionally parallel)
+// placement into the writable mapping.
+// ---------------------------------------------------------------------------
+
+/// Shared raw slot array for disjoint-index parallel placement writes.
+/// Each slot must be written by exactly one thread (the atomic row
+/// cursors in the streaming parser guarantee disjointness).
+pub(crate) struct SharedSlots<T> {
+    base: *mut T,
+    len: usize,
+}
+
+// SAFETY: only `write` is exposed and callers guarantee disjoint indices;
+// the underlying region outlives the parallel section (owned by CsrWriter).
+unsafe impl<T> Send for SharedSlots<T> {}
+unsafe impl<T> Sync for SharedSlots<T> {}
+
+impl<T> SharedSlots<T> {
+    /// View an exclusive slice as shared disjoint slots. The raw pointer
+    /// outlives the borrow — callers must keep the slice allocation
+    /// alive and un-reallocated for the slots' useful lifetime.
+    pub(crate) fn from_mut_slice(s: &mut [T]) -> SharedSlots<T> {
+        SharedSlots { base: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Write `v` into slot `i` (always bounds-checked: an overrun is a
+    /// panic, never a stray write).
+    ///
+    /// # Safety
+    /// No other thread may concurrently access slot `i`, and the backing
+    /// allocation must still be alive.
+    #[inline]
+    pub(crate) unsafe fn write(&self, i: usize, v: T) {
+        assert!(i < self.len, "SharedSlots overrun: {i} >= {}", self.len);
+        // SAFETY: in-range per the assert; caller guarantees exclusive
+        // slot access and liveness.
+        unsafe {
+            self.base.add(i).write(v);
+        }
+    }
+}
+
+/// Streaming `.csrb` builder: size the file up front, place pointers and
+/// adjacency directly into a shared writable mapping (the OS pages it
+/// out), then [`CsrWriter::finish`] compacts the header/ptr for the final
+/// (post-dedup) nnz and truncates.
+pub struct CsrWriter {
+    file: File,
+    path: PathBuf,
+    region: Mapping,
+    header: Header,
+}
+
+impl CsrWriter {
+    /// Create `path` sized for `nnz` adjacency ids of `width`.
+    pub fn create(
+        path: impl AsRef<Path>,
+        n_rows: u64,
+        n_cols: u64,
+        nnz: u64,
+        width: IndexWidth,
+    ) -> Result<CsrWriter> {
+        let path = path.as_ref().to_path_buf();
+        let header = Header { width, n_rows, n_cols, nnz };
+        let len = header.file_len()?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create {path:?}"))?;
+        file.set_len(len as u64).with_context(|| format!("size {path:?} to {len} bytes"))?;
+        let mut region = Mapping::map(&file, len, true)?;
+        write_at(&mut region, 0, &header.encode());
+        Ok(CsrWriter { file, path, region, header })
+    }
+
+    /// The row-pointer array (`n_rows + 1` entries, element `0` must be 0).
+    pub fn ptr_mut(&mut self) -> &mut [u64] {
+        let off = self.header.ptr_off();
+        let rows = self.header.n_rows as usize;
+        // SAFETY: the region covers header + ptr + adj by construction;
+        // alignment holds (off = 40, 8-aligned on a page-aligned base);
+        // exclusivity via &mut self.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.region.base_mut().add(off) as *mut u64, rows + 1)
+        }
+    }
+
+    /// The adjacency array as u32 slots (width must be [`IndexWidth::U32`]).
+    pub fn adj_mut_u32(&mut self) -> &mut [u32] {
+        assert_eq!(self.header.width, IndexWidth::U32, "adj width is not u32");
+        let off = self.header.adj_off().expect("sized at create");
+        // SAFETY: as ptr_mut; 4-aligned because adj_off is 8*(rows+1)+40.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.region.base_mut().add(off) as *mut u32,
+                self.header.nnz as usize,
+            )
+        }
+    }
+
+    /// The adjacency array as u64 slots (width must be [`IndexWidth::U64`]).
+    pub fn adj_mut_u64(&mut self) -> &mut [u64] {
+        assert_eq!(self.header.width, IndexWidth::U64, "adj width is not u64");
+        let off = self.header.adj_off().expect("sized at create");
+        // SAFETY: as ptr_mut.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.region.base_mut().add(off) as *mut u64,
+                self.header.nnz as usize,
+            )
+        }
+    }
+
+    /// Raw disjoint-slot view of the u32 adjacency for parallel placement.
+    pub(crate) fn adj_slots_u32(&mut self) -> SharedSlots<u32> {
+        let s = self.adj_mut_u32();
+        SharedSlots { base: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Raw disjoint-slot view of the u64 adjacency for parallel placement.
+    pub(crate) fn adj_slots_u64(&mut self) -> SharedSlots<u64> {
+        let s = self.adj_mut_u64();
+        SharedSlots { base: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Declared capacity (pre-dedup nnz) of the adjacency region.
+    pub fn capacity(&self) -> u64 {
+        self.header.nnz
+    }
+
+    /// Finalise with the post-compaction `final_nnz` (≤ the capacity the
+    /// file was created with), truncate the tail, and flush.
+    pub fn finish(mut self, final_nnz: u64) -> Result<PathBuf> {
+        if final_nnz > self.header.nnz {
+            bail!("finish({final_nnz}) exceeds created capacity {}", self.header.nnz);
+        }
+        self.header.nnz = final_nnz;
+        let enc = self.header.encode();
+        write_at(&mut self.region, 0, &enc);
+        let final_len = self.header.file_len()?;
+        // Persist the fallback buffer before truncating; on the mmap path
+        // the kernel already owns the dirty pages.
+        self.flush_fallback()?;
+        // Unmap before shrinking the file (accessing a mapping past EOF is
+        // a bus error on unix).
+        let file = self.file;
+        let path = self.path;
+        drop(self.region);
+        file.set_len(final_len as u64)
+            .with_context(|| format!("truncate {path:?} to {final_len} bytes"))?;
+        file.sync_all().with_context(|| format!("sync {path:?}"))?;
+        Ok(path)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn flush_fallback(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn flush_fallback(&mut self) -> Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        self.file.seek(SeekFrom::Start(0)).context("seek for csrb flush")?;
+        self.file.write_all(self.region.bytes()).context("write csrb buffer")?;
+        Ok(())
+    }
+}
+
+impl Mapping {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[inline]
+    fn base_mut(&mut self) -> *mut u8 {
+        self.ptr
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    #[inline]
+    fn base_mut(&mut self) -> *mut u8 {
+        self.buf.as_mut_ptr()
+    }
+}
+
+fn write_at(region: &mut Mapping, off: usize, bytes: &[u8]) {
+    assert!(off + bytes.len() <= region.len());
+    // SAFETY: in-range per the assert; exclusive via &mut.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), region.base_mut().add(off), bytes.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Opening.
+// ---------------------------------------------------------------------------
+
+/// Shape of an on-disk CSR, readable without loading the payload.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrFileInfo {
+    /// Row count.
+    pub n_rows: u64,
+    /// Column-id space size.
+    pub n_cols: u64,
+    /// Stored edges.
+    pub nnz: u64,
+    /// Adjacency id width.
+    pub width: IndexWidth,
+}
+
+/// Read just the header of a `.csrb` file.
+pub fn csr_file_info(path: impl AsRef<Path>) -> Result<CsrFileInfo> {
+    let mut f = File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut h = [0u8; HEADER_LEN];
+    f.read_exact(&mut h).with_context(|| format!("read header of {:?}", path.as_ref()))?;
+    let header = Header::decode(&h)?;
+    Ok(CsrFileInfo {
+        n_rows: header.n_rows,
+        n_cols: header.n_cols,
+        nnz: header.nnz,
+        width: header.width,
+    })
+}
+
+/// Open a `.csrb` file as a [`Csr`].
+///
+/// * U32 files on a 64-bit unix host: zero-copy — `ptr` and `adj` stay in
+///   the shared read-only mapping ([`Buf::is_mapped`] is true).
+/// * U64 files: the adjacency is converted id-by-id through
+///   [`checked_u32`]; any id past `u32::MAX` fails with a contextual
+///   error (the kernels are u32-wide — see DESIGN.md §15).
+/// * Dimensions past `u32::MAX` rows/cols fail the same way: the coloring
+///   kernels address vertices as u32.
+pub fn open_csr(path: impl AsRef<Path>) -> Result<Csr> {
+    let path = path.as_ref();
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let meta = file.metadata().with_context(|| format!("stat {path:?}"))?;
+    let len = checked_usize(meta.len(), "file length")?;
+    let map = Arc::new(Mapping::map(&file, len, false)?);
+    let header = Header::decode(map.bytes())
+        .with_context(|| format!("parse csrb header of {path:?}"))?;
+    let want = header.file_len()?;
+    if len < want {
+        bail!("{path:?} truncated: {len} bytes on disk, header implies {want}");
+    }
+    // The in-memory kernels address rows/cols as u32.
+    checked_u32(header.n_rows, "n_rows").with_context(|| format!("open {path:?}"))?;
+    checked_u32(header.n_cols, "n_cols").with_context(|| format!("open {path:?}"))?;
+    let n_rows = checked_usize(header.n_rows, "n_rows")?;
+    let n_cols = checked_usize(header.n_cols, "n_cols")?;
+    let nnz = checked_usize(header.nnz, "nnz")?;
+
+    // Row pointers: stored u64; on 64-bit hosts view them as usize
+    // in place, otherwise copy with per-element checks.
+    let ptr: Buf<usize> = ptr_buf(&map, &header, n_rows, nnz)?;
+
+    let adj: Buf<u32> = match header.width {
+        IndexWidth::U32 => Buf::mapped(Arc::clone(&map), header.adj_off()?, nnz)?,
+        IndexWidth::U64 => {
+            let wide: &[u64] = map.typed(header.adj_off()?, nnz)?;
+            let mut narrow = Vec::with_capacity(nnz);
+            for (i, &v) in wide.iter().enumerate() {
+                narrow.push(
+                    checked_u32(v, "adjacency id")
+                        .with_context(|| format!("{path:?} adj[{i}]"))?,
+                );
+            }
+            Buf::owned(narrow)
+        }
+    };
+    let csr = Csr { n_rows, n_cols, ptr, adj };
+    csr.validate().map_err(crate::util::error::Error::msg)?;
+    Ok(csr)
+}
+
+#[cfg(target_pointer_width = "64")]
+fn ptr_buf(map: &Arc<Mapping>, header: &Header, n_rows: usize, nnz: usize) -> Result<Buf<usize>> {
+    // usize == u64 here: reinterpret the stored u64 pointers in place.
+    let buf: Buf<usize> = Buf::mapped(Arc::clone(map), header.ptr_off(), n_rows + 1)?;
+    if buf.last().copied() != Some(nnz) {
+        bail!("csrb ptr tail {:?} != nnz {nnz}", buf.last());
+    }
+    Ok(buf)
+}
+
+#[cfg(not(target_pointer_width = "64"))]
+fn ptr_buf(map: &Arc<Mapping>, header: &Header, n_rows: usize, nnz: usize) -> Result<Buf<usize>> {
+    let wide: &[u64] = map.typed(header.ptr_off(), n_rows + 1)?;
+    let mut out = Vec::with_capacity(n_rows + 1);
+    for (i, &v) in wide.iter().enumerate() {
+        out.push(checked_usize(v, "row pointer").with_context(|| format!("ptr[{i}]"))?);
+    }
+    if out.last().copied() != Some(nnz) {
+        bail!("csrb ptr tail {:?} != nnz {nnz}", out.last());
+    }
+    Ok(Buf::owned(out))
+}
+
+/// Write a heap [`Csr`] as a `.csrb` file (u32 adjacency).
+pub fn write_csr(csr: &Csr, path: impl AsRef<Path>) -> Result<PathBuf> {
+    let mut w = CsrWriter::create(
+        path,
+        csr.n_rows as u64,
+        csr.n_cols as u64,
+        csr.nnz() as u64,
+        IndexWidth::U32,
+    )?;
+    {
+        let ptr = w.ptr_mut();
+        for (i, &p) in csr.ptr.iter().enumerate() {
+            ptr[i] = p as u64;
+        }
+    }
+    w.adj_mut_u32().copy_from_slice(&csr.adj);
+    w.finish(csr.nnz() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bgpc_storage_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Csr {
+        Csr::from_edges(4, 5, &[(0, 1), (0, 4), (1, 0), (2, 2), (2, 3), (2, 1), (3, 0)])
+    }
+
+    #[test]
+    fn roundtrip_u32_mapped() {
+        let g = sample();
+        let p = tmp("rt_u32.csrb");
+        write_csr(&g, &p).unwrap();
+        let back = open_csr(&p).unwrap();
+        assert_eq!(back, g);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(back.adj.is_mapped(), "u32 adjacency should stay mapped");
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn info_reads_header_only() {
+        let g = sample();
+        let p = tmp("info.csrb");
+        write_csr(&g, &p).unwrap();
+        let info = csr_file_info(&p).unwrap();
+        assert_eq!(info.n_rows, 4);
+        assert_eq!(info.n_cols, 5);
+        assert_eq!(info.nnz, g.nnz() as u64);
+        assert_eq!(info.width, IndexWidth::U32);
+    }
+
+    #[test]
+    fn u64_file_converts_checked() {
+        // Small ids stored wide: opening converts through checked_u32.
+        let p = tmp("wide_ok.csrb");
+        let mut w = CsrWriter::create(&p, 2, 3, 3, IndexWidth::U64).unwrap();
+        w.ptr_mut().copy_from_slice(&[0, 2, 3]);
+        w.adj_mut_u64().copy_from_slice(&[0, 2, 1]);
+        w.finish(3).unwrap();
+        let g = open_csr(&p).unwrap();
+        assert_eq!(g.row(0), &[0, 2]);
+        assert_eq!(g.row(1), &[1]);
+        assert!(!g.adj.is_mapped(), "wide adjacency is heap-converted");
+    }
+
+    #[test]
+    fn u64_adj_overflow_rejected_with_context() {
+        // Dims fit u32, but one stored id does not: the per-id checked
+        // conversion must fail (never wrap).
+        let p = tmp("wide_overflow.csrb");
+        let mut w = CsrWriter::create(&p, 1, 2, 1, IndexWidth::U64).unwrap();
+        w.ptr_mut().copy_from_slice(&[0, 1]);
+        w.adj_mut_u64()[0] = u32::MAX as u64 + 7;
+        w.finish(1).unwrap();
+        let err = open_csr(&p).unwrap_err().to_string();
+        assert!(err.contains("overflows the u32"), "got: {err}");
+        assert!(err.contains("adj[0]"), "got: {err}");
+    }
+
+    #[test]
+    fn oversized_dims_rejected() {
+        let p = tmp("wide_rows.csrb");
+        let w = CsrWriter::create(&p, u32::MAX as u64 + 2, 1, 0, IndexWidth::U64).unwrap();
+        // ptr is (n_rows + 1) zeros already; finish with 0 edges.
+        w.finish(0).unwrap();
+        let err = open_csr(&p).unwrap_err().to_string();
+        assert!(err.contains("overflows the u32"), "got: {err}");
+    }
+
+    #[test]
+    fn garbage_and_truncation_rejected() {
+        let p = tmp("garbage.csrb");
+        std::fs::write(&p, b"definitely not a csrb file").unwrap();
+        assert!(open_csr(&p).unwrap_err().to_string().contains("header"));
+
+        let g = sample();
+        let p2 = tmp("trunc.csrb");
+        write_csr(&g, &p2).unwrap();
+        let full = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &full[..full.len() - 4]).unwrap();
+        assert!(open_csr(&p2).unwrap_err().to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn buf_copy_on_write() {
+        let g = sample();
+        let p = tmp("cow.csrb");
+        write_csr(&g, &p).unwrap();
+        let mut back = open_csr(&p).unwrap();
+        // mutate through the seam: promotes to heap, file untouched
+        back.sort_dedup_rows();
+        assert!(!back.adj.is_mapped());
+        assert_eq!(back, g);
+        let again = open_csr(&p).unwrap();
+        assert_eq!(again, g);
+    }
+
+    #[test]
+    fn width_for_dims() {
+        assert_eq!(IndexWidth::for_dims(10, 10), IndexWidth::U32);
+        assert_eq!(IndexWidth::for_dims(u32::MAX as u64 + 1, 1), IndexWidth::U64);
+        assert_eq!(checked_u32(7, "x").unwrap(), 7);
+        assert!(checked_u32(u32::MAX as u64 + 1, "x").is_err());
+    }
+}

@@ -5,7 +5,8 @@
 //! ```text
 //! bgpc info                                   # presets + artifact status
 //! bgpc gen --preset coPapersDBLP --scale 0.1 --out g.mtx
-//! bgpc color --preset bone010 [--mtx file] [--alg N1-N2] [--threads 16]
+//! bgpc color --graph mtx:bone010.mtx [--alg N1-N2] [--threads 16]
+//!            [--preset bone010] [--mtx file]       # legacy instance flags
 //!            [--balance b1] [--order natural|sl] [--engine sim|threads|pjrt]
 //!            [--strategy ldf+fix]               # ordering + post pass in one knob
 //!            [--chunk N|static|auto]            # override the schedule's chunk
@@ -23,7 +24,9 @@ use std::sync::Arc;
 
 use bgpc::coloring::{self, schedule, Balance, Config, ExecMode};
 use bgpc::coordinator::{EngineSel, Job, JobInput, Service, ServiceOpts, DEFAULT_POOL_THREADS};
-use bgpc::graph::{generators::Preset, mtx, Bipartite, InstanceStats, Ordering, PRESETS};
+use bgpc::graph::{
+    generators::Preset, mtx, Bipartite, GraphSource, InstanceStats, Ordering, PRESETS,
+};
 use bgpc::runtime::Runtime;
 use bgpc::sim::CostModel;
 
@@ -46,6 +49,19 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn load_instance(flags: &HashMap<String, String>) -> Result<(String, Bipartite), String> {
+    // --graph takes any GraphSource spec (preset name, preset:n@s@s,
+    // mtx:path, mtxmem:path, csrb:path, random:NxMxK@s) and wins over
+    // the legacy --mtx / --preset pair.
+    if let Some(spec) = flags.get("graph") {
+        let src = GraphSource::parse(spec).ok_or_else(|| {
+            format!(
+                "unknown graph source {spec} (preset name | preset:n@scale@seed | \
+                 mtx:path | mtxmem:path | csrb:path | random:NxMxK@seed)"
+            )
+        })?;
+        let g = src.load().map_err(|e| format!("{e:#}"))?;
+        return Ok((src.name(), g));
+    }
     if let Some(path) = flags.get("mtx") {
         let m = mtx::read_mtx(path).map_err(|e| format!("{e:#}"))?;
         return Ok((path.clone(), Bipartite::from_net_incidence(m)));
@@ -156,9 +172,9 @@ fn cmd_color(flags: &HashMap<String, String>, d2: bool) -> ExitCode {
             eprintln!("error: {name} is not structurally symmetric; D2GC needs a symmetric square graph");
             return ExitCode::FAILURE;
         }
-        coloring::color_d2gc(m, &cfg)
+        coloring::color(m, &cfg)
     } else {
-        coloring::color_bgpc(&g, &cfg)
+        coloring::color(&g, &cfg)
     };
     let valid = if d2 {
         coloring::verify::d2gc_valid(&g.net_vtxs, &r.colors).is_ok()

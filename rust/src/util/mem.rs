@@ -1,0 +1,70 @@
+//! Best-effort process-memory introspection for the ingest benches.
+//!
+//! Linux exposes the peak resident set size as `VmHWM` in
+//! `/proc/self/status`, and lets a process reset that high-water mark by
+//! writing `5` to `/proc/self/clear_refs` — which is exactly what a
+//! peak-RSS measurement around one ingest run needs. Everything here is
+//! strictly best-effort: on other platforms (or sandboxes that hide
+//! `/proc`) the probes return `None` and callers report the sample as
+//! unavailable instead of failing the bench.
+
+/// Peak resident set size (`VmHWM`) in bytes, if the platform exposes it.
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_kib("VmHWM:").map(|kib| kib * 1024)
+}
+
+/// Current resident set size (`VmRSS`) in bytes, if available.
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_kib("VmRSS:").map(|kib| kib * 1024)
+}
+
+/// Reset the peak-RSS high-water mark to the current RSS so the next
+/// [`peak_rss_bytes`] reading covers only the work that follows.
+/// Returns whether the reset took (needs a writable
+/// `/proc/self/clear_refs`).
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", "5").is_ok()
+}
+
+/// Parse a `kB` line out of `/proc/self/status`, e.g. `VmHWM: 1234 kB`.
+fn proc_status_kib(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with(key))?;
+    line[key.len()..].split_whitespace().next()?.parse::<u64>().ok()
+}
+
+/// Bytes as mebibytes for table output.
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_is_at_least_current_when_available() {
+        // On non-Linux hosts both probes are None and the test is vacuous.
+        if let (Some(peak), Some(cur)) = (peak_rss_bytes(), current_rss_bytes()) {
+            assert!(peak >= cur, "VmHWM {peak} < VmRSS {cur}");
+            assert!(peak > 0);
+        }
+    }
+
+    #[test]
+    fn reset_keeps_the_probe_readable() {
+        // The reset is allowed to fail (read-only /proc), and VmHWM is
+        // process-wide so concurrent tests make exact comparisons racy;
+        // the invariant is only that the probe stays readable afterwards.
+        if peak_rss_bytes().is_none() {
+            return;
+        }
+        let _ = reset_peak_rss();
+        assert!(peak_rss_bytes().unwrap() > 0);
+    }
+
+    #[test]
+    fn mib_converts() {
+        assert!((mib(3 * 1024 * 1024) - 3.0).abs() < 1e-12);
+    }
+}

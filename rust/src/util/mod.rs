@@ -5,6 +5,7 @@
 
 pub mod arch;
 pub mod error;
+pub mod mem;
 pub mod prng;
 pub mod stats;
 pub mod timer;

@@ -3,7 +3,7 @@
 //! D2GC streaming-parity mirror on the symmetric presets, and
 //! structural-fidelity stream checks.
 
-use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Config};
+use bgpc::coloring::{color, schedule, Config};
 use bgpc::dynamic::{DynamicSession, UpdateBatch};
 use bgpc::graph::{Csr, PRESETS};
 // One batch-distribution definition shared with benches/dynamic.rs, so
@@ -43,7 +43,7 @@ fn small_batches_repair_cheaply_on_every_preset() {
             p.name,
             stats.frontier
         );
-        let full = color_bgpc(session.graph(), &cfg);
+        let full = color(session.graph(), &cfg);
         speedups.push(full.seconds / stats.seconds.max(1e-12));
     }
     // Repair must beat recoloring from scratch. The per-preset ≥5x
@@ -179,7 +179,7 @@ fn d2gc_small_batches_repair_cheaply_on_symmetric_presets() {
             p.name,
             stats.recolored
         );
-        let full = color_d2gc(session.graph(), &cfg);
+        let full = color(session.graph(), &cfg);
         speedups.push(full.seconds / stats.seconds.max(1e-12));
     }
     // The per-preset ≥5x acceptance number lives in benches/dynamic.rs

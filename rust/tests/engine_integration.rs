@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use bgpc::coloring::verify::{bgpc_valid, d2gc_valid};
-use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Balance, Config, ExecMode};
+use bgpc::coloring::{color, schedule, Balance, Config, ExecMode};
 use bgpc::coordinator::{EngineSel, Job, JobInput, Service};
 use bgpc::graph::generators::Preset;
 use bgpc::graph::Ordering;
@@ -16,7 +16,7 @@ fn every_schedule_valid_on_every_small_preset() {
     for p in bgpc::graph::PRESETS.iter() {
         let g = p.bipartite(0.01, 42);
         for spec in schedule::ALL {
-            let r = color_bgpc(&g, &Config::sim(spec, 16));
+            let r = color(&g, &Config::sim(spec, 16));
             assert!(
                 bgpc_valid(&g, &r.colors).is_ok(),
                 "{} on {} invalid",
@@ -31,8 +31,8 @@ fn every_schedule_valid_on_every_small_preset() {
 fn thread_mode_matches_sim_mode_color_quality() {
     let g = Preset::by_name("bone010").unwrap().bipartite(0.02, 7);
     for spec in [schedule::V_V_64D, schedule::N1_N2] {
-        let sim = color_bgpc(&g, &Config::sim(spec, 8));
-        let thr = color_bgpc(&g, &Config::threads(spec, 4));
+        let sim = color(&g, &Config::sim(spec, 8));
+        let thr = color(&g, &Config::threads(spec, 4));
         assert!(bgpc_valid(&g, &sim.colors).is_ok());
         assert!(bgpc_valid(&g, &thr.colors).is_ok());
         // different nondeterminism, same ballpark of colors
@@ -51,7 +51,7 @@ fn orderings_compose_with_engine() {
         Ordering::SmallestLast,
     ] {
         let cfg = Config::sim(schedule::V_N2, 8).with_ordering(ord);
-        let r = color_bgpc(&g, &cfg);
+        let r = color(&g, &cfg);
         assert!(bgpc_valid(&g, &r.colors).is_ok(), "{ord:?}");
     }
 }
@@ -60,9 +60,9 @@ fn orderings_compose_with_engine() {
 fn balance_reduces_cardinality_stddev_on_skewed_graph() {
     // Table VI's headline: B2 < B1 < U in stddev; colors grow slightly.
     let g = Preset::by_name("coPapersDBLP").unwrap().bipartite(0.03, 11);
-    let base = color_bgpc(&g, &Config::sim(schedule::V_N2, 16));
-    let b1 = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B1));
-    let b2 = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B2));
+    let base = color(&g, &Config::sim(schedule::V_N2, 16));
+    let b1 = color(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B1));
+    let b2 = color(&g, &Config::sim(schedule::V_N2, 16).with_balance(Balance::B2));
     for (name, r) in [("U", &base), ("B1", &b1), ("B2", &b2)] {
         assert!(bgpc_valid(&g, &r.colors).is_ok(), "{name}");
     }
@@ -87,7 +87,7 @@ fn d2gc_all_schedules_on_symmetric_presets() {
         let m = Preset::by_name(name).unwrap().net_incidence(0.005, 3);
         assert!(m.is_structurally_symmetric(), "{name}");
         for spec in schedule::D2GC_SET {
-            let r = color_d2gc(&m, &Config::sim(spec, 16));
+            let r = color(&m, &Config::sim(spec, 16));
             assert!(d2gc_valid(&m, &r.colors).is_ok(), "{} on {name}", spec.name);
         }
     }
@@ -107,7 +107,7 @@ fn exec_mode_threads_stress_race_correctness() {
         post_pass: bgpc::coloring::PostPass::None,
     };
     for _ in 0..3 {
-        let r = color_bgpc(&g, &cfg);
+        let r = color(&g, &cfg);
         assert!(bgpc_valid(&g, &r.colors).is_ok());
     }
 }
@@ -157,7 +157,7 @@ fn cost_model_sim_time_scales_down_with_threads() {
             ordering: Ordering::Natural,
             post_pass: bgpc::coloring::PostPass::None,
         };
-        color_bgpc(&g, &cfg).seconds
+        color(&g, &cfg).seconds
     };
     let n1n2_1 = time(schedule::N1_N2, 1);
     let n1n2_16 = time(schedule::N1_N2, 16);

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use bgpc::coloring::{color_bgpc, color_d2gc, schedule, Balance, Config};
+use bgpc::coloring::{color, schedule, Balance, Config};
 use bgpc::dynamic::DynamicSession;
 use bgpc::exec::{ColorSchedule, Executor, SharedBuf};
 use bgpc::graph::generators::Preset;
@@ -49,7 +49,7 @@ fn prop_bgpc_frontiers_conflict_free_on_every_preset_and_balance() {
     for p in PRESETS.iter() {
         let g = p.bipartite(0.02, 9);
         for bal in [Balance::None, Balance::B1, Balance::B2] {
-            let r = color_bgpc(&g, &Config::sim(schedule::V_N2, 8).with_balance(bal));
+            let r = color(&g, &Config::sim(schedule::V_N2, 8).with_balance(bal));
             let sched = ColorSchedule::from_colors(&r.colors);
             let ctx = format!("{} {bal:?}", p.name);
             assert_partition(&sched, &r.colors, &ctx);
@@ -77,7 +77,7 @@ fn prop_d2gc_frontiers_distance2_conflict_free_on_symmetric_presets() {
     for p in PRESETS.iter().filter(|p| p.symmetric) {
         let m = p.net_incidence(0.02, 9);
         for bal in [Balance::None, Balance::B1, Balance::B2] {
-            let r = color_d2gc(&m, &Config::sim(schedule::V_N2, 8).with_balance(bal));
+            let r = color(&m, &Config::sim(schedule::V_N2, 8).with_balance(bal));
             let sched = ColorSchedule::from_colors(&r.colors);
             let ctx = format!("{} {bal:?}", p.name);
             assert_partition(&sched, &r.colors, &ctx);
@@ -121,7 +121,7 @@ fn executor_equals_sequential_sweep_at_t1_and_t4() {
     // count and round count.
     for preset in ["20M_movielens", "coPapersDBLP"] {
         let g = Preset::by_name(preset).unwrap().bipartite(0.05, 3);
-        let r = color_bgpc(&g, &Config::sim(schedule::N1_N2, 8));
+        let r = color(&g, &Config::sim(schedule::N1_N2, 8));
         let sched = ColorSchedule::from_colors(&r.colors);
         let mut base = vec![0u64; g.n_nets()];
         for u in 0..g.n_vertices() {

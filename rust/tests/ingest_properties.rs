@@ -1,0 +1,174 @@
+//! Ingestion-tier properties (DESIGN.md §15): the streamed `.mtx` parser
+//! must agree bit for bit with the in-memory one on every preset, the
+//! mmap-backed `.csrb` store must round-trip exactly and color
+//! identically to the heap graph, and the u64 index seam must reject
+//! overflow loudly instead of truncating.
+
+use std::sync::Arc;
+
+use bgpc::coloring::{color, schedule, Config};
+use bgpc::graph::storage::{checked_u32, checked_usize, IndexWidth};
+use bgpc::graph::{mtx, storage, Bipartite, Csr, GraphSource, PRESETS};
+use bgpc::par::WorkerPool;
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("bgpc_ingest_properties");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Streamed parse (default and deliberately tiny chunks, so the chunk
+/// boundary / line-overhang machinery actually engages) ≡ the in-memory
+/// parser, for every preset family.
+#[test]
+fn streamed_parse_matches_in_memory_on_every_preset() {
+    let pool = WorkerPool::new(4);
+    for p in PRESETS.iter() {
+        let m = p.net_incidence(0.02, 7);
+        let path = tmp_path(&format!("{}_stream.mtx", p.name));
+        mtx::write_mtx(&m, &path).unwrap();
+
+        let reference = mtx::read_mtx(&path).unwrap();
+        assert_eq!(reference, m, "{}: in-memory parser regressed", p.name);
+
+        let streamed = mtx::stream_mtx_to_csr(&path, &pool).unwrap();
+        assert_eq!(streamed, reference, "{}: streamed != in-memory", p.name);
+
+        // 256-byte chunks: every coordinate line straddles chunk math
+        let tiny = mtx::stream_mtx_to_csr_chunked(&path, &pool, 256).unwrap();
+        assert_eq!(tiny, reference, "{}: tiny-chunk streamed diverged", p.name);
+
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// Stream-to-disk then mmap-open must reproduce the same pattern the
+/// in-memory paths see, and the file header must describe it truthfully.
+#[test]
+fn streamed_file_store_round_trips_bit_for_bit() {
+    let pool = WorkerPool::new(4);
+    for p in PRESETS.iter().take(3) {
+        let m = p.net_incidence(0.02, 13);
+        let src = tmp_path(&format!("{}_store.mtx", p.name));
+        let store = tmp_path(&format!("{}_store.csrb", p.name));
+        mtx::write_mtx(&m, &src).unwrap();
+
+        let info = mtx::stream_mtx_to_file_chunked(&src, &store, &pool, 512).unwrap();
+        assert_eq!(info.n_rows as usize, m.n_rows, "{}", p.name);
+        assert_eq!(info.n_cols as usize, m.n_cols, "{}", p.name);
+        assert_eq!(info.nnz as usize, m.nnz(), "{}", p.name);
+        assert_eq!(info.width, IndexWidth::U32, "preset dims fit u32");
+        assert_eq!(storage::csr_file_info(&store).unwrap().nnz, info.nnz);
+
+        let mapped = storage::open_csr(&store).unwrap();
+        assert!(mapped.adj.is_mapped(), "open_csr should borrow the file");
+        assert_eq!(mapped, m, "{}: mapped store != original", p.name);
+
+        std::fs::remove_file(&src).unwrap();
+        std::fs::remove_file(&store).unwrap();
+    }
+}
+
+/// A mmap-backed graph must color *bit-identically* to the heap-backed
+/// one at t=1 (single-thread runs are deterministic; the backing store
+/// must be invisible to the kernels).
+#[test]
+fn mapped_graph_colors_bit_identically_to_heap_at_t1() {
+    let pool = Arc::new(WorkerPool::new(1));
+    let heap = bgpc::graph::generators::Preset::by_name("coPapersDBLP")
+        .unwrap()
+        .net_incidence(0.05, 21);
+    let store = tmp_path("copapers_t1.csrb");
+    storage::write_csr(&heap, &store).unwrap();
+    let mapped = storage::open_csr(&store).unwrap();
+    assert!(mapped.adj.is_mapped());
+
+    let cfg = Config::threads(schedule::N1_N2, 1);
+    let gh = Bipartite::from_net_incidence(heap);
+    let gm = Bipartite::from_net_incidence(mapped);
+    let rh = bgpc::coloring::Colorer::new(&cfg).on(&pool).color(&gh);
+    let rm = bgpc::coloring::Colorer::new(&cfg).on(&pool).color(&gm);
+    assert_eq!(rh.colors, rm.colors, "backing store leaked into the run");
+    assert_eq!(rh.n_colors, rm.n_colors);
+
+    // one-shot transient-pool path must agree too
+    let ro = color(&gm, &cfg);
+    assert_eq!(ro.colors, rh.colors);
+    std::fs::remove_file(&store).unwrap();
+}
+
+/// The u64 seam: conversions are checked, never truncating, and the
+/// error names the offending quantity.
+#[test]
+fn u64_conversions_reject_overflow_with_context() {
+    assert_eq!(checked_u32(123, "x").unwrap(), 123);
+    let e = checked_u32(u64::from(u32::MAX) + 1, "row id").unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row id"), "error lost its context: {msg}");
+    assert!(msg.contains("4294967296"), "error lost the value: {msg}");
+
+    assert_eq!(checked_usize(7, "y").unwrap(), 7);
+    assert_eq!(IndexWidth::for_dims(1000, 1000), IndexWidth::U32);
+    assert_eq!(
+        IndexWidth::for_dims(u64::from(u32::MAX) + 1, 10),
+        IndexWidth::U64,
+        "row space beyond u32 must widen the store"
+    );
+    assert_eq!(IndexWidth::for_dims(10, u64::from(u32::MAX) + 1), IndexWidth::U64);
+}
+
+/// A `.mtx` whose declared dims overflow the in-memory u32 kernels must
+/// be rejected by the streaming parser with a contextual error — never
+/// silently wrapped. (The header itself is legal: only the *in-memory*
+/// destination is too narrow.)
+#[test]
+fn oversized_mtx_dims_rejected_by_in_memory_paths() {
+    let pool = WorkerPool::new(2);
+    let path = tmp_path("too_wide.mtx");
+    std::fs::write(
+        &path,
+        "%%MatrixMarket matrix coordinate pattern general\n5000000000 3 2\n1 1\n2 3\n",
+    )
+    .unwrap();
+
+    let h = mtx::read_mtx_header(&path).unwrap();
+    assert_eq!(h.n_rows, 5_000_000_000);
+
+    let e = mtx::stream_mtx_to_csr(&path, &pool).unwrap_err();
+    assert!(format!("{e:#}").contains("n_rows"), "untyped error: {e:#}");
+    let e = mtx::read_mtx(&path).unwrap_err();
+    assert!(format!("{e:#}").contains("overflow"), "untyped error: {e:#}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Truncated or corrupt `.csrb` stores fail to open instead of mapping
+/// garbage.
+#[test]
+fn truncated_store_rejected_on_open() {
+    let m = Csr::from_edges(4, 4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+    let store = tmp_path("truncated.csrb");
+    storage::write_csr(&m, &store).unwrap();
+    let full = std::fs::read(&store).unwrap();
+    std::fs::write(&store, &full[..full.len() - 3]).unwrap();
+    assert!(storage::open_csr(&store).is_err(), "short file must not open");
+    // and a bad magic likewise
+    let mut bad = full.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&store, &bad).unwrap();
+    assert!(storage::open_csr(&store).is_err(), "bad magic must not open");
+    std::fs::remove_file(&store).unwrap();
+}
+
+/// The GraphSource front door agrees with itself across backends — the
+/// same spec parsed back from its label loads the same graph.
+#[test]
+fn graph_source_label_round_trip_loads_identical_graphs() {
+    for spec in ["preset:bone010@0.02@5", "random:300x400x2000@9"] {
+        let src = GraphSource::parse(spec).unwrap();
+        let again = GraphSource::parse(&src.label()).unwrap();
+        assert_eq!(src, again, "{spec}: label round-trip changed the source");
+        let a = src.load().unwrap();
+        let b = again.load().unwrap();
+        assert_eq!(a.net_vtxs, b.net_vtxs, "{spec}: round-trip loaded a different graph");
+    }
+}

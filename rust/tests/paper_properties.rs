@@ -3,7 +3,7 @@
 //! including degenerate shapes, and reports the failing case parameters.
 
 use bgpc::coloring::verify::{bgpc_valid, d1gc_valid, d2gc_valid};
-use bgpc::coloring::{color_bgpc, schedule, Balance, Config};
+use bgpc::coloring::{color, schedule, Balance, Config};
 use bgpc::graph::{Bipartite, Ordering};
 use bgpc::par::ThreadsDriver;
 use bgpc::runtime::offload;
@@ -15,7 +15,7 @@ use bgpc::util::prng::Rng;
 fn prop_every_schedule_yields_valid_coloring() {
     forall_bipartite(40, 0xC0FFEE, |g, case| {
         for spec in schedule::ALL {
-            let r = color_bgpc(g, &Config::sim(spec, 4));
+            let r = color(g, &Config::sim(spec, 4));
             assert!(
                 bgpc_valid(g, &r.colors).is_ok(),
                 "{} invalid on {case:?}",
@@ -182,12 +182,12 @@ fn prop_balancing_on_presets_valid_capped_and_less_skewed() {
     for p in PRESETS.iter() {
         let g = p.bipartite(0.02, 5);
         let cap = color_cap(&g) as i32;
-        let base = color_bgpc(&g, &Config::sim(schedule::V_N2, 16));
+        let base = color(&g, &Config::sim(schedule::V_N2, 16));
         assert!(bgpc_valid(&g, &base.colors).is_ok(), "{} baseline invalid", p.name);
         let u_std = base.stats().stddev_cardinality;
         let mut best = f64::INFINITY;
         for bal in [Balance::B1, Balance::B2] {
-            let r = color_bgpc(&g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
+            let r = color(&g, &Config::sim(schedule::V_N2, 16).with_balance(bal));
             assert!(bgpc_valid(&g, &r.colors).is_ok(), "{} {bal:?} invalid", p.name);
             let max_c = r.colors.iter().copied().max().unwrap_or(-1);
             assert!(max_c < cap, "{} {bal:?}: color {max_c} >= cap {cap}", p.name);
@@ -255,7 +255,7 @@ fn prop_balanced_runs_always_valid() {
     forall_bipartite(20, 0xBA1, |g, case| {
         for bal in [Balance::B1, Balance::B2] {
             for spec in [schedule::V_N2, schedule::N1_N2] {
-                let r = color_bgpc(g, &Config::sim(spec, 8).with_balance(bal));
+                let r = color(g, &Config::sim(spec, 8).with_balance(bal));
                 assert!(
                     bgpc_valid(g, &r.colors).is_ok(),
                     "{bal:?} {} invalid on {case:?}",

@@ -130,7 +130,7 @@ fn offloaded_matches_engine_color_quality_on_preset() {
     let n_pjrt = bgpc::coloring::stats::distinct_colors(&colors);
 
     let cfg = bgpc::coloring::Config::sim(bgpc::coloring::schedule::N1_N2, 16);
-    let r = bgpc::coloring::color_bgpc(&g, &cfg);
+    let r = bgpc::coloring::color(&g, &cfg);
     assert!(n_pjrt <= 2 * r.n_colors + 8, "pjrt {n_pjrt} vs native {}", r.n_colors);
     assert!(r.n_colors <= 2 * n_pjrt + 8, "native {} vs pjrt {n_pjrt}", r.n_colors);
 }

@@ -11,10 +11,8 @@
 //!    bring-up, plain repair for batches) without invalidating repairs.
 
 use bgpc::coloring::verify::{bgpc_valid, d1gc_valid, d2gc_valid};
-use bgpc::coloring::{
-    bgpc as bgpc_alg, color_bgpc, color_d1gc, color_d2gc, d1gc, d2gc, schedule, Config, PostPass,
-};
-use bgpc::dynamic::DynamicSession;
+use bgpc::coloring::{bgpc as bgpc_alg, color, d1gc, d2gc, schedule, Config, PostPass};
+use bgpc::dynamic::{D1Graph, DynamicSession};
 use bgpc::testing::{random_symmetric_update_batch, skewed_bipartite, skewed_symmetric};
 use bgpc::util::prng::Rng;
 use bgpc::Strategy;
@@ -51,7 +49,7 @@ fn every_strategy_valid_and_capped_on_every_problem_under_both_drivers() {
             let cfg = cfg.with_strategy(st);
             let ctx = format!("{} under {driver}", st.label());
 
-            let r = color_bgpc(&g, &cfg);
+            let r = color(&g, &cfg);
             assert!(bgpc_valid(&g, &r.colors).is_ok(), "{ctx}: BGPC invalid");
             let cap = bgpc_alg::color_cap(&g) as i32;
             assert!(
@@ -59,7 +57,7 @@ fn every_strategy_valid_and_capped_on_every_problem_under_both_drivers() {
                 "{ctx}: BGPC color out of cap {cap}"
             );
 
-            let r = color_d2gc(&m, &cfg);
+            let r = color(&m, &cfg);
             assert!(d2gc_valid(&m, &r.colors).is_ok(), "{ctx}: D2GC invalid");
             let cap = d2gc::color_cap(&m) as i32;
             assert!(
@@ -67,7 +65,7 @@ fn every_strategy_valid_and_capped_on_every_problem_under_both_drivers() {
                 "{ctx}: D2GC color out of cap {cap}"
             );
 
-            let r = color_d1gc(&m, &cfg);
+            let r = color(D1Graph::from_ref(&m), &cfg);
             assert!(d1gc_valid(&m, &r.colors).is_ok(), "{ctx}: D1GC invalid");
             let cap = d1gc::color_cap(&m) as i32;
             assert!(
@@ -92,11 +90,11 @@ fn t1_runs_are_bit_for_bit_deterministic_per_seed() {
         ] {
             let cfg = cfg.with_strategy(st);
             let ctx = format!("{} under {driver}", st.label());
-            let (a, b) = (color_bgpc(&g, &cfg), color_bgpc(&g, &cfg));
+            let (a, b) = (color(&g, &cfg), color(&g, &cfg));
             assert_eq!(a.colors, b.colors, "{ctx}: BGPC t=1 nondeterministic");
-            let (a, b) = (color_d2gc(&m, &cfg), color_d2gc(&m, &cfg));
+            let (a, b) = (color(&m, &cfg), color(&m, &cfg));
             assert_eq!(a.colors, b.colors, "{ctx}: D2GC t=1 nondeterministic");
-            let (a, b) = (color_d1gc(&m, &cfg), color_d1gc(&m, &cfg));
+            let (a, b) = (color(D1Graph::from_ref(&m), &cfg), color(D1Graph::from_ref(&m), &cfg));
             assert_eq!(a.colors, b.colors, "{ctx}: D1GC t=1 nondeterministic");
         }
     }
@@ -114,13 +112,13 @@ fn color_and_fix_never_increases_the_color_count() {
             .with_strategy(Strategy::parse(base).unwrap());
         let fixed = Config::sim(schedule::N1_N2, 8)
             .with_strategy(Strategy::parse(&format!("{base}+fix")).unwrap());
-        let (p, f) = (color_bgpc(&g, &plain), color_bgpc(&g, &fixed));
+        let (p, f) = (color(&g, &plain), color(&g, &fixed));
         assert!(bgpc_valid(&g, &f.colors).is_ok(), "{base}+fix: BGPC invalid");
         assert!(f.n_colors <= p.n_colors, "{base}: BGPC fix grew {} -> {}", p.n_colors, f.n_colors);
-        let (p, f) = (color_d2gc(&m, &plain), color_d2gc(&m, &fixed));
+        let (p, f) = (color(&m, &plain), color(&m, &fixed));
         assert!(d2gc_valid(&m, &f.colors).is_ok(), "{base}+fix: D2GC invalid");
         assert!(f.n_colors <= p.n_colors, "{base}: D2GC fix grew {} -> {}", p.n_colors, f.n_colors);
-        let (p, f) = (color_d1gc(&m, &plain), color_d1gc(&m, &fixed));
+        let (p, f) = (color(D1Graph::from_ref(&m), &plain), color(D1Graph::from_ref(&m), &fixed));
         assert!(d1gc_valid(&m, &f.colors).is_ok(), "{base}+fix: D1GC invalid");
         assert!(f.n_colors <= p.n_colors, "{base}: D1GC fix grew {} -> {}", p.n_colors, f.n_colors);
     }

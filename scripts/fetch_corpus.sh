@@ -1,0 +1,138 @@
+#!/usr/bin/env sh
+# Fetch the pinned out-of-core ingest corpus (DESIGN.md §15).
+#
+#   scripts/fetch_corpus.sh                 # fetch + verify every pinned matrix
+#   scripts/fetch_corpus.sh uk-2002         # fetch one by name
+#   scripts/fetch_corpus.sh --pin [name...] # trust-on-first-use: record checksums
+#   scripts/fetch_corpus.sh --list          # show the pinned set
+#   scripts/fetch_corpus.sh --print-path n  # echo the extracted .mtx path (no network)
+#
+# The set is the paper's large instances, 10-100x beyond the in-tree
+# generator presets, from the SuiteSparse collection. Extracted files
+# land under corpus/<name>/<name>.mtx (gitignored); point the ingest
+# bench at one with
+#
+#   BGPC_INGEST_GRAPH=mtx:$(scripts/fetch_corpus.sh --print-path uk-2002) \
+#       cargo bench --bench ingest
+#
+# Integrity is trust-on-first-use: scripts/corpus.sha256 pins the sha256
+# of each extracted .mtx. The file ships EMPTY of hashes — checksums are
+# recorded from a real download via --pin, never typed in by hand — and
+# once a matrix is pinned, every later fetch must match or the script
+# fails. Fetching an unpinned matrix without --pin fails too, so CI can
+# never silently ingest an unverified file.
+set -eu
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+pins="$root/scripts/corpus.sha256"
+dest="$root/corpus"
+base="https://sparse.tamu.edu/MM"
+
+# name|group — SuiteSparse coordinates of the pinned set
+corpus() {
+    cat <<'EOF'
+coPapersDBLP|DIMACS10
+bone010|Oberwolfach
+channel-500x100x100-b050|DIMACS10
+uk-2002|LAW
+nlpkkt240|Schenk
+EOF
+}
+
+# group of a pinned matrix, empty when unknown (always exits 0 — the
+# caller distinguishes, and set -e must not fire inside the $(...))
+group_of() {
+    corpus | awk -F'|' -v n="$1" '$1 == n { print $2; exit }'
+}
+
+sha256_of() {
+    if command -v sha256sum >/dev/null 2>&1; then
+        sha256sum "$1" | awk '{print $1}'
+    elif command -v shasum >/dev/null 2>&1; then
+        shasum -a 256 "$1" | awk '{print $1}'
+    else
+        echo "fetch_corpus: no sha256 tool on PATH" >&2
+        exit 2
+    fi
+}
+
+pin=0
+names=""
+for arg in "$@"; do
+    case "$arg" in
+        --pin) pin=1 ;;
+        --list) corpus | while IFS='|' read -r n g; do echo "$n ($g)"; done; exit 0 ;;
+        --print-path)
+            shift_to_path=1 ;;
+        -*) echo "fetch_corpus: unknown flag $arg" >&2; exit 2 ;;
+        *)
+            if [ "${shift_to_path:-0}" = 1 ]; then
+                echo "$dest/$arg/$arg.mtx"
+                exit 0
+            fi
+            names="$names $arg" ;;
+    esac
+done
+if [ "${shift_to_path:-0}" = 1 ]; then
+    echo "fetch_corpus: --print-path needs a matrix name" >&2
+    exit 2
+fi
+if [ -z "$names" ]; then
+    names=$(corpus | cut -d'|' -f1 | tr '\n' ' ')
+fi
+
+fetcher() {
+    if command -v curl >/dev/null 2>&1; then
+        curl -fsSL --retry 3 -o "$2" "$1"
+    elif command -v wget >/dev/null 2>&1; then
+        wget -q -O "$2" "$1"
+    else
+        echo "fetch_corpus: neither curl nor wget on PATH" >&2
+        exit 2
+    fi
+}
+
+mkdir -p "$dest"
+fail=0
+# word-splitting is the point (same idiom as bench_gate.sh)
+# shellcheck disable=SC2086
+set -- $names
+for name in "$@"; do
+    group=$(group_of "$name")
+    if [ -z "$group" ]; then
+        echo "fetch_corpus: $name is not in the pinned set (--list)" >&2
+        fail=1
+        continue
+    fi
+    mtx="$dest/$name/$name.mtx"
+    if [ ! -f "$mtx" ]; then
+        tarball="$dest/$name.tar.gz"
+        url="$base/$group/$name.tar.gz"
+        echo "fetch_corpus: $name <- $url"
+        fetcher "$url" "$tarball"
+        tar -xzf "$tarball" -C "$dest"
+        rm -f "$tarball"
+        if [ ! -f "$mtx" ]; then
+            echo "fetch_corpus: $name: tarball did not contain $name/$name.mtx" >&2
+            fail=1
+            continue
+        fi
+    fi
+    have=$(sha256_of "$mtx")
+    want=$(grep "  $name\$" "$pins" 2>/dev/null | head -n 1 | awk '{print $1}' || true)
+    if [ -n "$want" ]; then
+        if [ "$have" = "$want" ]; then
+            echo "fetch_corpus: $name: sha256 ok"
+        else
+            echo "fetch_corpus: $name: CHECKSUM MISMATCH (have $have, pinned $want)" >&2
+            fail=1
+        fi
+    elif [ "$pin" = 1 ]; then
+        echo "$have  $name" >> "$pins"
+        echo "fetch_corpus: $name: pinned $have (trust-on-first-use)"
+    else
+        echo "fetch_corpus: $name: no pinned checksum — rerun with --pin to record one" >&2
+        fail=1
+    fi
+done
+exit "$fail"

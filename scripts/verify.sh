@@ -26,7 +26,7 @@ export BGPC_ARTIFACTS
 # loudly when a new tests/*.rs file is in neither shard — otherwise a
 # green matrix could silently skip it forever.
 THREADS_SHARD="driver_equivalence exec_properties dynamic_integration d1gc_integration"
-SIM_SHARD="paper_properties engine_integration graph_io pjrt_roundtrip strategy_properties packed_scan_properties"
+SIM_SHARD="paper_properties engine_integration graph_io pjrt_roundtrip strategy_properties packed_scan_properties ingest_properties"
 for f in tests/*.rs; do
     t="$(basename "$f" .rs)"
     case " $THREADS_SHARD $SIM_SHARD " in
